@@ -1,0 +1,108 @@
+//! `cargo bench --bench coordinator` — L3 substrate micro-benchmarks:
+//! the cost-model sweeps behind Tables 1–4 / Fig 3, state
+//! initialization, NF4 quantization, checkpoint I/O, manifest parsing,
+//! and the data pipeline. These are the pure-rust hot paths the §Perf
+//! pass optimizes.
+
+use std::time::Duration;
+
+use paca::data::{ImageGen, Task, TokenGen};
+use paca::init;
+use paca::manifest::Manifest;
+use paca::memory;
+use paca::nf4;
+use paca::peft::Selection;
+use paca::simulator::{self, A100_80G, GAUDI2};
+use paca::util::bench::bench;
+use paca::util::json::Json;
+use paca::util::rng::Rng;
+
+fn main() {
+    let dir = paca::default_artifacts_dir();
+    let budget = Duration::from_secs(3);
+
+    println!("== analytic models (paper-scale sweeps) ==");
+    let manifest = Manifest::load(&dir).expect("make artifacts");
+    let m8b = manifest.model("llama3-8b").unwrap();
+    bench("memory::breakdown x5 methods", 10, 100_000, budget, || {
+        for method in ["full", "lora", "dora", "paca", "qpaca"] {
+            std::hint::black_box(
+                memory::breakdown(m8b, method, 8, 8, 512, true));
+        }
+    }).report();
+    bench("memory::max_seq_len (table4 row)", 10, 100_000, budget,
+          || {
+              std::hint::black_box(memory::max_seq_len(
+                  m8b, "paca", 8, 80e9, false));
+          }).report();
+    bench("simulator::iteration_time x2 devices", 10, 100_000, budget,
+          || {
+              for dev in [&A100_80G, &GAUDI2] {
+                  std::hint::black_box(simulator::iteration_time(
+                      dev, m8b, "lora", 8, 8, 512));
+              }
+          }).report();
+    bench("fig3 full sweep (5 methods x batches)", 3, 2_000, budget,
+          || {
+              for method in ["full", "lora", "dora", "moslora", "paca"] {
+                  let mb = memory::max_batch(m8b, method, 8, 512, 80e9,
+                                             false);
+                  for b in [2, 4, 8, 16] {
+                      if b <= mb {
+                          std::hint::black_box(
+                              simulator::throughput_seq_per_s(
+                                  &A100_80G, m8b, method, 8, b, 512));
+                      }
+                  }
+              }
+          }).report();
+
+    println!("\n== init + quantization ==");
+    let art = manifest.artifact("train_paca_tiny").unwrap().clone();
+    bench("init_state(train_paca_tiny)", 3, 2_000, budget, || {
+        std::hint::black_box(
+            init::init_state(&art, 42, &Selection::Random).unwrap());
+    }).report();
+    let mut rng = Rng::new(1);
+    let w: Vec<f32> = (0..64 * 4096).map(|_| rng.normal_f32(0.02))
+        .collect();
+    bench("nf4::quantize 256K weights", 3, 2_000, budget, || {
+        std::hint::black_box(nf4::quantize(&w, 64));
+    }).report();
+    let (codes, scales) = nf4::quantize(&w, 64);
+    bench("nf4::dequantize 256K weights", 3, 2_000, budget, || {
+        std::hint::black_box(nf4::dequantize(&codes, &scales, 64));
+    }).report();
+
+    println!("\n== manifest + checkpoint I/O ==");
+    let src = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    bench("json parse manifest", 3, 2_000, budget, || {
+        std::hint::black_box(Json::parse(&src).unwrap());
+    }).report();
+    let tensors = init::init_state(&art, 42, &Selection::Random).unwrap();
+    let names: Vec<String> = art.state.iter().map(|e| e.name.clone())
+        .collect();
+    let path = std::env::temp_dir().join("paca-bench.ckpt");
+    bench("checkpoint save (tiny state)", 2, 500, budget, || {
+        paca::coordinator::checkpoint::save(&path, &names, &tensors)
+            .unwrap();
+    }).report();
+    bench("checkpoint load (tiny state)", 2, 500, budget, || {
+        std::hint::black_box(
+            paca::coordinator::checkpoint::load(&path).unwrap());
+    }).report();
+    std::fs::remove_file(&path).ok();
+
+    println!("\n== data pipeline ==");
+    for task in [Task::LmZipf, Task::MmluLike, Task::Instr] {
+        let mut gen = TokenGen::new(task, 2048, 1);
+        bench(&format!("{:?} batch 8x128", task), 5, 20_000, budget,
+              || {
+                  std::hint::black_box(gen.train_batch(8, 128));
+              }).report();
+    }
+    let mut ig = ImageGen::new(10, 1);
+    bench("ImageGen batch 8x3x32x32", 5, 5_000, budget, || {
+        std::hint::black_box(ig.batch(8));
+    }).report();
+}

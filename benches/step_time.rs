@@ -1,0 +1,76 @@
+//! `cargo bench --bench step_time` — end-to-end per-iteration latency
+//! of every train-step artifact on the PJRT CPU client (the measured
+//! half of Fig 2 / Tables 1–3 timing columns), plus dispatch-path
+//! micro-benchmarks (H2D literal creation, batch generation).
+
+use std::time::Duration;
+
+use paca::config::TrainConfig;
+use paca::coordinator::Trainer;
+use paca::data::{Task, TokenGen};
+use paca::runtime::Runtime;
+use paca::tensor::HostTensor;
+use paca::util::bench::bench;
+
+fn main() {
+    let rt = Runtime::new(&paca::default_artifacts_dir())
+        .expect("run `make artifacts` first");
+    println!("== train-step latency per method (tiny-lm, b=4, s=64) ==");
+    let budget = Duration::from_secs(8);
+    let mut results = Vec::new();
+    for artifact in ["train_full_tiny", "train_lora_tiny",
+                     "train_dora_tiny", "train_moslora_tiny",
+                     "train_paca_tiny", "train_paca_tiny_r16",
+                     "train_qlora_tiny", "train_qpaca_tiny"] {
+        let mut cfg = TrainConfig::default();
+        cfg.artifact = artifact.into();
+        let mut tr = Trainer::new(&rt, cfg).expect(artifact);
+        let r = bench(artifact, 3, 200, budget, || {
+            tr.train_step().unwrap();
+        });
+        r.report();
+        results.push((artifact, r.mean_ms()));
+    }
+    let lora = results.iter().find(|(a, _)| *a == "train_lora_tiny")
+        .map(|(_, m)| *m).unwrap();
+    let paca = results.iter().find(|(a, _)| *a == "train_paca_tiny")
+        .map(|(_, m)| *m).unwrap();
+    println!("\nPaCA vs LoRA step time: {:+.1}% (paper Fig 2: -19% \
+              at LLaMA3-8B scale)\n",
+             (paca / lora - 1.0) * 100.0);
+
+    println!("== small-lm (b=8, s=128) ==");
+    for artifact in ["train_paca_small", "train_lora_small"] {
+        let mut cfg = TrainConfig::default();
+        cfg.artifact = artifact.into();
+        let mut tr = Trainer::new(&rt, cfg).expect(artifact);
+        bench(artifact, 2, 60, budget, || {
+            tr.train_step().unwrap();
+        }).report();
+    }
+
+    println!("\n== dispatch-path micro-benchmarks ==");
+    let mut gen = TokenGen::new(Task::Instr, 512, 1);
+    bench("data: train_batch 4x64 (instr)", 10, 5000,
+          Duration::from_secs(3), || {
+              std::hint::black_box(gen.train_batch(4, 64));
+          }).report();
+    let batch = gen.train_batch(4, 64);
+    bench("h2d: tokens literal 4x65 i32", 10, 5000,
+          Duration::from_secs(3), || {
+              std::hint::black_box(batch.to_literal().unwrap());
+          }).report();
+    let w = HostTensor::from_f32(&[512, 64], vec![0.5; 512 * 64]);
+    bench("h2d: weight literal 512x64 f32", 10, 5000,
+          Duration::from_secs(3), || {
+              std::hint::black_box(w.to_literal().unwrap());
+          }).report();
+
+    println!("\n== eval-step latency ==");
+    let mut cfg = TrainConfig::default();
+    cfg.artifact = "train_paca_tiny".into();
+    let mut tr = Trainer::new(&rt, cfg).unwrap();
+    bench("eval (4 categories x 1 batch)", 1, 50, budget, || {
+        tr.evaluate(1).unwrap();
+    }).report();
+}

@@ -1,0 +1,94 @@
+//! End-to-end driver (DESIGN.md §5, EXPERIMENTS.md §E2E): fine-tune the
+//! ~110M-parameter `large-lm` transformer with PaCA for a few hundred
+//! steps on the synthetic instruction corpus, proving all three layers
+//! compose: Pallas-validated kernels → AOT-lowered JAX train graph →
+//! rust coordinator on the PJRT CPU client.
+//!
+//!     cargo run --release --example e2e_train -- [steps] [artifact]
+//!
+//! Defaults: 300 steps of train_paca_large (batch 4, seq 128). Writes
+//! the loss curve to e2e_loss_curve.csv and a checkpoint next to it.
+
+use std::time::Instant;
+
+use anyhow::Result;
+use paca::config::{SchedKind, TrainConfig};
+use paca::coordinator::Trainer;
+use paca::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.first().map(|s| s.parse()).transpose()?
+        .unwrap_or(300);
+    let artifact = args.get(1).cloned()
+        .unwrap_or_else(|| "train_paca_large".to_string());
+
+    let rt = Runtime::new(&paca::default_artifacts_dir())?;
+    let mut cfg = TrainConfig::default();
+    cfg.artifact = artifact;
+    cfg.task = "instr".into();
+    cfg.steps = steps;
+    cfg.warmup_steps = (steps / 20).max(5);
+    cfg.sched = SchedKind::Cosine;
+    cfg.peak_lr = 1e-3;
+    cfg.log_every = 10;
+    cfg.eval_every = 0;
+
+    let t0 = Instant::now();
+    let mut trainer = Trainer::new(&rt, cfg)?;
+    let model = rt.manifest.model(&trainer.info().model)?;
+    let compile_s = t0.elapsed().as_secs_f64();
+    println!("e2e: {} ({} params, method {}, rank {}) — compiled + \
+              initialized in {compile_s:.1}s",
+             model.name,
+             paca::metrics::fmt_params(model.n_params() as f64),
+             trainer.info().method, trainer.info().rank);
+    println!("trainable: {} params ({:.3}% of model)",
+             paca::metrics::fmt_params(
+                 trainer.info().trainable_params as f64),
+             100.0 * trainer.info().trainable_params as f64
+                 / model.n_params() as f64);
+
+    let (b, s) = trainer.batch_geometry();
+    let train_t0 = Instant::now();
+    trainer.run(true)?;
+    let train_s = train_t0.elapsed().as_secs_f64();
+    let toks_per_s = (trainer.step * b * s) as f64 / train_s;
+
+    println!("\n=== e2e summary ===");
+    println!("steps: {}   wall: {:.1}s   {:.3} s/step   {:.0} tok/s   \
+              {:.2} seq/s",
+             trainer.step, train_s, train_s / trainer.step as f64,
+             toks_per_s, (trainer.step * b) as f64 / train_s);
+    println!("timers: {}", trainer.timers.report());
+    let first = trainer.curve.loss.first().copied().unwrap_or(0.0);
+    println!("loss: {:.4} -> {:.4} (tail-5 mean)", first,
+             trainer.curve.tail_mean(5));
+
+    // Loss curve snapshot (every ~10th point) for EXPERIMENTS.md.
+    print!("curve:");
+    let n = trainer.curve.steps.len();
+    for i in (0..n).step_by((n / 12).max(1)) {
+        print!(" {}:{:.3}", trainer.curve.steps[i],
+               trainer.curve.loss[i]);
+    }
+    println!(" {}:{:.3}", trainer.curve.steps[n - 1],
+             trainer.curve.loss[n - 1]);
+
+    std::fs::write("e2e_loss_curve.csv", trainer.curve.to_csv())?;
+    trainer.save_checkpoint(std::path::Path::new("e2e_model.ckpt"))?;
+    println!("wrote e2e_loss_curve.csv + e2e_model.ckpt");
+
+    let ev = trainer.evaluate(4)?;
+    println!("\nheld-out per-category eval:");
+    for (c, (l, a)) in ev.categories.iter()
+        .zip(ev.loss.iter().zip(&ev.acc))
+    {
+        println!("  {:<9} loss {:.4}  acc {:.3}", c, l, a);
+    }
+    println!("  mean      loss {:.4}  acc {:.3}", ev.mean_loss(),
+             ev.mean_acc());
+    assert!(trainer.curve.tail_mean(5) < first,
+            "e2e training must reduce the loss");
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Side-by-side comparison of all seven PEFT methods on the same task
+//! and model — the paper's core comparison matrix in miniature.
+//!
+//!     cargo run --release --example peft_compare -- [steps]
+
+use anyhow::Result;
+use paca::config::TrainConfig;
+use paca::coordinator::Trainer;
+use paca::metrics::{fmt_params, Table};
+use paca::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args().nth(1)
+        .map(|s| s.parse()).transpose()?.unwrap_or(50);
+    let rt = Runtime::new(&paca::default_artifacts_dir())?;
+
+    let mut table = Table::new(&["Method", "Rank", "Trainable", "s/step",
+                                 "loss start", "loss end",
+                                 "held-out acc"]);
+    for (method, artifact, rank) in [
+        ("full", "train_full_tiny", 0),
+        ("lora", "train_lora_tiny", 8),
+        ("dora", "train_dora_tiny", 8),
+        ("moslora", "train_moslora_tiny", 8),
+        ("paca", "train_paca_tiny", 8),
+        ("paca", "train_paca_tiny_r16", 16),
+        ("qlora", "train_qlora_tiny", 8),
+        ("qpaca", "train_qpaca_tiny", 8),
+    ] {
+        let mut cfg = TrainConfig::default();
+        cfg.artifact = artifact.into();
+        cfg.task = "instr".into();
+        cfg.steps = steps;
+        cfg.warmup_steps = (steps / 10).max(1);
+        cfg.peak_lr = if method == "full" { 5e-4 } else { 2e-3 };
+        let mut tr = Trainer::new(&rt, cfg)?;
+        let t0 = std::time::Instant::now();
+        tr.run(false)?;
+        let per_step = t0.elapsed().as_secs_f64() / steps as f64;
+        let ev = tr.evaluate(2)?;
+        table.row(&[method.into(), rank.to_string(),
+                    fmt_params(tr.info().trainable_params as f64),
+                    format!("{:.4}", per_step),
+                    format!("{:.3}", tr.curve.loss[0]),
+                    format!("{:.3}", tr.curve.tail_mean(5)),
+                    format!("{:.3}", ev.mean_acc())]);
+        println!("{method:8} r{rank:<3} done");
+    }
+    println!("\n{}", table.render());
+    Ok(())
+}

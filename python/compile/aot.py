@@ -1,0 +1,234 @@
+"""AOT entry point: lower every artifact in configs.default_aot_specs()
+to HLO *text* plus a JSON manifest the rust coordinator loads.
+
+HLO text — NOT `lowered.serialize()` / serialized HloModuleProto — is the
+interchange format: jax ≥ 0.5 emits protos with 64-bit instruction ids
+that the `xla` crate's xla_extension 0.5.1 rejects (`proto.id() <=
+INT_MAX`); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts/model.hlo.txt
+(the --out path's directory receives every artifact + manifest.json; the
+named file doubles as the Makefile's freshness stamp).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, train_step
+from .configs import AotSpec, PeftConfig
+from .kernels import nf4 as nf4_k
+from .kernels import paca_grad as paca_k
+from .kernels import ref as kref
+from .peft import trainable_param_count
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32, "i8": jnp.int8}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True is ESSENTIAL: the default printer
+    # elides big constant literals as `constant({...})`, which the
+    # xla_extension 0.5.1 text parser silently reads as ZEROS (found
+    # the hard way — the NF4 codebook came back all-zero in rust).
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "constant({...})" not in text, "elided constant in HLO text"
+    return text
+
+
+def _sds(entry) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(entry.shape), DTYPES[entry.dtype])
+
+
+def _entry_json(e) -> dict:
+    return {"name": e.name, "shape": list(e.shape), "dtype": e.dtype,
+            "role": e.role, "init": e.init, "updated": e.updated}
+
+
+def lower_model_artifact(spec: AotSpec):
+    cfg = configs.model(spec.model)
+    pcfg = PeftConfig(method=spec.method, rank=spec.rank,
+                      alpha=spec.alpha, use_pallas=spec.use_pallas)
+    kind = ("vit" if spec.model.startswith("vit")
+            else "cnn" if spec.model.startswith("cnn") else "lm")
+    if spec.kind == "train_step":
+        fn, entries, b_entries, _p0, reg = train_step.build_train_step(
+            cfg, pcfg, spec.batch, spec.seq, kind=kind)
+        extra = [train_step.StateEntry("lr", (), "f32", "scalar", {},
+                                       False)]
+        outputs = [e.name for e in entries if e.updated] + ["loss", "acc"]
+    else:
+        fn, entries, b_entries, _p0, reg = train_step.build_eval_step(
+            cfg, pcfg, spec.batch, spec.seq, kind=kind)
+        extra = []
+        outputs = ["loss", "acc"]
+    args = [_sds(e) for e in entries + b_entries + extra]
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    row = {
+        "name": spec.name, "file": f"{spec.name}.hlo.txt",
+        "kind": spec.kind, "model": spec.model, "method": spec.method,
+        "rank": spec.rank, "alpha": spec.alpha, "batch": spec.batch,
+        "seq": spec.seq, "use_pallas": spec.use_pallas,
+        "trainable_params": trainable_param_count(reg),
+        "state": [_entry_json(e) for e in entries],
+        "batch_inputs": [_entry_json(e) for e in b_entries],
+        "extra_inputs": [_entry_json(e) for e in extra],
+        "outputs": outputs,
+    }
+    return text, row
+
+
+def lower_kernel_artifact(spec: AotSpec):
+    """Kernel-level artifacts for rust-side numeric cross-checks of the
+    Pallas (interpret=True) lowering."""
+    if spec.name == "kernel_paca_grad":
+        t, r, dout = 64, spec.rank, 64
+
+        def fn(xp, dy):
+            return (paca_k.paca_grad(xp, dy, interpret=True),)
+
+        ins = [train_step.StateEntry("xp", (t, r), "f32", "batch", {},
+                                     False),
+               train_step.StateEntry("dy", (t, dout), "f32", "batch", {},
+                                     False)]
+        outs = ["dp"]
+    elif spec.name == "kernel_nf4_roundtrip":
+        # Dequant-only: quantization happens host-side (rust init.rs /
+        # nf4.rs), exactly as in the production QPaCA path — the graph
+        # only ever dequantizes.
+        shape = (64, 64)
+
+        def fn(codes, scales):
+            return (nf4_k.dequant_weight(codes, scales, shape,
+                                         interpret=True),)
+
+        ins = [train_step.StateEntry("codes", (64, 64), "i8", "batch",
+                                     {}, False),
+               train_step.StateEntry("scales", (64,), "f32", "batch",
+                                     {}, False)]
+        outs = ["w_dequant"]
+    else:
+        raise KeyError(spec.name)
+    lowered = jax.jit(fn).lower(*[_sds(e) for e in ins])
+    text = to_hlo_text(lowered)
+    row = {"name": spec.name, "file": f"{spec.name}.hlo.txt",
+           "kind": "kernel", "model": spec.model, "method": spec.method,
+           "rank": spec.rank, "alpha": spec.alpha, "batch": spec.batch,
+           "seq": spec.seq, "use_pallas": True, "trainable_params": 0,
+           "state": [], "batch_inputs": [_entry_json(e) for e in ins],
+           "extra_inputs": [], "outputs": outs}
+    return text, row
+
+
+def lower_grad_probe(spec: AotSpec):
+    """Gradient-probe graph for the Table-5 gradient-based selection:
+    full-autodiff per-row gradient-norm scores of every PEFT target
+    weight for one batch (the paper accumulates these over the first
+    100 iterations without updating weights)."""
+    cfg = configs.model(spec.model)
+    pcfg = PeftConfig(method="full")
+    fn_e, entries, b_entries, _p0, reg = train_step.build_eval_step(
+        cfg, pcfg, spec.batch, spec.seq, kind="lm")
+    import jax.numpy as jnp
+
+    from . import model as lm
+    target_names = [s.name for s in reg.specs
+                    if s.name.split("/")[-1] == "w"
+                    and s.name.startswith("blocks/")]
+    specs_list = reg.specs
+
+    def fn(*args):
+        n = len(entries)
+        params = {s.name: a for s, a in zip(specs_list, args[:n])}
+        tokens = args[n]
+
+        def loss_fn(targets):
+            merged = {**params, **targets}
+            return lm.loss_and_acc(merged, tokens, cfg, pcfg, None)[0]
+
+        grads = jax.grad(loss_fn)(
+            {t: params[t] for t in target_names})
+        return tuple(jnp.sum(jnp.square(grads[t]), axis=1)
+                     for t in target_names)
+
+    args = [_sds(e) for e in entries + b_entries]
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    row = {"name": spec.name, "file": f"{spec.name}.hlo.txt",
+           "kind": "grad_probe", "model": spec.model, "method": "full",
+           "rank": spec.rank, "alpha": spec.alpha, "batch": spec.batch,
+           "seq": spec.seq, "use_pallas": False, "trainable_params": 0,
+           "state": [_entry_json(e) for e in entries],
+           "batch_inputs": [_entry_json(e) for e in b_entries],
+           "extra_inputs": [],
+           "outputs": [f"grad_sq/{t}" for t in target_names]}
+    return text, row
+
+
+def build_all(out_dir: str, only: List[str] = None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    rows = []
+    for spec in configs.default_aot_specs():
+        if only and spec.name not in only:
+            continue
+        if spec.kind == "kernel":
+            text, row = lower_kernel_artifact(spec)
+        elif spec.kind == "grad_probe":
+            text, row = lower_grad_probe(spec)
+        else:
+            text, row = lower_model_artifact(spec)
+        path = os.path.join(out_dir, row["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        row["sha256"] = hashlib.sha256(text.encode()).hexdigest()[:16]
+        row["bytes"] = len(text)
+        rows.append(row)
+        print(f"lowered {row['name']:28s} {len(text):>10d} chars")
+    # --only rebuilds merge into the existing manifest instead of
+    # clobbering the rows that were not rebuilt.
+    mpath = os.path.join(out_dir, "manifest.json")
+    if only and os.path.exists(mpath):
+        with open(mpath) as f:
+            old = json.load(f)
+        built = {r["name"] for r in rows}
+        rows = [r for r in old.get("artifacts", [])
+                if r["name"] not in built] + rows
+        rows.sort(key=lambda r: r["name"])
+    manifest = {
+        "version": 1,
+        "models": {name: configs.to_jsonable(m)
+                   for name, m in configs.MODELS.items()},
+        "artifacts": rows,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="stamp file; its dir receives all artifacts")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset of artifact names to (re)build")
+    args = ap.parse_args()
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+    build_all(out_dir, args.only)
+    # Freshness stamp for the Makefile (also a tiny smoke artifact).
+    with open(args.out, "w") as f:
+        f.write("# stamp: artifacts built; see manifest.json\n")
+    print(f"manifest + {len(os.listdir(out_dir)) - 1} files in {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

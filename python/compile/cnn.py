@@ -1,0 +1,152 @@
+"""Small CNN for the paper's Table-7 generality claim (EfficientNetV2
+Full-FT vs PaCA): PaCA applies directly to convolution kernels — it
+fine-tunes a random subset of *input channels* of each conv — which
+LoRA's linear adapters cannot do without un-mergeable adapter layers.
+
+Conv weights use IOHW layout so the selected axis is axis 0, letting the
+train-step reuse the same gather/scatter row machinery as the LM
+(jnp.take(w, idx, axis=0) / w.at[idx].set(p)).
+"""
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig, PeftConfig
+from .peft import ParamSpec, Registry
+
+N_CLASSES = 10
+# (in_c, out_c, k) per conv stage; stride-2 pooling between stages.
+STAGES = [(3, 24, 3), (24, 48, 3), (48, 96, 3)]
+
+DN = jax.lax.conv_dimension_numbers(
+    (1, 3, 32, 32), (3, 24, 3, 3),
+    ("NCHW", "IOHW", "NCHW"))
+
+
+def conv(x, w):
+    """x: (B, C_in, H, W), w: (C_in, C_out, kh, kw) [IOHW]."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=DN)
+
+
+# --- PaCA for convolutions -------------------------------------------------
+# fwd: y = conv(x, w) — the frozen conv kernel, unchanged.
+# bwd: dx via conv transpose with the full kernel; ∇P restricted to the
+#      selected input channels, computed from the gathered activations
+#      x[:, idx] only (the conv analog of paper Eq. 9).
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def paca_conv(x, w, p_dummy, idx):
+    del p_dummy, idx
+    return conv(x, w)
+
+
+def _paca_conv_fwd(x, w, p_dummy, idx):
+    del p_dummy
+    y = conv(x, w)
+    xp = jnp.take(x, idx, axis=1)  # partial input channels only
+    return y, (xp, w, idx)
+
+
+def _paca_conv_bwd(res, dy):
+    xp, w, idx, = res
+    r = idx.shape[0]
+    # dx through the full frozen kernel.
+    _, vjp_x = jax.vjp(lambda x_: conv(x_, w),
+                       jnp.zeros((dy.shape[0], w.shape[0], dy.shape[2],
+                                  dy.shape[3]), dy.dtype))
+    (dx,) = vjp_x(dy)
+    # ∇P from the gathered channels: weight-grad of conv(xp, wp).
+    wp0 = jnp.zeros((r,) + w.shape[1:], w.dtype)
+    _, vjp_w = jax.vjp(lambda wp: conv(xp, wp), wp0)
+    (dp,) = vjp_w(dy)
+    dw = jnp.zeros_like(w)
+    didx = np.zeros(idx.shape, jax.dtypes.float0)
+    return dx, dw, dp, didx
+
+
+paca_conv.defvjp(_paca_conv_fwd, _paca_conv_bwd)
+
+
+def init_cnn(key, cfg: ModelConfig, pcfg: PeftConfig
+             ) -> Tuple[Dict[str, jnp.ndarray], Registry]:
+    """cfg is unused except for naming symmetry (the CNN is fixed-size);
+    pcfg.method must be 'full' or 'paca'."""
+    del cfg
+    assert pcfg.method in ("full", "paca"), pcfg.method
+    reg = Registry()
+    params: Dict[str, jnp.ndarray] = {}
+    keys = jax.random.split(key, len(STAGES) + 1)
+
+    for i, (cin, cout, k) in enumerate(STAGES):
+        name = f"convs/{i}/w"
+        fan_in = cin * k * k
+        std = float((2.0 / fan_in) ** 0.5)
+        w = jax.random.normal(keys[i], (cin, cout, k, k)) * std
+        if pcfg.method == "full":
+            params[name] = w
+            reg.add(ParamSpec(name, tuple(w.shape), "f32", "trainable",
+                              {"kind": "normal", "std": round(std, 6)},
+                              tuple(w.shape)))
+        else:
+            r = min(pcfg.rank, cin)
+            params[name] = w
+            reg.add(ParamSpec(name, tuple(w.shape), "f32", "paca_w",
+                              {"kind": "normal", "std": round(std, 6)},
+                              (r, cout, k, k)))
+            idx = jax.random.permutation(keys[i], cin)[:r] \
+                .astype(jnp.int32)
+            iname = f"convs/{i}/idx"
+            params[iname] = idx
+            reg.add(ParamSpec(iname, (r,), "i32", "index",
+                              {"kind": "choice", "n": cin}, None))
+
+    head_in = STAGES[-1][1]
+    hw = jax.random.normal(keys[-1], (head_in, N_CLASSES)) * 0.02
+    params["head/w"] = hw
+    reg.add(ParamSpec("head/w", (head_in, N_CLASSES), "f32",
+                      "trainable", {"kind": "normal", "std": 0.02},
+                      (head_in, N_CLASSES)))
+    return params, reg
+
+
+def pool2(x):
+    """2×2 mean pool, NCHW."""
+    b, c, h, w = x.shape
+    return x.reshape(b, c, h // 2, 2, w // 2, 2).mean(axis=(3, 5))
+
+
+def forward(params, images, pcfg: PeftConfig,
+            paca_dummies: Optional[Dict] = None) -> jnp.ndarray:
+    h = images
+    for i in range(len(STAGES)):
+        name = f"convs/{i}/w"
+        if pcfg.method == "paca":
+            dummy = (paca_dummies or {}).get(
+                name, jnp.zeros((params[f"convs/{i}/idx"].shape[0],)
+                                + params[name].shape[1:], jnp.float32))
+            h = paca_conv(h, params[name], dummy,
+                          params[f"convs/{i}/idx"])
+        else:
+            h = conv(h, params[name])
+        h = jax.nn.silu(h)
+        h = pool2(h)
+    h = h.mean(axis=(2, 3))  # global average pool -> (B, C)
+    return h @ params["head/w"]
+
+
+def loss_and_acc(params, images, labels, pcfg,
+                 paca_dummies: Optional[Dict] = None):
+    logits = forward(params, images, pcfg, paca_dummies)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels)
+                   .astype(jnp.float32))
+    return loss, acc

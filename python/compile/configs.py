@@ -1,0 +1,223 @@
+"""Model / PEFT / AOT configuration presets.
+
+The paper fine-tunes LLaMA2-7B/13B, LLaMA3-8B and LLaMA3.1-70B. Those do
+not fit the CPU-PJRT testbed, so we define architecture-faithful presets
+(same block structure, same 7 PEFT target matrices per block) at sizes the
+testbed can train, plus *profile-only* presets mirroring the paper models
+that feed the analytic device cost model (rust `simulator/`).
+
+Every preset is exported into `artifacts/manifest.json` so the rust layer
+shares a single source of truth for dimensions.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import Dict, List, Optional, Tuple
+
+# The seven per-block PEFT target matrices used throughout the paper
+# (Appendix C: Q, K, V, O, Up, Down, Gate).
+TARGET_MODULES = ("q", "k", "v", "o", "gate", "up", "down")
+
+PEFT_METHODS = ("full", "lora", "dora", "moslora", "paca", "qlora", "qpaca")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only LLaMA-style transformer configuration."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_seq: int
+    # Whether this preset is only used by the analytic cost model
+    # (dimensions of the paper's actual models; never lowered to HLO).
+    profile_only: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def linear_shapes(self) -> Dict[str, Tuple[int, int]]:
+        """(d_in, d_out) of each PEFT target matrix in one block."""
+        d, f = self.d_model, self.d_ff
+        return {
+            "q": (d, d),
+            "k": (d, d),
+            "v": (d, d),
+            "o": (d, d),
+            "gate": (d, f),
+            "up": (d, f),
+            "down": (f, d),
+        }
+
+    def n_params(self) -> int:
+        """Total parameter count (embedding + blocks + head + norms)."""
+        per_block = sum(i * o for i, o in self.linear_shapes().values())
+        per_block += 2 * self.d_model  # two RMSNorm gains
+        return (
+            self.vocab * self.d_model          # embedding
+            + self.n_layers * per_block
+            + self.d_model                     # final norm
+            + self.d_model * self.vocab        # lm head
+        )
+
+
+@dataclass(frozen=True)
+class PeftConfig:
+    """Method + rank. `alpha` follows LoRA's scaling convention."""
+
+    method: str = "paca"
+    rank: int = 8
+    alpha: float = 32.0
+    # NF4 block size for qlora/qpaca.
+    quant_block: int = 64
+    # Use the Pallas kernels (interpret=True) inside the lowered graph for
+    # the PaCA backward / NF4 dequant hot-spots. jnp path is numerically
+    # identical (tested) and is used for the larger e2e graphs where
+    # interpret-mode while-loops are impractically slow on CPU.
+    use_pallas: bool = False
+
+    def __post_init__(self):
+        assert self.method in PEFT_METHODS, self.method
+
+    @property
+    def scaling(self) -> float:
+        return self.alpha / self.rank
+
+
+@dataclass(frozen=True)
+class AotSpec:
+    """One artifact to lower: (model, method, batch geometry)."""
+
+    name: str
+    model: str
+    kind: str  # "train_step" | "eval_step" | "kernel"
+    method: str = "paca"
+    rank: int = 8
+    alpha: float = 32.0
+    batch: int = 8
+    seq: int = 64
+    use_pallas: bool = False
+
+
+# --- Trainable presets (lowered to HLO, run by the rust coordinator) -----
+
+MODELS: Dict[str, ModelConfig] = {}
+
+
+def _m(cfg: ModelConfig) -> ModelConfig:
+    MODELS[cfg.name] = cfg
+    return cfg
+
+
+# ~0.5M params; used by unit/integration tests and most benches.
+TINY = _m(ModelConfig("tiny-lm", vocab=512, d_model=64, n_layers=2,
+                      n_heads=4, d_ff=172, max_seq=128))
+# ~5M params; table1/2-analog runs.
+SMALL = _m(ModelConfig("small-lm", vocab=2048, d_model=160, n_layers=4,
+                       n_heads=4, d_ff=432, max_seq=256))
+# ~27M params; the end-to-end example's default.
+BASE = _m(ModelConfig("base-lm", vocab=8192, d_model=320, n_layers=8,
+                      n_heads=8, d_ff=864, max_seq=512))
+# ~110M params; the end-to-end example (examples/e2e_train.rs).
+LARGE = _m(ModelConfig("large-lm", vocab=16384, d_model=768, n_layers=12,
+                       n_heads=12, d_ff=2048, max_seq=1024))
+
+# tiny ViT / CNN for the appendix-B experiments. The CNN's dims are
+# fixed in cnn.py (STAGES); the preset exists for naming/manifest only.
+VIT_TINY = _m(ModelConfig("vit-tiny", vocab=0, d_model=96, n_layers=4,
+                          n_heads=4, d_ff=256, max_seq=65))
+CNN_TINY = _m(ModelConfig("cnn-tiny", vocab=0, d_model=96, n_layers=3,
+                          n_heads=1, d_ff=96, max_seq=1))
+
+# --- Profile-only presets: the paper's models, for the cost model --------
+
+LLAMA2_7B = _m(ModelConfig("llama2-7b", vocab=32000, d_model=4096,
+                           n_layers=32, n_heads=32, d_ff=11008,
+                           max_seq=4096, profile_only=True))
+LLAMA2_13B = _m(ModelConfig("llama2-13b", vocab=32000, d_model=5120,
+                            n_layers=40, n_heads=40, d_ff=13824,
+                            max_seq=4096, profile_only=True))
+LLAMA3_8B = _m(ModelConfig("llama3-8b", vocab=128256, d_model=4096,
+                           n_layers=32, n_heads=32, d_ff=14336,
+                           max_seq=8192, profile_only=True))
+LLAMA31_70B = _m(ModelConfig("llama3.1-70b", vocab=128256, d_model=8192,
+                             n_layers=80, n_heads=64, d_ff=28672,
+                             max_seq=8192, profile_only=True))
+
+
+def model(name: str) -> ModelConfig:
+    return MODELS[name]
+
+
+# --- Artifact build list ---------------------------------------------------
+
+def default_aot_specs() -> List[AotSpec]:
+    """The artifact set `make artifacts` builds (see DESIGN.md §6)."""
+    specs: List[AotSpec] = []
+    for method in ("full", "lora", "dora", "moslora", "paca", "qlora",
+                   "qpaca"):
+        specs.append(AotSpec(
+            name=f"train_{method}_tiny", model="tiny-lm", kind="train_step",
+            method=method, rank=8, batch=4, seq=64,
+            use_pallas=(method == "paca")))
+    specs.append(AotSpec(name="train_paca_tiny_r16", model="tiny-lm",
+                         kind="train_step", method="paca", rank=16,
+                         batch=4, seq=64))
+    specs.append(AotSpec(name="train_paca_small", model="small-lm",
+                         kind="train_step", method="paca", rank=16,
+                         batch=8, seq=128))
+    specs.append(AotSpec(name="train_lora_small", model="small-lm",
+                         kind="train_step", method="lora", rank=16,
+                         batch=8, seq=128))
+    specs.append(AotSpec(name="train_paca_base", model="base-lm",
+                         kind="train_step", method="paca", rank=32,
+                         batch=8, seq=256))
+    specs.append(AotSpec(name="train_full_base", model="base-lm",
+                         kind="train_step", method="full",
+                         batch=8, seq=256))
+    specs.append(AotSpec(name="train_paca_large", model="large-lm",
+                         kind="train_step", method="paca", rank=64,
+                         batch=4, seq=128))
+    for mname, b, s in (("tiny-lm", 4, 64), ("small-lm", 8, 128),
+                        ("base-lm", 8, 256), ("large-lm", 4, 128)):
+        short = mname.split("-")[0]
+        # Eval graphs take MERGED full-shape weights (method "full"),
+        # so one eval artifact serves every PEFT method: the rust
+        # coordinator merges adapters into the base weights first —
+        # exactly the paper's inference-time merging story.
+        specs.append(AotSpec(name=f"eval_lm_{short}", model=mname,
+                             kind="eval_step", method="full",
+                             batch=b, seq=s))
+    # ViT (table 6) — lora vs paca.
+    specs.append(AotSpec(name="train_paca_vit_tiny", model="vit-tiny",
+                         kind="train_step", method="paca", rank=8,
+                         batch=8, seq=65))
+    specs.append(AotSpec(name="train_lora_vit_tiny", model="vit-tiny",
+                         kind="train_step", method="lora", rank=8,
+                         batch=8, seq=65))
+    # CNN (table 7) — full-FT vs paca on convolutions.
+    specs.append(AotSpec(name="train_paca_cnn_tiny", model="cnn-tiny",
+                         kind="train_step", method="paca", rank=8,
+                         batch=8, seq=1))
+    specs.append(AotSpec(name="train_full_cnn_tiny", model="cnn-tiny",
+                         kind="train_step", method="full",
+                         batch=8, seq=1))
+    # Gradient-probe for the Table-5 gradient-based selection strategy.
+    specs.append(AotSpec(name="grad_probe_tiny", model="tiny-lm",
+                         kind="grad_probe", batch=4, seq=64))
+    # Kernel-level numeric cross-check artifacts (Pallas, interpret=True).
+    specs.append(AotSpec(name="kernel_paca_grad", model="tiny-lm",
+                         kind="kernel", method="paca", rank=8,
+                         batch=1, seq=64, use_pallas=True))
+    specs.append(AotSpec(name="kernel_nf4_roundtrip", model="tiny-lm",
+                         kind="kernel", method="qpaca", rank=8,
+                         batch=1, seq=64, use_pallas=True))
+    return specs
+
+
+def to_jsonable(cfg) -> dict:
+    return asdict(cfg)

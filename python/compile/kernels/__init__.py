@@ -1,0 +1,11 @@
+"""L1: Pallas kernels for PaCA's compute hot-spots + baselines.
+
+- paca_grad:  ∇P = (ᵖX_in)ᵀ∇X_out — the paper's only new backward op.
+- gather:     partial-activation gather / fine-tuned-row scatter.
+- lora:       two-serialized-GEMM adapter baseline.
+- nf4:        4-bit NormalFloat dequant (QPaCA/QLoRA path).
+- rmsnorm:    substrate norm kernel.
+- ref:        pure-jnp oracles for all of the above.
+"""
+
+from . import gather, lora, nf4, paca_grad, ref, rmsnorm  # noqa: F401

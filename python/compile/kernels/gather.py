@@ -1,0 +1,73 @@
+"""Pallas column-gather / row-scatter kernels for PaCA bookkeeping.
+
+`gather_cols` extracts the partial activations ᵖX_in = X_in[:, idx] that
+PaCA stores as the *only* backward residual (the activation-memory saving
+of the paper). `scatter_rows` writes the fine-tuned rows P back into the
+merged weight after the optimizer step.
+
+On TPU both are pure DMA-shaping ops: the gather is a strided HBM→VMEM
+read, the scatter a strided VMEM→HBM write; neither touches the MXU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_T = 256
+
+
+def _gather_kernel(idx_ref, x_ref, o_ref):
+    o_ref[...] = jnp.take(x_ref[...], idx_ref[...], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_cols(x: jnp.ndarray, idx: jnp.ndarray,
+                interpret: bool = True) -> jnp.ndarray:
+    """x: (T, d_in), idx: (r,) int32 -> (T, r)."""
+    t, d_in = x.shape
+    (r,) = idx.shape
+    bt = min(BLOCK_T, max(8, t))
+    rem = (-t) % bt
+    x_p = jnp.pad(x, ((0, rem), (0, 0))) if rem else x
+    tp = x_p.shape[0]
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid=(tp // bt,),
+        in_specs=[
+            pl.BlockSpec((r,), lambda i: (0,)),
+            pl.BlockSpec((bt, d_in), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tp, r), x.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), x_p)
+    return out[:t]
+
+
+def _scatter_kernel(idx_ref, p_ref, w_ref, o_ref):
+    """One grid step owns the whole matrix (scatter is index-chasing, not
+    tileable along the scattered axis without sorting idx)."""
+    idx = idx_ref[...]
+    o_ref[...] = w_ref[...].at[idx, :].set(p_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def scatter_rows(w: jnp.ndarray, idx: jnp.ndarray, p: jnp.ndarray,
+                 interpret: bool = True) -> jnp.ndarray:
+    """w: (d_in, d_out), idx: (r,), p: (r, d_out) -> w with rows replaced."""
+    d_in, d_out = w.shape
+    r = idx.shape[0]
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((r,), lambda i: (0,)),
+            pl.BlockSpec((r, d_out), lambda i: (0, 0)),
+            pl.BlockSpec((d_in, d_out), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((d_in, d_out), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d_in, d_out), w.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), p, w)

@@ -1,0 +1,79 @@
+"""Pallas kernels for the LoRA adapter path (the paper's baseline).
+
+The adapter is *deliberately* two separate pallas_calls — `x @ A` then
+`(xA) @ B` — mirroring the two serialized GPU kernels whose launch +
+sync latency is the overhead the paper measures in Fig. 2. Keeping the
+structure lets the lowered HLO exhibit the same non-fusable two-pass
+shape on TPU (two grid invocations over HBM).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_T = 128
+BLOCK_IN = 128
+BLOCK_OUT = 128
+
+
+def _pad(x, axis, mult):
+    rem = (-x.shape[axis]) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """Grid = (T/bT, N/bN, K/bK), accumulating over K."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul(x: jnp.ndarray, w: jnp.ndarray,
+           interpret: bool = True) -> jnp.ndarray:
+    """Tiled (T, K) @ (K, N) Pallas matmul."""
+    t, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    bt = min(BLOCK_T, max(8, t))
+    bk = min(BLOCK_IN, max(8, k))
+    bn = min(BLOCK_OUT, max(8, n))
+    x_p = _pad(_pad(x, 0, bt), 1, bk)
+    w_p = _pad(_pad(w, 0, bk), 1, bn)
+    tp, kp = x_p.shape
+    np_ = w_p.shape[1]
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(tp // bt, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bt, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((tp, np_), jnp.float32),
+        interpret=interpret,
+    )(x_p.astype(jnp.float32), w_p.astype(jnp.float32))
+    return out[:t, :n]
+
+
+def lora_adapter(x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+                 scaling: float, interpret: bool = True) -> jnp.ndarray:
+    """scaling * (x @ A) @ B as two serialized kernel invocations."""
+    x_mid = matmul(x, a, interpret=interpret)
+    return scaling * matmul(x_mid, b, interpret=interpret)
+
+
+def lora_fwd(x, w, a, b, scaling, interpret: bool = True):
+    """Full LoRA forward: frozen GEMM + serialized adapter GEMMs."""
+    return matmul(x, w, interpret=interpret) + lora_adapter(
+        x, a, b, scaling, interpret=interpret)

@@ -1,0 +1,60 @@
+"""Pallas NF4 (4-bit NormalFloat) dequantize kernel — the QPaCA hot path.
+
+QLoRA/QPaCA store frozen weights as 4-bit codebook indices plus a per-
+block absmax scale and dequantize on the fly in every forward/backward.
+Quantization happens once at load time, so only the *dequant* needs a
+kernel; quantize stays a jnp reference (ref.nf4_quantize_ref).
+
+TPU mapping: dequant is a pure VPU op — a 16-entry table lookup fused
+with the scale multiply while the block streams HBM→VMEM. The codebook
+lives in registers. Block size 64 matches bitsandbytes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NF4_CODEBOOK
+
+BLOCKS_PER_STEP = 64  # quant blocks handled per grid step
+
+
+def _dequant_kernel(cb_ref, codes_ref, scales_ref, o_ref):
+    codes = codes_ref[...].astype(jnp.int32)          # (bB, block)
+    vals = cb_ref[...][codes]                         # table lookup (VPU)
+    o_ref[...] = vals * scales_ref[...][:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def nf4_dequantize(codes: jnp.ndarray, scales: jnp.ndarray,
+                   interpret: bool = True) -> jnp.ndarray:
+    """codes: (nblocks, block) int8, scales: (nblocks,) f32 ->
+    (nblocks, block) f32. Caller reshapes to the weight shape."""
+    nblocks, block = codes.shape
+    bb = min(BLOCKS_PER_STEP, nblocks)
+    rem = (-nblocks) % bb
+    if rem:
+        codes = jnp.pad(codes, ((0, rem), (0, 0)))
+        scales = jnp.pad(scales, (0, rem))
+    nb_p = codes.shape[0]
+    out = pl.pallas_call(
+        _dequant_kernel,
+        grid=(nb_p // bb,),
+        in_specs=[
+            pl.BlockSpec((16,), lambda i: (0,)),
+            pl.BlockSpec((bb, block), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bb, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb_p, block), jnp.float32),
+        interpret=interpret,
+    )(NF4_CODEBOOK, codes, scales.astype(jnp.float32))
+    return out[:nblocks]
+
+
+def dequant_weight(codes: jnp.ndarray, scales: jnp.ndarray, shape,
+                   interpret: bool = True) -> jnp.ndarray:
+    """Dequantize straight to a weight matrix of `shape`."""
+    return nf4_dequantize(codes, scales, interpret=interpret).reshape(shape)

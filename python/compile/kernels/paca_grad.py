@@ -1,0 +1,153 @@
+"""Pallas kernel for the PaCA partial-connection gradient (paper Eq. 9).
+
+    ∇P = (ᵖX_in)ᵀ · ∇X_out        xp: (T, r), dy: (T, d_out) -> (r, d_out)
+
+This is the only *new* computation PaCA adds to backpropagation — the
+fwd/bwd matmuls are the frozen model's own kernels — so it is the L1
+hot-spot of the paper's contribution.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles (r, d_out)
+into MXU-friendly blocks and reduces over T in the innermost grid
+dimension with a VMEM accumulator; the fused variant additionally indexes
+the r selected features directly out of the full X_in block, so the
+column gather rides the HBM→VMEM DMA instead of being a separate pass.
+
+Executed with interpret=True (CPU PJRT cannot run Mosaic custom-calls);
+see EXPERIMENTS.md §Perf for the VMEM/MXU estimates of the chosen blocks.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block sizes chosen for the TPU MXU (128×128 systolic array) and VPU
+# 8×128 lanes; on the interpret path they only affect loop structure.
+BLOCK_T = 128
+BLOCK_R = 128
+BLOCK_OUT = 128
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def _paca_grad_kernel(xp_ref, dy_ref, o_ref):
+    """Grid = (r/bR, d_out/bO, T/bT); accumulate over the T axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (bT, bR)ᵀ @ (bT, bO) -> (bR, bO) partial product on the MXU.
+    o_ref[...] += jnp.dot(xp_ref[...].T, dy_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paca_grad(xp: jnp.ndarray, dy: jnp.ndarray,
+              interpret: bool = True) -> jnp.ndarray:
+    """∇P = xpᵀ @ dy with a tiled Pallas matmul.
+
+    xp: (T, r) partial activations, dy: (T, d_out) output gradient.
+    Arbitrary T/r/d_out (padded internally to block multiples).
+    """
+    t, r = xp.shape
+    t2, d_out = dy.shape
+    assert t == t2, (xp.shape, dy.shape)
+    bt = min(BLOCK_T, max(8, t))
+    br = min(BLOCK_R, max(8, r))
+    bo = min(BLOCK_OUT, max(8, d_out))
+    xp_p = _pad_to(_pad_to(xp, 0, bt), 1, br)
+    dy_p = _pad_to(_pad_to(dy, 0, bt), 1, bo)
+    tp, rp = xp_p.shape
+    op = dy_p.shape[1]
+    grid = (rp // br, op // bo, tp // bt)
+    out = pl.pallas_call(
+        _paca_grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, br), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bt, bo), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((br, bo), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rp, op), jnp.float32),
+        interpret=interpret,
+    )(xp_p.astype(jnp.float32), dy_p.astype(jnp.float32))
+    return out[:r, :d_out]
+
+
+def _paca_grad_fused_kernel(idx_ref, x_ref, dy_ref, o_ref):
+    """Fused gather+grad: gather the selected features of the X_in block
+    in-register, then the same tiled accumulation.
+
+    Grid = (r/bR, d_out/bO, T/bT). x_ref block is (bT, d_in) — the gather
+    picks the bR indices owned by grid row i out of the full feature dim,
+    which on TPU is expressed as a strided HBM→VMEM DMA.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    idx = idx_ref[...]  # (bR,) int32 feature indices for this grid row
+    xp = jnp.take(x_ref[...], idx, axis=1)  # (bT, bR)
+    o_ref[...] += jnp.dot(xp.T, dy_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paca_grad_fused(x: jnp.ndarray, idx: jnp.ndarray, dy: jnp.ndarray,
+                    interpret: bool = True) -> jnp.ndarray:
+    """∇P = x[:, idx]ᵀ @ dy without materializing the gathered matrix in
+    HBM. x: (T, d_in), idx: (r,) int32, dy: (T, d_out) -> (r, d_out)."""
+    t, d_in = x.shape
+    t2, d_out = dy.shape
+    assert t == t2
+    (r,) = idx.shape
+    bt = min(BLOCK_T, max(8, t))
+    br = min(BLOCK_R, max(8, r))
+    bo = min(BLOCK_OUT, max(8, d_out))
+    x_p = _pad_to(x, 0, bt)
+    dy_p = _pad_to(_pad_to(dy, 0, bt), 1, bo)
+    # Pad idx with repeats of index 0; padded rows are sliced off below.
+    rem = (-r) % br
+    idx_p = jnp.pad(idx, (0, rem)).astype(jnp.int32)
+    tp = x_p.shape[0]
+    rp, op = idx_p.shape[0], dy_p.shape[1]
+    grid = (rp // br, op // bo, tp // bt)
+    out = pl.pallas_call(
+        _paca_grad_fused_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br,), lambda i, j, k: (i,)),
+            pl.BlockSpec((bt, d_in), lambda i, j, k: (k, 0)),
+            pl.BlockSpec((bt, bo), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((br, bo), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rp, op), jnp.float32),
+        interpret=interpret,
+    )(idx_p, x_p.astype(jnp.float32), dy_p.astype(jnp.float32))
+    return out[:r, :d_out]
+
+
+def vmem_bytes(t: int, r: int, d_out: int, d_in: int = 0,
+               fused: bool = False) -> int:
+    """Estimated per-step VMEM footprint of the kernel (f32)."""
+    bt = min(BLOCK_T, max(8, t))
+    br = min(BLOCK_R, max(8, r))
+    bo = min(BLOCK_OUT, max(8, d_out))
+    x_block = bt * (d_in if fused else br)
+    return 4 * (x_block + bt * bo + br * bo)
+
+
+def mxu_flops(t: int, r: int, d_out: int) -> int:
+    """MAC-pair FLOPs the MXU performs for one ∇P."""
+    return 2 * t * r * d_out

@@ -1,0 +1,121 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal: each Pallas kernel is asserted
+allclose against its oracle in `python/tests/` over hypothesis-driven
+shape/dtype sweeps, and the L2 graphs can be lowered against either
+implementation (`PeftConfig.use_pallas`) with identical numerics.
+"""
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# PaCA partial-connection gradient:  ∇P = (ᵖX_in)ᵀ · ∇X_out   (paper Eq. 9)
+# Convention: activations are (T, d) row-major with y = x @ W, W: (d_in,
+# d_out); the paper's "columns of W ∈ R^{d_out×d_in}" are our W *rows*,
+# i.e. input-feature slices. idx selects r input features.
+# ---------------------------------------------------------------------------
+
+
+def paca_grad_ref(xp: jnp.ndarray, dy: jnp.ndarray) -> jnp.ndarray:
+    """∇P from pre-gathered partial activations. xp: (T, r), dy: (T, d_out)
+    -> (r, d_out)."""
+    return xp.T @ dy
+
+
+def paca_grad_fused_ref(x: jnp.ndarray, idx: jnp.ndarray,
+                        dy: jnp.ndarray) -> jnp.ndarray:
+    """Fused gather+grad: x: (T, d_in), idx: (r,) int32, dy: (T, d_out)."""
+    return jnp.take(x, idx, axis=1).T @ dy
+
+
+def gather_cols_ref(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """ᵖX_in = x[:, idx]. x: (T, d_in), idx: (r,) -> (T, r)."""
+    return jnp.take(x, idx, axis=1)
+
+
+def scatter_rows_ref(w: jnp.ndarray, idx: jnp.ndarray,
+                     p: jnp.ndarray) -> jnp.ndarray:
+    """Write the fine-tuned rows back into W: w[idx, :] = p."""
+    return w.at[idx, :].set(p)
+
+
+def scatter_add_rows_ref(w: jnp.ndarray, idx: jnp.ndarray,
+                         dp: jnp.ndarray) -> jnp.ndarray:
+    return w.at[idx, :].add(dp)
+
+
+# ---------------------------------------------------------------------------
+# LoRA adapter forward: y = x @ W + scaling * (x @ A) @ B
+# Two separate GEMMs — the serialized-adapter structure the paper measures.
+# A: (d_in, r), B: (r, d_out).
+# ---------------------------------------------------------------------------
+
+
+def lora_fwd_ref(x, w, a, b, scaling):
+    return x @ w + scaling * ((x @ a) @ b)
+
+
+def lora_adapter_ref(x, a, b, scaling):
+    return scaling * ((x @ a) @ b)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm: x * rsqrt(mean(x^2) + eps) * g
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_ref(x, g, eps=1e-6):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+# ---------------------------------------------------------------------------
+# NF4 (4-bit NormalFloat, QLoRA §3). 16-value codebook = quantiles of
+# N(0,1) normalized to [-1, 1]; per-block absmax scaling.
+# ---------------------------------------------------------------------------
+
+# The exact NF4 codebook from Dettmers et al. 2023 (bitsandbytes
+# functional.py); index 7 is exactly 0.
+NF4_CODEBOOK = jnp.array([
+    -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+    -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+    0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+    0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+    0.7229568362236023, 1.0,
+], dtype=jnp.float32)
+
+
+def nf4_quantize_ref(w: jnp.ndarray, block: int = 64):
+    """w: any shape with size % block == 0 -> (codes int8 (nblocks, block),
+    scales f32 (nblocks,)). Nearest-codebook-entry rounding."""
+    flat = w.reshape(-1, block)
+    scales = jnp.max(jnp.abs(flat), axis=1, keepdims=True)
+    # Avoid 0/0 on all-zero blocks.
+    normed = flat / jnp.where(scales == 0.0, 1.0, scales)
+    # (nblocks, block, 16) distance to each code.
+    dist = jnp.abs(normed[..., None] - NF4_CODEBOOK[None, None, :])
+    codes = jnp.argmin(dist, axis=-1).astype(jnp.int8)
+    return codes, scales[:, 0]
+
+
+def nf4_dequantize_ref(codes: jnp.ndarray, scales: jnp.ndarray,
+                       shape, block: int = 64) -> jnp.ndarray:
+    """codes: (nblocks, block) int8, scales: (nblocks,) -> f32 `shape`."""
+    vals = NF4_CODEBOOK[codes.astype(jnp.int32)] * scales[:, None]
+    return vals.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Softmax cross-entropy with integer targets (LM head loss).
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent_ref(logits: jnp.ndarray, targets: jnp.ndarray):
+    """logits: (T, V), targets: (T,) int32 -> (loss_per_tok (T,), ncorrect)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    loss = logz - gold
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == targets)
+                      .astype(jnp.float32))
+    return loss, correct

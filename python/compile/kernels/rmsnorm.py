@@ -1,0 +1,44 @@
+"""Pallas RMSNorm kernel (LLaMA-style pre-normalization).
+
+Row-parallel: each grid step normalizes a block of token rows entirely
+in VMEM (one HBM read + one write per element, VPU-only). Included both
+as a substrate kernel for the L2 model and as a simple single-pass
+baseline for the kernel test-suite.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_T = 256
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps):
+    x = x_ref[...]
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = x * jax.lax.rsqrt(var + eps) * g_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "eps"))
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-6,
+            interpret: bool = True) -> jnp.ndarray:
+    """x: (T, d), g: (d,) -> (T, d)."""
+    t, d = x.shape
+    bt = min(BLOCK_T, max(8, t))
+    rem = (-t) % bt
+    x_p = jnp.pad(x, ((0, rem), (0, 0))) if rem else x
+    tp = x_p.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(tp // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tp, d), jnp.float32),
+        interpret=interpret,
+    )(x_p.astype(jnp.float32), g.astype(jnp.float32))
+    return out[:t]

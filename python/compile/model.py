@@ -1,0 +1,139 @@
+"""L2: LLaMA-style decoder-only transformer (fwd + loss) with pluggable
+PEFT parameterization on the paper's seven target matrices per block
+(Q, K, V, O, Gate, Up, Down — Appendix C).
+
+Architecture follows LLaMA: RMSNorm pre-normalization, rotary position
+embeddings, SwiGLU MLP, untied LM head. Embedding / norms / head are
+frozen under every PEFT method (trainable under `full`), matching the
+paper's target-module list.
+
+All functions are pure; parameters are a flat '/'-keyed dict produced by
+`init_lm`, with a parallel `Registry` of specs for the AOT manifest.
+"""
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, PeftConfig, TARGET_MODULES
+from .peft import ParamSpec, Registry, apply_linear, init_linear
+
+
+def rmsnorm(x, g, eps=1e-6):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * g
+
+
+def rope_tables(seq: int, head_dim: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables (seq, head_dim/2), base 10000 (LLaMA)."""
+    half = head_dim // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = jnp.arange(seq, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, H, S, hd); rotate feature pairs."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1)
+
+
+def init_lm(key, cfg: ModelConfig, pcfg: PeftConfig
+            ) -> Tuple[Dict[str, jnp.ndarray], Registry]:
+    """Initialize params + spec registry. Embedding/norms/head are
+    `trainable` only under full fine-tuning."""
+    reg = Registry()
+    params: Dict[str, jnp.ndarray] = {}
+    full = pcfg.method == "full"
+    base_role = "trainable" if full else "frozen"
+
+    def add(name, arr, role, init):
+        params[name] = arr
+        reg.add(ParamSpec(name, tuple(arr.shape), "f32", role, init,
+                          tuple(arr.shape) if role == "trainable" else None))
+
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    add("embed/w",
+        jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * 0.02,
+        base_role, {"kind": "normal", "std": 0.02})
+
+    shapes = cfg.linear_shapes()
+    for layer in range(cfg.n_layers):
+        lkeys = jax.random.split(keys[1 + layer], len(TARGET_MODULES) + 2)
+        pre = f"blocks/{layer}"
+        add(f"{pre}/ln1/g", jnp.ones(cfg.d_model), base_role,
+            {"kind": "ones"})
+        add(f"{pre}/ln2/g", jnp.ones(cfg.d_model), base_role,
+            {"kind": "ones"})
+        for t_i, tname in enumerate(TARGET_MODULES):
+            d_in, d_out = shapes[tname]
+            params.update(init_linear(
+                lkeys[t_i], reg, f"{pre}/{tname}", d_in, d_out, pcfg,
+                seed_tag=layer * 10 + t_i))
+
+    add("lnf/g", jnp.ones(cfg.d_model), base_role, {"kind": "ones"})
+    add("head/w",
+        jax.random.normal(keys[-1], (cfg.d_model, cfg.vocab)) * 0.02,
+        base_role, {"kind": "normal", "std": 0.02})
+    return params, reg
+
+
+def forward(params: Dict[str, jnp.ndarray], tokens: jnp.ndarray,
+            cfg: ModelConfig, pcfg: PeftConfig,
+            paca_dummies: Optional[Dict] = None) -> jnp.ndarray:
+    """tokens: (B, S) int32 -> logits (B, S, V)."""
+    b, s = tokens.shape
+    h = jnp.take(params["embed/w"], tokens, axis=0)  # (B, S, d)
+    cos, sin = rope_tables(s, cfg.head_dim)
+    causal = jnp.tril(jnp.ones((s, s), jnp.bool_))
+
+    def lin(name, x):
+        return apply_linear(params, name, x, pcfg, paca_dummies)
+
+    def heads(x):
+        return x.reshape(b, s, cfg.n_heads, cfg.head_dim) \
+                .transpose(0, 2, 1, 3)
+
+    for layer in range(cfg.n_layers):
+        pre = f"blocks/{layer}"
+        # --- attention ---
+        xn = rmsnorm(h, params[f"{pre}/ln1/g"])
+        q = heads(lin(f"{pre}/q", xn))
+        k = heads(lin(f"{pre}/k", xn))
+        v = heads(lin(f"{pre}/v", xn))
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / (cfg.head_dim ** 0.5)
+        att = jnp.where(causal[None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+        h = h + lin(f"{pre}/o", ctx)
+        # --- SwiGLU MLP ---
+        xn = rmsnorm(h, params[f"{pre}/ln2/g"])
+        gate = lin(f"{pre}/gate", xn)
+        up = lin(f"{pre}/up", xn)
+        h = h + lin(f"{pre}/down", jax.nn.silu(gate) * up)
+
+    h = rmsnorm(h, params["lnf/g"])
+    return h @ params["head/w"]
+
+
+def loss_and_acc(params, tokens_full, cfg: ModelConfig, pcfg: PeftConfig,
+                 paca_dummies: Optional[Dict] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens_full: (B, S+1); next-token cross-entropy + token accuracy."""
+    inputs = tokens_full[:, :-1]
+    targets = tokens_full[:, 1:]
+    logits = forward(params, inputs, cfg, pcfg, paca_dummies)
+    v = logits.shape[-1]
+    flat = logits.reshape(-1, v)
+    tflat = targets.reshape(-1)
+    logz = jax.nn.logsumexp(flat, axis=-1)
+    gold = jnp.take_along_axis(flat, tflat[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean((jnp.argmax(flat, axis=-1) == tflat)
+                   .astype(jnp.float32))
+    return loss, acc

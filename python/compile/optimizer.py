@@ -1,0 +1,33 @@
+"""AdamW, expressed per-leaf so the train step can attach full moments to
+`trainable` leaves and row-sliced (r, d_out) moments to PaCA's merged
+weights. The learning rate is a *runtime scalar input* of the lowered
+graph; warmup/cosine/linear schedules are computed host-side by the rust
+coordinator (rust/src/coordinator/schedule.rs), keeping one artifact valid
+for any schedule.
+"""
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+
+class AdamHP(NamedTuple):
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+
+def adamw_update(p: jnp.ndarray, g: jnp.ndarray, m: jnp.ndarray,
+                 v: jnp.ndarray, step: jnp.ndarray, lr: jnp.ndarray,
+                 hp: AdamHP) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                      jnp.ndarray]:
+    """One AdamW step. `step` is the 1-based iteration count (i32 scalar),
+    `lr` a f32 scalar. Returns (p', m', v')."""
+    t = step.astype(jnp.float32)
+    m_new = hp.beta1 * m + (1.0 - hp.beta1) * g
+    v_new = hp.beta2 * v + (1.0 - hp.beta2) * jnp.square(g)
+    m_hat = m_new / (1.0 - hp.beta1 ** t)
+    v_hat = v_new / (1.0 - hp.beta2 ** t)
+    update = m_hat / (jnp.sqrt(v_hat) + hp.eps) + hp.weight_decay * p
+    return p - lr * update, m_new, v_new

@@ -1,0 +1,314 @@
+"""PEFT parameterizations: full | lora | dora | moslora | paca | qlora | qpaca.
+
+Every method is expressed as an `init_linear` (parameter layout + init
+spec for the manifest) and an `apply_linear` (forward). PaCA/QPaCA use a
+`jax.custom_vjp` so that
+
+  * the forward is the frozen model's single GEMM (no adapter kernels),
+  * the backward residual is ONLY the partial activations ᵖX_in — the
+    activation-memory claim of the paper, and
+  * ∇P is computed by the L1 Pallas kernel when `use_pallas` is set.
+
+Parameter trees are FLAT dicts keyed by '/'-joined paths; a parallel
+`Registry` of `ParamSpec`s records role/init/optimizer metadata and is
+serialized into artifacts/manifest.json for the rust coordinator.
+
+Roles:
+  trainable — AdamW state attached, updated by the optimizer.
+  paca_w    — PaCA's merged weight: forward uses it as-is; the optimizer
+              updates only the `rank` selected rows (AdamW state is
+              (r, d_out)); updated via scatter.
+  frozen    — passed through unchanged (pretrained / quantized weights).
+  index     — int32 selection indices (PaCA/QPaCA), constant.
+"""
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import PeftConfig
+from .kernels import gather as gather_k
+from .kernels import nf4 as nf4_k
+from .kernels import paca_grad as paca_k
+from .kernels import ref as kref
+
+
+# --------------------------------------------------------------------------
+# Param spec registry (shared source of truth with the rust layer)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class ParamSpec:
+    name: str
+    shape: Tuple[int, ...]
+    dtype: str                     # "f32" | "i32" | "i8"
+    role: str                      # trainable | paca_w | frozen | index
+    init: Dict[str, Any]
+    # Shape of the AdamW moment buffers, if any (differs from `shape` for
+    # paca_w, where only the selected rows carry optimizer state).
+    adam_shape: Optional[Tuple[int, ...]] = None
+
+    @property
+    def updated(self) -> bool:
+        return self.role in ("trainable", "paca_w")
+
+
+class Registry:
+    def __init__(self):
+        self.specs: List[ParamSpec] = []
+        self._names = set()
+
+    def add(self, spec: ParamSpec):
+        assert spec.name not in self._names, spec.name
+        self._names.add(spec.name)
+        self.specs.append(spec)
+
+    def by_role(self, *roles) -> List[ParamSpec]:
+        return [s for s in self.specs if s.role in roles]
+
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32, "i8": jnp.int8}
+
+
+# --------------------------------------------------------------------------
+# PaCA dense op with custom VJP
+# --------------------------------------------------------------------------
+#
+# fwd: y = x @ w                        — exactly the frozen model's GEMM.
+# bwd: dx = dy @ wᵀ                     — paper Eq. 8
+#      dp = (ᵖx)ᵀ dy                    — paper Eq. 9 (Pallas kernel)
+#      dw = 0                           — w is only updated through dp.
+#
+# `p_dummy` carries no value (the current row values live inside w); it
+# exists so jax.grad has a leaf to attach ∇P to. The train step gathers
+# the current rows out of w, applies AdamW with the (r, d_out) moments,
+# and scatters them back — keeping forward a single GEMM, as in the paper.
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def paca_dense(x, w, p_dummy, idx, use_pallas):
+    del p_dummy, idx
+    return x @ w
+
+
+def _paca_dense_fwd(x, w, p_dummy, idx, use_pallas):
+    del p_dummy
+    y = x @ w
+    # THE activation-memory saving: residual keeps only the r selected
+    # features of x (plus the weight, which is not an activation).
+    xp = jnp.take(x, idx, axis=-1)
+    return y, (xp, w, idx, x.shape)
+
+
+def _paca_dense_bwd(use_pallas, res, dy):
+    xp, w, idx, x_shape = res
+    dx = dy @ w.T
+    xp2 = xp.reshape(-1, xp.shape[-1])
+    dy2 = dy.reshape(-1, dy.shape[-1])
+    if use_pallas:
+        dp = paca_k.paca_grad(xp2, dy2, interpret=True)
+    else:
+        dp = kref.paca_grad_ref(xp2, dy2)
+    dw = jnp.zeros_like(w)  # dead; DCE'd since w's grad is never requested
+    didx = np.zeros(idx.shape, jax.dtypes.float0)
+    return dx, dw, dp, didx
+
+
+paca_dense.defvjp(_paca_dense_fwd, _paca_dense_bwd)
+
+
+# QPaCA variant: w_full is reconstructed from NF4 codes each call; the
+# trainable rows p are real parameters (they live outside the quantized
+# base, as in the paper's 16-bit selected connections).
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def qpaca_dense(x, codes, scales, p, idx, shape_pallas):
+    shape, use_pallas = shape_pallas
+    w = _dequant(codes, scales, shape, use_pallas)
+    w_full = w.at[idx, :].set(p)
+    return x @ w_full
+
+
+def _dequant(codes, scales, shape, use_pallas):
+    if use_pallas:
+        return nf4_k.dequant_weight(codes, scales, shape, interpret=True)
+    return kref.nf4_dequantize_ref(codes, scales, shape)
+
+
+def _qpaca_dense_fwd(x, codes, scales, p, idx, shape_pallas):
+    shape, use_pallas = shape_pallas
+    w = _dequant(codes, scales, shape, use_pallas)
+    w_full = w.at[idx, :].set(p)
+    y = x @ w_full
+    xp = jnp.take(x, idx, axis=-1)
+    # The dequantized weight is re-materialized in bwd from the 4-bit
+    # codes (as in QLoRA) instead of being saved as a residual.
+    return y, (xp, codes, scales, p, idx)
+
+
+def _qpaca_dense_bwd(shape_pallas, res, dy):
+    shape, use_pallas = shape_pallas
+    xp, codes, scales, p, idx = res
+    w_full = _dequant(codes, scales, shape, use_pallas).at[idx, :].set(p)
+    dx = dy @ w_full.T
+    xp2 = xp.reshape(-1, xp.shape[-1])
+    dy2 = dy.reshape(-1, dy.shape[-1])
+    if use_pallas:
+        dp = paca_k.paca_grad(xp2, dy2, interpret=True)
+    else:
+        dp = kref.paca_grad_ref(xp2, dy2)
+    zero_c = np.zeros(codes.shape, jax.dtypes.float0)
+    dscales = jnp.zeros_like(scales)
+    didx = np.zeros(idx.shape, jax.dtypes.float0)
+    return dx, zero_c, dscales, dp, didx
+
+
+qpaca_dense.defvjp(_qpaca_dense_fwd, _qpaca_dense_bwd)
+
+
+# --------------------------------------------------------------------------
+# init / apply per method
+# --------------------------------------------------------------------------
+
+
+def _normal(key, shape, std=0.02):
+    return jax.random.normal(key, shape, dtype=jnp.float32) * std
+
+
+def init_linear(key, reg: Registry, name: str, d_in: int, d_out: int,
+                pcfg: PeftConfig, seed_tag: int) -> Dict[str, jnp.ndarray]:
+    """Create the parameters of one PEFT-target linear layer `name`
+    (flat-dict fragment) and register their specs."""
+    m, r = pcfg.method, pcfg.rank
+    kw, ka, ki = jax.random.split(key, 3)
+    params: Dict[str, jnp.ndarray] = {}
+
+    def add(suffix, arr, role, init, adam_shape=None):
+        full = f"{name}/{suffix}"
+        params[full] = arr
+        dt = {"float32": "f32", "int32": "i32", "int8": "i8"}[str(arr.dtype)]
+        reg.add(ParamSpec(full, tuple(arr.shape), dt, role, init,
+                          adam_shape))
+
+    w = _normal(kw, (d_in, d_out))
+    w_init = {"kind": "normal", "std": 0.02}
+
+    if m == "full":
+        add("w", w, "trainable", w_init, adam_shape=(d_in, d_out))
+        return params
+
+    if m in ("lora", "moslora", "dora"):
+        add("w", w, "frozen", w_init)
+        a = _normal(ka, (d_in, r), std=1.0 / max(1, d_in) ** 0.5)
+        add("a", a, "trainable",
+            {"kind": "normal", "std": round(1.0 / max(1, d_in) ** 0.5, 6)},
+            adam_shape=(d_in, r))
+        add("b", jnp.zeros((r, d_out), jnp.float32), "trainable",
+            {"kind": "zeros"}, adam_shape=(r, d_out))
+        if m == "moslora":
+            add("mix", jnp.eye(r, dtype=jnp.float32), "trainable",
+                {"kind": "eye"}, adam_shape=(r, r))
+        if m == "dora":
+            mag = jnp.linalg.norm(w, axis=0)
+            add("mag", mag, "trainable",
+                {"kind": "col_norm", "of": f"{name}/w"},
+                adam_shape=(d_out,))
+        return params
+
+    if m == "paca":
+        add("w", w, "paca_w", w_init, adam_shape=(r, d_out))
+        idx = jax.random.choice(ki, d_in, (r,), replace=False) \
+            .astype(jnp.int32)
+        add("idx", idx, "index",
+            {"kind": "choice", "n": d_in, "seed_tag": seed_tag})
+        return params
+
+    if m in ("qlora", "qpaca"):
+        codes, scales = kref.nf4_quantize_ref(w, pcfg.quant_block)
+        add("codes", codes, "frozen",
+            {"kind": "nf4_codes", "of_shape": [d_in, d_out],
+             "std": 0.02, "block": pcfg.quant_block})
+        add("scales", scales, "frozen",
+            {"kind": "nf4_scales", "of_shape": [d_in, d_out],
+             "std": 0.02, "block": pcfg.quant_block})
+        if m == "qlora":
+            a = _normal(ka, (d_in, r), std=1.0 / max(1, d_in) ** 0.5)
+            add("a", a, "trainable",
+                {"kind": "normal",
+                 "std": round(1.0 / max(1, d_in) ** 0.5, 6)},
+                adam_shape=(d_in, r))
+            add("b", jnp.zeros((r, d_out), jnp.float32), "trainable",
+                {"kind": "zeros"}, adam_shape=(r, d_out))
+        else:  # qpaca: 16-bit selected rows, trainable
+            idx = jax.random.choice(ki, d_in, (r,), replace=False) \
+                .astype(jnp.int32)
+            add("idx", idx, "index",
+                {"kind": "choice", "n": d_in, "seed_tag": seed_tag})
+            add("p", w[idx, :], "trainable",
+                {"kind": "rows_of", "of_shape": [d_in, d_out],
+                 "std": 0.02, "idx": f"{name}/idx"},
+                adam_shape=(r, d_out))
+        return params
+
+    raise ValueError(m)
+
+
+def apply_linear(params: Dict[str, jnp.ndarray], name: str, x, pcfg:
+                 PeftConfig, paca_dummies: Optional[Dict] = None):
+    """Forward one PEFT-target linear. x: (..., d_in) -> (..., d_out)."""
+    m = pcfg.method
+    g = lambda s: params[f"{name}/{s}"]  # noqa: E731
+
+    if m == "full":
+        return x @ g("w")
+    if m == "lora":
+        return x @ g("w") + pcfg.scaling * ((x @ g("a")) @ g("b"))
+    if m == "moslora":
+        return x @ g("w") + pcfg.scaling * (((x @ g("a")) @ g("mix"))
+                                            @ g("b"))
+    if m == "dora":
+        w_dir = g("w") + pcfg.scaling * (g("a") @ g("b"))
+        col_norm = jnp.linalg.norm(w_dir, axis=0, keepdims=True)
+        w_eff = w_dir * (g("mag")[None, :] / (col_norm + 1e-6))
+        return x @ w_eff
+    if m == "paca":
+        dummy = (paca_dummies or {}).get(
+            f"{name}/w",
+            jnp.zeros((pcfg.rank, g("w").shape[1]), jnp.float32))
+        return paca_dense(x, g("w"), dummy, g("idx"), pcfg.use_pallas)
+    if m == "qlora":
+        shape = (g("a").shape[0], g("b").shape[1])
+        w = _dequant(g("codes"), g("scales"), shape, pcfg.use_pallas)
+        return x @ w + pcfg.scaling * ((x @ g("a")) @ g("b"))
+    if m == "qpaca":
+        p = g("p")
+        d_in = g("codes").size // p.shape[1]
+        shape = (d_in, p.shape[1])
+        return qpaca_dense(x, g("codes"), g("scales"), p, g("idx"),
+                           (shape, pcfg.use_pallas))
+    raise ValueError(m)
+
+
+def paca_dummy_tree(reg: Registry) -> Dict[str, jnp.ndarray]:
+    """Zero-valued leaves jax.grad differentiates to obtain ∇P
+    (one per paca_w spec; keyed by the weight's name)."""
+    return {s.name: jnp.zeros(s.adam_shape, jnp.float32)
+            for s in reg.specs if s.role == "paca_w"}
+
+
+def trainable_param_count(reg: Registry) -> int:
+    """Number of trainable scalars — the paper's `Param` column.
+    For paca_w only the selected rows count."""
+    n = 0
+    for s in reg.specs:
+        if s.role == "trainable":
+            n += int(np.prod(s.shape))
+        elif s.role == "paca_w":
+            n += int(np.prod(s.adam_shape))
+    return n

@@ -1,0 +1,193 @@
+"""Fused train-step / eval-step builders — the L2↔L3 interface.
+
+One lowered HLO module performs: forward → backward → AdamW update →
+PaCA row scatter, over a FLAT argument list so the rust coordinator can
+drive it with positional PJRT literals:
+
+    inputs  = [state_0 … state_{N-1}, batch…, lr]
+    outputs = (updated-state entries in order…, loss, acc)
+
+State entry order: every model ParamSpec (registry order), then one
+AdamW `m` and one `v` buffer per optimizer-carrying spec, then the i32
+step counter. Only entries with `updated=True` appear in the outputs —
+frozen weights and index vectors never round-trip. The full layout is
+serialized into artifacts/manifest.json by aot.py.
+
+PaCA specifics (see peft.py): ∇P is pulled out of jax.grad via the
+zero-valued dummy leaves; the optimizer gathers the current rows from
+the merged weight, applies AdamW with (r, d_out) moments, and scatters
+the rows back — forward stays a single GEMM per linear.
+"""
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import cnn as cnn_mod
+from . import model as lm
+from . import vit as vit_mod
+from .configs import ModelConfig, PeftConfig
+from .optimizer import AdamHP, adamw_update
+from .peft import Registry
+
+
+@dataclass
+class StateEntry:
+    name: str
+    shape: Tuple[int, ...]
+    dtype: str
+    role: str            # param roles | "opt_m" | "opt_v" | "opt_step"
+    init: Dict[str, Any]
+    updated: bool
+
+
+def state_entries(reg: Registry) -> List[StateEntry]:
+    entries = [StateEntry(s.name, s.shape, s.dtype, s.role, s.init,
+                          s.updated) for s in reg.specs]
+    for kind in ("m", "v"):
+        for s in reg.specs:
+            if s.adam_shape is not None:
+                entries.append(StateEntry(
+                    f"opt/{kind}/{s.name}", tuple(s.adam_shape), "f32",
+                    f"opt_{kind}", {"kind": "zeros"}, True))
+    entries.append(StateEntry("opt/step", (), "i32", "opt_step",
+                              {"kind": "const_i32", "value": 1}, True))
+    return entries
+
+
+def batch_entries(kind: str, batch: int, seq: int) -> List[StateEntry]:
+    if kind == "lm":
+        return [StateEntry("batch/tokens", (batch, seq + 1), "i32",
+                           "batch", {}, False)]
+    assert kind in ("vit", "cnn")
+    return [StateEntry("batch/images", (batch, 3, 32, 32), "f32", "batch",
+                       {}, False),
+            StateEntry("batch/labels", (batch,), "i32", "batch", {},
+                       False)]
+
+
+def build_train_step(cfg: ModelConfig, pcfg: PeftConfig, batch: int,
+                     seq: int, kind: str = "lm",
+                     hp: AdamHP = AdamHP()):
+    """Returns (fn, entries, b_entries, params0, reg). fn takes
+    len(entries)+len(b_entries)+1 positional arrays (last one = lr)."""
+    key = jax.random.PRNGKey(0)
+    if kind == "lm":
+        params0, reg = lm.init_lm(key, cfg, pcfg)
+    elif kind == "cnn":
+        params0, reg = cnn_mod.init_cnn(key, cfg, pcfg)
+    else:
+        params0, reg = vit_mod.init_vit(key, cfg, pcfg)
+    specs = reg.specs
+    entries = state_entries(reg)
+    b_entries = batch_entries(kind, batch, seq)
+    names = [e.name for e in entries]
+    diff_names = [s.name for s in specs if s.role == "trainable"]
+    paca_specs = [s for s in specs if s.role == "paca_w"]
+
+    def fn(*args):
+        n = len(entries)
+        arrays = dict(zip(names, args[:n]))
+        rest = args[n:]
+        params = {s.name: arrays[s.name] for s in specs}
+        step = arrays["opt/step"]
+        lr = rest[-1]
+
+        diff = {k: params[k] for k in diff_names}
+        dummies = {s.name: jnp.zeros(s.adam_shape, jnp.float32)
+                   for s in paca_specs}
+
+        def loss_fn(diff_p, dum):
+            merged = {**params, **diff_p}
+            if kind == "lm":
+                loss, acc = lm.loss_and_acc(merged, rest[0], cfg, pcfg,
+                                            dum)
+            elif kind == "cnn":
+                loss, acc = cnn_mod.loss_and_acc(merged, rest[0],
+                                                 rest[1], pcfg, dum)
+            else:
+                loss, acc = vit_mod.loss_and_acc(merged, rest[0], rest[1],
+                                                 cfg, pcfg, dum)
+            return loss, acc
+
+        (loss, acc), (g_diff, g_dum) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(diff, dummies)
+
+        new_arrays = dict(arrays)
+        # Standard trainable leaves: full-shape AdamW.
+        for name in diff_names:
+            p_new, m_new, v_new = adamw_update(
+                params[name], g_diff[name], arrays[f"opt/m/{name}"],
+                arrays[f"opt/v/{name}"], step, lr, hp)
+            new_arrays[name] = p_new
+            new_arrays[f"opt/m/{name}"] = m_new
+            new_arrays[f"opt/v/{name}"] = v_new
+        # PaCA merged weights: row-sliced AdamW + scatter (paper Eq. 11).
+        # (axis 0 is the selected axis for both linears (d_in) and IOHW
+        # convs (input channels), so one code path serves both.)
+        for s in paca_specs:
+            w = params[s.name]
+            idx = params[s.name.rsplit("/", 1)[0] + "/idx"]
+            p_cur = jnp.take(w, idx, axis=0)
+            p_new, m_new, v_new = adamw_update(
+                p_cur, g_dum[s.name], arrays[f"opt/m/{s.name}"],
+                arrays[f"opt/v/{s.name}"], step, lr, hp)
+            new_arrays[s.name] = w.at[idx, :].set(p_new)
+            new_arrays[f"opt/m/{s.name}"] = m_new
+            new_arrays[f"opt/v/{s.name}"] = v_new
+        new_arrays["opt/step"] = step + 1
+
+        outs = [new_arrays[e.name] for e in entries if e.updated]
+        return tuple(outs + [loss, acc])
+
+    return fn, entries, b_entries, params0, reg
+
+
+def build_eval_step(cfg: ModelConfig, pcfg: PeftConfig, batch: int,
+                    seq: int, kind: str = "lm"):
+    """Eval graph: inputs = [param entries…, batch…] -> (loss, acc)."""
+    key = jax.random.PRNGKey(0)
+    if kind == "lm":
+        params0, reg = lm.init_lm(key, cfg, pcfg)
+    elif kind == "cnn":
+        params0, reg = cnn_mod.init_cnn(key, cfg, pcfg)
+    else:
+        params0, reg = vit_mod.init_vit(key, cfg, pcfg)
+    specs = reg.specs
+    entries = [StateEntry(s.name, s.shape, s.dtype, s.role, s.init, False)
+               for s in specs]
+    b_entries = batch_entries(kind, batch, seq)
+
+    def fn(*args):
+        n = len(entries)
+        params = {s.name: a for s, a in zip(specs, args[:n])}
+        rest = args[n:]
+        if kind == "lm":
+            loss, acc = lm.loss_and_acc(params, rest[0], cfg, pcfg, None)
+        elif kind == "cnn":
+            loss, acc = cnn_mod.loss_and_acc(params, rest[0], rest[1],
+                                             pcfg, None)
+        else:
+            loss, acc = vit_mod.loss_and_acc(params, rest[0], rest[1],
+                                             cfg, pcfg, None)
+        return loss, acc
+
+    return fn, entries, b_entries, params0, reg
+
+
+def initial_state(entries: List[StateEntry],
+                  params0: Dict[str, jnp.ndarray]) -> List[jnp.ndarray]:
+    """Python-side initial state (tests / python-driven runs)."""
+    out = []
+    for e in entries:
+        if e.name in params0:
+            out.append(params0[e.name])
+        elif e.role in ("opt_m", "opt_v"):
+            out.append(jnp.zeros(e.shape, jnp.float32))
+        elif e.role == "opt_step":
+            out.append(jnp.array(1, jnp.int32))
+        else:
+            raise KeyError(e.name)
+    return out

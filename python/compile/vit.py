@@ -1,0 +1,119 @@
+"""Tiny Vision Transformer for the paper's Appendix-B generality study
+(Table 6: ViT-B/16 LoRA vs PaCA on four image datasets).
+
+Patch-embeds 32×32×3 images with a 4×4 patch linear, prepends a class
+token, runs pre-norm transformer blocks (GELU MLP — ViT, not SwiGLU),
+and classifies from the class token. PEFT targets: q,k,v,o,up,down
+(fc1/fc2 mapped onto up/down so the PEFT machinery is shared with the LM).
+"""
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, PeftConfig
+from .model import rmsnorm
+from .peft import ParamSpec, Registry, apply_linear, init_linear
+
+IMG = 32
+PATCH = 4
+N_PATCHES = (IMG // PATCH) ** 2          # 64
+N_CLASSES = 10
+VIT_TARGETS = ("q", "k", "v", "o", "up", "down")
+
+
+def init_vit(key, cfg: ModelConfig, pcfg: PeftConfig
+             ) -> Tuple[Dict[str, jnp.ndarray], Registry]:
+    reg = Registry()
+    params: Dict[str, jnp.ndarray] = {}
+    full = pcfg.method == "full"
+    base_role = "trainable" if full else "frozen"
+    d = cfg.d_model
+
+    def add(name, arr, role, init):
+        params[name] = arr
+        reg.add(ParamSpec(name, tuple(arr.shape), "f32", role, init,
+                          tuple(arr.shape) if role == "trainable" else None))
+
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    patch_dim = PATCH * PATCH * 3
+    add("patch/w", jax.random.normal(keys[0], (patch_dim, d)) * 0.02,
+        base_role, {"kind": "normal", "std": 0.02})
+    add("cls", jnp.zeros((1, 1, d)), base_role, {"kind": "zeros"})
+    add("pos", jax.random.normal(keys[1], (1, N_PATCHES + 1, d)) * 0.02,
+        base_role, {"kind": "normal", "std": 0.02})
+
+    shapes = {"q": (d, d), "k": (d, d), "v": (d, d), "o": (d, d),
+              "up": (d, cfg.d_ff), "down": (cfg.d_ff, d)}
+    for layer in range(cfg.n_layers):
+        lkeys = jax.random.split(keys[2 + layer], len(VIT_TARGETS))
+        pre = f"blocks/{layer}"
+        add(f"{pre}/ln1/g", jnp.ones(d), base_role, {"kind": "ones"})
+        add(f"{pre}/ln2/g", jnp.ones(d), base_role, {"kind": "ones"})
+        for t_i, tname in enumerate(VIT_TARGETS):
+            d_in, d_out = shapes[tname]
+            params.update(init_linear(
+                lkeys[t_i], reg, f"{pre}/{tname}", d_in, d_out, pcfg,
+                seed_tag=layer * 10 + t_i))
+
+    add("lnf/g", jnp.ones(d), base_role, {"kind": "ones"})
+    # The classification head is newly initialized and always trainable
+    # (standard fine-tuning practice; same for LoRA in the paper's setup).
+    params["head/w"] = jax.random.normal(keys[-1], (d, N_CLASSES)) * 0.02
+    reg.add(ParamSpec("head/w", (d, N_CLASSES), "f32", "trainable",
+                      {"kind": "normal", "std": 0.02}, (d, N_CLASSES)))
+    return params, reg
+
+
+def patchify(images: jnp.ndarray) -> jnp.ndarray:
+    """(B, 3, 32, 32) -> (B, 64, 48) patch vectors."""
+    b = images.shape[0]
+    g = IMG // PATCH
+    x = images.reshape(b, 3, g, PATCH, g, PATCH)
+    x = x.transpose(0, 2, 4, 3, 5, 1)            # (B, g, g, P, P, 3)
+    return x.reshape(b, N_PATCHES, PATCH * PATCH * 3)
+
+
+def forward(params, images, cfg: ModelConfig, pcfg: PeftConfig,
+            paca_dummies: Optional[Dict] = None) -> jnp.ndarray:
+    """images: (B, 3, 32, 32) -> logits (B, N_CLASSES)."""
+    b = images.shape[0]
+    h = patchify(images) @ params["patch/w"]              # (B, 64, d)
+    cls = jnp.broadcast_to(params["cls"], (b, 1, cfg.d_model))
+    h = jnp.concatenate([cls, h], axis=1) + params["pos"]
+    s = h.shape[1]
+
+    def lin(name, x):
+        return apply_linear(params, name, x, pcfg, paca_dummies)
+
+    def heads_(x):
+        return x.reshape(b, s, cfg.n_heads, cfg.head_dim) \
+                .transpose(0, 2, 1, 3)
+
+    for layer in range(cfg.n_layers):
+        pre = f"blocks/{layer}"
+        xn = rmsnorm(h, params[f"{pre}/ln1/g"])
+        q, k, v = heads_(lin(f"{pre}/q", xn)), heads_(lin(f"{pre}/k", xn)), \
+            heads_(lin(f"{pre}/v", xn))
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / (cfg.head_dim ** 0.5)
+        att = jax.nn.softmax(att, axis=-1)      # bidirectional (ViT)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+        h = h + lin(f"{pre}/o", ctx)
+        xn = rmsnorm(h, params[f"{pre}/ln2/g"])
+        h = h + lin(f"{pre}/down", jax.nn.gelu(lin(f"{pre}/up", xn)))
+
+    h = rmsnorm(h, params["lnf/g"])
+    return h[:, 0, :] @ params["head/w"]
+
+
+def loss_and_acc(params, images, labels, cfg, pcfg,
+                 paca_dummies: Optional[Dict] = None):
+    logits = forward(params, images, cfg, pcfg, paca_dummies)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels)
+                   .astype(jnp.float32))
+    return loss, acc

@@ -1,0 +1,11 @@
+import jax
+from hypothesis import HealthCheck, settings
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Pallas interpret-mode + jit compile times dominate; disable deadlines.
+settings.register_profile(
+    "kernels", deadline=None, max_examples=25,
+    suppress_health_check=[HealthCheck.too_slow,
+                           HealthCheck.data_too_large])
+settings.load_profile("kernels")

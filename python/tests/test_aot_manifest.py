@@ -1,0 +1,93 @@
+"""Manifest/artifact contract tests (the L2↔L3 interface). Runs against
+the artifacts built by `make artifacts` when present; otherwise builds a
+minimal subset into a temp dir."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, configs
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest(tmp_path_factory):
+    path = os.path.join(ART, "manifest.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    out = tmp_path_factory.mktemp("art")
+    return aot.build_all(str(out), only=["train_paca_tiny",
+                                         "eval_lm_tiny",
+                                         "kernel_paca_grad"])
+
+
+def test_manifest_has_every_default_spec_or_subset(manifest):
+    names = {a["name"] for a in manifest["artifacts"]}
+    assert "train_paca_tiny" in names
+
+
+def test_artifact_rows_well_formed(manifest):
+    for a in manifest["artifacts"]:
+        assert a["file"].endswith(".hlo.txt")
+        seen = set()
+        for e in a["state"] + a["batch_inputs"] + a["extra_inputs"]:
+            assert e["name"] not in seen
+            seen.add(e["name"])
+            assert all(d > 0 for d in e["shape"]) or e["shape"] == []
+            assert e["dtype"] in ("f32", "i32", "i8")
+        if a["kind"] == "train_step":
+            updated = [e["name"] for e in a["state"] if e["updated"]]
+            assert a["outputs"] == updated + ["loss", "acc"]
+            assert a["outputs"][-2:] == ["loss", "acc"]
+            assert a["trainable_params"] > 0
+
+
+def test_state_roles_valid(manifest):
+    valid = {"trainable", "paca_w", "frozen", "index", "opt_m", "opt_v",
+             "opt_step"}
+    for a in manifest["artifacts"]:
+        for e in a["state"]:
+            assert e["role"] in valid, e
+
+
+def test_init_kinds_are_known(manifest):
+    known = {"normal", "zeros", "ones", "eye", "choice", "col_norm",
+             "nf4_codes", "nf4_scales", "rows_of", "const_i32"}
+    for a in manifest["artifacts"]:
+        for e in a["state"]:
+            assert e["init"]["kind"] in known, e
+
+
+def test_paca_artifacts_have_row_sliced_moments(manifest):
+    for a in manifest["artifacts"]:
+        if a["method"] != "paca" or a["kind"] != "train_step":
+            continue
+        rank = a["rank"]
+        by_name = {e["name"]: e for e in a["state"]}
+        for name, e in by_name.items():
+            if e["role"] == "paca_w":
+                m = by_name["opt/m/" + name]
+                # rank clamps to the selected axis (e.g. a conv stage
+                # with only 3 input channels); trailing dims match W.
+                assert m["shape"][0] == min(rank, e["shape"][0])
+                assert m["shape"][1:] == e["shape"][1:]
+
+
+def test_models_section_includes_profiles(manifest):
+    ms = manifest["models"]
+    assert "llama3-8b" in ms and ms["llama3-8b"]["profile_only"]
+    assert "tiny-lm" in ms and not ms["tiny-lm"]["profile_only"]
+
+
+def test_hlo_files_exist_and_parse_header(manifest):
+    if not os.path.exists(os.path.join(ART, "manifest.json")):
+        pytest.skip("full artifact dir not built")
+    for a in manifest["artifacts"]:
+        p = os.path.join(ART, a["file"])
+        assert os.path.exists(p), p
+        with open(p) as f:
+            head = f.read(200)
+        assert head.startswith("HloModule"), a["file"]

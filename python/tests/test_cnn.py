@@ -1,0 +1,87 @@
+"""CNN substrate (paper Table 7): conv PaCA = input-channel selection.
+The custom VJP's ∇P must equal the channel-restriction of the full conv
+weight gradient, and only selected channels may train."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import cnn, configs, train_step
+from compile.configs import PeftConfig
+
+CFG = configs.model("cnn-tiny")
+
+
+def test_paca_conv_grad_is_channel_restriction():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 3, 8, 8))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 5, 3, 3)) * 0.3
+    idx = jnp.array([0, 2], jnp.int32)
+    dy_w = jax.random.normal(jax.random.PRNGKey(2), (2, 5, 8, 8))
+
+    def loss_paca(p):
+        y = cnn.paca_conv(x, w, p, idx)
+        return jnp.sum(y * dy_w)
+
+    dp = jax.grad(loss_paca)(jnp.zeros((2, 5, 3, 3)))
+
+    def loss_full(w_):
+        return jnp.sum(cnn.conv(x, w_) * dy_w)
+
+    dw_full = jax.grad(loss_full)(w)
+    np.testing.assert_allclose(dp, dw_full[idx], rtol=1e-4, atol=1e-4)
+
+
+def test_paca_conv_dx_matches_full():
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (1, 3, 8, 8))
+    w = jax.random.normal(jax.random.PRNGKey(4), (3, 4, 3, 3)) * 0.3
+    idx = jnp.array([1], jnp.int32)
+    dy_w = jax.random.normal(jax.random.PRNGKey(5), (1, 4, 8, 8))
+    dx_paca = jax.grad(lambda x_: jnp.sum(
+        cnn.paca_conv(x_, w, jnp.zeros((1, 4, 3, 3)), idx) * dy_w))(x)
+    dx_full = jax.grad(lambda x_: jnp.sum(cnn.conv(x_, w) * dy_w))(x)
+    np.testing.assert_allclose(dx_paca, dx_full, rtol=1e-4, atol=1e-4)
+
+
+def test_cnn_forward_shape_and_pool():
+    pcfg = PeftConfig(method="paca", rank=8)
+    params, _reg = cnn.init_cnn(jax.random.PRNGKey(0), CFG, pcfg)
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 32, 32))
+    logits = cnn.forward(params, imgs, pcfg)
+    assert logits.shape == (3, cnn.N_CLASSES)
+    x = jnp.arange(16, dtype=jnp.float32).reshape(1, 1, 4, 4)
+    p = cnn.pool2(x)
+    assert p.shape == (1, 1, 2, 2)
+    assert float(p[0, 0, 0, 0]) == pytest.approx((0 + 1 + 4 + 5) / 4)
+
+
+def test_cnn_train_only_selected_channels_change():
+    pcfg = PeftConfig(method="paca", rank=2)
+    fn, entries, _b, p0, _reg = train_step.build_train_step(
+        CFG, pcfg, batch=4, seq=1, kind="cnn")
+    state = train_step.initial_state(entries, p0)
+    imgs = jax.random.normal(jax.random.PRNGKey(2), (4, 3, 32, 32))
+    labels = jax.random.randint(jax.random.PRNGKey(3), (4,), 0, 10)
+    jfn = jax.jit(fn)
+    upd = [e for e in entries if e.updated]
+    n2i = {e.name: i for i, e in enumerate(entries)}
+    outs = jfn(*state, imgs, labels, jnp.float32(1e-2))
+    new = dict(zip([e.name for e in upd], outs[:len(upd)]))
+    w0 = np.asarray(p0["convs/0/w"])
+    w1 = np.asarray(new["convs/0/w"])
+    idx = np.asarray(p0["convs/0/idx"])
+    changed = np.any(w0 != w1, axis=(1, 2, 3))
+    for c in range(w0.shape[0]):
+        assert changed[c] == (c in idx), (c, idx)
+
+
+def test_cnn_paca_rank_clamped_to_channels():
+    """Stage 0 has only 3 input channels; rank 8 must clamp to 3."""
+    pcfg = PeftConfig(method="paca", rank=8)
+    _params, reg = cnn.init_cnn(jax.random.PRNGKey(0), CFG, pcfg)
+    spec = next(s for s in reg.specs if s.name == "convs/0/idx")
+    assert spec.shape == (3,)
+    spec2 = next(s for s in reg.specs if s.name == "convs/1/idx")
+    assert spec2.shape == (8,)

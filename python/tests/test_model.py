@@ -1,0 +1,111 @@
+"""LM substrate checks: shapes, causality, RoPE, determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model
+from compile.configs import PeftConfig
+
+CFG = configs.model("tiny-lm")
+PCFG = PeftConfig(method="paca", rank=8)
+
+
+def _setup(method="paca"):
+    pcfg = PeftConfig(method=method, rank=8)
+    params, reg = model.init_lm(jax.random.PRNGKey(0), CFG, pcfg)
+    return params, reg, pcfg
+
+
+def test_logits_shape():
+    params, _reg, pcfg = _setup()
+    toks = jnp.zeros((3, 20), jnp.int32)
+    logits = model.forward(params, toks, CFG, pcfg)
+    assert logits.shape == (3, 20, CFG.vocab)
+
+
+def test_causality():
+    """Changing a future token must not change past logits."""
+    params, _reg, pcfg = _setup()
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0,
+                              CFG.vocab)
+    toks2 = toks.at[0, 10].set((toks[0, 10] + 1) % CFG.vocab)
+    l1 = model.forward(params, toks, CFG, pcfg)
+    l2 = model.forward(params, toks2, CFG, pcfg)
+    np.testing.assert_allclose(l1[0, :10], l2[0, :10], rtol=1e-4,
+                               atol=1e-5)
+    assert not np.allclose(l1[0, 10:], l2[0, 10:], atol=1e-5)
+
+
+def test_rope_tables_orthonormal_rotation():
+    cos, sin = model.rope_tables(32, 16)
+    np.testing.assert_allclose(np.asarray(cos) ** 2 + np.asarray(sin) ** 2,
+                               np.ones((32, 8)), rtol=1e-6)
+    # position 0 is the identity rotation
+    np.testing.assert_allclose(np.asarray(cos)[0], np.ones(8))
+    np.testing.assert_allclose(np.asarray(sin)[0], np.zeros(8))
+
+
+def test_rope_preserves_norm():
+    cos, sin = model.rope_tables(8, 16)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 8, 16))
+    xr = model.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(jnp.linalg.norm(xr, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_shift_property():
+    """RoPE inner products depend only on relative position: the (q·k)
+    of tokens (i, j) with identical content equals that of (i+s, j+s)."""
+    cos, sin = model.rope_tables(64, 16)
+    q = jax.random.normal(jax.random.PRNGKey(3), (16,))
+    k = jax.random.normal(jax.random.PRNGKey(4), (16,))
+
+    def rot(v, pos):
+        vv = v.reshape(1, 1, 1, 16)
+        return model.apply_rope(vv, cos[pos:pos + 1], sin[pos:pos + 1]) \
+            .reshape(16)
+
+    d1 = float(rot(q, 5) @ rot(k, 3))
+    d2 = float(rot(q, 25) @ rot(k, 23))
+    assert d1 == pytest.approx(d2, rel=1e-4)
+
+
+def test_forward_deterministic():
+    params, _reg, pcfg = _setup()
+    toks = jax.random.randint(jax.random.PRNGKey(5), (2, 12), 0,
+                              CFG.vocab)
+    l1 = model.forward(params, toks, CFG, pcfg)
+    l2 = model.forward(params, toks, CFG, pcfg)
+    np.testing.assert_array_equal(l1, l2)
+
+
+@pytest.mark.parametrize("method", ["full", "lora", "paca"])
+def test_loss_close_to_uniform_at_init(method):
+    """Head weights are ~N(0, 0.02²) ⇒ initial loss ≈ ln(V)."""
+    params, _reg, pcfg = _setup(method)
+    toks = jax.random.randint(jax.random.PRNGKey(6), (4, 33), 0,
+                              CFG.vocab)
+    loss, acc = model.loss_and_acc(params, toks, CFG, pcfg)
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+    assert 0.0 <= float(acc) <= 0.05
+
+
+def test_param_counts_match_config_formula():
+    params, _reg, pcfg = _setup("full")
+    n = sum(int(np.prod(p.shape)) for p in params.values())
+    assert n == CFG.n_params()
+
+
+def test_profile_models_param_counts_sane():
+    """The profile-only presets should land near the advertised sizes.
+    Tolerance 15%: our presets use MHA while LLaMA3 uses GQA (smaller
+    K/V projections), which the cost model does not need to distinguish
+    — PEFT adapters attach to the same seven matrices either way."""
+    assert configs.model("llama3-8b").n_params() == \
+        pytest.approx(8.0e9, rel=0.15)
+    assert configs.model("llama2-7b").n_params() == \
+        pytest.approx(6.7e9, rel=0.08)
+    assert configs.model("llama3.1-70b").n_params() == \
+        pytest.approx(70e9, rel=0.15)

@@ -1,0 +1,128 @@
+"""Train-step graph invariants for every method (the L2↔L3 contract):
+loss decreases, frozen tensors never change, PaCA touches only the
+selected rows, the updated-outputs list matches the manifest convention.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, train_step
+from compile.configs import PeftConfig
+
+CFG = configs.model("tiny-lm")
+METHODS = ["full", "lora", "dora", "moslora", "paca", "qlora", "qpaca"]
+
+
+def _run(method, steps=4, rank=8, lr=1e-3, use_pallas=False):
+    pcfg = PeftConfig(method=method, rank=rank, use_pallas=use_pallas)
+    fn, entries, b_ents, p0, reg = train_step.build_train_step(
+        CFG, pcfg, batch=2, seq=16)
+    state = train_step.initial_state(entries, p0)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 17), 0,
+                              CFG.vocab)
+    jfn = jax.jit(fn)
+    upd = [e for e in entries if e.updated]
+    n2i = {e.name: i for i, e in enumerate(entries)}
+    losses = []
+    for _ in range(steps):
+        outs = jfn(*state, toks, jnp.float32(lr))
+        for j, e in enumerate(upd):
+            state[n2i[e.name]] = outs[j]
+        losses.append(float(outs[-2]))
+    return losses, state, entries, p0, reg
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_loss_decreases(method):
+    losses, *_ = _run(method)
+    assert losses[-1] < losses[0], (method, losses)
+
+
+def test_paca_only_selected_rows_change():
+    _losses, state, entries, p0, _reg = _run("paca", steps=3)
+    n2i = {e.name: i for i, e in enumerate(entries)}
+    for L in range(CFG.n_layers):
+        name = f"blocks/{L}/q/w"
+        w0 = np.asarray(p0[name])
+        w1 = np.asarray(state[n2i[name]])
+        idx = np.asarray(p0[f"blocks/{L}/q/idx"])
+        changed = np.any(w0 != w1, axis=1)
+        assert changed[idx].all(), "selected rows must train"
+        mask = np.ones(w0.shape[0], bool)
+        mask[idx] = False
+        np.testing.assert_array_equal(w0[mask], w1[mask])
+
+
+@pytest.mark.parametrize("method", ["lora", "paca", "qpaca"])
+def test_frozen_entries_not_in_outputs(method):
+    pcfg = PeftConfig(method=method, rank=8)
+    _fn, entries, _b, _p0, _reg = train_step.build_train_step(
+        CFG, pcfg, batch=2, seq=16)
+    for e in entries:
+        if e.role in ("frozen", "index"):
+            assert not e.updated
+        if e.role in ("trainable", "paca_w", "opt_m", "opt_v",
+                      "opt_step"):
+            assert e.updated
+
+
+def test_lora_frozen_weight_unchanged_after_steps():
+    _losses, state, entries, p0, _ = _run("lora", steps=3)
+    n2i = {e.name: i for i, e in enumerate(entries)}
+    name = "blocks/0/up/w"
+    np.testing.assert_array_equal(np.asarray(p0[name]),
+                                  np.asarray(state[n2i[name]]))
+
+
+def test_step_counter_increments():
+    _losses, state, entries, _p0, _ = _run("paca", steps=3)
+    n2i = {e.name: i for i, e in enumerate(entries)}
+    assert int(state[n2i["opt/step"]]) == 4  # starts at 1, 3 steps
+
+
+def test_paca_pallas_graph_matches_jnp_graph():
+    """One full train step with the Pallas ∇P kernel vs the jnp path —
+    identical updated weights (the artifacts use the Pallas path)."""
+    l_jnp, s_jnp, entries, _p0, _ = _run("paca", steps=2,
+                                         use_pallas=False)
+    l_pal, s_pal, _, _, _ = _run("paca", steps=2, use_pallas=True)
+    assert l_jnp == pytest.approx(l_pal, rel=1e-5)
+    n2i = {e.name: i for i, e in enumerate(entries)}
+    i = n2i["blocks/0/gate/w"]
+    np.testing.assert_allclose(np.asarray(s_jnp[i]),
+                               np.asarray(s_pal[i]), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_state_entry_layout_matches_manifest_convention():
+    """params first (registry order), then opt/m/*, opt/v/*, opt/step."""
+    pcfg = PeftConfig(method="paca", rank=8)
+    _fn, entries, _b, _p0, reg = train_step.build_train_step(
+        CFG, pcfg, batch=2, seq=16)
+    n_params = len(reg.specs)
+    assert [e.name for e in entries[:n_params]] == \
+        [s.name for s in reg.specs]
+    ms = [e for e in entries if e.role == "opt_m"]
+    vs = [e for e in entries if e.role == "opt_v"]
+    assert len(ms) == len(vs) > 0
+    assert entries[-1].name == "opt/step"
+    # PaCA moments are row-sliced (r, d_out), not full weight shape.
+    m_q = next(e for e in ms if e.name == "opt/m/blocks/0/q/w")
+    assert m_q.shape == (8, CFG.d_model)
+
+
+def test_eval_step_runs_and_matches_trainstep_loss_at_init():
+    pcfg = PeftConfig(method="paca", rank=8)
+    fn_t, entries, _b, p0, _ = train_step.build_train_step(
+        CFG, pcfg, batch=2, seq=16)
+    fn_e, e_entries, _be, p0e, _ = train_step.build_eval_step(
+        CFG, pcfg, batch=2, seq=16)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 17), 0,
+                              CFG.vocab)
+    state = train_step.initial_state(entries, p0)
+    outs = jax.jit(fn_t)(*state, toks, jnp.float32(0.0))
+    loss_t = float(outs[-2])
+    loss_e, _acc = jax.jit(fn_e)(*[p0e[s.name] for s in e_entries], toks)
+    assert loss_t == pytest.approx(float(loss_e), rel=1e-5)

@@ -1,0 +1,209 @@
+//! Typed run configuration, loadable from a TOML-subset file or built
+//! from CLI overrides. Presets mirror the paper's Appendix-C tables
+//! (Tables 8–13): target modules, ranks, schedules, batch geometry.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::toml::TomlDoc;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedKind {
+    Constant,
+    Linear,
+    Cosine,
+}
+
+impl SchedKind {
+    pub fn parse(s: &str) -> Result<SchedKind> {
+        Ok(match s {
+            "constant" => SchedKind::Constant,
+            "linear" => SchedKind::Linear,
+            "cosine" => SchedKind::Cosine,
+            other => return Err(anyhow!("unknown scheduler {other:?}")),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Manifest artifact to train (e.g. "train_paca_tiny").
+    pub artifact: String,
+    pub steps: usize,
+    /// Gradient-accumulation microbatches per optimizer step. The AOT
+    /// graph consumes one microbatch; the coordinator averages over
+    /// `grad_accum` consecutive dispatches (paper Tables 9–11 use 2–4).
+    pub grad_accum: usize,
+    pub peak_lr: f64,
+    pub warmup_steps: usize,
+    pub sched: SchedKind,
+    pub seed: u64,
+    /// PaCA column-selection strategy: random | weight | gradient.
+    pub selection: String,
+    /// Evaluate every N steps (0 = only at the end).
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    /// Data task: "lm-zipf" | "mmlu-like" | "instr" (see data/).
+    pub task: String,
+    pub checkpoint: Option<String>,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            artifact: "train_paca_tiny".into(),
+            steps: 100,
+            grad_accum: 1,
+            peak_lr: 1e-3,
+            warmup_steps: 10,
+            sched: SchedKind::Cosine,
+            seed: 42,
+            selection: "random".into(),
+            eval_every: 0,
+            eval_batches: 8,
+            task: "lm-zipf".into(),
+            checkpoint: None,
+            log_every: 10,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_toml_file(path: &Path) -> Result<TrainConfig> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        let doc = TomlDoc::parse(&src).map_err(|e| anyhow!("{e}"))?;
+        Ok(Self::from_doc(&doc)?)
+    }
+
+    pub fn from_doc(doc: &TomlDoc) -> Result<TrainConfig> {
+        let d = TrainConfig::default();
+        Ok(TrainConfig {
+            artifact: doc.str_or("train.artifact", &d.artifact).to_string(),
+            steps: doc.i64_or("train.steps", d.steps as i64) as usize,
+            grad_accum: doc.i64_or("train.grad_accum",
+                                   d.grad_accum as i64) as usize,
+            peak_lr: doc.f64_or("train.lr", d.peak_lr),
+            warmup_steps: doc.i64_or("train.warmup_steps",
+                                     d.warmup_steps as i64) as usize,
+            sched: SchedKind::parse(doc.str_or("train.sched", "cosine"))?,
+            seed: doc.i64_or("train.seed", d.seed as i64) as u64,
+            selection: doc.str_or("train.selection", &d.selection)
+                .to_string(),
+            eval_every: doc.i64_or("train.eval_every",
+                                   d.eval_every as i64) as usize,
+            eval_batches: doc.i64_or("train.eval_batches",
+                                     d.eval_batches as i64) as usize,
+            task: doc.str_or("data.task", &d.task).to_string(),
+            checkpoint: doc.get("train.checkpoint")
+                .and_then(|v| v.as_str()).map(String::from),
+            log_every: doc.i64_or("train.log_every",
+                                  d.log_every as i64) as usize,
+        })
+    }
+
+    /// Apply `key=value` CLI overrides (same keys as the TOML file).
+    pub fn apply_override(&mut self, kv: &str) -> Result<()> {
+        let (k, v) = kv.split_once('=')
+            .ok_or_else(|| anyhow!("override must be key=value: {kv}"))?;
+        match k {
+            "train.artifact" | "artifact" => self.artifact = v.into(),
+            "train.steps" | "steps" => self.steps = v.parse()?,
+            "train.grad_accum" | "grad_accum" => {
+                self.grad_accum = v.parse()?
+            }
+            "train.lr" | "lr" => self.peak_lr = v.parse()?,
+            "train.warmup_steps" | "warmup" => {
+                self.warmup_steps = v.parse()?
+            }
+            "train.sched" | "sched" => self.sched = SchedKind::parse(v)?,
+            "train.seed" | "seed" => self.seed = v.parse()?,
+            "train.selection" | "selection" => self.selection = v.into(),
+            "train.eval_every" => self.eval_every = v.parse()?,
+            "train.eval_batches" => self.eval_batches = v.parse()?,
+            "data.task" | "task" => self.task = v.into(),
+            "train.checkpoint" | "checkpoint" => {
+                self.checkpoint = Some(v.into())
+            }
+            "train.log_every" => self.log_every = v.parse()?,
+            other => return Err(anyhow!("unknown config key {other:?}")),
+        }
+        Ok(())
+    }
+}
+
+/// Appendix-C hyperparameter presets, by experiment.
+pub fn preset(name: &str) -> Result<TrainConfig> {
+    let mut c = TrainConfig::default();
+    match name {
+        // Table 9: MMLU fine-tuning (cosine, warmup 100).
+        "mmlu" => {
+            c.task = "mmlu-like".into();
+            c.sched = SchedKind::Cosine;
+            c.warmup_steps = 20;
+            c.grad_accum = 4;
+            c.steps = 150;
+            c.peak_lr = 1e-3;
+            c.eval_every = 0;
+            c.eval_batches = 16;
+        }
+        // Table 10: Oasst1 instruction tuning (linear, warmup 10%).
+        "instr" => {
+            c.task = "instr".into();
+            c.sched = SchedKind::Linear;
+            c.grad_accum = 4;
+            c.steps = 120;
+            c.warmup_steps = 12;
+            c.peak_lr = 1e-3;
+            c.eval_batches = 16;
+        }
+        // Quick smoke run.
+        "smoke" => {
+            c.steps = 10;
+            c.warmup_steps = 2;
+            c.log_every = 1;
+        }
+        other => return Err(anyhow!("unknown preset {other:?}")),
+    }
+    Ok(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_and_overrides() {
+        let mut c = TrainConfig::default();
+        c.apply_override("steps=5").unwrap();
+        c.apply_override("lr=0.01").unwrap();
+        c.apply_override("sched=linear").unwrap();
+        assert_eq!(c.steps, 5);
+        assert_eq!(c.peak_lr, 0.01);
+        assert_eq!(c.sched, SchedKind::Linear);
+        assert!(c.apply_override("nonsense=1").is_err());
+        assert!(c.apply_override("no-equals").is_err());
+    }
+
+    #[test]
+    fn parses_toml() {
+        let doc = TomlDoc::parse(
+            "[train]\nartifact = \"train_lora_tiny\"\nsteps = 7\n\
+             lr = 5e-4\nsched = \"linear\"\n[data]\ntask = \"instr\"\n",
+        ).unwrap();
+        let c = TrainConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.artifact, "train_lora_tiny");
+        assert_eq!(c.steps, 7);
+        assert_eq!(c.task, "instr");
+    }
+
+    #[test]
+    fn presets_exist() {
+        assert!(preset("mmlu").is_ok());
+        assert!(preset("instr").is_ok());
+        assert!(preset("smoke").is_ok());
+        assert!(preset("nope").is_err());
+    }
+}

@@ -1,0 +1,181 @@
+//! Checkpointing: the full training state (params + optimizer moments +
+//! step counter) as a single self-describing binary file.
+//!
+//! Format (little-endian):
+//!   magic "PACA" | u32 version | u64 n_tensors
+//!   per tensor: u32 name_len | name bytes | u8 dtype | u32 ndim |
+//!               u64 dims… | u64 data_len | raw bytes
+//! A trailing u64 FNV-1a checksum over everything before it guards
+//! against truncation.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::{DType, HostTensor};
+
+const MAGIC: &[u8; 4] = b"PACA";
+const VERSION: u32 = 1;
+
+fn dtype_code(d: DType) -> u8 {
+    match d {
+        DType::F32 => 0,
+        DType::I32 => 1,
+        DType::I8 => 2,
+    }
+}
+
+fn dtype_from(code: u8) -> Result<DType> {
+    Ok(match code {
+        0 => DType::F32,
+        1 => DType::I32,
+        2 => DType::I8,
+        other => bail!("bad dtype code {other}"),
+    })
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+pub fn save(path: &Path, names: &[String],
+            tensors: &[HostTensor]) -> Result<()> {
+    assert_eq!(names.len(), tensors.len());
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&(names.len() as u64).to_le_bytes());
+    for (name, t) in names.iter().zip(tensors) {
+        buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        buf.extend_from_slice(name.as_bytes());
+        buf.push(dtype_code(t.dtype));
+        buf.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+        for d in &t.shape {
+            buf.extend_from_slice(&(*d as u64).to_le_bytes());
+        }
+        buf.extend_from_slice(&(t.data.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&t.data);
+    }
+    let sum = fnv1a(&buf);
+    buf.extend_from_slice(&sum.to_le_bytes());
+    let tmp = path.with_extension("tmp");
+    std::fs::File::create(&tmp)
+        .and_then(|mut f| f.write_all(&buf))
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path).context("atomic checkpoint rename")?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<(Vec<String>, Vec<HostTensor>)> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)
+        .and_then(|mut f| f.read_to_end(&mut buf))
+        .with_context(|| format!("reading {}", path.display()))?;
+    if buf.len() < 24 || &buf[..4] != MAGIC {
+        bail!("not a PACA checkpoint: {}", path.display());
+    }
+    let body_len = buf.len() - 8;
+    let stored = u64::from_le_bytes(buf[body_len..].try_into().unwrap());
+    if fnv1a(&buf[..body_len]) != stored {
+        bail!("checkpoint checksum mismatch (truncated?): {}",
+              path.display());
+    }
+    let mut i = 4;
+    let rd_u32 = |i: &mut usize| -> u32 {
+        let v = u32::from_le_bytes(buf[*i..*i + 4].try_into().unwrap());
+        *i += 4;
+        v
+    };
+    let rd_u64 = |i: &mut usize| -> u64 {
+        let v = u64::from_le_bytes(buf[*i..*i + 8].try_into().unwrap());
+        *i += 8;
+        v
+    };
+    let version = rd_u32(&mut i);
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let n = rd_u64(&mut i) as usize;
+    let mut names = Vec::with_capacity(n);
+    let mut tensors = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name_len = rd_u32(&mut i) as usize;
+        let name = String::from_utf8(buf[i..i + name_len].to_vec())
+            .map_err(|_| anyhow!("bad tensor name"))?;
+        i += name_len;
+        let dtype = dtype_from(buf[i])?;
+        i += 1;
+        let ndim = rd_u32(&mut i) as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(rd_u64(&mut i) as usize);
+        }
+        let data_len = rd_u64(&mut i) as usize;
+        let data = buf[i..i + data_len].to_vec();
+        i += data_len;
+        let expect: usize = shape.iter().product::<usize>()
+            * dtype.size();
+        if data.len() != expect {
+            bail!("tensor {name}: {} bytes, expected {expect}",
+                  data.len());
+        }
+        names.push(name);
+        tensors.push(HostTensor { shape, dtype, data });
+    }
+    Ok((names, tensors))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("paca-ckpt-test-{}-{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn roundtrip() {
+        let names = vec!["a/w".to_string(), "opt/step".to_string()];
+        let tensors = vec![
+            HostTensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]),
+            HostTensor::scalar_i32(41),
+        ];
+        let p = tmpfile("roundtrip");
+        save(&p, &names, &tensors).unwrap();
+        let (n2, t2) = load(&p).unwrap();
+        assert_eq!(n2, names);
+        assert_eq!(t2[0].as_f32(), tensors[0].as_f32());
+        assert_eq!(t2[1].as_i32(), vec![41]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let p = tmpfile("corrupt");
+        save(&p, &["x".into()],
+             &[HostTensor::from_f32(&[2], vec![1., 2.])]).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_non_checkpoint() {
+        let p = tmpfile("garbage");
+        std::fs::write(&p, b"hello world, definitely not a ckpt")
+            .unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,233 @@
+//! Inference-time weight merging — the paper's §2 observation made
+//! executable: every PEFT method's effective weights can be merged into
+//! the pretrained matrices *for inference* (LoRA's headline property),
+//! so a single method-agnostic eval graph (lowered with full-shape
+//! weights) serves all seven methods. The coordinator merges host-side
+//! before each evaluation:
+//!
+//!   full/paca : W is already the effective weight.
+//!   lora      : W + (α/r)·A·B
+//!   moslora   : W + (α/r)·A·M·B
+//!   dora      : mag ⊙ (W + (α/r)·A·B) / ‖·‖_col
+//!   qlora     : dequant(codes, scales) + (α/r)·A·B
+//!   qpaca     : dequant(codes, scales) with rows[idx] ← P
+
+use anyhow::{anyhow, Result};
+
+use crate::manifest::ArtifactInfo;
+use crate::nf4;
+use crate::tensor::HostTensor;
+
+/// (M, K) @ (K, N) row-major f32 matmul (host-side; adapter matrices
+/// are small: d×r and r×d).
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize,
+              n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        for l in 0..k {
+            let av = a[i * k + l];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[l * n..(l + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// Merge one target linear's effective weight from the method-specific
+/// parameters. `get` fetches a sibling tensor ("a", "b", "idx", …).
+pub fn merge_linear(
+    info: &ArtifactInfo, prefix: &str,
+    get: &dyn Fn(&str) -> Result<HostTensor>) -> Result<HostTensor> {
+    let method = info.method.as_str();
+    let scaling = if info.rank > 0 {
+        (info.alpha / info.rank as f64) as f32
+    } else {
+        1.0
+    };
+    let g = |s: &str| get(&format!("{prefix}/{s}"));
+
+    match method {
+        "full" | "paca" => g("w"),
+        "lora" | "moslora" | "dora" => {
+            let w = g("w")?;
+            let a = g("a")?;
+            let b = g("b")?;
+            let (d_in, r) = (a.shape[0], a.shape[1]);
+            let d_out = b.shape[1];
+            let ab = if method == "moslora" {
+                let mix = g("mix")?;
+                let am = matmul(&a.as_f32(), &mix.as_f32(), d_in, r, r);
+                matmul(&am, &b.as_f32(), d_in, r, d_out)
+            } else {
+                matmul(&a.as_f32(), &b.as_f32(), d_in, r, d_out)
+            };
+            let mut w_eff = w.as_f32();
+            for (we, d) in w_eff.iter_mut().zip(&ab) {
+                *we += scaling * d;
+            }
+            if method == "dora" {
+                let mag = g("mag")?.as_f32();
+                // column norms over the d_in axis
+                let mut norms = vec![0f32; d_out];
+                for i in 0..d_in {
+                    for j in 0..d_out {
+                        let v = w_eff[i * d_out + j];
+                        norms[j] += v * v;
+                    }
+                }
+                for n in norms.iter_mut() {
+                    *n = n.sqrt() + 1e-6;
+                }
+                for i in 0..d_in {
+                    for j in 0..d_out {
+                        w_eff[i * d_out + j] *= mag[j] / norms[j];
+                    }
+                }
+            }
+            Ok(HostTensor::from_f32(&[d_in, d_out], w_eff))
+        }
+        "qlora" | "qpaca" => {
+            let codes_t = g("codes")?;
+            let scales_t = g("scales")?;
+            let codes: Vec<i8> = codes_t.data.iter()
+                .map(|&b| b as i8).collect();
+            let block = codes_t.shape[1];
+            let mut w = nf4::dequantize(&codes, &scales_t.as_f32(),
+                                        block);
+            if method == "qlora" {
+                let a = g("a")?;
+                let b = g("b")?;
+                let (d_in, r) = (a.shape[0], a.shape[1]);
+                let d_out = b.shape[1];
+                let ab = matmul(&a.as_f32(), &b.as_f32(), d_in, r,
+                                d_out);
+                for (we, d) in w.iter_mut().zip(&ab) {
+                    *we += scaling * d;
+                }
+                Ok(HostTensor::from_f32(&[d_in, d_out], w))
+            } else {
+                let p = g("p")?;
+                let idx = g("idx")?;
+                let d_out = p.shape[1];
+                let d_in = w.len() / d_out;
+                for (k, &i) in idx.as_i32().iter().enumerate() {
+                    let i = i as usize;
+                    w[i * d_out..(i + 1) * d_out]
+                        .copy_from_slice(&p.as_f32()
+                                         [k * d_out..(k + 1) * d_out]);
+                }
+                Ok(HostTensor::from_f32(&[d_in, d_out], w))
+            }
+        }
+        other => Err(anyhow!("merge: unknown method {other:?}")),
+    }
+}
+
+/// Build the full merged parameter list matching `eval_entries` order
+/// (the eval artifact's full-shape layout).
+pub fn merged_state(
+    train_info: &ArtifactInfo,
+    eval_entries: &[crate::manifest::EntrySpec],
+    get: &dyn Fn(&str) -> Result<HostTensor>) -> Result<Vec<HostTensor>> {
+    let mut out = Vec::with_capacity(eval_entries.len());
+    for e in eval_entries {
+        // Target linears live under blocks/<i>/<t>/w and need merging;
+        // everything else (embed, norms, head) passes through.
+        let is_target = e.name.starts_with("blocks/")
+            && e.name.ends_with("/w");
+        let t = if is_target {
+            let prefix = e.name.strip_suffix("/w").unwrap();
+            merge_linear(train_info, prefix, get)?
+        } else {
+            get(&e.name)?
+        };
+        if t.shape != e.shape || t.dtype != e.dtype {
+            return Err(anyhow!(
+                "merged {} has shape {:?}, eval graph wants {:?}",
+                e.name, t.shape, e.shape));
+        }
+        out.push(t);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        // [[1,2],[3,4]] @ [[5,6],[7,8]] = [[19,22],[43,50]]
+        let c = matmul(&[1., 2., 3., 4.], &[5., 6., 7., 8.], 2, 2, 2);
+        assert_eq!(c, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_rect() {
+        // (1x3) @ (3x2)
+        let c = matmul(&[1., 0., 2.], &[1., 2., 3., 4., 5., 6.],
+                       1, 3, 2);
+        assert_eq!(c, vec![11., 14.]);
+    }
+
+    fn info(method: &str, rank: usize, alpha: f64) -> ArtifactInfo {
+        ArtifactInfo {
+            name: "t".into(), file: String::new(), kind: "train_step"
+                .into(), model: "tiny-lm".into(),
+            method: method.into(), rank, alpha, batch: 1, seq: 1,
+            use_pallas: false, trainable_params: 0, state: vec![],
+            batch_inputs: vec![], extra_inputs: vec![],
+            outputs: vec![],
+        }
+    }
+
+    #[test]
+    fn lora_merge_adds_scaled_ab() {
+        let inf = info("lora", 2, 4.0); // scaling = 2
+        let get = |name: &str| -> Result<HostTensor> {
+            Ok(match name {
+                "l/w" => HostTensor::from_f32(&[2, 2],
+                                              vec![1., 0., 0., 1.]),
+                "l/a" => HostTensor::from_f32(&[2, 2],
+                                              vec![1., 0., 0., 1.]),
+                "l/b" => HostTensor::from_f32(&[2, 2],
+                                              vec![0.5, 0., 0., 0.5]),
+                other => return Err(anyhow!("{other}")),
+            })
+        };
+        let m = merge_linear(&inf, "l", &get).unwrap();
+        // W + 2·(I·0.5I) = I + I = 2I
+        assert_eq!(m.as_f32(), vec![2., 0., 0., 2.]);
+    }
+
+    #[test]
+    fn qpaca_merge_overwrites_selected_rows() {
+        let inf = info("qpaca", 1, 1.0);
+        let w = vec![0.5f32; 64]; // one quant block, scale 0.5
+        let (codes, scales) = nf4::quantize(&w, 64);
+        let get = move |name: &str| -> Result<HostTensor> {
+            Ok(match name {
+                "l/codes" => HostTensor::from_i8(&[1, 64],
+                                                 codes.clone()),
+                "l/scales" => HostTensor::from_f32(&[1],
+                                                   scales.clone()),
+                "l/p" => HostTensor::from_f32(&[1, 8], vec![9.0; 8]),
+                "l/idx" => HostTensor::from_i32(&[1], vec![3]),
+                other => return Err(anyhow!("{other}")),
+            })
+        };
+        let m = merge_linear(&inf, "l", &get).unwrap();
+        let v = m.as_f32();
+        assert_eq!(m.shape, vec![8, 8]);
+        assert!(v[3 * 8..4 * 8].iter().all(|&x| x == 9.0));
+        assert!((v[0] - 0.5).abs() < 0.05); // dequantized base row
+    }
+}

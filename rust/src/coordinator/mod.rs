@@ -1,0 +1,344 @@
+//! Training coordinator: owns the state buffers, drives the AOT
+//! train-step executable, schedules data + LR, evaluates, checkpoints.
+//!
+//! Hot-loop design (see EXPERIMENTS.md §Perf): state lives as PJRT
+//! literals; only the entries the graph updates are replaced after each
+//! step (frozen weights and index vectors are uploaded once), and batch
+//! generation runs on a prefetch thread overlapping execution.
+
+pub mod checkpoint;
+pub mod merge;
+pub mod schedule;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::data::{Task, TokenGen};
+use crate::init;
+use crate::metrics::{LossCurve, PhaseTimers};
+use crate::peft::Selection;
+use crate::runtime::{Executable, Runtime};
+use crate::tensor::HostTensor;
+use schedule::Schedule;
+
+/// Per-category evaluation result (Table 1 subject columns / Table 2
+/// MT-Bench-category columns).
+#[derive(Debug, Clone)]
+pub struct EvalReport {
+    pub categories: Vec<&'static str>,
+    pub loss: Vec<f64>,
+    pub acc: Vec<f64>,
+}
+
+impl EvalReport {
+    pub fn mean_loss(&self) -> f64 {
+        self.loss.iter().sum::<f64>() / self.loss.len() as f64
+    }
+
+    pub fn mean_acc(&self) -> f64 {
+        self.acc.iter().sum::<f64>() / self.acc.len() as f64
+    }
+
+    /// MT-Bench-style 0–10 score proxy from token accuracy (DESIGN.md
+    /// §4: the GPT judge is external to the paper's contribution; the
+    /// monotone mapping preserves method ordering).
+    pub fn scores(&self) -> Vec<f64> {
+        self.acc.iter().map(|a| 10.0 * a).collect()
+    }
+}
+
+pub struct Trainer {
+    pub exe: Arc<Executable>,
+    eval_exe: Option<Arc<Executable>>,
+    cfg: TrainConfig,
+    sched: Schedule,
+    task: Task,
+    gen: TokenGen,
+    /// Training state, split by mutability (see runtime::to_device's
+    /// safety contract): frozen entries live as device buffers uploaded
+    /// once; updated entries live as host literals (each step's outputs
+    /// replace them without a re-upload; they are uploaded as
+    /// immediately-executed temporaries per dispatch).
+    frozen: Vec<Option<crate::runtime::DeviceTensor>>,
+    updated: Vec<Option<xla::Literal>>,
+    name_to_idx: HashMap<String, usize>,
+    updated_idx: Vec<usize>,
+    pub step: usize,
+    pub curve: LossCurve,
+    pub timers: PhaseTimers,
+}
+
+impl Trainer {
+    pub fn new(rt: &Runtime, cfg: TrainConfig) -> Result<Trainer> {
+        let exe = rt.load(&cfg.artifact)?;
+        let info = &exe.info;
+        if info.kind != "train_step" {
+            return Err(anyhow!("{} is a {:?}, not a train_step",
+                               cfg.artifact, info.kind));
+        }
+        let selection = match cfg.selection.as_str() {
+            "random" => Selection::Random,
+            "weight" | "weight-norm" => Selection::WeightNorm,
+            other => return Err(anyhow!(
+                "selection {other:?}: use Trainer::with_selection for \
+                 gradient-based")),
+        };
+        Self::with_selection(rt, cfg, selection)
+    }
+
+    pub fn with_selection(rt: &Runtime, cfg: TrainConfig,
+                          selection: Selection) -> Result<Trainer> {
+        let exe = rt.load(&cfg.artifact)?;
+        let info = exe.info.clone();
+        let host_state = init::init_state(&info, cfg.seed, &selection)?;
+        let mut frozen: Vec<Option<crate::runtime::DeviceTensor>> =
+            Vec::with_capacity(host_state.len());
+        let mut updated: Vec<Option<xla::Literal>> =
+            Vec::with_capacity(host_state.len());
+        for (t, e) in host_state.iter().zip(&info.state) {
+            if e.updated {
+                frozen.push(None);
+                updated.push(Some(t.to_literal()?));
+            } else {
+                // Frozen buffers are uploaded once and used by every
+                // subsequent execution (satisfying the execute-before-
+                // drop contract).
+                frozen.push(Some(exe.to_device(t.to_literal()?)?));
+                updated.push(None);
+            }
+        }
+        let name_to_idx: HashMap<String, usize> = info.state.iter()
+            .enumerate().map(|(i, e)| (e.name.clone(), i)).collect();
+        let updated_idx = info.updated_state_indices();
+
+        let model = rt.manifest.model(&info.model)?;
+        let task = Task::parse(&cfg.task)?;
+        let gen = TokenGen::new(task, model.vocab, cfg.seed);
+
+        // Companion eval artifact for the same model, if lowered.
+        let eval_name = rt.manifest.artifacts.values()
+            .find(|a| a.kind == "eval_step" && a.model == info.model)
+            .map(|a| a.name.clone());
+        let eval_exe = match eval_name {
+            Some(n) => Some(rt.load(&n)?),
+            None => None,
+        };
+
+        let sched = Schedule::new(cfg.sched, cfg.peak_lr,
+                                  cfg.warmup_steps, cfg.steps);
+        Ok(Trainer { exe, eval_exe, sched, task, gen, frozen, updated,
+                     name_to_idx, updated_idx, step: 0,
+                     curve: LossCurve::default(),
+                     timers: PhaseTimers::default(), cfg })
+    }
+
+    pub fn info(&self) -> &crate::manifest::ArtifactInfo {
+        &self.exe.info
+    }
+
+    pub fn batch_geometry(&self) -> (usize, usize) {
+        (self.exe.info.batch, self.exe.info.seq)
+    }
+
+    /// One optimizer step on a fresh batch. Returns (loss, acc).
+    pub fn train_step(&mut self) -> Result<(f64, f64)> {
+        let (b, s) = self.batch_geometry();
+        let t0 = Instant::now();
+        let batch = self.gen.train_batch(b, s);
+        let t1 = Instant::now();
+        let lr = self.sched.lr(self.step) as f32;
+        let (loss, acc) = self.dispatch(&batch, lr)?;
+        self.step += 1;
+        self.curve.push(self.step, loss, acc);
+        self.timers.data_s += (t1 - t0).as_secs_f64();
+        self.timers.total_s += t0.elapsed().as_secs_f64();
+        Ok((loss, acc))
+    }
+
+    /// Dispatch one train-step with an explicit batch + lr (used by the
+    /// benches to time the pure execution path).
+    pub fn dispatch(&mut self, batch: &HostTensor,
+                    lr: f32) -> Result<(f64, f64)> {
+        let t0 = Instant::now();
+        // Upload updated entries + batch + lr as temporaries; all are
+        // consumed by run_b below, then dropped (safe per the
+        // to_device contract). Frozen buffers are reused as-is.
+        let mut temps: Vec<crate::runtime::DeviceTensor> = Vec::new();
+        let mut slots: Vec<usize> = Vec::new(); // state idx per temp
+        for (i, e) in self.exe.info.state.iter().enumerate() {
+            if e.updated {
+                let lit = self.updated[i].take()
+                    .ok_or_else(|| anyhow!("missing state {}", e.name))?;
+                temps.push(self.exe.to_device(lit)?);
+                slots.push(i);
+            }
+        }
+        let batch_buf = self.exe.to_device(batch.to_literal()?)?;
+        let lr_buf = self.exe.to_device(
+            HostTensor::scalar_f32(lr).to_literal()?)?;
+        let mut ti = 0;
+        let mut inputs: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(self.frozen.len() + 2);
+        for (i, f) in self.frozen.iter().enumerate() {
+            match f {
+                Some(d) => inputs.push(&d.buf),
+                None => {
+                    debug_assert_eq!(slots[ti], i);
+                    inputs.push(&temps[ti].buf);
+                    ti += 1;
+                }
+            }
+        }
+        inputs.push(&batch_buf.buf);
+        inputs.push(&lr_buf.buf);
+        let t1 = Instant::now();
+        let outs = self.exe.run_b(&inputs)?;
+        let t2 = Instant::now();
+
+        let n_upd = self.updated_idx.len();
+        debug_assert_eq!(outs.len(), n_upd + 2);
+        let mut outs = outs;
+        let acc_lit = outs.pop().unwrap();
+        let loss_lit = outs.pop().unwrap();
+        for (j, lit) in outs.into_iter().enumerate() {
+            self.updated[self.updated_idx[j]] = Some(lit);
+        }
+        let loss = loss_lit.get_first_element::<f32>()
+            .map_err(|e| anyhow!("loss fetch: {e:?}"))? as f64;
+        let acc = acc_lit.get_first_element::<f32>()
+            .map_err(|e| anyhow!("acc fetch: {e:?}"))? as f64;
+        if !loss.is_finite() {
+            return Err(anyhow!("non-finite loss at step {}: {loss}",
+                               self.step));
+        }
+        self.timers.h2d_s += (t1 - t0).as_secs_f64();
+        self.timers.execute_s += (t2 - t1).as_secs_f64();
+        self.timers.d2h_s += t2.elapsed().as_secs_f64();
+        Ok((loss, acc))
+    }
+
+    /// Run the configured number of steps, logging periodically.
+    pub fn run(&mut self, verbose: bool) -> Result<()> {
+        for _ in 0..self.cfg.steps {
+            let (loss, acc) = self.train_step()?;
+            if verbose && (self.step % self.cfg.log_every.max(1) == 0
+                           || self.step == 1)
+            {
+                println!(
+                    "step {:>5}  loss {:.4}  acc {:.3}  lr {:.2e}",
+                    self.step, loss, acc, self.sched.lr(self.step - 1));
+            }
+            if self.cfg.eval_every > 0
+                && self.step % self.cfg.eval_every == 0
+            {
+                let ev = self.evaluate(self.cfg.eval_batches)?;
+                if verbose {
+                    println!("  eval: loss {:.4} acc {:.3}",
+                             ev.mean_loss(), ev.mean_acc());
+                }
+            }
+        }
+        if let Some(path) = self.cfg.checkpoint.clone() {
+            self.save_checkpoint(Path::new(&path))?;
+        }
+        Ok(())
+    }
+
+    /// Per-category held-out evaluation via the method-agnostic eval
+    /// artifact: adapters are merged into the base weights host-side
+    /// first (merge.rs) — the paper's inference-time merging.
+    pub fn evaluate(&mut self, batches: usize) -> Result<EvalReport> {
+        let eval = self.eval_exe.clone().ok_or_else(|| {
+            anyhow!("no eval artifact lowered for model {}",
+                    self.exe.info.model)
+        })?;
+        let (b, s) = (eval.info.batch, eval.info.seq);
+        let get = |name: &str| self.state_tensor(name);
+        let merged = merge::merged_state(&self.exe.info,
+                                         &eval.info.state, &get)?;
+        // Upload merged params once, reuse across categories/batches.
+        let merged_bufs: Vec<crate::runtime::DeviceTensor> = merged
+            .iter()
+            .map(|t| eval.to_device(t.to_literal()?))
+            .collect::<Result<_>>()?;
+        let cats = self.task.category_names();
+        let mut report = EvalReport { categories: cats.to_vec(),
+                                      loss: vec![0.0; cats.len()],
+                                      acc: vec![0.0; cats.len()] };
+        for (ci, _) in cats.iter().enumerate() {
+            let (mut lsum, mut asum) = (0.0, 0.0);
+            for bi in 0..batches.max(1) {
+                let batch = self.gen.eval_batch(
+                    b, s, ci, (bi as u64) << 8 | ci as u64);
+                let batch_buf = eval.to_device(batch.to_literal()?)?;
+                let mut inputs: Vec<&xla::PjRtBuffer> =
+                    merged_bufs.iter().map(|d| &d.buf).collect();
+                inputs.push(&batch_buf.buf);
+                let outs = eval.run_b(&inputs)?;
+                lsum += outs[0].get_first_element::<f32>()
+                    .map_err(|e| anyhow!("{e:?}"))? as f64;
+                asum += outs[1].get_first_element::<f32>()
+                    .map_err(|e| anyhow!("{e:?}"))? as f64;
+            }
+            report.loss[ci] = lsum / batches.max(1) as f64;
+            report.acc[ci] = asum / batches.max(1) as f64;
+        }
+        Ok(report)
+    }
+
+    /// Host copy of one state tensor by name (device → host readback).
+    pub fn state_tensor(&self, name: &str) -> Result<HostTensor> {
+        let i = *self.name_to_idx.get(name)
+            .ok_or_else(|| anyhow!("no state tensor {name:?}"))?;
+        if let Some(lit) = &self.updated[i] {
+            return HostTensor::from_literal(lit);
+        }
+        self.frozen[i].as_ref()
+            .ok_or_else(|| anyhow!("state slot {i} empty"))?
+            .read()
+    }
+
+    pub fn state_names(&self) -> Vec<String> {
+        self.exe.info.state.iter().map(|e| e.name.clone()).collect()
+    }
+
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        let names = self.state_names();
+        let tensors: Vec<HostTensor> = names.iter()
+            .map(|n| self.state_tensor(n))
+            .collect::<Result<_>>()?;
+        checkpoint::save(path, &names, &tensors)
+            .with_context(|| format!("saving {}", path.display()))
+    }
+
+    pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
+        let (names, tensors) = checkpoint::load(path)?;
+        if names != self.state_names() {
+            return Err(anyhow!(
+                "checkpoint layout does not match artifact {} \
+                 ({} vs {} tensors)",
+                self.exe.info.name, names.len(),
+                self.exe.info.state.len()));
+        }
+        for ((t, e), i) in tensors.iter().zip(&self.exe.info.state)
+            .zip(0..)
+        {
+            if e.updated {
+                self.updated[i as usize] = Some(t.to_literal()?);
+            } else {
+                self.frozen[i as usize] =
+                    Some(self.exe.to_device(t.to_literal()?)?);
+            }
+        }
+        // Restore the step counter for the LR schedule.
+        if let Ok(t) = self.state_tensor("opt/step") {
+            self.step = (t.as_i32()[0].max(1) - 1) as usize;
+        }
+        Ok(())
+    }
+}

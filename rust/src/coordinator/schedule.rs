@@ -1,0 +1,88 @@
+//! Learning-rate schedules, computed host-side and fed to the lowered
+//! train-step graph as a runtime scalar (one artifact serves any
+//! schedule). Paper setups: cosine + 100-step warmup for MMLU (Table 9),
+//! linear + 10% warmup ratio for Oasst1 (Tables 10–11).
+
+use crate::config::SchedKind;
+
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub kind: SchedKind,
+    pub peak_lr: f64,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+}
+
+impl Schedule {
+    pub fn new(kind: SchedKind, peak_lr: f64, warmup_steps: usize,
+               total_steps: usize) -> Schedule {
+        Schedule { kind, peak_lr, warmup_steps, total_steps }
+    }
+
+    /// LR for 0-based step index.
+    pub fn lr(&self, step: usize) -> f64 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            return self.peak_lr * (step + 1) as f64
+                / self.warmup_steps as f64;
+        }
+        let decay_steps =
+            self.total_steps.saturating_sub(self.warmup_steps).max(1);
+        let t = (step - self.warmup_steps.min(step)) as f64
+            / decay_steps as f64;
+        let t = t.min(1.0);
+        match self.kind {
+            SchedKind::Constant => self.peak_lr,
+            SchedKind::Linear => self.peak_lr * (1.0 - t),
+            SchedKind::Cosine => {
+                self.peak_lr * 0.5
+                    * (1.0 + (std::f64::consts::PI * t).cos())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = Schedule::new(SchedKind::Cosine, 1.0, 10, 100);
+        assert!((s.lr(0) - 0.1).abs() < 1e-12);
+        assert!((s.lr(4) - 0.5).abs() < 1e-12);
+        assert!((s.lr(9) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_decays_to_zero() {
+        let s = Schedule::new(SchedKind::Cosine, 1.0, 0, 100);
+        assert!((s.lr(0) - 1.0).abs() < 1e-9);
+        assert!((s.lr(50) - 0.5).abs() < 1e-9);
+        assert!(s.lr(100) < 1e-9);
+        // never increases after warmup
+        for i in 1..=100 {
+            assert!(s.lr(i) <= s.lr(i - 1) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn linear_decays_to_zero() {
+        let s = Schedule::new(SchedKind::Linear, 2.0, 0, 10);
+        assert!((s.lr(5) - 1.0).abs() < 1e-12);
+        assert!(s.lr(10) == 0.0);
+    }
+
+    #[test]
+    fn constant_holds() {
+        let s = Schedule::new(SchedKind::Constant, 0.5, 2, 10);
+        assert_eq!(s.lr(5), 0.5);
+        assert_eq!(s.lr(500), 0.5);
+    }
+
+    #[test]
+    fn past_total_is_clamped() {
+        let s = Schedule::new(SchedKind::Cosine, 1.0, 0, 10);
+        assert!(s.lr(10_000) >= 0.0);
+        assert!(s.lr(10_000) < 1e-9);
+    }
+}

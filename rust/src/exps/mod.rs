@@ -1,0 +1,574 @@
+//! Experiment drivers — one per table/figure in the paper's evaluation
+//! (DESIGN.md §5 maps each to its modules). Every driver prints (a) the
+//! paper's reported numbers, (b) our measured results on the CPU-PJRT
+//! testbed (tiny/small presets), and (c) the device-cost-model
+//! projection at the paper's own model/hardware scale.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{preset, TrainConfig};
+use crate::coordinator::Trainer;
+use crate::data::{ImageGen, MTBENCH_CATEGORIES};
+use crate::memory;
+use crate::metrics::{fmt_gb, fmt_params, Table};
+use crate::peft::{self, Selection};
+use crate::runtime::Runtime;
+use crate::simulator::{self, A100_80G, GAUDI2};
+use crate::tensor::HostTensor;
+
+pub const EXPERIMENTS: [&str; 9] = [
+    "fig2", "table1", "table2", "table3", "table4", "fig3", "table5",
+    "table6", "table7",
+];
+
+pub fn run_experiment(rt: &Runtime, name: &str,
+                      quick: bool) -> Result<String> {
+    match name {
+        "fig2" => fig2(rt, quick),
+        "table1" => table1(rt, quick),
+        "table2" => table2(rt, quick),
+        "table3" => table3(rt, quick),
+        "table4" => table4(rt),
+        "fig3" => fig3(rt, quick),
+        "table5" => table5(rt, quick),
+        "table6" => table6(rt, quick),
+        "table7" => table7(rt, quick),
+        other => Err(anyhow!("unknown experiment {other:?}; \
+                              available: {EXPERIMENTS:?}")),
+    }
+}
+
+fn steps(quick: bool, full: usize) -> usize {
+    if quick { full.min(8) } else { full }
+}
+
+/// Measured seconds/step over `n` steps of an artifact (after warmup).
+fn measure_step_time(rt: &Runtime, artifact: &str,
+                     n: usize) -> Result<(f64, Trainer)> {
+    let mut cfg = TrainConfig::default();
+    cfg.artifact = artifact.into();
+    cfg.steps = 0;
+    cfg.warmup_steps = 1;
+    let mut tr = Trainer::new(rt, cfg)?;
+    tr.train_step()?; // warmup (first dispatch may fault pages)
+    let t0 = std::time::Instant::now();
+    for _ in 0..n {
+        tr.train_step()?;
+    }
+    Ok((t0.elapsed().as_secs_f64() / n as f64, tr))
+}
+
+// ------------------------------------------------------------------ fig2
+
+/// Fig 2: operation count (TFLOPs) and per-iteration time, Full-FT vs
+/// LoRA vs PaCA — measured on tiny-lm + projected on LLaMA3-8B/A100.
+pub fn fig2(rt: &Runtime, quick: bool) -> Result<String> {
+    let mut out = String::from(
+        "## Fig 2 — FLOPs and per-iteration time (fwd/bwd)\n\n\
+         Paper (LLaMA3-8B, bs 2, seq 512, A100): LoRA ~33% fewer FLOPs \
+         than Full-FT yet only 0.6% faster; LoRA fwd +33% vs Full-FT; \
+         PaCA total -19% vs LoRA (fwd -18%, bwd -20%).\n\n");
+    let m = rt.manifest.model("llama3-8b")?;
+
+    let mut t = Table::new(&["Method", "fwd TFLOPs", "bwd TFLOPs",
+                             "fwd ms", "bwd ms", "total ms",
+                             "vs LoRA"]);
+    let lora_total = simulator::iteration_time(&A100_80G, m, "lora", 8,
+                                               2, 512).total_s();
+    for method in ["full", "lora", "paca"] {
+        let fl = simulator::iteration_flops(m, method, 8, 2, 512);
+        let ti = simulator::iteration_time(&A100_80G, m, method, 8, 2,
+                                           512);
+        t.row(&[method.to_string(),
+                format!("{:.2}", fl.forward / 1e12),
+                format!("{:.2}", fl.backward / 1e12),
+                format!("{:.1}", ti.forward_s * 1e3),
+                format!("{:.1}", ti.backward_s * 1e3),
+                format!("{:.1}", ti.total_s() * 1e3),
+                format!("{:+.1}%",
+                        (ti.total_s() / lora_total - 1.0) * 100.0)]);
+    }
+    out.push_str("Projected (LLaMA3-8B profile, A100 cost model):\n\n");
+    out.push_str(&t.render());
+
+    // Measured on the real CPU-PJRT testbed.
+    let n = steps(quick, 12);
+    let mut t2 = Table::new(&["Method", "s/step (tiny-lm, CPU PJRT)",
+                              "vs LoRA"]);
+    let (lora_s, _) = measure_step_time(rt, "train_lora_tiny", n)?;
+    for (method, art) in [("full", "train_full_tiny"),
+                          ("lora", "train_lora_tiny"),
+                          ("paca", "train_paca_tiny")] {
+        let (s, _) = measure_step_time(rt, art, n)?;
+        t2.row(&[method.to_string(), format!("{:.4}", s),
+                 format!("{:+.1}%", (s / lora_s - 1.0) * 100.0)]);
+    }
+    out.push_str("\nMeasured (tiny-lm artifacts, this machine):\n\n");
+    out.push_str(&t2.render());
+    Ok(out)
+}
+
+// ---------------------------------------------------------------- table1
+
+/// Table 1: fine-tuning on the MMLU-analog task — Param/Mem/Time +
+/// per-subject accuracy for LoRA/DoRA/MosLoRA/PaCA(r8,r16).
+pub fn table1(rt: &Runtime, quick: bool) -> Result<String> {
+    let mut out = String::from(
+        "## Table 1 — task fine-tuning (MMLU-analog)\n\n\
+         Paper (LLaMA2-7B): LoRA 20M/23G/4.1h acc 50.6 | DoRA 21M/29G/\
+         8.7h 51.3 | MosLoRA 20M/23G/4.3h 51.1 | PaCA r8 11M/20G/3.2h \
+         50.4 | PaCA r16 22M/20G/3.2h 51.2.\n\n");
+
+    // (a) projections at the paper's scale.
+    let mut proj = Table::new(&["Model", "Method", "Rank", "Param",
+                                "Mem", "Time/iter"]);
+    for model in ["llama2-7b", "llama2-13b", "llama3-8b"] {
+        let m = rt.manifest.model(model)?;
+        for (method, rank) in [("lora", 8), ("dora", 8), ("moslora", 8),
+                               ("paca", 8), ("paca", 16)] {
+            let mem = memory::breakdown(m, method, rank, 8, 512, true);
+            let ti = simulator::iteration_time(&A100_80G, m, method,
+                                               rank, 8, 512);
+            proj.row(&[model.into(), method.into(), rank.to_string(),
+                       fmt_params(peft::trainable_params(m, method,
+                                                         rank) as f64),
+                       fmt_gb(mem.total()),
+                       format!("{:.0}ms", ti.total_s() * 1e3)]);
+        }
+    }
+    out.push_str("Projected at paper scale (A100 cost model):\n\n");
+    out.push_str(&proj.render());
+
+    // (b) measured fine-tuning runs on tiny-lm.
+    let n_steps = steps(quick, 150);
+    let mut meas = Table::new(&["Method", "Rank", "Param", "s/step",
+                                "Hums.", "STEM", "Social.", "Other",
+                                "Avg acc"]);
+    for (method, art, rank) in [
+        ("lora", "train_lora_tiny", 8),
+        ("dora", "train_dora_tiny", 8),
+        ("moslora", "train_moslora_tiny", 8),
+        ("paca", "train_paca_tiny", 8),
+        ("paca", "train_paca_tiny_r16", 16),
+    ] {
+        let mut cfg = preset("mmlu")?;
+        cfg.artifact = art.into();
+        cfg.steps = n_steps;
+        cfg.warmup_steps = (n_steps / 10).max(1);
+        let mut tr = Trainer::new(rt, cfg)?;
+        let t0 = std::time::Instant::now();
+        tr.run(false)?;
+        let per_step = t0.elapsed().as_secs_f64() / n_steps as f64;
+        let ev = tr.evaluate(if quick { 2 } else { 8 })?;
+        meas.row(&[method.into(), rank.to_string(),
+                   fmt_params(tr.info().trainable_params as f64),
+                   format!("{:.3}", per_step),
+                   format!("{:.3}", ev.acc[0]),
+                   format!("{:.3}", ev.acc[1]),
+                   format!("{:.3}", ev.acc[2]),
+                   format!("{:.3}", ev.acc[3]),
+                   format!("{:.3}", ev.mean_acc())]);
+    }
+    out.push_str("\nMeasured (tiny-lm, MMLU-analog synthetic task, \
+                  CPU PJRT):\n\n");
+    out.push_str(&meas.render());
+    Ok(out)
+}
+
+// ---------------------------------------------------------------- table2
+
+/// Table 2: instruction tuning + MT-Bench-analog per-category scores.
+pub fn table2(rt: &Runtime, quick: bool) -> Result<String> {
+    let mut out = String::from(
+        "## Table 2 — instruction tuning (Oasst1/MT-Bench analog)\n\n\
+         Paper (LLaMA3-8B, r64): LoRA 56G/26m score 5.12 | DoRA 65G/50m \
+         5.28 | MosLoRA 56G/27m 5.15 | PaCA r64 47G/21m 5.23 | \
+         r128 51G/21m 5.26.\n\n");
+
+    let m = rt.manifest.model("llama3-8b")?;
+    let mut proj = Table::new(&["Method", "Rank", "Mem", "Time/iter"]);
+    for (method, rank) in [("lora", 64), ("dora", 64), ("moslora", 64),
+                           ("paca", 64), ("paca", 128)] {
+        let mem = memory::breakdown(m, method, rank, 16, 768, true);
+        let ti = simulator::iteration_time(&A100_80G, m, method, rank,
+                                           16, 768);
+        proj.row(&[method.into(), rank.to_string(),
+                   fmt_gb(mem.total()),
+                   format!("{:.0}ms", ti.total_s() * 1e3)]);
+    }
+    out.push_str("Projected at paper scale:\n\n");
+    out.push_str(&proj.render());
+
+    let n_steps = steps(quick, 150);
+    let mut meas = Table::new(&["Method", "s/step", "Avg score",
+                                "(per-category)"]);
+    for (method, art) in [("lora", "train_lora_tiny"),
+                          ("dora", "train_dora_tiny"),
+                          ("moslora", "train_moslora_tiny"),
+                          ("paca r8", "train_paca_tiny"),
+                          ("paca r16", "train_paca_tiny_r16")] {
+        let mut cfg = preset("instr")?;
+        cfg.artifact = art.into();
+        cfg.steps = n_steps;
+        cfg.warmup_steps = (n_steps / 10).max(1);
+        let mut tr = Trainer::new(rt, cfg)?;
+        let t0 = std::time::Instant::now();
+        tr.run(false)?;
+        let per_step = t0.elapsed().as_secs_f64() / n_steps as f64;
+        let ev = tr.evaluate(if quick { 1 } else { 4 })?;
+        let scores = ev.scores();
+        let avg = scores.iter().sum::<f64>() / scores.len() as f64;
+        let per: Vec<String> = MTBENCH_CATEGORIES.iter().zip(&scores)
+            .map(|(c, s)| format!("{c} {s:.1}")).collect();
+        meas.row(&[method.into(), format!("{:.3}", per_step),
+                   format!("{:.2}", avg), per.join(", ")]);
+    }
+    out.push_str("\nMeasured (tiny-lm, instruction-analog task):\n\n");
+    out.push_str(&meas.render());
+    Ok(out)
+}
+
+// ---------------------------------------------------------------- table3
+
+/// Table 3: QLoRA vs QPaCA (NF4 quantized base weights).
+pub fn table3(rt: &Runtime, quick: bool) -> Result<String> {
+    let mut out = String::from(
+        "## Table 3 — QPaCA vs QLoRA\n\n\
+         Paper: 8B — QLoRA 18G/42m 5.00, QPaCA 16G/37m 5.02; \
+         70B — QLoRA 80G/5.1h 6.09, QPaCA 69G/4.7h 6.08.\n\n");
+
+    let mut proj = Table::new(&["Model", "Method", "Mem", "Time/iter"]);
+    // Paper Table 11: batch 16 with grad-accum 4 (8B) / 2 (70B) —
+    // per-device microbatch 4 / 8 is what bounds memory.
+    for (model, mb) in [("llama3-8b", 4), ("llama3.1-70b", 8)] {
+        let m = rt.manifest.model(model)?;
+        for method in ["qlora", "qpaca"] {
+            let mem = memory::breakdown(m, method, 64, mb, 768, true);
+            let ti = simulator::iteration_time(&A100_80G, m, method, 64,
+                                               mb, 768);
+            proj.row(&[model.into(), method.into(),
+                       fmt_gb(mem.total()),
+                       format!("{:.0}ms", ti.total_s() * 1e3)]);
+        }
+    }
+    out.push_str("Projected at paper scale:\n\n");
+    out.push_str(&proj.render());
+
+    let n_steps = steps(quick, 120);
+    let mut meas = Table::new(&["Method", "s/step", "final loss",
+                                "Avg score"]);
+    for (method, art) in [("qlora", "train_qlora_tiny"),
+                          ("qpaca", "train_qpaca_tiny")] {
+        let mut cfg = preset("instr")?;
+        cfg.artifact = art.into();
+        cfg.steps = n_steps;
+        cfg.warmup_steps = (n_steps / 10).max(1);
+        let mut tr = Trainer::new(rt, cfg)?;
+        let t0 = std::time::Instant::now();
+        tr.run(false)?;
+        let per_step = t0.elapsed().as_secs_f64() / n_steps as f64;
+        let ev = tr.evaluate(if quick { 1 } else { 4 })?;
+        meas.row(&[method.into(), format!("{:.3}", per_step),
+                   format!("{:.3}", tr.curve.tail_mean(5)),
+                   format!("{:.2}", 10.0 * ev.mean_acc())]);
+    }
+    out.push_str("\nMeasured (tiny-lm, NF4 path, CPU PJRT):\n\n");
+    out.push_str(&meas.render());
+    Ok(out)
+}
+
+// ---------------------------------------------------------------- table4
+
+/// Table 4: max sequence length before OOM (memory accountant).
+pub fn table4(rt: &Runtime) -> Result<String> {
+    let mut out = String::from(
+        "## Table 4 — max sequence length, LLaMA3-8B on one A100 80GB\n\n\
+         Paper: LoRA 8.0K | DoRA 4.7K | MosLoRA 8.0K | PaCA 9.8K.\n\n");
+    let m = rt.manifest.model("llama3-8b")?;
+    let mut t = Table::new(&["Method", "Max seq", "vs LoRA"]);
+    let lora = memory::max_seq_len(m, "lora", 8, A100_80G.capacity,
+                                   false);
+    for method in ["lora", "dora", "moslora", "paca"] {
+        let s = memory::max_seq_len(m, method, 8, A100_80G.capacity,
+                                    false);
+        t.row(&[method.into(), format!("{:.1}K", s as f64 / 1e3),
+                format!("{:+.0}%",
+                        (s as f64 / lora as f64 - 1.0) * 100.0)]);
+    }
+    out.push_str(&t.render());
+    Ok(out)
+}
+
+// ------------------------------------------------------------------ fig3
+
+/// Fig 3: training throughput vs batch size on A100 + Gaudi2, with OOM
+/// walls per method, plus a measured tiny-lm throughput point.
+pub fn fig3(rt: &Runtime, quick: bool) -> Result<String> {
+    let mut out = String::from(
+        "## Fig 3 — throughput (sentences/s) vs batch size, seq 512\n\n\
+         Paper: PaCA sustains ~33% (A100) / ~21% (Gaudi2) larger \
+         batches and +16% peak throughput vs LoRA \
+         (A100 peak 10.36, Gaudi2 15.5 sentences/s).\n\n");
+    let m = rt.manifest.model("llama3-8b")?;
+    for dev in [&A100_80G, &GAUDI2] {
+        let mut t = Table::new(&["Batch", "Full-FT", "LoRA", "DoRA",
+                                 "MosLoRA", "PaCA"]);
+        let methods = ["full", "lora", "dora", "moslora", "paca"];
+        let maxb: BTreeMap<&str, usize> = methods.iter()
+            .map(|&me| (me, memory::max_batch(m, me, 8, 512,
+                                              dev.capacity, false)))
+            .collect();
+        let top = maxb.values().copied().max().unwrap_or(8);
+        let mut b = 2;
+        while b <= top.max(2) {
+            let cells: Vec<String> = methods.iter().map(|&me| {
+                if b > maxb[me] {
+                    "OOM".to_string()
+                } else {
+                    format!("{:.2}", simulator::throughput_seq_per_s(
+                        dev, m, me, 8, b, 512))
+                }
+            }).collect();
+            let mut row = vec![b.to_string()];
+            row.extend(cells);
+            t.row(&row);
+            b *= 2;
+        }
+        out.push_str(&format!("\n{} (cost model; OOM per memory \
+                               accountant):\n\n", dev.name));
+        out.push_str(&t.render());
+        let peak_lora = (1..=maxb["lora"].max(1)).map(|b| {
+            simulator::throughput_seq_per_s(dev, m, "lora", 8, b, 512)
+        }).fold(0.0, f64::max);
+        let peak_paca = (1..=maxb["paca"].max(1)).map(|b| {
+            simulator::throughput_seq_per_s(dev, m, "paca", 8, b, 512)
+        }).fold(0.0, f64::max);
+        out.push_str(&format!(
+            "\npeak: LoRA {:.2} vs PaCA {:.2} sentences/s ({:+.0}%)\n",
+            peak_lora, peak_paca,
+            (peak_paca / peak_lora - 1.0) * 100.0));
+    }
+
+    // Measured single-point throughput on the testbed.
+    let n = steps(quick, 10);
+    let mut t = Table::new(&["Method", "tiny-lm seq/s (measured)"]);
+    for (me, art) in [("lora", "train_lora_tiny"),
+                      ("paca", "train_paca_tiny")] {
+        let (s, tr) = measure_step_time(rt, art, n)?;
+        let (b, _) = tr.batch_geometry();
+        t.row(&[me.into(), format!("{:.2}", b as f64 / s)]);
+    }
+    out.push_str("\nMeasured on this machine:\n\n");
+    out.push_str(&t.render());
+    Ok(out)
+}
+
+// ---------------------------------------------------------------- table5
+
+/// Table 5: connection-selection strategies (random seeds, weight-norm,
+/// gradient-norm) — real training runs.
+pub fn table5(rt: &Runtime, quick: bool) -> Result<String> {
+    let mut out = String::from(
+        "## Table 5 — PaCA selection strategies (instruction task)\n\n\
+         Paper: Random #1 5.23 | Random #2 5.26 | Weight-based 5.18 | \
+         Gradient-based 5.24 — i.e. selection strategy does not \
+         noticeably matter.\n\n");
+    let n_steps = steps(quick, 150);
+
+    let run = |selection: Selection, seed: u64| -> Result<(f64, f64)> {
+        let mut cfg = preset("instr")?;
+        cfg.artifact = "train_paca_tiny".into();
+        cfg.steps = n_steps;
+        cfg.warmup_steps = (n_steps / 10).max(1);
+        cfg.seed = seed;
+        let mut tr = Trainer::with_selection(rt, cfg, selection)?;
+        tr.run(false)?;
+        let ev = tr.evaluate(if quick { 1 } else { 4 })?;
+        Ok((10.0 * ev.mean_acc(), tr.curve.tail_mean(5)))
+    };
+
+    let mut t = Table::new(&["Strategy", "Avg score", "final loss"]);
+    for (name, sel, seed) in [
+        ("Random (seed #1)", Selection::Random, 42u64),
+        ("Random (seed #2)", Selection::Random, 1337),
+        ("Weight-based", Selection::WeightNorm, 42),
+    ] {
+        let (score, loss) = run(sel, seed)?;
+        t.row(&[name.into(), format!("{:.2}", score),
+                format!("{:.3}", loss)]);
+    }
+    // Gradient-based: accumulate per-row grad-norm scores with the
+    // grad-probe artifact (paper: 100 probe iterations, no updates).
+    match grad_scores(rt, if quick { 2 } else { 20 }) {
+        Ok(scores) => {
+            let (score, loss) = run(Selection::GradNorm(scores), 42)?;
+            t.row(&["Gradient-based".into(), format!("{:.2}", score),
+                    format!("{:.3}", loss)]);
+        }
+        Err(e) => {
+            t.row(&["Gradient-based".into(), "n/a".into(),
+                    format!("({e})")]);
+        }
+    }
+    out.push_str(&t.render());
+    Ok(out)
+}
+
+/// Accumulated per-row gradient norms from the grad_probe artifact.
+pub fn grad_scores(rt: &Runtime,
+                   iters: usize) -> Result<BTreeMap<String, Vec<f32>>> {
+    let exe = rt.load("grad_probe_tiny")?;
+    let info = exe.info.clone();
+    let state = crate::init::init_state(&info, 42, &Selection::Random)?;
+    let lits: Vec<xla::Literal> = state.iter().map(|t| t.to_literal())
+        .collect::<Result<_>>()?;
+    let model = rt.manifest.model(&info.model)?;
+    let mut gen = crate::data::TokenGen::new(
+        crate::data::Task::Instr, model.vocab, 42);
+    let mut acc: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+    for _ in 0..iters {
+        let batch = gen.train_batch(info.batch, info.seq);
+        let mut inputs: Vec<&xla::Literal> = lits.iter().collect();
+        let blit = batch.to_literal()?;
+        inputs.push(&blit);
+        let outs = exe.run(&inputs)?;
+        for (name, lit) in info.outputs.iter().zip(&outs) {
+            let t = HostTensor::from_literal(lit)?;
+            let v = t.as_f32();
+            let idx_name = format!(
+                "{}/idx", name.trim_start_matches("grad_sq/")
+                    .trim_end_matches("/w"));
+            let e = acc.entry(idx_name)
+                .or_insert_with(|| vec![0.0; v.len()]);
+            for (a, b) in e.iter_mut().zip(&v) {
+                *a += *b;
+            }
+        }
+    }
+    Ok(acc)
+}
+
+// ---------------------------------------------------------------- table6
+
+/// Table 6: ViT fine-tuning, LoRA vs PaCA on synthetic image classes.
+pub fn table6(rt: &Runtime, quick: bool) -> Result<String> {
+    let mut out = String::from(
+        "## Table 6 — ViT fine-tuning (synthetic image classes)\n\n\
+         Paper (ViT-B/16): LoRA 11.0G/45m avg acc 96.1 | PaCA 6.7G/32m \
+         96.2 — same accuracy, 39% less memory, 29% less time.\n\n");
+    let n_steps = steps(quick, 200);
+    let mut t = Table::new(&["Method", "s/step", "train acc",
+                             "held-out acc"]);
+    for (method, art, lr) in [("lora", "train_lora_vit_tiny", 5e-4),
+                              ("paca", "train_paca_vit_tiny", 3e-3)] {
+        let (per_step, acc_train, acc_eval) =
+            run_vit_lr(rt, art, n_steps, quick, lr)?;
+        t.row(&[method.into(), format!("{:.3}", per_step),
+                format!("{:.3}", acc_train),
+                format!("{:.3}", acc_eval)]);
+    }
+    out.push_str("Measured (vit-tiny, CPU PJRT):\n\n");
+    out.push_str(&t.render());
+    Ok(out)
+}
+
+/// Train a ViT artifact on ImageGen; returns (s/step, train acc,
+/// held-out acc via lr=0 dispatches).
+fn run_vit(rt: &Runtime, artifact: &str, n_steps: usize,
+           quick: bool) -> Result<(f64, f64, f64)> {
+    run_vit_lr(rt, artifact, n_steps, quick, 3e-3)
+}
+
+/// As run_vit but with an explicit peak LR (the paper tunes LR per
+/// method; LoRA's alpha/r=4 scaling needs a smaller one).
+fn run_vit_lr(rt: &Runtime, artifact: &str, n_steps: usize,
+              quick: bool, peak_lr: f32) -> Result<(f64, f64, f64)> {
+    let exe = rt.load(artifact)?;
+    let info = exe.info.clone();
+    let state = crate::init::init_state(&info, 42, &Selection::Random)?;
+    let mut lits: Vec<xla::Literal> = state.iter()
+        .map(|t| t.to_literal()).collect::<Result<_>>()?;
+    let upd = info.updated_state_indices();
+    let mut gen = ImageGen::new(10, 42);
+    // held-out: same class patterns, fresh pixel noise
+    let mut eval_gen = ImageGen::with_seeds(10, 42, 777);
+    let b = info.batch;
+
+    let dispatch = |lits: &mut Vec<xla::Literal>,
+                    imgs: &HostTensor, labels: &HostTensor, lr: f32,
+                    apply: bool| -> Result<(f64, f64)> {
+        let mut inputs: Vec<&xla::Literal> = lits.iter().collect();
+        let (il, ll, lrl) = (imgs.to_literal()?, labels.to_literal()?,
+                             HostTensor::scalar_f32(lr).to_literal()?);
+        inputs.push(&il);
+        inputs.push(&ll);
+        inputs.push(&lrl);
+        let mut outs = exe.run(&inputs)?;
+        let acc = outs.pop().unwrap().get_first_element::<f32>()
+            .map_err(|e| anyhow!("{e:?}"))? as f64;
+        let loss = outs.pop().unwrap().get_first_element::<f32>()
+            .map_err(|e| anyhow!("{e:?}"))? as f64;
+        if apply {
+            for (j, lit) in outs.into_iter().enumerate() {
+                lits[upd[j]] = lit;
+            }
+        }
+        Ok((loss, acc))
+    };
+
+    let t0 = std::time::Instant::now();
+    let mut accs = Vec::new();
+    for i in 0..n_steps {
+        let (imgs, labels) = gen.batch(b);
+        let lr = peak_lr * (1.0 - i as f32 / n_steps as f32);
+        let (_, acc) = dispatch(&mut lits, &imgs, &labels, lr, true)?;
+        accs.push(acc);
+    }
+    let per_step = t0.elapsed().as_secs_f64() / n_steps as f64;
+    let tail = accs.len().min(10);
+    let last_acc = accs[accs.len() - tail..].iter().sum::<f64>()
+        / tail as f64;
+
+    let eval_batches = if quick { 2 } else { 8 };
+    let mut acc_sum = 0.0;
+    for _ in 0..eval_batches {
+        let (imgs, labels) = eval_gen.batch(b);
+        let (_, acc) = dispatch(&mut lits, &imgs, &labels, 0.0, false)?;
+        acc_sum += acc;
+    }
+    Ok((per_step, last_acc, acc_sum / eval_batches as f64))
+}
+
+// ---------------------------------------------------------------- table7
+
+/// Table 7: CNN generality — Full-FT vs PaCA on the conv substrate.
+/// PaCA fine-tunes a random subset of *input channels* of each conv
+/// kernel (python/compile/cnn.py), which LoRA's linear adapters cannot
+/// express without un-mergeable extra layers — the paper's point.
+pub fn table7(rt: &Runtime, quick: bool) -> Result<String> {
+    let mut out = String::from(
+        "## Table 7 — Full-FT vs PaCA on a CNN\n\n\
+         Paper (EfficientNetV2-L): Full-FT 18.3G/70m avg 94.3 | PaCA \
+         13.2G/59m 93.7 — PaCA applies to conv layers where LoRA's \
+         linear adapters cannot merge.\n\n");
+    let n_steps = steps(quick, 250);
+    let mut t = Table::new(&["Method", "Trainable", "s/step",
+                             "train acc", "held-out acc"]);
+    for (method, art) in [("full", "train_full_cnn_tiny"),
+                          ("paca", "train_paca_cnn_tiny")] {
+        let exe = rt.load(art)?;
+        let trainable = exe.info.trainable_params;
+        let (per_step, acc_train, acc_eval) =
+            run_vit(rt, art, n_steps, quick)?;
+        t.row(&[method.into(), fmt_params(trainable as f64),
+                format!("{:.3}", per_step),
+                format!("{:.3}", acc_train),
+                format!("{:.3}", acc_eval)]);
+    }
+    out.push_str("Measured (cnn-tiny: 3 conv stages + linear head, \
+                  synthetic image classes):\n\n");
+    out.push_str(&t.render());
+    Ok(out)
+}

@@ -1,0 +1,235 @@
+//! State initialization from manifest init specs.
+//!
+//! The python layer never ships weights: every tensor carries a
+//! declarative `Init` (normal/zeros/ones/eye/choice/col_norm/nf4_*/
+//! rows_of/const) and the rust side materializes them deterministically
+//! from (seed, tensor-name) RNG streams. This keeps artifacts small and
+//! lets the coordinator re-seed PaCA's column selection at run time
+//! (Table 5's selection-strategy ablation).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::manifest::{ArtifactInfo, EntrySpec, Init};
+use crate::nf4;
+use crate::peft::Selection;
+use crate::tensor::{DType, HostTensor};
+use crate::util::rng::Rng;
+
+/// The "virtual" pretrained weight a quantized / rows_of init refers to:
+/// N(0, std²) drawn from the stream of the *weight's layer prefix*, so
+/// codes, scales, and the fp rows all see the same pretrained values.
+fn virtual_weight(seed: u64, layer_prefix: &str, shape: (usize, usize),
+                  std: f32) -> Vec<f32> {
+    let mut rng = Rng::for_tag(seed, &format!("{layer_prefix}#virtual"));
+    (0..shape.0 * shape.1).map(|_| rng.normal_f32(std)).collect()
+}
+
+fn layer_prefix(name: &str) -> &str {
+    name.rsplit_once('/').map(|(p, _)| p).unwrap_or(name)
+}
+
+/// Initialize all state tensors of an artifact.
+///
+/// `selection` overrides the PaCA/QPaCA index initialization (random by
+/// default; weight-norm / gradient-norm for the Table-5 ablation).
+pub fn init_state(art: &ArtifactInfo, seed: u64,
+                  selection: &Selection) -> Result<Vec<HostTensor>> {
+    let mut out: BTreeMap<String, HostTensor> = BTreeMap::new();
+
+    // Two passes: tensors without cross-references first, then the
+    // dependent inits (col_norm, rows_of) which read earlier tensors.
+    for pass in 0..2 {
+        for e in &art.state {
+            if out.contains_key(&e.name) {
+                continue;
+            }
+            let dependent = matches!(e.init,
+                                     Init::ColNorm { .. }
+                                     | Init::RowsOf { .. });
+            if (pass == 0) == dependent {
+                continue;
+            }
+            let t = init_entry(e, seed, selection, &out)?;
+            out.insert(e.name.clone(), t);
+        }
+    }
+
+    // Preserve manifest (input) order.
+    art.state.iter()
+        .map(|e| out.remove(&e.name)
+             .ok_or_else(|| anyhow!("uninitialized entry {}", e.name)))
+        .collect()
+}
+
+fn init_entry(e: &EntrySpec, seed: u64, selection: &Selection,
+              done: &BTreeMap<String, HostTensor>) -> Result<HostTensor> {
+    let n: usize = e.shape.iter().product();
+    Ok(match &e.init {
+        Init::Normal { std } => {
+            let mut rng = Rng::for_tag(seed, &e.name);
+            HostTensor::from_f32(
+                &e.shape, (0..n).map(|_| rng.normal_f32(*std)).collect())
+        }
+        Init::Zeros | Init::None => HostTensor::zeros(&e.shape, e.dtype),
+        Init::Ones => HostTensor::from_f32(&e.shape, vec![1.0; n]),
+        Init::Eye => {
+            let r = e.shape[0];
+            let mut v = vec![0f32; r * r];
+            for i in 0..r {
+                v[i * r + i] = 1.0;
+            }
+            HostTensor::from_f32(&e.shape, v)
+        }
+        Init::Choice { n: pool } => {
+            let r = e.shape[0];
+            let idx = selection.select(seed, &e.name, *pool, r, done)?;
+            HostTensor::from_i32(&e.shape,
+                                 idx.into_iter().map(|i| i as i32)
+                                 .collect())
+        }
+        Init::ColNorm { of } => {
+            let w = done.get(of)
+                .ok_or_else(|| anyhow!("col_norm: {of} not ready"))?;
+            if w.shape.len() != 2 {
+                bail!("col_norm of non-matrix {of}");
+            }
+            let (rows, cols) = (w.shape[0], w.shape[1]);
+            let mut norms = vec![0f32; cols];
+            for i in 0..rows {
+                for j in 0..cols {
+                    let v = w.f32_at(i * cols + j);
+                    norms[j] += v * v;
+                }
+            }
+            for v in norms.iter_mut() {
+                *v = v.sqrt();
+            }
+            HostTensor::from_f32(&e.shape, norms)
+        }
+        Init::Nf4Codes { of_shape, std, block } => {
+            let w = virtual_weight(seed, layer_prefix(&e.name), *of_shape,
+                                   *std);
+            let (codes, _scales) = nf4::quantize(&w, *block);
+            HostTensor::from_i8(&e.shape, codes)
+        }
+        Init::Nf4Scales { of_shape, std, block } => {
+            let w = virtual_weight(seed, layer_prefix(&e.name), *of_shape,
+                                   *std);
+            let (_codes, scales) = nf4::quantize(&w, *block);
+            HostTensor::from_f32(&e.shape, scales)
+        }
+        Init::RowsOf { of_shape, std, idx } => {
+            let w = virtual_weight(seed, layer_prefix(&e.name), *of_shape,
+                                   *std);
+            let idx_t = done.get(idx)
+                .ok_or_else(|| anyhow!("rows_of: {idx} not ready"))?;
+            let cols = of_shape.1;
+            let mut v = Vec::with_capacity(e.shape.iter().product());
+            for &i in &idx_t.as_i32() {
+                let i = i as usize;
+                v.extend_from_slice(&w[i * cols..(i + 1) * cols]);
+            }
+            HostTensor::from_f32(&e.shape, v)
+        }
+        Init::ConstI32 { value } => {
+            if e.dtype != DType::I32 {
+                bail!("const_i32 on non-i32 {}", e.name);
+            }
+            HostTensor::from_i32(&e.shape, vec![*value; n.max(1)])
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::{EntrySpec, Init};
+
+    fn spec(name: &str, shape: &[usize], dtype: DType,
+            init: Init) -> EntrySpec {
+        EntrySpec { name: name.into(), shape: shape.to_vec(), dtype,
+                    role: "frozen".into(), init, updated: false }
+    }
+
+    #[test]
+    fn normal_is_deterministic_per_name() {
+        let e = spec("blocks/0/q/w", &[8, 8], DType::F32,
+                     Init::Normal { std: 0.02 });
+        let done = BTreeMap::new();
+        let a = init_entry(&e, 1, &Selection::Random, &done).unwrap();
+        let b = init_entry(&e, 1, &Selection::Random, &done).unwrap();
+        assert_eq!(a.data, b.data);
+        let c = init_entry(&spec("blocks/1/q/w", &[8, 8], DType::F32,
+                                 Init::Normal { std: 0.02 }),
+                           1, &Selection::Random, &done).unwrap();
+        assert_ne!(a.data, c.data);
+    }
+
+    #[test]
+    fn eye_and_ones() {
+        let done = BTreeMap::new();
+        let e = init_entry(&spec("m", &[3, 3], DType::F32, Init::Eye), 0,
+                           &Selection::Random, &done).unwrap();
+        assert_eq!(e.as_f32(), vec![1., 0., 0., 0., 1., 0., 0., 0., 1.]);
+        let o = init_entry(&spec("g", &[2], DType::F32, Init::Ones), 0,
+                           &Selection::Random, &done).unwrap();
+        assert_eq!(o.as_f32(), vec![1., 1.]);
+    }
+
+    #[test]
+    fn choice_distinct_and_seed_dependent() {
+        let done = BTreeMap::new();
+        let e = spec("l/idx", &[8], DType::I32, Init::Choice { n: 64 });
+        let a = init_entry(&e, 1, &Selection::Random, &done).unwrap();
+        let b = init_entry(&e, 2, &Selection::Random, &done).unwrap();
+        let mut av = a.as_i32();
+        assert_ne!(av, b.as_i32());
+        av.sort_unstable();
+        av.dedup();
+        assert_eq!(av.len(), 8);
+        assert!(av.iter().all(|&i| i >= 0 && i < 64));
+    }
+
+    #[test]
+    fn col_norm_reads_dependency() {
+        let mut done = BTreeMap::new();
+        done.insert("l/w".to_string(),
+                    HostTensor::from_f32(&[2, 2], vec![3., 0., 4., 0.]));
+        let e = spec("l/mag", &[2], DType::F32,
+                     Init::ColNorm { of: "l/w".into() });
+        let t = init_entry(&e, 0, &Selection::Random, &done).unwrap();
+        assert_eq!(t.as_f32(), vec![5.0, 0.0]);
+    }
+
+    #[test]
+    fn nf4_codes_scales_consistent_with_rows_of() {
+        // codes/scales/rows all derive from the same virtual weight.
+        let done = BTreeMap::new();
+        let codes = init_entry(
+            &spec("l/codes", &[2, 64], DType::I8,
+                  Init::Nf4Codes { of_shape: (8, 16), std: 0.02,
+                                   block: 64 }),
+            5, &Selection::Random, &done).unwrap();
+        let scales = init_entry(
+            &spec("l/scales", &[2], DType::F32,
+                  Init::Nf4Scales { of_shape: (8, 16), std: 0.02,
+                                    block: 64 }),
+            5, &Selection::Random, &done).unwrap();
+        assert_eq!(codes.data.len(), 128);
+        assert_eq!(scales.as_f32().len(), 2);
+
+        let mut done2 = BTreeMap::new();
+        done2.insert("l/idx".to_string(),
+                     HostTensor::from_i32(&[2], vec![1, 4]));
+        let rows = init_entry(
+            &spec("l/p", &[2, 16], DType::F32,
+                  Init::RowsOf { of_shape: (8, 16), std: 0.02,
+                                 idx: "l/idx".into() }),
+            5, &Selection::Random, &done2).unwrap();
+        // Row values must match dequantizing nothing — they come from the
+        // same virtual weight (sanity: finite, nonzero).
+        assert!(rows.as_f32().iter().any(|&v| v != 0.0));
+    }
+}

@@ -1,0 +1,49 @@
+//! PaCA: Partial Connection Adaptation for Efficient Fine-Tuning
+//! (Woo et al., ICLR 2025) — a three-layer rust + JAX + Pallas
+//! reproduction.
+//!
+//! Layering (DESIGN.md §2):
+//!   * L1 (python/compile/kernels): Pallas kernels for PaCA's ∇P
+//!     hot-spot, NF4 dequant, and the LoRA baseline.
+//!   * L2 (python/compile): JAX transformer/ViT with pluggable PEFT
+//!     parameterizations, lowered ONCE to HLO text.
+//!   * L3 (this crate): the fine-tuning coordinator — config, data
+//!     pipeline, PJRT runtime, training orchestration, device cost
+//!     model, memory accountant, and the paper's benchmark harness.
+//!
+//! Python never runs on the training path: after `make artifacts` the
+//! `paca` binary is self-contained.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exps;
+pub mod init;
+pub mod manifest;
+pub mod memory;
+pub mod metrics;
+pub mod nf4;
+pub mod peft;
+pub mod runtime;
+pub mod simulator;
+pub mod tensor;
+pub mod util;
+
+/// Locate the artifacts directory: $PACA_ARTIFACTS, else walk up from
+/// the cwd looking for artifacts/manifest.json (tests and benches run
+/// from nested target dirs).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("PACA_ARTIFACTS") {
+        return p.into();
+    }
+    let mut here = std::env::current_dir().unwrap_or_default();
+    loop {
+        let cand = here.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !here.pop() {
+            return "artifacts".into();
+        }
+    }
+}

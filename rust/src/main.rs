@@ -1,0 +1,314 @@
+//! `paca` — the L3 launcher CLI (hand-rolled arg parsing; the offline
+//! build has no clap).
+//!
+//! Subcommands:
+//!   info                          platform + manifest summary
+//!   train  [--config f.toml] [-o key=value …]   run fine-tuning
+//!   eval   --artifact NAME --checkpoint f.ckpt  evaluate a checkpoint
+//!   bench  --exp fig2|table1..7|fig3|all [--quick]   paper experiments
+//!   memory --model NAME --method M [--rank R …]      memory breakdown
+//!   selftest                      kernel artifacts vs rust oracles
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use paca::config::{preset, TrainConfig};
+use paca::coordinator::Trainer;
+use paca::exps;
+use paca::memory;
+use paca::metrics::fmt_gb;
+use paca::nf4;
+use paca::runtime::Runtime;
+use paca::simulator::A100_80G;
+use paca::tensor::HostTensor;
+use paca::util::rng::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+struct Flags {
+    positional: Vec<String>,
+    named: std::collections::BTreeMap<String, String>,
+    switches: std::collections::BTreeSet<String>,
+}
+
+fn parse_flags(args: &[String]) -> Flags {
+    let mut f = Flags { positional: Vec::new(),
+                        named: Default::default(),
+                        switches: Default::default() };
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                f.named.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                f.switches.insert(name.to_string());
+                i += 1;
+            }
+        } else if a == "-o" && i + 1 < args.len() {
+            f.named.entry("override".into()).or_default();
+            let cur = f.named.get_mut("override").unwrap();
+            if !cur.is_empty() {
+                cur.push(';');
+            }
+            cur.push_str(&args[i + 1]);
+            i += 2;
+        } else {
+            f.positional.push(a.clone());
+            i += 1;
+        }
+    }
+    f
+}
+
+fn usage() -> &'static str {
+    "usage: paca <info|train|eval|bench|memory|selftest> [flags]\n\
+     \n\
+     paca train [--config run.toml] [--preset mmlu|instr|smoke] \\\n\
+     \x20          [-o key=value ...]      # e.g. -o artifact=train_paca_tiny\n\
+     paca bench --exp fig2|table1..table7|fig3|all [--quick] \\\n\
+     \x20          [--out results.md]\n\
+     paca eval --artifact train_paca_tiny --checkpoint model.ckpt\n\
+     paca memory --model llama3-8b --method paca --rank 8 \\\n\
+     \x20          [--batch 8] [--seq 512]\n\
+     paca selftest"
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&args[1..]);
+    match cmd {
+        "info" => info(),
+        "train" => train(&flags),
+        "eval" => eval_cmd(&flags),
+        "bench" => bench(&flags),
+        "memory" => memory_cmd(&flags),
+        "selftest" => selftest(),
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{}", usage()),
+    }
+}
+
+fn open_runtime() -> Result<Runtime> {
+    let dir = paca::default_artifacts_dir();
+    Runtime::new(&dir).map_err(|e| {
+        anyhow!("{e:#}\nhint: run `make artifacts` first \
+                 (looked in {})", dir.display())
+    })
+}
+
+fn info() -> Result<()> {
+    let rt = open_runtime()?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts dir: {}", rt.manifest.dir.display());
+    println!("\nmodels:");
+    for m in rt.manifest.models.values() {
+        println!("  {:<14} d={:<5} L={:<3} vocab={:<7} params={:>7} {}",
+                 m.name, m.d_model, m.n_layers, m.vocab,
+                 paca::metrics::fmt_params(m.n_params() as f64),
+                 if m.profile_only { "(profile-only)" } else { "" });
+    }
+    println!("\nartifacts:");
+    for a in rt.manifest.artifacts.values() {
+        println!("  {:<24} {:<10} {:<8} rank={:<3} b={} s={} \
+                  state={} pallas={}",
+                 a.name, a.kind, a.method, a.rank, a.batch, a.seq,
+                 a.state.len(), a.use_pallas);
+    }
+    Ok(())
+}
+
+fn build_config(flags: &Flags) -> Result<TrainConfig> {
+    let mut cfg = if let Some(p) = flags.named.get("preset") {
+        preset(p)?
+    } else if let Some(path) = flags.named.get("config") {
+        TrainConfig::from_toml_file(Path::new(path))?
+    } else {
+        TrainConfig::default()
+    };
+    if let Some(ov) = flags.named.get("override") {
+        for kv in ov.split(';') {
+            cfg.apply_override(kv)?;
+        }
+    }
+    Ok(cfg)
+}
+
+fn train(flags: &Flags) -> Result<()> {
+    let cfg = build_config(flags)?;
+    let rt = open_runtime()?;
+    println!("training {} for {} steps (task {}, lr {:.2e}, seed {})",
+             cfg.artifact, cfg.steps, cfg.task, cfg.peak_lr, cfg.seed);
+    let eval_batches = cfg.eval_batches;
+    let mut tr = Trainer::new(&rt, cfg)?;
+    let t0 = std::time::Instant::now();
+    tr.run(true)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("\ndone: {} steps in {:.1}s ({:.3} s/step)", tr.step, dt,
+             dt / tr.step.max(1) as f64);
+    println!("timers: {}", tr.timers.report());
+    let ev = tr.evaluate(eval_batches)?;
+    println!("\nfinal eval (per category):");
+    for (c, (l, a)) in ev.categories.iter()
+        .zip(ev.loss.iter().zip(&ev.acc))
+    {
+        println!("  {:<10} loss {:.4}  acc {:.3}", c, l, a);
+    }
+    println!("  mean loss {:.4}  mean acc {:.3}", ev.mean_loss(),
+             ev.mean_acc());
+    Ok(())
+}
+
+fn eval_cmd(flags: &Flags) -> Result<()> {
+    let artifact = flags.named.get("artifact")
+        .ok_or_else(|| anyhow!("--artifact required"))?;
+    let ckpt = flags.named.get("checkpoint")
+        .ok_or_else(|| anyhow!("--checkpoint required"))?;
+    let rt = open_runtime()?;
+    let mut cfg = TrainConfig::default();
+    cfg.artifact = artifact.clone();
+    let mut tr = Trainer::new(&rt, cfg)?;
+    tr.load_checkpoint(Path::new(ckpt))?;
+    let ev = tr.evaluate(8)?;
+    for (c, (l, a)) in ev.categories.iter()
+        .zip(ev.loss.iter().zip(&ev.acc))
+    {
+        println!("{:<10} loss {:.4}  acc {:.3}", c, l, a);
+    }
+    Ok(())
+}
+
+fn bench(flags: &Flags) -> Result<()> {
+    let exp = flags.named.get("exp").map(String::as_str)
+        .unwrap_or("all");
+    let quick = flags.switches.contains("quick");
+    let rt = open_runtime()?;
+    let names: Vec<&str> = if exp == "all" {
+        exps::EXPERIMENTS.to_vec()
+    } else {
+        exp.split(',').collect()
+    };
+    let mut report = String::new();
+    for name in names {
+        println!("=== running {name} ===");
+        let out = exps::run_experiment(&rt, name, quick)?;
+        println!("{out}");
+        report.push_str(&out);
+        report.push('\n');
+    }
+    if let Some(path) = flags.named.get("out") {
+        std::fs::write(path, &report)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn memory_cmd(flags: &Flags) -> Result<()> {
+    let rt = open_runtime()?;
+    let model = flags.named.get("model").map(String::as_str)
+        .unwrap_or("llama3-8b");
+    let method = flags.named.get("method").map(String::as_str)
+        .unwrap_or("paca");
+    let rank: usize = flags.named.get("rank")
+        .map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let batch: usize = flags.named.get("batch")
+        .map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let seq: usize = flags.named.get("seq")
+        .map(|s| s.parse()).transpose()?.unwrap_or(512);
+    let m = rt.manifest.model(model)?;
+    let bd = memory::breakdown(m, method, rank, batch, seq, true);
+    println!("{model} / {method} r={rank} b={batch} s={seq}");
+    println!("  weights       {}", fmt_gb(bd.weights));
+    println!("  grads+opt     {}", fmt_gb(bd.grads_opt));
+    println!("  activations   {}", fmt_gb(bd.activations));
+    println!("  method static {}", fmt_gb(bd.method_static));
+    println!("  framework     {}", fmt_gb(bd.framework));
+    println!("  TOTAL         {}", fmt_gb(bd.total()));
+    let ti = paca::simulator::iteration_time(&A100_80G, m, method, rank,
+                                             batch, seq);
+    println!("  time/iter (A100 model): fwd {:.1}ms bwd {:.1}ms \
+              opt {:.1}ms total {:.1}ms",
+             ti.forward_s * 1e3, ti.backward_s * 1e3,
+             ti.optimizer_s * 1e3, ti.total_s() * 1e3);
+    Ok(())
+}
+
+/// Numeric cross-checks: run the Pallas kernel artifacts through PJRT
+/// and compare against rust-side oracles.
+fn selftest() -> Result<()> {
+    let rt = open_runtime()?;
+
+    // paca_grad: ∇P = xpᵀ dy.
+    let exe = rt.load("kernel_paca_grad")?;
+    let (t, r, dout) = (64usize, exe.info.rank, 64usize);
+    let mut rng = Rng::new(7);
+    let xp: Vec<f32> = (0..t * r).map(|_| rng.normal_f32(1.0)).collect();
+    let dy: Vec<f32> = (0..t * dout).map(|_| rng.normal_f32(1.0))
+        .collect();
+    let outs = exe.run_host(&[
+        HostTensor::from_f32(&[t, r], xp.clone()),
+        HostTensor::from_f32(&[t, dout], dy.clone()),
+    ])?;
+    let got = outs[0].as_f32();
+    let mut max_err = 0f32;
+    for i in 0..r {
+        for j in 0..dout {
+            let mut want = 0f32;
+            for k in 0..t {
+                want += xp[k * r + i] * dy[k * dout + j];
+            }
+            max_err = max_err.max((got[i * dout + j] - want).abs());
+        }
+    }
+    println!("kernel_paca_grad: max |err| = {max_err:.2e}");
+    if max_err > 1e-3 {
+        bail!("paca_grad kernel mismatch");
+    }
+
+    // NF4: quantize host-side (the production init path), dequantize
+    // through the Pallas artifact, compare to the rust dequantizer.
+    let exe = rt.load("kernel_nf4_roundtrip")?;
+    let w: Vec<f32> = (0..64 * 64).map(|_| rng.normal_f32(0.05))
+        .collect();
+    let (codes, scales) = nf4::quantize(&w, 64);
+    let outs = exe.run_host(&[
+        HostTensor::from_i8(&[64, 64], codes.clone()),
+        HostTensor::from_f32(&[64], scales.clone()),
+    ])?;
+    let got = outs[0].as_f32();
+    let want = nf4::dequantize(&codes, &scales, 64);
+    let mut max_err = 0f32;
+    for (g, w_) in got.iter().zip(&want) {
+        max_err = max_err.max((g - w_).abs());
+    }
+    println!("kernel_nf4_dequant: max |rust-python err| = {max_err:.2e}");
+    if max_err > 1e-5 {
+        bail!("nf4 kernel/rust dequantizer mismatch");
+    }
+    // And the roundtrip error of the host-side quantizer must respect
+    // the half-code-gap bound (paper Table-3 substrate).
+    let mut max_gap = 0f32;
+    for i in 1..16 {
+        max_gap = max_gap.max(nf4::NF4_CODEBOOK[i]
+                              - nf4::NF4_CODEBOOK[i - 1]);
+    }
+    for (i, (orig, deq)) in w.iter().zip(&want).enumerate() {
+        let bound = scales[i / 64] * max_gap / 2.0 + 1e-6;
+        if (orig - deq).abs() > bound {
+            bail!("nf4 roundtrip bound violated at {i}");
+        }
+    }
+    println!("selftest OK");
+    Ok(())
+}

@@ -1,0 +1,281 @@
+//! artifacts/manifest.json loader — the single source of truth shared
+//! with the python AOT layer (see python/compile/aot.py).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::DType;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub profile_only: bool,
+}
+
+impl ModelInfo {
+    /// (d_in, d_out) of the seven PEFT target matrices per block —
+    /// mirrors ModelConfig.linear_shapes() in python/compile/configs.py.
+    pub fn linear_shapes(&self) -> Vec<(&'static str, usize, usize)> {
+        let (d, f) = (self.d_model, self.d_ff);
+        vec![("q", d, d), ("k", d, d), ("v", d, d), ("o", d, d),
+             ("gate", d, f), ("up", d, f), ("down", f, d)]
+    }
+
+    pub fn n_params(&self) -> u64 {
+        let per_block: u64 = self.linear_shapes().iter()
+            .map(|(_, i, o)| (*i as u64) * (*o as u64)).sum::<u64>()
+            + 2 * self.d_model as u64;
+        self.vocab as u64 * self.d_model as u64
+            + self.n_layers as u64 * per_block
+            + self.d_model as u64
+            + self.d_model as u64 * self.vocab as u64
+    }
+}
+
+/// Declarative init spec executed by init.rs.
+#[derive(Debug, Clone)]
+pub enum Init {
+    Normal { std: f32 },
+    Zeros,
+    Ones,
+    Eye,
+    /// r distinct indices from [0, n), stream-seeded by the tensor name.
+    Choice { n: usize },
+    /// L2 norm of each column of another (already initialized) tensor.
+    ColNorm { of: String },
+    /// NF4 codes/scales of a *virtual* weight ~N(0, std²) of of_shape.
+    Nf4Codes { of_shape: (usize, usize), std: f32, block: usize },
+    Nf4Scales { of_shape: (usize, usize), std: f32, block: usize },
+    /// Rows (selected by the sibling idx tensor) of the virtual weight.
+    RowsOf { of_shape: (usize, usize), std: f32, idx: String },
+    ConstI32 { value: i32 },
+    None,
+}
+
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub role: String,
+    pub init: Init,
+    pub updated: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub model: String,
+    pub method: String,
+    pub rank: usize,
+    pub alpha: f64,
+    pub batch: usize,
+    pub seq: usize,
+    pub use_pallas: bool,
+    pub trainable_params: u64,
+    pub state: Vec<EntrySpec>,
+    pub batch_inputs: Vec<EntrySpec>,
+    pub extra_inputs: Vec<EntrySpec>,
+    pub outputs: Vec<String>,
+}
+
+impl ArtifactInfo {
+    pub fn n_inputs(&self) -> usize {
+        self.state.len() + self.batch_inputs.len()
+            + self.extra_inputs.len()
+    }
+
+    /// Indices into `state` for each output (None for loss/acc).
+    pub fn updated_state_indices(&self) -> Vec<usize> {
+        self.state.iter().enumerate()
+            .filter(|(_, e)| e.updated).map(|(i, _)| i).collect()
+    }
+
+    pub fn state_bytes(&self) -> u64 {
+        self.state.iter().map(|e| {
+            e.shape.iter().product::<usize>() as u64
+                * e.dtype.size() as u64
+        }).sum()
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+fn parse_init(j: &Json) -> Result<Init> {
+    let kind = match j.get("kind").and_then(|k| k.as_str()) {
+        Some(k) => k,
+        None => return Ok(Init::None),
+    };
+    let shape2 = |key: &str| -> Result<(usize, usize)> {
+        let a = j.get(key).and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("init missing {key}"))?;
+        Ok((a[0].as_usize().unwrap(), a[1].as_usize().unwrap()))
+    };
+    Ok(match kind {
+        "normal" => Init::Normal {
+            std: j.get("std").and_then(|v| v.as_f64()).unwrap_or(0.02)
+                as f32,
+        },
+        "zeros" => Init::Zeros,
+        "ones" => Init::Ones,
+        "eye" => Init::Eye,
+        "choice" => Init::Choice {
+            n: j.get("n").and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("choice missing n"))?,
+        },
+        "col_norm" => Init::ColNorm {
+            of: j.get("of").and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("col_norm missing of"))?
+                .to_string(),
+        },
+        "nf4_codes" => Init::Nf4Codes {
+            of_shape: shape2("of_shape")?,
+            std: j.get("std").and_then(|v| v.as_f64()).unwrap_or(0.02)
+                as f32,
+            block: j.get("block").and_then(|v| v.as_usize()).unwrap_or(64),
+        },
+        "nf4_scales" => Init::Nf4Scales {
+            of_shape: shape2("of_shape")?,
+            std: j.get("std").and_then(|v| v.as_f64()).unwrap_or(0.02)
+                as f32,
+            block: j.get("block").and_then(|v| v.as_usize()).unwrap_or(64),
+        },
+        "rows_of" => Init::RowsOf {
+            of_shape: shape2("of_shape")?,
+            std: j.get("std").and_then(|v| v.as_f64()).unwrap_or(0.02)
+                as f32,
+            idx: j.get("idx").and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("rows_of missing idx"))?
+                .to_string(),
+        },
+        "const_i32" => Init::ConstI32 {
+            value: j.get("value").and_then(|v| v.as_i64()).unwrap_or(0)
+                as i32,
+        },
+        other => bail!("unknown init kind {other:?}"),
+    })
+}
+
+fn parse_entry(j: &Json) -> Result<EntrySpec> {
+    let name = j.get("name").and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("entry missing name"))?.to_string();
+    let shape = j.get("shape").and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("entry {name} missing shape"))?
+        .iter().map(|d| d.as_usize().unwrap()).collect();
+    let dtype = DType::from_manifest(
+        j.get("dtype").and_then(|v| v.as_str()).unwrap_or("f32"))?;
+    Ok(EntrySpec {
+        name,
+        shape,
+        dtype,
+        role: j.get("role").and_then(|v| v.as_str()).unwrap_or("")
+            .to_string(),
+        init: parse_init(j.get("init").unwrap_or(&Json::Null))?,
+        updated: j.get("updated").and_then(|v| v.as_bool())
+            .unwrap_or(false),
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let root = Json::parse(&src)
+            .map_err(|e| anyhow!("{}: {}", path.display(), e))?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in root.get("models").and_then(|v| v.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing models"))?
+        {
+            let u = |k: &str| m.get(k).and_then(|v| v.as_usize())
+                .unwrap_or(0);
+            models.insert(name.clone(), ModelInfo {
+                name: name.clone(),
+                vocab: u("vocab"),
+                d_model: u("d_model"),
+                n_layers: u("n_layers"),
+                n_heads: u("n_heads"),
+                d_ff: u("d_ff"),
+                max_seq: u("max_seq"),
+                profile_only: m.get("profile_only")
+                    .and_then(|v| v.as_bool()).unwrap_or(false),
+            });
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for a in root.get("artifacts").and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let name = a.get("name").and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let entries = |key: &str| -> Result<Vec<EntrySpec>> {
+                a.get(key).and_then(|v| v.as_arr()).unwrap_or(&[])
+                    .iter().map(parse_entry).collect()
+            };
+            artifacts.insert(name.clone(), ArtifactInfo {
+                name: name.clone(),
+                file: a.get("file").and_then(|v| v.as_str())
+                    .unwrap_or("").to_string(),
+                kind: a.get("kind").and_then(|v| v.as_str())
+                    .unwrap_or("").to_string(),
+                model: a.get("model").and_then(|v| v.as_str())
+                    .unwrap_or("").to_string(),
+                method: a.get("method").and_then(|v| v.as_str())
+                    .unwrap_or("").to_string(),
+                rank: a.get("rank").and_then(|v| v.as_usize())
+                    .unwrap_or(0),
+                alpha: a.get("alpha").and_then(|v| v.as_f64())
+                    .unwrap_or(0.0),
+                batch: a.get("batch").and_then(|v| v.as_usize())
+                    .unwrap_or(0),
+                seq: a.get("seq").and_then(|v| v.as_usize()).unwrap_or(0),
+                use_pallas: a.get("use_pallas").and_then(|v| v.as_bool())
+                    .unwrap_or(false),
+                trainable_params: a.get("trainable_params")
+                    .and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+                state: entries("state")?,
+                batch_inputs: entries("batch_inputs")?,
+                extra_inputs: entries("extra_inputs")?,
+                outputs: a.get("outputs").and_then(|v| v.as_arr())
+                    .unwrap_or(&[]).iter()
+                    .filter_map(|o| o.as_str().map(String::from))
+                    .collect(),
+            });
+        }
+
+        Ok(Manifest { dir: dir.to_path_buf(), models, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts.get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest \
+                                    (run `make artifacts`)"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models.get(name)
+            .ok_or_else(|| anyhow!("model {name:?} not in manifest"))
+    }
+
+    pub fn hlo_path(&self, art: &ArtifactInfo) -> PathBuf {
+        self.dir.join(&art.file)
+    }
+}

@@ -1,0 +1,181 @@
+//! Training metrics: loss/accuracy curves, phase timers, throughput
+//! counters, and CSV/markdown reporters used by the bench harness and
+//! EXPERIMENTS.md generation.
+
+use std::fmt::Write as _;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Default)]
+pub struct LossCurve {
+    pub steps: Vec<usize>,
+    pub loss: Vec<f64>,
+    pub acc: Vec<f64>,
+}
+
+impl LossCurve {
+    pub fn push(&mut self, step: usize, loss: f64, acc: f64) {
+        self.steps.push(step);
+        self.loss.push(loss);
+        self.acc.push(acc);
+    }
+
+    pub fn last_loss(&self) -> Option<f64> {
+        self.loss.last().copied()
+    }
+
+    /// Mean of the final `k` recorded losses (noise-robust endpoint).
+    pub fn tail_mean(&self, k: usize) -> f64 {
+        let n = self.loss.len();
+        let k = k.min(n).max(1);
+        self.loss[n - k..].iter().sum::<f64>() / k as f64
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("step,loss,acc\n");
+        for i in 0..self.steps.len() {
+            let _ = writeln!(out, "{},{:.6},{:.6}", self.steps[i],
+                             self.loss[i], self.acc[i]);
+        }
+        out
+    }
+}
+
+/// Accumulates wall time per training phase.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimers {
+    pub data_s: f64,
+    pub h2d_s: f64,
+    pub execute_s: f64,
+    pub d2h_s: f64,
+    pub total_s: f64,
+}
+
+impl PhaseTimers {
+    pub fn report(&self) -> String {
+        format!(
+            "data {:.3}s | h2d {:.3}s | execute {:.3}s | d2h {:.3}s | \
+             total {:.3}s",
+            self.data_s, self.h2d_s, self.execute_s, self.d2h_s,
+            self.total_s)
+    }
+}
+
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn lap(&mut self) -> Duration {
+        let now = Instant::now();
+        let d = now - self.0;
+        self.0 = now;
+        d
+    }
+}
+
+/// Fixed-width markdown table builder for the experiment reports.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(),
+                rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], out: &mut String| {
+            let _ = write!(out, "|");
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(out, " {:<w$} |", c, w = widths[i]);
+            }
+            let _ = writeln!(out);
+        };
+        line(&self.header, &mut out);
+        let sep: Vec<String> =
+            widths.iter().map(|w| "-".repeat(*w)).collect();
+        line(&sep, &mut out);
+        for row in &self.rows {
+            line(row, &mut out);
+        }
+        out
+    }
+}
+
+pub fn fmt_gb(bytes: f64) -> String {
+    format!("{:.1}G", bytes / 1e9)
+}
+
+pub fn fmt_dur_h(seconds: f64) -> String {
+    if seconds >= 3600.0 {
+        format!("{:.1}h", seconds / 3600.0)
+    } else if seconds >= 60.0 {
+        format!("{:.0}m", seconds / 60.0)
+    } else {
+        format!("{:.1}s", seconds)
+    }
+}
+
+pub fn fmt_params(n: f64) -> String {
+    if n >= 1e9 {
+        format!("{:.1}B", n / 1e9)
+    } else if n >= 1e6 {
+        format!("{:.0}M", n / 1e6)
+    } else {
+        format!("{:.0}K", n / 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curve_and_csv() {
+        let mut c = LossCurve::default();
+        c.push(1, 2.0, 0.1);
+        c.push(2, 1.0, 0.2);
+        assert_eq!(c.last_loss(), Some(1.0));
+        assert_eq!(c.tail_mean(2), 1.5);
+        let csv = c.to_csv();
+        assert!(csv.starts_with("step,loss,acc\n"));
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["Method", "Mem"]);
+        t.row(&["LoRA".into(), "23G".into()]);
+        t.row(&["PaCA (Ours)".into(), "20G".into()]);
+        let r = t.render();
+        assert!(r.contains("| Method"));
+        assert!(r.contains("| PaCA (Ours) |"));
+        assert_eq!(r.lines().count(), 4);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_gb(23.4e9), "23.4G");
+        assert_eq!(fmt_dur_h(7200.0), "2.0h");
+        assert_eq!(fmt_dur_h(90.0), "2m");
+        assert_eq!(fmt_params(21e6), "21M");
+    }
+}

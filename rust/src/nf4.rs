@@ -1,0 +1,132 @@
+//! NF4 (4-bit NormalFloat) quantization substrate in rust — used by the
+//! initializer to produce the QLoRA/QPaCA frozen-weight codes/scales and
+//! by the memory accountant. Mirrors python/compile/kernels/ref.py
+//! (nearest-codebook rounding, per-block absmax scaling).
+
+/// Exact NF4 codebook (Dettmers et al. 2023); index 7 is exactly 0.
+pub const NF4_CODEBOOK: [f32; 16] = [
+    -1.0,
+    -0.696_192_8,
+    -0.525_073_05,
+    -0.394_917_5,
+    -0.284_441_38,
+    -0.184_773_43,
+    -0.091_050_036,
+    0.0,
+    0.079_580_3,
+    0.160_930_2,
+    0.246_112_3,
+    0.337_915_24,
+    0.440_709_83,
+    0.562_617,
+    0.722_956_84,
+    1.0,
+];
+
+/// Quantize a flat weight buffer. Returns (codes[i8 per weight],
+/// scales[f32 per block]). `w.len()` must be a multiple of `block`.
+pub fn quantize(w: &[f32], block: usize) -> (Vec<i8>, Vec<f32>) {
+    assert!(block > 0 && w.len() % block == 0,
+            "weight len {} not a multiple of block {}", w.len(), block);
+    let nblocks = w.len() / block;
+    let mut codes = Vec::with_capacity(w.len());
+    let mut scales = Vec::with_capacity(nblocks);
+    for b in 0..nblocks {
+        let chunk = &w[b * block..(b + 1) * block];
+        let scale = chunk.iter().fold(0f32, |m, v| m.max(v.abs()));
+        scales.push(scale);
+        let inv = if scale == 0.0 { 1.0 } else { 1.0 / scale };
+        for &v in chunk {
+            codes.push(nearest_code(v * inv));
+        }
+    }
+    (codes, scales)
+}
+
+/// Nearest codebook index (ties round down, matching argmin in jnp).
+pub fn nearest_code(x: f32) -> i8 {
+    let mut best = 0usize;
+    let mut best_d = f32::INFINITY;
+    for (i, c) in NF4_CODEBOOK.iter().enumerate() {
+        let d = (x - c).abs();
+        if d < best_d {
+            best_d = d;
+            best = i;
+        }
+    }
+    best as i8
+}
+
+pub fn dequantize(codes: &[i8], scales: &[f32], block: usize) -> Vec<f32> {
+    assert_eq!(codes.len(), scales.len() * block);
+    let mut out = Vec::with_capacity(codes.len());
+    for (b, &scale) in scales.iter().enumerate() {
+        for &c in &codes[b * block..(b + 1) * block] {
+            out.push(NF4_CODEBOOK[c as usize] * scale);
+        }
+    }
+    out
+}
+
+/// Bits per weight of NF4 storage (4-bit code + amortized f32 scale) —
+/// the constant behind the paper's Table-3 memory reductions.
+pub fn bits_per_weight(block: usize) -> f64 {
+    4.0 + 32.0 / block as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codebook_sorted_and_symmetric_endpoints() {
+        for i in 1..16 {
+            assert!(NF4_CODEBOOK[i] > NF4_CODEBOOK[i - 1]);
+        }
+        assert_eq!(NF4_CODEBOOK[0], -1.0);
+        assert_eq!(NF4_CODEBOOK[15], 1.0);
+        assert_eq!(NF4_CODEBOOK[7], 0.0);
+    }
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        // max half-gap of the codebook, times the block scale
+        let mut max_gap = 0f32;
+        for i in 1..16 {
+            max_gap = max_gap.max(NF4_CODEBOOK[i] - NF4_CODEBOOK[i - 1]);
+        }
+        let mut rng = crate::util::rng::Rng::new(1);
+        let w: Vec<f32> = (0..256).map(|_| rng.normal_f32(0.05)).collect();
+        let (codes, scales) = quantize(&w, 64);
+        let dq = dequantize(&codes, &scales, 64);
+        for (b, &scale) in scales.iter().enumerate() {
+            for i in 0..64 {
+                let err = (w[b * 64 + i] - dq[b * 64 + i]).abs();
+                assert!(err <= scale * max_gap / 2.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let w = vec![0.3, -0.7, 0.0, 0.05, 1.0, -1.0, 0.5, 0.25];
+        let (c1, s1) = quantize(&w, 8);
+        let d1 = dequantize(&c1, &s1, 8);
+        let (c2, s2) = quantize(&d1, 8);
+        let d2 = dequantize(&c2, &s2, 8);
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn zero_block() {
+        let (codes, scales) = quantize(&[0.0; 64], 64);
+        assert!(scales[0] == 0.0);
+        assert!(dequantize(&codes, &scales, 64).iter()
+                .all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn bits_accounting() {
+        assert!((bits_per_weight(64) - 4.5).abs() < 1e-12);
+    }
+}

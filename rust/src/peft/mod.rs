@@ -1,0 +1,174 @@
+//! Host-side PEFT method descriptors: trainable-parameter accounting
+//! (paper's `Param` column), and PaCA's connection-selection strategies
+//! (§5 / Table 5: random, weight-based L2-norm, gradient-based).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::manifest::ModelInfo;
+use crate::tensor::HostTensor;
+use crate::util::rng::Rng;
+
+pub const METHODS: [&str; 7] =
+    ["full", "lora", "dora", "moslora", "paca", "qlora", "qpaca"];
+
+/// PaCA connection-selection strategy (paper §5).
+#[derive(Debug, Clone)]
+pub enum Selection {
+    /// Uniform without replacement (the paper's default).
+    Random,
+    /// Columns with the largest L2 norm in the pretrained weight.
+    WeightNorm,
+    /// Columns with the largest accumulated gradient norm, from a probe
+    /// phase (paper: 100 iterations without updates). Keyed by the idx
+    /// tensor name; each value is a per-column score vector.
+    GradNorm(BTreeMap<String, Vec<f32>>),
+}
+
+impl Selection {
+    pub fn parse(s: &str) -> Result<Selection> {
+        Ok(match s {
+            "random" => Selection::Random,
+            "weight" | "weight-norm" => Selection::WeightNorm,
+            other => {
+                return Err(anyhow!(
+                    "unknown selection strategy {other:?} \
+                     (gradient-based is constructed programmatically)"))
+            }
+        })
+    }
+
+    /// Choose `r` of `pool` input-feature indices for the idx tensor
+    /// `name`. `done` holds already-initialized sibling tensors (the
+    /// merged weight lives at `<prefix>/w`).
+    pub fn select(&self, seed: u64, name: &str, pool: usize, r: usize,
+                  done: &BTreeMap<String, HostTensor>) -> Result<Vec<u32>> {
+        match self {
+            Selection::Random => {
+                let mut rng = Rng::for_tag(seed, name);
+                Ok(rng.choice(pool, r))
+            }
+            Selection::WeightNorm => {
+                let wname = name.strip_suffix("/idx")
+                    .map(|p| format!("{p}/w"))
+                    .ok_or_else(|| anyhow!("bad idx name {name}"))?;
+                let w = done.get(&wname).ok_or_else(|| {
+                    anyhow!("weight-norm selection: {wname} \
+                             not initialized before {name}")
+                })?;
+                // Row i of our (d_in, d_out) layout == paper's column i.
+                let cols = w.shape[1];
+                let scores: Vec<f32> = (0..pool).map(|i| {
+                    (0..cols).map(|j| {
+                        let v = w.f32_at(i * cols + j);
+                        v * v
+                    }).sum()
+                }).collect();
+                Ok(top_r(&scores, r))
+            }
+            Selection::GradNorm(map) => {
+                let scores = map.get(name).ok_or_else(|| {
+                    anyhow!("gradient selection has no scores for {name}")
+                })?;
+                if scores.len() != pool {
+                    return Err(anyhow!("score len {} != pool {pool}",
+                                       scores.len()));
+                }
+                Ok(top_r(scores, r))
+            }
+        }
+    }
+}
+
+/// Indices of the r largest scores (stable order by descending score).
+pub fn top_r(scores: &[f32], r: usize) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..scores.len() as u32).collect();
+    idx.sort_by(|&a, &b| {
+        scores[b as usize].partial_cmp(&scores[a as usize]).unwrap()
+            .then(a.cmp(&b))
+    });
+    idx.truncate(r);
+    idx
+}
+
+/// Trainable parameters per method/rank on a model — the paper's Param
+/// column. Mirrors python peft.trainable_param_count.
+pub fn trainable_params(m: &ModelInfo, method: &str, rank: usize) -> u64 {
+    let r = rank as u64;
+    let per_block: u64 = m.linear_shapes().iter().map(|(_, din, dout)| {
+        let (din, dout) = (*din as u64, *dout as u64);
+        match method {
+            "full" => din * dout,
+            "paca" | "qpaca" => r * dout,
+            "lora" | "qlora" => r * (din + dout),
+            "moslora" => r * (din + dout) + r * r,
+            "dora" => r * (din + dout) + dout,
+            _ => 0,
+        }
+    }).sum();
+    let mut n = m.n_layers as u64 * per_block;
+    if method == "full" {
+        n += 2 * m.vocab as u64 * m.d_model as u64          // embed+head
+            + (2 * m.n_layers as u64 + 1) * m.d_model as u64; // norms
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelInfo {
+        ModelInfo { name: "t".into(), vocab: 512, d_model: 64,
+                    n_layers: 2, n_heads: 4, d_ff: 172, max_seq: 128,
+                    profile_only: false }
+    }
+
+    #[test]
+    fn paca_r16_matches_lora_r8_on_square_targets() {
+        // On a square d×d target, PaCA r=2k trains exactly as many
+        // params as LoRA r=k — the paper's Table-1 pairing.
+        let m = ModelInfo { d_ff: 64, ..tiny() };
+        assert_eq!(trainable_params(&m, "paca", 16),
+                   trainable_params(&m, "lora", 8));
+    }
+
+    #[test]
+    fn method_ordering_matches_paper() {
+        let m = tiny();
+        let lora = trainable_params(&m, "lora", 8);
+        let paca = trainable_params(&m, "paca", 8);
+        let dora = trainable_params(&m, "dora", 8);
+        let mos = trainable_params(&m, "moslora", 8);
+        assert!(paca < lora, "paca r8 has ~half of lora r8");
+        assert!(dora > lora && mos > lora);
+        assert!(trainable_params(&m, "full", 0) > 7 * lora);
+    }
+
+    #[test]
+    fn top_r_picks_largest() {
+        assert_eq!(top_r(&[0.1, 5.0, 3.0, 4.0], 2), vec![1, 3]);
+    }
+
+    #[test]
+    fn weight_norm_selection_reads_sibling() {
+        let mut done = BTreeMap::new();
+        // rows 1 and 3 have the largest norms
+        done.insert("l/w".to_string(), HostTensor::from_f32(
+            &[4, 2], vec![0.1, 0.0, 9.0, 9.0, 0.2, 0.0, 5.0, 5.0]));
+        let got = Selection::WeightNorm.select(0, "l/idx", 4, 2, &done)
+            .unwrap();
+        assert_eq!(got, vec![1, 3]);
+    }
+
+    #[test]
+    fn random_selection_differs_across_seeds_and_tags() {
+        let done = BTreeMap::new();
+        let a = Selection::Random.select(1, "x/idx", 128, 8, &done)
+            .unwrap();
+        let b = Selection::Random.select(2, "x/idx", 128, 8, &done)
+            .unwrap();
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,173 @@
+//! PJRT runtime: loads AOT-lowered HLO text artifacts and executes them
+//! on the CPU PJRT client. Python never runs here — the artifacts are
+//! self-contained HLO modules (see python/compile/aot.py).
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serialized protos carry 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::manifest::{ArtifactInfo, Manifest};
+use crate::tensor::HostTensor;
+
+/// A device-resident buffer plus the host literal it was (and may still
+/// be being) copied from — see Executable::to_device.
+pub struct DeviceTensor {
+    pub buf: xla::PjRtBuffer,
+    _src: xla::Literal,
+}
+
+impl DeviceTensor {
+    pub fn read(&self) -> Result<HostTensor> {
+        let lit = self.buf.to_literal_sync()
+            .map_err(|e| anyhow!("d2h readback: {e:?}"))?;
+        HostTensor::from_literal(&lit)
+    }
+}
+
+/// One compiled executable + its manifest row.
+pub struct Executable {
+    pub info: ArtifactInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Run with positional literal inputs; returns the flattened output
+    /// tuple. Uploads each literal to an owned device buffer first and
+    /// dispatches through `run_b` — NEVER through the crate's literal
+    /// `execute`, which leaks its internal per-argument device buffers
+    /// (see run_b).
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self, inputs: &[L]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.info.n_inputs() {
+            return Err(anyhow!(
+                "{}: got {} inputs, expected {} \
+                 (state {} + batch {} + extra {})",
+                self.info.name, inputs.len(), self.info.n_inputs(),
+                self.info.state.len(), self.info.batch_inputs.len(),
+                self.info.extra_inputs.len()));
+        }
+        let bufs: Vec<DeviceTensor> = inputs.iter()
+            .map(|l| self.to_device(l.borrow().clone()))
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::PjRtBuffer> =
+            bufs.iter().map(|d| &d.buf).collect();
+        self.run_b(&refs)
+    }
+
+    /// Run with device-resident buffer inputs (`execute_b`) — the hot
+    /// path. The literal-input `execute` converts every argument to a
+    /// fresh device buffer per call and never frees it (xla-rs leak:
+    /// ~state-size bytes per step, OOM on long runs — EXPERIMENTS.md
+    /// §Perf L3#5); buffers we own are freed on Drop, and persistent
+    /// state never leaves the device between steps.
+    pub fn run_b<B: std::borrow::Borrow<xla::PjRtBuffer>>(
+        &self, inputs: &[B]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.info.n_inputs() {
+            return Err(anyhow!(
+                "{}: got {} inputs, expected {}",
+                self.info.name, inputs.len(), self.info.n_inputs()));
+        }
+        let bufs = self.exe.execute_b::<B>(inputs)
+            .with_context(|| format!("executing {}", self.info.name))?;
+        let lit = bufs[0][0].to_literal_sync()
+            .context("fetching output tuple")?;
+        let outs = lit.to_tuple().context("untupling outputs")?;
+        if outs.len() != self.info.outputs.len() {
+            return Err(anyhow!(
+                "{}: got {} outputs, manifest says {}",
+                self.info.name, outs.len(), self.info.outputs.len()));
+        }
+        Ok(outs)
+    }
+
+    /// Upload a host literal to a device buffer we own. TFRT-CPU's
+    /// BufferFromHostLiteral fills the buffer ASYNCHRONOUSLY from the
+    /// source literal, so the literal must outlive the copy — the
+    /// returned DeviceTensor owns both (the source is freed with the
+    /// buffer). Passing a temporary literal crashes with
+    /// `literal.size_bytes() == b->size()` deep in PJRT.
+    /// SAFETY CONTRACT: the returned DeviceTensor must be EXECUTED
+    /// against (passed to run_b) before it is dropped — TFRT-CPU fills
+    /// the buffer asynchronously and has no standalone sync API in this
+    /// xla_extension version; an uploaded-but-never-used buffer leaves
+    /// a pending task that can fire after free. The coordinator
+    /// therefore keeps *updated* state host-side as literals (outputs
+    /// are never re-uploaded) and only uploads tensors that are
+    /// immediately consumed by an execution.
+    pub fn to_device(&self, lit: xla::Literal) -> Result<DeviceTensor> {
+        let buf = self.exe.client().buffer_from_host_literal(None, &lit)
+            .map_err(|e| anyhow!("h2d upload: {e:?}"))?;
+        Ok(DeviceTensor { buf, _src: lit })
+    }
+
+    /// Run with host tensors; returns host tensors (convenience path —
+    /// the trainer's hot loop manages device buffers itself).
+    pub fn run_host(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let lits: Vec<xla::Literal> = inputs.iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        self.run(&lits)?
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect()
+    }
+}
+
+/// PJRT client + compiled-executable cache. Compilation is the expensive
+/// step (seconds for the larger graphs), so executables are cached by
+/// artifact name for the lifetime of the runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+    /// (artifact, compile_seconds) log for EXPERIMENTS.md §Perf.
+    pub compile_log: Mutex<Vec<(String, f64)>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, manifest,
+                     cache: Mutex::new(HashMap::new()),
+                     compile_log: Mutex::new(Vec::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile (cached) an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let info = self.manifest.artifact(name)?.clone();
+        let path = self.manifest.hlo_path(&info);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let secs = t0.elapsed().as_secs_f64();
+        self.compile_log.lock().unwrap().push((name.to_string(), secs));
+        let exe = Arc::new(Executable { info, exe });
+        self.cache.lock().unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn loaded(&self) -> Vec<String> {
+        self.cache.lock().unwrap().keys().cloned().collect()
+    }
+}

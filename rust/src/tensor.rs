@@ -1,0 +1,205 @@
+//! Host-side tensors: typed, shape-carrying byte buffers that convert
+//! to/from `xla::Literal` at the PJRT boundary. The coordinator keeps
+//! the training state as `HostTensor`s (checkpointable, inspectable)
+//! and materializes literals per dispatch.
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    I8,
+}
+
+impl DType {
+    pub fn from_manifest(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "i8" => DType::I8,
+            other => bail!("unknown dtype {other:?}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 => 1,
+        }
+    }
+
+    pub fn element_type(self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+            DType::I8 => xla::ElementType::S8,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub data: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize], dtype: DType) -> HostTensor {
+        let n: usize = shape.iter().product();
+        HostTensor { shape: shape.to_vec(), dtype,
+                     data: vec![0u8; n * dtype.size()] }
+    }
+
+    pub fn from_f32(shape: &[usize], vals: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), vals.len());
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        HostTensor { shape: shape.to_vec(), dtype: DType::F32, data }
+    }
+
+    pub fn from_i32(shape: &[usize], vals: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), vals.len());
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        HostTensor { shape: shape.to_vec(), dtype: DType::I32, data }
+    }
+
+    pub fn from_i8(shape: &[usize], vals: Vec<i8>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), vals.len());
+        HostTensor { shape: shape.to_vec(), dtype: DType::I8,
+                     data: vals.into_iter().map(|v| v as u8).collect() }
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::from_f32(&[], vec![v])
+    }
+
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor::from_i32(&[], vec![v])
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn as_f32(&self) -> Vec<f32> {
+        assert_eq!(self.dtype, DType::F32);
+        self.data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    pub fn as_i32(&self) -> Vec<i32> {
+        assert_eq!(self.dtype, DType::I32);
+        self.data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    pub fn f32_at(&self, i: usize) -> f32 {
+        assert_eq!(self.dtype, DType::F32);
+        let b = &self.data[i * 4..i * 4 + 4];
+        f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+
+    pub fn set_f32(&mut self, i: usize, v: f32) {
+        assert_eq!(self.dtype, DType::F32);
+        self.data[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+    }
+
+    /// Row `i` of a 2-D f32 tensor.
+    pub fn row_f32(&self, i: usize) -> Vec<f32> {
+        assert_eq!(self.dtype, DType::F32);
+        assert_eq!(self.shape.len(), 2);
+        let cols = self.shape[1];
+        (0..cols).map(|j| self.f32_at(i * cols + j)).collect()
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        xla::Literal::create_from_shape_and_untyped_data(
+            self.dtype.element_type(), &self.shape, &self.data)
+            .context("literal from host tensor")
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape().context("literal shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize)
+            .collect();
+        let dtype = match shape.ty() {
+            xla::ElementType::F32 => DType::F32,
+            xla::ElementType::S32 => DType::I32,
+            xla::ElementType::S8 => DType::I8,
+            other => bail!("unsupported literal element type {other:?}"),
+        };
+        let n: usize = dims.iter().product();
+        let out;
+        match dtype {
+            DType::F32 => {
+                let mut buf = vec![0f32; n];
+                lit.copy_raw_to::<f32>(&mut buf)?;
+                out = HostTensor::from_f32(&dims, buf);
+            }
+            DType::I32 => {
+                let mut buf = vec![0i32; n];
+                lit.copy_raw_to::<i32>(&mut buf)?;
+                out = HostTensor::from_i32(&dims, buf);
+            }
+            DType::I8 => {
+                let mut buf = vec![0i8; n];
+                lit.copy_raw_to::<i8>(&mut buf)?;
+                out = HostTensor::from_i8(&dims, buf);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip_bytes() {
+        let t = HostTensor::from_f32(&[2, 2], vec![1.0, -2.5, 3.25, 0.0]);
+        assert_eq!(t.as_f32(), vec![1.0, -2.5, 3.25, 0.0]);
+        assert_eq!(t.f32_at(2), 3.25);
+        assert_eq!(t.bytes(), 16);
+    }
+
+    #[test]
+    fn rows() {
+        let t = HostTensor::from_f32(&[2, 3],
+                                     vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.row_f32(1), vec![4., 5., 6.]);
+    }
+
+    #[test]
+    fn set_get() {
+        let mut t = HostTensor::zeros(&[4], DType::F32);
+        t.set_f32(3, 9.5);
+        assert_eq!(t.f32_at(3), 9.5);
+        assert_eq!(t.f32_at(0), 0.0);
+    }
+
+    #[test]
+    fn scalar_shapes() {
+        assert_eq!(HostTensor::scalar_f32(1.0).shape, Vec::<usize>::new());
+        assert_eq!(HostTensor::scalar_i32(7).as_i32(), vec![7]);
+    }
+}

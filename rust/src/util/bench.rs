@@ -1,0 +1,91 @@
+//! Micro-benchmark harness (criterion is unavailable offline): warmup +
+//! timed iterations with mean / p50 / p95 / throughput reporting, used
+//! by `cargo bench` targets in benches/.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>8} iters  mean {:>10.3?}  p50 {:>10.3?}  \
+             p95 {:>10.3?}  min {:>10.3?}",
+            self.name, self.iters, self.mean, self.p50, self.p95,
+            self.min);
+    }
+}
+
+/// Time `f` with `warmup` untimed runs and up to `iters` timed runs
+/// (capped at `budget` wall-clock).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize,
+                         budget: Duration, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    let start = Instant::now();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if start.elapsed() > budget {
+            break;
+        }
+    }
+    summarize(name, samples)
+}
+
+pub fn summarize(name: &str, mut samples: Vec<Duration>) -> BenchResult {
+    assert!(!samples.is_empty());
+    samples.sort_unstable();
+    let n = samples.len();
+    let total: Duration = samples.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean: total / n as u32,
+        p50: samples[n / 2],
+        p95: samples[(n * 95 / 100).min(n - 1)],
+        min: samples[0],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let r = summarize("t", vec![Duration::from_millis(1),
+                                    Duration::from_millis(2),
+                                    Duration::from_millis(30)]);
+        assert_eq!(r.min, Duration::from_millis(1));
+        assert_eq!(r.p50, Duration::from_millis(2));
+        assert!(r.p95 >= r.p50);
+        assert_eq!(r.iters, 3);
+    }
+
+    #[test]
+    fn bench_runs_and_caps() {
+        let mut count = 0;
+        let r = bench("noop", 2, 1000, Duration::from_millis(50), || {
+            count += 1;
+            std::thread::sleep(Duration::from_micros(200));
+        });
+        assert!(r.iters >= 1);
+        assert_eq!(count, r.iters + 2);
+    }
+}

@@ -1,0 +1,8 @@
+//! Zero-dependency substrates: JSON + TOML-subset parsers, deterministic
+//! RNG, and the micro-bench / property-test harnesses (the offline build
+//! vendors only the `xla` crate and its deps — no serde/clap/criterion).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod toml;

@@ -1,0 +1,222 @@
+//! Deterministic RNG substrate (no `rand` crate offline): SplitMix64
+//! for streams + xoshiro256** for bulk, Box–Muller normals, Fisher–Yates
+//! partial shuffles, and Zipf sampling for the synthetic corpus.
+//!
+//! Streams are derived from (seed, tag-string) so every tensor / shard /
+//! worker gets an independent, reproducible stream regardless of the
+//! order in which they are initialized.
+
+/// xoshiro256** seeded via SplitMix64.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// FNV-1a over the tag, mixed into the stream seed.
+pub fn tag_hash(tag: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in tag.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        let mut sm = seed;
+        Rng { s: [splitmix64(&mut sm), splitmix64(&mut sm),
+                  splitmix64(&mut sm), splitmix64(&mut sm)] }
+    }
+
+    /// Independent stream for (seed, tag) — used per tensor name.
+    pub fn for_tag(seed: u64, tag: &str) -> Rng {
+        Rng::new(seed ^ tag_hash(tag))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        // Rejection-free 128-bit multiply method (Lemire).
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo)
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    pub fn normal_f32(&mut self, std: f32) -> f32 {
+        (self.normal() as f32) * std
+    }
+
+    /// `r` distinct indices from [0, n) — partial Fisher–Yates.
+    pub fn choice(&mut self, n: usize, r: usize) -> Vec<u32> {
+        assert!(r <= n);
+        let mut pool: Vec<u32> = (0..n as u32).collect();
+        for i in 0..r {
+            let j = self.range(i, n);
+            pool.swap(i, j);
+        }
+        pool.truncate(r);
+        pool
+    }
+
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Zipf(s) sampler over [0, n) via precomputed CDF inversion — the
+/// token-frequency model of the synthetic corpus.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Zipf {
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.next_f64();
+        match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_tag() {
+        let a: Vec<u64> = {
+            let mut r = Rng::for_tag(7, "blocks/0/q/w");
+            (0..4).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = Rng::for_tag(7, "blocks/0/q/w");
+            (0..4).map(|_| r.next_u64()).collect()
+        };
+        let c: Vec<u64> = {
+            let mut r = Rng::for_tag(7, "blocks/1/q/w");
+            (0..4).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(42);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean={}", mean);
+        assert!((var - 1.0).abs() < 0.02, "var={}", var);
+    }
+
+    #[test]
+    fn choice_distinct_in_range() {
+        let mut r = Rng::new(3);
+        for _ in 0..50 {
+            let idx = r.choice(64, 16);
+            let mut sorted = idx.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 16);
+            assert!(idx.iter().all(|&i| i < 64));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut r = Rng::new(9);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[r.below(5)] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{:?}", counts);
+        }
+    }
+
+    #[test]
+    fn zipf_is_head_heavy_and_in_range() {
+        let z = Zipf::new(100, 1.2);
+        let mut r = Rng::new(5);
+        let mut head = 0;
+        for _ in 0..10_000 {
+            let k = z.sample(&mut r);
+            assert!(k < 100);
+            if k < 10 {
+                head += 1;
+            }
+        }
+        assert!(head > 5_000, "head={}", head);
+    }
+}

@@ -1,0 +1,210 @@
+//! Minimal TOML-subset parser for run configs (substrate — no `toml`
+//! crate offline). Supports: `[section]` / `[section.sub]` tables,
+//! `key = value` with strings, integers, floats, booleans, and flat
+//! arrays, plus `#` comments. Keys flatten to `section.sub.key`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Flat `section.key -> value` document.
+#[derive(Debug, Default, Clone)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc, TomlError> {
+        let mut entries = BTreeMap::new();
+        let mut prefix = String::new();
+        for (ln, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or(TomlError {
+                    line: ln + 1,
+                    msg: "unterminated table header".into(),
+                })?;
+                prefix = name.trim().to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or(TomlError {
+                line: ln + 1,
+                msg: "expected key = value".into(),
+            })?;
+            let key = line[..eq].trim();
+            let val = parse_value(line[eq + 1..].trim(), ln + 1)?;
+            let full = if prefix.is_empty() {
+                key.to_string()
+            } else {
+                format!("{}.{}", prefix, key)
+            };
+            entries.insert(full, val);
+        }
+        Ok(TomlDoc { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings must not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, line: usize) -> Result<TomlValue, TomlError> {
+    let err = |msg: &str| TomlError { line, msg: msg.into() };
+    if let Some(rest) = s.strip_prefix('"') {
+        let end = rest.rfind('"').ok_or_else(|| err("unterminated string"))?;
+        return Ok(TomlValue::Str(rest[..end].to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']')
+            .ok_or_else(|| err("unterminated array"))?;
+        let mut out = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for item in trimmed.split(',') {
+                let item = item.trim();
+                if item.is_empty() {
+                    continue; // trailing comma
+                }
+                out.push(parse_value(item, line)?);
+            }
+        }
+        return Ok(TomlValue::Arr(out));
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(err(&format!("cannot parse value: {}", s)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typed_values() {
+        let doc = TomlDoc::parse(
+            "a = 1\nb = 2.5\nc = \"hi\"\nd = true\ne = [1, 2, 3]\n",
+        )
+        .unwrap();
+        assert_eq!(doc.i64_or("a", 0), 1);
+        assert_eq!(doc.f64_or("b", 0.0), 2.5);
+        assert_eq!(doc.str_or("c", ""), "hi");
+        assert!(doc.bool_or("d", false));
+        assert_eq!(
+            doc.get("e").unwrap(),
+            &TomlValue::Arr(vec![TomlValue::Int(1), TomlValue::Int(2),
+                                 TomlValue::Int(3)])
+        );
+    }
+
+    #[test]
+    fn sections_flatten() {
+        let doc = TomlDoc::parse(
+            "[train]\nlr = 3e-4 # peak\n[train.sched]\nwarmup = 100\n",
+        )
+        .unwrap();
+        assert_eq!(doc.f64_or("train.lr", 0.0), 3e-4);
+        assert_eq!(doc.i64_or("train.sched.warmup", 0), 100);
+    }
+
+    #[test]
+    fn comments_and_underscores() {
+        let doc = TomlDoc::parse("# header\nn = 1_000_000\ns = \"a # b\"\n")
+            .unwrap();
+        assert_eq!(doc.i64_or("n", 0), 1_000_000);
+        assert_eq!(doc.str_or("s", ""), "a # b");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = TomlDoc::parse("ok = 1\nbroken\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+}

@@ -1,0 +1,259 @@
+//! Integration tests over the full stack: manifest → init → PJRT
+//! execution → update semantics → checkpointing. Require artifacts
+//! (`make artifacts`); the PJRT client is shared across tests.
+
+use std::cell::OnceCell;
+use std::rc::Rc;
+
+use paca::config::TrainConfig;
+use paca::coordinator::Trainer;
+use paca::init;
+use paca::peft::Selection;
+use paca::runtime::Runtime;
+
+// The xla PJRT client is Rc-based (!Send), so each test thread builds
+// its own runtime (compilation of the tiny graphs is fast and cached
+// within a thread).
+/// xla_extension 0.5.1 misbehaves with multiple PJRT CPU clients used
+/// concurrently in one process, so integration tests run serialized.
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn rt() -> Rc<Runtime> {
+    thread_local! {
+        static RT: OnceCell<Rc<Runtime>> = const { OnceCell::new() };
+    }
+    RT.with(|c| {
+        c.get_or_init(|| {
+            Rc::new(Runtime::new(&paca::default_artifacts_dir())
+                    .expect("artifacts missing — run `make artifacts`"))
+        }).clone()
+    })
+}
+
+fn cfg(artifact: &str, steps: usize) -> TrainConfig {
+    let mut c = TrainConfig::default();
+    c.artifact = artifact.into();
+    c.steps = steps;
+    c.warmup_steps = 2;
+    c.peak_lr = 2e-3;
+    c
+}
+
+#[test]
+fn manifest_lists_all_core_artifacts() {
+    let _serial = serial();
+    let r = rt();
+    let m = &r.manifest;
+    for name in ["train_full_tiny", "train_lora_tiny", "train_dora_tiny",
+                 "train_moslora_tiny", "train_paca_tiny",
+                 "train_qlora_tiny", "train_qpaca_tiny", "eval_lm_tiny",
+                 "train_paca_vit_tiny", "train_paca_cnn_tiny",
+                 "grad_probe_tiny", "kernel_paca_grad"] {
+        assert!(m.artifacts.contains_key(name), "{name} missing");
+    }
+}
+
+#[test]
+fn every_method_trains_and_loss_decreases() {
+    let _serial = serial();
+    for artifact in ["train_full_tiny", "train_lora_tiny",
+                     "train_paca_tiny", "train_qpaca_tiny"] {
+        let mut tr = Trainer::new(&rt(), cfg(artifact, 12)).unwrap();
+        tr.run(false).unwrap();
+        let first = tr.curve.loss[0];
+        let last = tr.curve.tail_mean(3);
+        assert!(last < first, "{artifact}: {first} -> {last}");
+    }
+}
+
+#[test]
+fn paca_updates_only_selected_rows() {
+    let _serial = serial();
+    let mut tr = Trainer::new(&rt(), cfg("train_paca_tiny", 3)).unwrap();
+    let w0 = tr.state_tensor("blocks/0/q/w").unwrap();
+    let idx = tr.state_tensor("blocks/0/q/idx").unwrap();
+    tr.run(false).unwrap();
+    let w1 = tr.state_tensor("blocks/0/q/w").unwrap();
+    let (rows, cols) = (w0.shape[0], w0.shape[1]);
+    let selected: std::collections::HashSet<i32> =
+        idx.as_i32().into_iter().collect();
+    let (a, b) = (w0.as_f32(), w1.as_f32());
+    for r in 0..rows {
+        let changed = (0..cols).any(|c| a[r * cols + c] != b[r * cols + c]);
+        if selected.contains(&(r as i32)) {
+            assert!(changed, "selected row {r} did not train");
+        } else {
+            assert!(!changed, "frozen row {r} changed");
+        }
+    }
+}
+
+#[test]
+fn lora_frozen_weight_is_never_touched() {
+    let _serial = serial();
+    let mut tr = Trainer::new(&rt(), cfg("train_lora_tiny", 3)).unwrap();
+    let w0 = tr.state_tensor("blocks/1/gate/w").unwrap();
+    tr.run(false).unwrap();
+    let w1 = tr.state_tensor("blocks/1/gate/w").unwrap();
+    assert_eq!(w0.data, w1.data);
+    // …while the adapters DID train.
+    let b0 = tr.state_tensor("blocks/1/gate/b").unwrap();
+    assert!(b0.as_f32().iter().any(|&v| v != 0.0),
+            "lora B should have moved off zero-init");
+}
+
+#[test]
+fn eval_is_deterministic_and_category_sensitive() {
+    let _serial = serial();
+    let mut c = cfg("train_paca_tiny", 2);
+    c.task = "mmlu-like".into();
+    let mut tr = Trainer::new(&rt(), c).unwrap();
+    tr.run(false).unwrap();
+    let e1 = tr.evaluate(2).unwrap();
+    let e2 = tr.evaluate(2).unwrap();
+    assert_eq!(e1.loss, e2.loss, "eval must be deterministic");
+    assert_eq!(e1.categories.len(), 4);
+}
+
+#[test]
+fn checkpoint_roundtrip_resumes_identically() {
+    let _serial = serial();
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("paca-int-{}.ckpt", std::process::id()));
+    let mut tr = Trainer::new(&rt(), cfg("train_paca_tiny", 4)).unwrap();
+    tr.run(false).unwrap();
+    tr.save_checkpoint(&path).unwrap();
+    let after_w = tr.state_tensor("blocks/0/v/w").unwrap();
+
+    let mut tr2 = Trainer::new(&rt(), cfg("train_paca_tiny", 4)).unwrap();
+    tr2.load_checkpoint(&path).unwrap();
+    assert_eq!(tr2.state_tensor("blocks/0/v/w").unwrap().data,
+               after_w.data);
+    assert_eq!(tr2.step, tr.step);
+    // Resumed trainer can keep training.
+    let (loss, _) = tr2.train_step().unwrap();
+    assert!(loss.is_finite());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn selection_strategies_change_the_index_sets() {
+    let _serial = serial();
+    let r = rt();
+    let art = r.manifest.artifact("train_paca_tiny").unwrap();
+    let rnd = init::init_state(art, 42, &Selection::Random).unwrap();
+    let wn = init::init_state(art, 42, &Selection::WeightNorm).unwrap();
+    let idx_pos = art.state.iter().position(|e| e.name == "blocks/0/q/idx")
+        .unwrap();
+    assert_ne!(rnd[idx_pos].as_i32(), wn[idx_pos].as_i32());
+    // Weight tensors themselves must be identical across strategies.
+    let w_pos = art.state.iter().position(|e| e.name == "blocks/0/q/w")
+        .unwrap();
+    assert_eq!(rnd[w_pos].data, wn[w_pos].data);
+}
+
+#[test]
+fn grad_probe_scores_have_right_shapes() {
+    let _serial = serial();
+    let scores = paca::exps::grad_scores(&rt(), 2).unwrap();
+    assert_eq!(scores.len(), 2 * 7, "2 layers x 7 targets");
+    let q = scores.get("blocks/0/q/idx").unwrap();
+    assert_eq!(q.len(), 64); // d_in of tiny-lm
+    assert!(q.iter().all(|v| v.is_finite() && *v >= 0.0));
+    assert!(q.iter().any(|v| *v > 0.0));
+}
+
+#[test]
+fn different_seeds_give_different_selections_same_frozen_weights() {
+    let _serial = serial();
+    let r = rt();
+    let art = r.manifest.artifact("train_paca_tiny").unwrap();
+    let s1 = init::init_state(art, 1, &Selection::Random).unwrap();
+    let s2 = init::init_state(art, 2, &Selection::Random).unwrap();
+    let idx_pos = art.state.iter()
+        .position(|e| e.name == "blocks/0/q/idx").unwrap();
+    assert_ne!(s1[idx_pos].as_i32(), s2[idx_pos].as_i32());
+}
+
+#[test]
+fn vit_and_cnn_artifacts_execute() {
+    let _serial = serial();
+    for name in ["train_paca_vit_tiny", "train_paca_cnn_tiny",
+                 "train_full_cnn_tiny"] {
+        let exe = rt().load(name).unwrap();
+        let art = exe.info.clone();
+        let state = init::init_state(&art, 1, &Selection::Random)
+            .unwrap();
+        let mut inputs: Vec<xla::Literal> = state.iter()
+            .map(|t| t.to_literal().unwrap()).collect();
+        let imgs = paca::tensor::HostTensor::from_f32(
+            &[art.batch, 3, 32, 32],
+            vec![0.1; art.batch * 3 * 32 * 32]);
+        let labels = paca::tensor::HostTensor::from_i32(
+            &[art.batch], vec![1; art.batch]);
+        inputs.push(imgs.to_literal().unwrap());
+        inputs.push(labels.to_literal().unwrap());
+        inputs.push(paca::tensor::HostTensor::scalar_f32(1e-3)
+                    .to_literal().unwrap());
+        let outs = exe.run(&inputs).unwrap();
+        assert_eq!(outs.len(), art.outputs.len(), "{name}");
+        let loss = outs[outs.len() - 2].get_first_element::<f32>()
+            .unwrap();
+        assert!(loss.is_finite() && loss > 0.0, "{name}: loss {loss}");
+    }
+}
+
+#[test]
+fn trainer_rejects_eval_artifacts() {
+    let _serial = serial();
+    let mut c = cfg("eval_lm_tiny", 1);
+    c.artifact = "eval_lm_tiny".into();
+    assert!(Trainer::new(&rt(), c).is_err());
+}
+
+#[test]
+fn runtime_caches_compiled_executables() {
+    let _serial = serial();
+    let a = rt().load("train_paca_tiny").unwrap();
+    let b = rt().load("train_paca_tiny").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+}
+
+#[test]
+fn merged_eval_matches_train_graph_loss() {
+    let _serial = serial();
+    // The merge module must be numerically faithful: the train graph's
+    // reported loss at lr=0 on a batch must equal the eval graph's loss
+    // on the same batch with host-merged weights.
+    for artifact in ["train_lora_tiny", "train_paca_tiny",
+                     "train_moslora_tiny", "train_qpaca_tiny"] {
+        let r = rt();
+        let mut tr = Trainer::new(&r, cfg(artifact, 2)).unwrap();
+        tr.run(false).unwrap();
+        let eval = r.load("eval_lm_tiny").unwrap();
+        let (b, s) = (eval.info.batch, eval.info.seq);
+        let mut gen = paca::data::TokenGen::new(
+            paca::data::Task::LmZipf, 512, 999);
+        let batch = gen.train_batch(b, s);
+        // train graph at lr=0 computes the loss at current params
+        let (train_loss, _) = tr.dispatch(&batch, 0.0).unwrap();
+        // eval graph with merged weights on the same batch
+        let get = |name: &str| tr.state_tensor(name);
+        let merged = paca::coordinator::merge::merged_state(
+            &tr.exe.info, &eval.info.state, &get).unwrap();
+        let mut inputs: Vec<xla::Literal> = merged.iter()
+            .map(|t| t.to_literal().unwrap()).collect();
+        inputs.push(batch.to_literal().unwrap());
+        let outs = eval.run(&inputs).unwrap();
+        let eval_loss = outs[0].get_first_element::<f32>().unwrap()
+            as f64;
+        let rel = (train_loss - eval_loss).abs()
+            / train_loss.abs().max(1e-9);
+        assert!(rel < 2e-4,
+                "{artifact}: train {train_loss} vs merged-eval \
+                 {eval_loss} (rel {rel})");
+    }
+}

@@ -1,0 +1,269 @@
+//! Property-based tests over the coordinator substrates (hand-rolled
+//! harness — proptest is unavailable offline): seeded random cases,
+//! failing seed printed on panic.
+
+use paca::config::SchedKind;
+use paca::coordinator::schedule::Schedule;
+use paca::memory;
+use paca::nf4;
+use paca::peft::top_r;
+use paca::simulator::{self, A100_80G};
+use paca::tensor::{DType, HostTensor};
+use paca::util::json::Json;
+use paca::util::rng::Rng;
+
+/// Run `f` over `n` seeded cases; report the failing seed.
+fn prop(n: u64, f: impl Fn(&mut Rng)) {
+    for seed in 0..n {
+        let mut rng = Rng::new(seed ^ 0xdead_beef);
+        let r = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = r {
+            panic!("property failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+fn model_like(rng: &mut Rng) -> paca::manifest::ModelInfo {
+    paca::manifest::ModelInfo {
+        name: "prop".into(),
+        vocab: rng.range(256, 64000),
+        d_model: 64 * rng.range(1, 128),
+        n_layers: rng.range(1, 96),
+        n_heads: 4,
+        d_ff: 64 * rng.range(1, 512),
+        max_seq: 4096,
+        profile_only: true,
+    }
+}
+
+#[test]
+fn prop_schedule_bounded_and_warmup_monotone() {
+    prop(200, |rng| {
+        let kind = [SchedKind::Constant, SchedKind::Linear,
+                    SchedKind::Cosine][rng.below(3)];
+        let peak = rng.next_f64() * 0.1 + 1e-6;
+        let warm = rng.below(50);
+        let total = warm + 1 + rng.below(1000);
+        let s = Schedule::new(kind, peak, warm, total);
+        let mut prev = 0.0;
+        for step in 0..total + 10 {
+            let lr = s.lr(step);
+            assert!(lr >= -1e-15 && lr <= peak + 1e-12,
+                    "lr {lr} outside [0, {peak}]");
+            if step < warm {
+                assert!(lr >= prev - 1e-15, "warmup must ramp up");
+            }
+            prev = lr;
+        }
+    });
+}
+
+#[test]
+fn prop_memory_monotone_in_batch_seq_rank() {
+    prop(100, |rng| {
+        let m = model_like(rng);
+        let method = ["full", "lora", "dora", "moslora", "paca",
+                      "qlora", "qpaca"][rng.below(7)];
+        let rank = 1 + rng.below(128);
+        let b = 1 + rng.below(32);
+        let s = 64 + rng.below(2048);
+        let ckpt = rng.below(2) == 0;
+        let base = memory::breakdown(&m, method, rank, b, s, ckpt)
+            .total();
+        assert!(base > 0.0);
+        assert!(memory::breakdown(&m, method, rank, b + 1, s, ckpt)
+                .total() > base);
+        assert!(memory::breakdown(&m, method, rank, b, s + 64, ckpt)
+                .total() > base);
+        assert!(memory::breakdown(&m, method, rank + 8, b, s, ckpt)
+                .total() >= base);
+    });
+}
+
+#[test]
+fn prop_paca_never_worse_than_lora_family() {
+    // The paper's core memory claim must hold across the whole design
+    // space: PaCA ≤ LoRA ≤ DoRA in total memory, PaCA ≤ LoRA in step
+    // time, for ANY model geometry.
+    prop(150, |rng| {
+        let m = model_like(rng);
+        let rank = 1 + rng.below(64);
+        let b = 1 + rng.below(16);
+        let s = 64 + rng.below(1024);
+        let ckpt = rng.below(2) == 0;
+        let paca = memory::breakdown(&m, "paca", rank, b, s, ckpt);
+        let lora = memory::breakdown(&m, "lora", rank, b, s, ckpt);
+        let dora = memory::breakdown(&m, "dora", rank, b, s, ckpt);
+        assert!(paca.total() <= lora.total() + 1.0);
+        assert!(lora.total() <= dora.total() + 1.0);
+        let tp = simulator::iteration_time(&A100_80G, &m, "paca", rank,
+                                           b, s).total_s();
+        let tl = simulator::iteration_time(&A100_80G, &m, "lora", rank,
+                                           b, s).total_s();
+        assert!(tp <= tl + 1e-12, "paca {tp} > lora {tl}");
+    });
+}
+
+#[test]
+fn prop_max_seq_consistent_with_breakdown() {
+    prop(60, |rng| {
+        let m = model_like(rng);
+        let method = ["lora", "paca", "dora"][rng.below(3)];
+        let cap = 20e9 + rng.next_f64() * 120e9;
+        let s = memory::max_seq_len(&m, method, 8, cap, false);
+        if s > 0 {
+            // fits at the reported max…
+            assert!(memory::breakdown(&m, method, 8, 1, s, false)
+                    .total() <= cap * 1.001);
+            // …and would not fit with a whole extra granule.
+            assert!(memory::breakdown(&m, method, 8, 1, s + 200, false)
+                    .total() > cap * 0.999);
+        }
+    });
+}
+
+#[test]
+fn prop_nf4_roundtrip_bound_any_distribution() {
+    let mut max_gap = 0f32;
+    for i in 1..16 {
+        max_gap = max_gap.max(nf4::NF4_CODEBOOK[i]
+                              - nf4::NF4_CODEBOOK[i - 1]);
+    }
+    prop(100, |rng| {
+        let blocks = 1 + rng.below(16);
+        let scale_mag = 10f32.powi(rng.range(0, 6) as i32 - 3);
+        let w: Vec<f32> = (0..blocks * 64)
+            .map(|_| rng.normal_f32(scale_mag)).collect();
+        let (codes, scales) = nf4::quantize(&w, 64);
+        let deq = nf4::dequantize(&codes, &scales, 64);
+        for b in 0..blocks {
+            for i in 0..64 {
+                let err = (w[b * 64 + i] - deq[b * 64 + i]).abs();
+                assert!(err <= scales[b] * max_gap / 2.0
+                        + scales[b] * 1e-5 + 1e-20);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_top_r_agrees_with_sort() {
+    prop(200, |rng| {
+        let n = 1 + rng.below(200);
+        let r = 1 + rng.below(n);
+        let scores: Vec<f32> = (0..n).map(|_| rng.normal_f32(1.0))
+            .collect();
+        let got = top_r(&scores, r);
+        assert_eq!(got.len(), r);
+        let mut sorted: Vec<f32> = scores.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let worst_chosen = got.iter()
+            .map(|&i| scores[i as usize])
+            .fold(f32::INFINITY, f32::min);
+        assert!(worst_chosen >= sorted[r - 1] - 1e-6);
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.next_f64() * 2e6).round() / 8.0),
+            3 => {
+                let s: String = (0..rng.below(12))
+                    .map(|_| char::from_u32(
+                        32 + rng.below(90) as u32).unwrap())
+                    .collect();
+                Json::Str(s)
+            }
+            4 => Json::Arr((0..rng.below(5))
+                           .map(|_| random_json(rng, depth - 1))
+                           .collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.below(5) {
+                    m.insert(format!("k{i}"),
+                             random_json(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    prop(300, |rng| {
+        let v = random_json(rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("reparse failed: {e}\n{text}"));
+        assert_eq!(v, back, "roundtrip mismatch for {text}");
+    });
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_random_states() {
+    prop(40, |rng| {
+        let n = 1 + rng.below(10);
+        let mut names = Vec::new();
+        let mut tensors = Vec::new();
+        for i in 0..n {
+            names.push(format!("t/{i}"));
+            let len = 1 + rng.below(200);
+            match rng.below(3) {
+                0 => tensors.push(HostTensor::from_f32(
+                    &[len], (0..len).map(|_| rng.normal_f32(1.0))
+                        .collect())),
+                1 => tensors.push(HostTensor::from_i32(
+                    &[len], (0..len).map(|_| rng.below(1000) as i32)
+                        .collect())),
+                _ => tensors.push(HostTensor::from_i8(
+                    &[len], (0..len).map(|_| rng.below(16) as i8)
+                        .collect())),
+            }
+        }
+        let path = std::env::temp_dir().join(format!(
+            "paca-prop-{}-{}.ckpt", std::process::id(),
+            rng.next_u64()));
+        paca::coordinator::checkpoint::save(&path, &names, &tensors)
+            .unwrap();
+        let (n2, t2) = paca::coordinator::checkpoint::load(&path)
+            .unwrap();
+        assert_eq!(n2, names);
+        for (a, b) in tensors.iter().zip(&t2) {
+            assert_eq!(a.data, b.data);
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.dtype as u8 as usize,
+                       b.dtype as u8 as usize);
+        }
+        std::fs::remove_file(&path).ok();
+    });
+}
+
+#[test]
+fn prop_rng_choice_uniformity() {
+    // Every index should be selected with roughly equal frequency.
+    let mut counts = vec![0usize; 32];
+    for seed in 0..4000u64 {
+        let mut rng = Rng::new(seed);
+        for i in rng.choice(32, 8) {
+            counts[i as usize] += 1;
+        }
+    }
+    let expected = 4000.0 * 8.0 / 32.0; // = 1000
+    for (i, &c) in counts.iter().enumerate() {
+        assert!((c as f64 - expected).abs() < expected * 0.15,
+                "index {i} chosen {c} times (expected ~{expected})");
+    }
+}
+
+#[test]
+fn prop_tensor_dtype_sizes() {
+    prop(50, |rng| {
+        let len = 1 + rng.below(100);
+        let t = HostTensor::zeros(&[len], DType::F32);
+        assert_eq!(t.bytes(), len * 4);
+        let t = HostTensor::zeros(&[len, 3], DType::I8);
+        assert_eq!(t.bytes(), len * 3);
+    });
+}
