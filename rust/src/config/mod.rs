@@ -134,6 +134,107 @@ impl TrainConfig {
     }
 }
 
+/// `paca serve` configuration. CLI flags map 1:1 onto
+/// `apply_override` keys; a `[serve]` TOML table works too.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Directory of `<tenant>.paca` adapter files (synthesized on
+    /// first run if missing).
+    pub adapters_dir: String,
+    /// JSONL request trace (synthesized + written if missing).
+    pub requests: String,
+    /// Max requests coalesced per same-tenant batch.
+    pub batch: usize,
+    /// Scheduling policy: "fifo" | "swap-aware".
+    pub policy: String,
+    /// Tenant count when synthesizing adapters/trace.
+    pub tenants: usize,
+    /// Request count when synthesizing the trace.
+    pub count: usize,
+    /// PaCA rank of synthesized adapters.
+    pub rank: usize,
+    pub seed: u64,
+    /// Registry LRU bound (resident adapters).
+    pub capacity: usize,
+    /// Forward backend: "auto" | "host" | "pjrt".
+    pub backend: String,
+    /// Mean prompt length for synthesized requests.
+    pub mean_tokens: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            adapters_dir: "adapters".into(),
+            requests: "serve_trace.jsonl".into(),
+            batch: 8,
+            policy: "swap-aware".into(),
+            tenants: 8,
+            count: 256,
+            rank: 8,
+            seed: 42,
+            capacity: 64,
+            backend: "auto".into(),
+            mean_tokens: 64,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_doc(doc: &TomlDoc) -> Result<ServeConfig> {
+        let d = ServeConfig::default();
+        // Guard the i64→usize casts: a negative TOML value must be an
+        // error, not a wrap to ~1.8e19.
+        let u = |key: &str, default: usize| -> Result<usize> {
+            let v = doc.i64_or(key, default as i64);
+            if v < 0 {
+                return Err(anyhow!("{key} must be >= 0, got {v}"));
+            }
+            Ok(v as usize)
+        };
+        Ok(ServeConfig {
+            adapters_dir: doc.str_or("serve.adapters", &d.adapters_dir)
+                .to_string(),
+            requests: doc.str_or("serve.requests", &d.requests)
+                .to_string(),
+            batch: u("serve.batch", d.batch)?,
+            policy: doc.str_or("serve.policy", &d.policy).to_string(),
+            tenants: u("serve.tenants", d.tenants)?,
+            count: u("serve.count", d.count)?,
+            rank: u("serve.rank", d.rank)?,
+            seed: u("serve.seed", d.seed as usize)? as u64,
+            capacity: u("serve.capacity", d.capacity)?,
+            backend: doc.str_or("serve.backend", &d.backend).to_string(),
+            mean_tokens: u("serve.mean_tokens", d.mean_tokens)?,
+        })
+    }
+
+    /// Apply `key=value` (CLI flag names double as keys).
+    pub fn apply_override(&mut self, kv: &str) -> Result<()> {
+        let (k, v) = kv.split_once('=')
+            .ok_or_else(|| anyhow!("override must be key=value: {kv}"))?;
+        match k {
+            "serve.adapters" | "adapters" => self.adapters_dir = v.into(),
+            "serve.requests" | "requests" => self.requests = v.into(),
+            "serve.batch" | "batch" => self.batch = v.parse()?,
+            "serve.policy" | "policy" => self.policy = v.into(),
+            "serve.tenants" | "tenants" => self.tenants = v.parse()?,
+            "serve.count" | "count" => self.count = v.parse()?,
+            "serve.rank" | "rank" => self.rank = v.parse()?,
+            "serve.seed" | "seed" => self.seed = v.parse()?,
+            "serve.capacity" | "capacity" => self.capacity = v.parse()?,
+            "serve.backend" | "backend" => self.backend = v.into(),
+            "serve.mean_tokens" | "mean-tokens" => {
+                self.mean_tokens = v.parse()?
+            }
+            other => {
+                return Err(anyhow!("unknown serve config key {other:?}"))
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Appendix-C hyperparameter presets, by experiment.
 pub fn preset(name: &str) -> Result<TrainConfig> {
     let mut c = TrainConfig::default();
@@ -197,6 +298,34 @@ mod tests {
         assert_eq!(c.artifact, "train_lora_tiny");
         assert_eq!(c.steps, 7);
         assert_eq!(c.task, "instr");
+    }
+
+    #[test]
+    fn serve_defaults_and_overrides() {
+        let mut c = ServeConfig::default();
+        c.apply_override("batch=16").unwrap();
+        c.apply_override("policy=fifo").unwrap();
+        c.apply_override("serve.tenants=32").unwrap();
+        assert_eq!(c.batch, 16);
+        assert_eq!(c.policy, "fifo");
+        assert_eq!(c.tenants, 32);
+        assert!(c.apply_override("bogus=1").is_err());
+        assert!(c.apply_override("no-equals").is_err());
+    }
+
+    #[test]
+    fn serve_from_toml() {
+        let doc = TomlDoc::parse(
+            "[serve]\nbatch = 4\nadapters = \"a/b\"\n\
+             backend = \"host\"\n").unwrap();
+        let c = ServeConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.batch, 4);
+        assert_eq!(c.adapters_dir, "a/b");
+        assert_eq!(c.backend, "host");
+        assert_eq!(c.policy, "swap-aware"); // default survives
+        // Negative numeric values must error, not wrap to huge usize.
+        let bad = TomlDoc::parse("[serve]\ncount = -1\n").unwrap();
+        assert!(ServeConfig::from_doc(&bad).is_err());
     }
 
     #[test]

@@ -14,6 +14,7 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::tensor::{DType, HostTensor};
+use crate::util::rng::fnv1a;
 
 const MAGIC: &[u8; 4] = b"PACA";
 const VERSION: u32 = 1;
@@ -33,15 +34,6 @@ fn dtype_from(code: u8) -> Result<DType> {
         2 => DType::I8,
         other => bail!("bad dtype code {other}"),
     })
-}
-
-fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
-    for b in bytes {
-        h ^= *b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
 }
 
 pub fn save(path: &Path, names: &[String],

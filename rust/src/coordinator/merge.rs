@@ -41,6 +41,64 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize,
     out
 }
 
+/// Hot-splice: overwrite rows `idx` of the base weight `w` with the
+/// rows of `p` ((r, d_out) — PaCA's trained partial connections),
+/// returning the displaced base rows. O(r·d_out) byte copies per
+/// target, independent of d_in — the paper's §2 zero-overhead merged
+/// inference made executable, and the serving registry's swap
+/// primitive (serve::registry).
+///
+/// `idx` must be duplicate-free (PaCA selections are drawn without
+/// replacement); this is checked because exact un-merge depends on it.
+pub fn splice_rows(w: &mut HostTensor, idx: &[u32],
+                   p: &HostTensor) -> Result<HostTensor> {
+    if w.shape.len() != 2 || p.shape.len() != 2 {
+        return Err(anyhow!("splice: need 2-D tensors, got W {:?} P {:?}",
+                           w.shape, p.shape));
+    }
+    if p.shape[1] != w.shape[1] || p.shape[0] != idx.len()
+        || p.dtype != w.dtype
+    {
+        return Err(anyhow!(
+            "splice: P {:?} does not fit W {:?} with {} indices",
+            p.shape, w.shape, idx.len()));
+    }
+    if let Some(&bad) = idx.iter().find(|&&i| (i as usize) >= w.shape[0]) {
+        return Err(anyhow!("splice: row {bad} out of range (rows {})",
+                           w.shape[0]));
+    }
+    let mut sorted = idx.to_vec();
+    sorted.sort_unstable();
+    if sorted.windows(2).any(|pair| pair[0] == pair[1]) {
+        return Err(anyhow!("splice: duplicate row index (un-merge \
+                            would not be exact)"));
+    }
+    let saved = w.extract_rows(idx);
+    w.write_rows(idx, p);
+    Ok(saved)
+}
+
+/// Exact un-merge: restore the rows displaced by a previous
+/// `splice_rows` call with the same `idx`. Byte-level restore, so the
+/// base weight is recovered bit-exactly.
+pub fn unsplice_rows(w: &mut HostTensor, idx: &[u32],
+                     saved: &HostTensor) -> Result<()> {
+    if saved.shape.len() != 2 || saved.shape[0] != idx.len()
+        || w.shape.len() != 2 || saved.shape[1] != w.shape[1]
+        || saved.dtype != w.dtype
+    {
+        return Err(anyhow!(
+            "unsplice: saved rows {:?} do not fit W {:?} with {} indices",
+            saved.shape, w.shape, idx.len()));
+    }
+    if let Some(&bad) = idx.iter().find(|&&i| (i as usize) >= w.shape[0]) {
+        return Err(anyhow!("unsplice: row {bad} out of range (rows {})",
+                           w.shape[0]));
+    }
+    w.write_rows(idx, saved);
+    Ok(())
+}
+
 /// Merge one target linear's effective weight from the method-specific
 /// parameters. `get` fetches a sibling tensor ("a", "b", "idx", …).
 pub fn merge_linear(
@@ -118,13 +176,11 @@ pub fn merge_linear(
                 let idx = g("idx")?;
                 let d_out = p.shape[1];
                 let d_in = w.len() / d_out;
-                for (k, &i) in idx.as_i32().iter().enumerate() {
-                    let i = i as usize;
-                    w[i * d_out..(i + 1) * d_out]
-                        .copy_from_slice(&p.as_f32()
-                                         [k * d_out..(k + 1) * d_out]);
-                }
-                Ok(HostTensor::from_f32(&[d_in, d_out], w))
+                let idx: Vec<u32> = idx.as_i32().iter()
+                    .map(|&i| i as u32).collect();
+                let mut wt = HostTensor::from_f32(&[d_in, d_out], w);
+                splice_rows(&mut wt, &idx, &p)?;
+                Ok(wt)
             }
         }
         other => Err(anyhow!("merge: unknown method {other:?}")),
@@ -206,6 +262,31 @@ mod tests {
         let m = merge_linear(&inf, "l", &get).unwrap();
         // W + 2·(I·0.5I) = I + I = 2I
         assert_eq!(m.as_f32(), vec![2., 0., 0., 2.]);
+    }
+
+    #[test]
+    fn splice_unsplice_is_bit_exact() {
+        let mut w = HostTensor::from_f32(
+            &[4, 3], (0..12).map(|i| i as f32 * 0.25).collect());
+        let orig = w.data.clone();
+        let p = HostTensor::from_f32(&[2, 3], vec![9.; 6]);
+        let saved = splice_rows(&mut w, &[2, 0], &p).unwrap();
+        assert_eq!(w.row_f32(0), vec![9., 9., 9.]);
+        assert_eq!(w.row_f32(2), vec![9., 9., 9.]);
+        assert_eq!(w.row_f32(1), vec![0.75, 1.0, 1.25]); // untouched
+        unsplice_rows(&mut w, &[2, 0], &saved).unwrap();
+        assert_eq!(w.data, orig);
+    }
+
+    #[test]
+    fn splice_rejects_bad_inputs() {
+        let mut w = HostTensor::from_f32(&[4, 2], vec![0.; 8]);
+        let p = HostTensor::from_f32(&[2, 2], vec![1.; 4]);
+        assert!(splice_rows(&mut w, &[0, 0], &p).is_err()); // dup idx
+        assert!(splice_rows(&mut w, &[0, 9], &p).is_err()); // oob
+        assert!(splice_rows(&mut w, &[0], &p).is_err());    // len mismatch
+        let bad = HostTensor::from_f32(&[2, 3], vec![1.; 6]);
+        assert!(splice_rows(&mut w, &[0, 1], &bad).is_err()); // cols
     }
 
     #[test]

@@ -9,7 +9,8 @@
 //!     parameterizations, lowered ONCE to HLO text.
 //!   * L3 (this crate): the fine-tuning coordinator — config, data
 //!     pipeline, PJRT runtime, training orchestration, device cost
-//!     model, memory accountant, and the paper's benchmark harness.
+//!     model, memory accountant, the paper's benchmark harness, and
+//!     the multi-tenant adapter-serving subsystem (serve/).
 //!
 //! Python never runs on the training path: after `make artifacts` the
 //! `paca` binary is self-contained.
@@ -25,6 +26,7 @@ pub mod metrics;
 pub mod nf4;
 pub mod peft;
 pub mod runtime;
+pub mod serve;
 pub mod simulator;
 pub mod tensor;
 pub mod util;

@@ -5,24 +5,28 @@
 //!   info                          platform + manifest summary
 //!   train  [--config f.toml] [-o key=value …]   run fine-tuning
 //!   eval   --artifact NAME --checkpoint f.ckpt  evaluate a checkpoint
-//!   bench  --exp fig2|table1..7|fig3|all [--quick]   paper experiments
+//!   bench  --exp fig2|table1..7|fig3|serve|all [--quick]  experiments
 //!   memory --model NAME --method M [--rank R …]      memory breakdown
+//!   serve  --adapters DIR --requests TRACE --batch N  multi-tenant
+//!                                 adapter serving (serve/)
 //!   selftest                      kernel artifacts vs rust oracles
 
 use std::path::Path;
 
 use anyhow::{anyhow, bail, Result};
 
-use paca::config::{preset, TrainConfig};
+use paca::config::{preset, ServeConfig, TrainConfig};
 use paca::coordinator::Trainer;
 use paca::exps;
 use paca::memory;
 use paca::metrics::fmt_gb;
 use paca::nf4;
 use paca::runtime::Runtime;
+use paca::serve::{cost, engine, registry, scheduler, trace};
 use paca::simulator::A100_80G;
 use paca::tensor::HostTensor;
 use paca::util::rng::Rng;
+use paca::util::toml::TomlDoc;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -38,6 +42,24 @@ struct Flags {
     switches: std::collections::BTreeSet<String>,
 }
 
+/// A token that must be parsed as a flag rather than as the previous
+/// flag's value: `-o`, any `--name`, or a single-dash token that is
+/// not a negative number — so `--lr -0.01` stays a key/value pair
+/// while `--quick -o lr=-0.01` keeps `--quick` a bare switch.
+fn is_flag_token(s: &str) -> bool {
+    if s == "-o" {
+        return true;
+    }
+    if let Some(rest) = s.strip_prefix("--") {
+        return !rest.is_empty();
+    }
+    match s.strip_prefix('-') {
+        Some(rest) => !rest.chars().next()
+            .map_or(false, |c| c.is_ascii_digit() || c == '.'),
+        None => false,
+    }
+}
+
 fn parse_flags(args: &[String]) -> Flags {
     let mut f = Flags { positional: Vec::new(),
                         named: Default::default(),
@@ -46,7 +68,7 @@ fn parse_flags(args: &[String]) -> Flags {
     while i < args.len() {
         let a = &args[i];
         if let Some(name) = a.strip_prefix("--") {
-            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+            if i + 1 < args.len() && !is_flag_token(&args[i + 1]) {
                 f.named.insert(name.to_string(), args[i + 1].clone());
                 i += 2;
             } else {
@@ -70,15 +92,19 @@ fn parse_flags(args: &[String]) -> Flags {
 }
 
 fn usage() -> &'static str {
-    "usage: paca <info|train|eval|bench|memory|selftest> [flags]\n\
+    "usage: paca <info|train|eval|bench|memory|serve|selftest> [flags]\n\
      \n\
      paca train [--config run.toml] [--preset mmlu|instr|smoke] \\\n\
      \x20          [-o key=value ...]      # e.g. -o artifact=train_paca_tiny\n\
-     paca bench --exp fig2|table1..table7|fig3|all [--quick] \\\n\
+     paca bench --exp fig2|table1..table7|fig3|serve|all [--quick] \\\n\
      \x20          [--out results.md]\n\
      paca eval --artifact train_paca_tiny --checkpoint model.ckpt\n\
      paca memory --model llama3-8b --method paca --rank 8 \\\n\
      \x20          [--batch 8] [--seq 512]\n\
+     paca serve [--adapters dir] [--requests trace.jsonl] [--batch 8] \\\n\
+     \x20          [--policy swap-aware|fifo] [--tenants 8] [--count 256] \\\n\
+     \x20          [--rank 8] [--capacity 64] [--backend auto|host|pjrt]\n\
+     \x20          # missing trace/adapters are synthesized and saved\n\
      paca selftest"
 }
 
@@ -91,6 +117,7 @@ fn run(args: &[String]) -> Result<()> {
         "eval" => eval_cmd(&flags),
         "bench" => bench(&flags),
         "memory" => memory_cmd(&flags),
+        "serve" => serve_cmd(&flags),
         "selftest" => selftest(),
         "help" | "--help" | "-h" => {
             println!("{}", usage());
@@ -244,6 +271,169 @@ fn memory_cmd(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
+/// Open the runtime and build the PJRT serving backend around the
+/// first lowered eval artifact (compiles it, so a stub xla build
+/// fails here — which "auto" catches and downgrades to host).
+fn pjrt_backend(seed: u64) -> Result<(paca::manifest::ModelInfo,
+                                      engine::Backend)> {
+    let rt = open_runtime()?;
+    let eval = rt.manifest.artifacts.values()
+        .find(|a| a.kind == "eval_step")
+        .ok_or_else(|| anyhow!("no eval artifact in manifest"))?;
+    let model = rt.manifest.model(&eval.model)?.clone();
+    let fw = engine::PjrtForward::new(&rt, &model.name, seed)?;
+    Ok((model, engine::Backend::Pjrt(fw)))
+}
+
+/// `paca serve`: multi-tenant adapter serving over one shared frozen
+/// base (serve/). Synthesizes the trace and any missing tenant
+/// adapters on first run, so it works end-to-end on a fresh checkout.
+fn serve_cmd(flags: &Flags) -> Result<()> {
+    let mut cfg = if let Some(path) = flags.named.get("config") {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {path}: {e}"))?;
+        ServeConfig::from_doc(&TomlDoc::parse(&src)
+                              .map_err(|e| anyhow!("{e}"))?)?
+    } else {
+        ServeConfig::default()
+    };
+    for (k, v) in &flags.named {
+        match k.as_str() {
+            "config" => {}
+            "override" => {
+                for kv in v.split(';') {
+                    cfg.apply_override(kv)?;
+                }
+            }
+            _ => cfg.apply_override(&format!("{k}={v}"))?,
+        }
+    }
+    let policy = scheduler::Policy::parse(&cfg.policy)?;
+    if cfg.batch == 0 {
+        bail!("--batch must be >= 1");
+    }
+    if cfg.tenants == 0 {
+        bail!("--tenants must be >= 1");
+    }
+    if cfg.rank == 0 {
+        bail!("--rank must be >= 1");
+    }
+    if cfg.mean_tokens < 2 {
+        bail!("--mean-tokens must be >= 2");
+    }
+    if cfg.count == 0 {
+        bail!("--count must be >= 1");
+    }
+
+    // Request trace: load, or synthesize + persist for reproducibility.
+    let trace_path = Path::new(&cfg.requests);
+    let requests = if trace_path.exists() {
+        let reqs = trace::read_jsonl(trace_path)?;
+        println!("loaded {} requests from {}", reqs.len(),
+                 trace_path.display());
+        reqs
+    } else {
+        let spec = trace::TraceSpec {
+            n_requests: cfg.count,
+            n_tenants: cfg.tenants,
+            mean_tokens: cfg.mean_tokens,
+            seed: cfg.seed,
+            ..Default::default()
+        };
+        let reqs = trace::synthesize(&spec);
+        trace::write_jsonl(trace_path, &reqs)?;
+        println!("synthesized {} requests over {} tenants -> {}",
+                 reqs.len(), cfg.tenants, trace_path.display());
+        reqs
+    };
+    if requests.is_empty() {
+        bail!("trace {} has no requests", trace_path.display());
+    }
+    let tenants = trace::tenants(&requests);
+
+    // Backend: the PJRT eval artifact when lowered, else the host GEMM
+    // reference path (always available). "auto" falls back to host on
+    // ANY pjrt failure (missing artifacts, stub xla build, …).
+    let artifacts_dir = paca::default_artifacts_dir();
+    let (model, backend) = match cfg.backend.as_str() {
+        "host" => (engine::tiny_model(), engine::Backend::Host),
+        "pjrt" => pjrt_backend(cfg.seed)?,
+        "auto" => {
+            if Runtime::artifacts_present(&artifacts_dir) {
+                match pjrt_backend(cfg.seed) {
+                    Ok(mb) => mb,
+                    Err(e) => {
+                        println!("note: pjrt backend unavailable \
+                                  ({e:#}); falling back to host");
+                        (engine::tiny_model(), engine::Backend::Host)
+                    }
+                }
+            } else {
+                (engine::tiny_model(), engine::Backend::Host)
+            }
+        }
+        other => bail!("unknown backend {other:?} (auto|host|pjrt)"),
+    };
+
+    // Adapter store: synthesize any tenants the trace needs that have
+    // no `<tenant>.paca` file yet (stand-ins for fine-tune outputs).
+    let adapters_dir = Path::new(&cfg.adapters_dir);
+    std::fs::create_dir_all(adapters_dir)
+        .map_err(|e| anyhow!("creating {}: {e}",
+                             adapters_dir.display()))?;
+    let mut created = 0;
+    for t in &tenants {
+        let path = registry::AdapterRegistry::adapter_path(
+            adapters_dir, t);
+        if !path.exists() {
+            registry::PacaAdapter::synthetic(t, &model, cfg.rank,
+                                             cfg.seed)
+                .save(&path)?;
+            created += 1;
+        }
+    }
+    if created > 0 {
+        println!("synthesized {created} tenant adapters (rank {}) in {}",
+                 cfg.rank, adapters_dir.display());
+    }
+    let reg = registry::AdapterRegistry::with_dir(adapters_dir,
+                                                 cfg.capacity);
+
+    let base = engine::BaseModel::synthetic(&model, cfg.seed);
+    println!("serving {}: {} tenants over one {:.1}MB shared base \
+              ({} target weights) | backend {} | batch {} | policy {}",
+             model.name, tenants.len(), base.bytes() as f64 / 1e6,
+             base.weights.len(), backend.name(), cfg.batch,
+             policy.name());
+
+    let batches = scheduler::plan(&requests, cfg.batch, policy);
+    let alt = match policy {
+        scheduler::Policy::Fifo => scheduler::Policy::SwapAware,
+        scheduler::Policy::SwapAware => scheduler::Policy::Fifo,
+    };
+    let alt_swaps = scheduler::swap_count(
+        &scheduler::plan(&requests, cfg.batch, alt));
+    println!("plan: {} batches, {} adapter swaps ({} would need {})",
+             batches.len(), scheduler::swap_count(&batches),
+             alt.name(), alt_swaps);
+
+    let mut eng = engine::ServeEngine::new(base, reg, backend);
+    eng.serve(&batches).map_err(|e| {
+        e.context(format!(
+            "serving failed — if the adapters in {} were created for \
+             a different model geometry, delete that directory and \
+             re-run", adapters_dir.display()))
+    })?;
+    eng.finish()?;
+    println!("\n{}", eng.report());
+    println!("shared frozen base restored bit-exactly after un-merge \
+              (fingerprint verified)");
+
+    println!("\nProjected at paper scale (serving cost model):");
+    println!("{}", cost::comparison_table(&cost::llama3_8b(), 64, 512));
+    Ok(())
+}
+
 /// Numeric cross-checks: run the Pallas kernel artifacts through PJRT
 /// and compare against rust-side oracles.
 fn selftest() -> Result<()> {
@@ -311,4 +501,67 @@ fn selftest() -> Result<()> {
     }
     println!("selftest OK");
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(args: &[&str]) -> Flags {
+        let v: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+        parse_flags(&v)
+    }
+
+    #[test]
+    fn switch_before_override_is_not_swallowed() {
+        // The historical bug: `--quick -o lr=-0.01` parsed `--quick`
+        // as taking the value `-o`, dropping the override.
+        let fl = f(&["--quick", "-o", "lr=-0.01"]);
+        assert!(fl.switches.contains("quick"));
+        assert_eq!(fl.named.get("override").unwrap(), "lr=-0.01");
+        assert!(fl.positional.is_empty());
+    }
+
+    #[test]
+    fn negative_numbers_are_flag_values() {
+        let fl = f(&["--lr", "-0.01", "--delta", "-.5",
+                     "--steps", "-3"]);
+        assert_eq!(fl.named.get("lr").unwrap(), "-0.01");
+        assert_eq!(fl.named.get("delta").unwrap(), "-.5");
+        assert_eq!(fl.named.get("steps").unwrap(), "-3");
+        assert!(fl.switches.is_empty());
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_a_switch() {
+        let fl = f(&["--quick", "--out", "x.md", "--verbose"]);
+        assert!(fl.switches.contains("quick"));
+        assert!(fl.switches.contains("verbose"));
+        assert_eq!(fl.named.get("out").unwrap(), "x.md");
+    }
+
+    #[test]
+    fn overrides_accumulate() {
+        let fl = f(&["-o", "a=1", "-o", "b=-2"]);
+        assert_eq!(fl.named.get("override").unwrap(), "a=1;b=-2");
+    }
+
+    #[test]
+    fn positionals_and_values_mix() {
+        let fl = f(&["run", "--exp", "serve", "extra"]);
+        assert_eq!(fl.positional, vec!["run", "extra"]);
+        assert_eq!(fl.named.get("exp").unwrap(), "serve");
+    }
+
+    #[test]
+    fn flag_token_classification() {
+        assert!(is_flag_token("-o"));
+        assert!(is_flag_token("--anything"));
+        assert!(is_flag_token("-x"));
+        assert!(!is_flag_token("-0.01"));
+        assert!(!is_flag_token("-.5"));
+        assert!(!is_flag_token("-9"));
+        assert!(!is_flag_token("value"));
+        assert!(!is_flag_token("a-b"));
+    }
 }

@@ -2,6 +2,7 @@
 //! counters, and CSV/markdown reporters used by the bench harness and
 //! EXPERIMENTS.md generation.
 
+use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::time::{Duration, Instant};
 
@@ -72,6 +73,78 @@ impl Stopwatch {
         let d = now - self.0;
         self.0 = now;
         d
+    }
+}
+
+/// Nearest-rank order statistic of an ascending-sorted, non-empty
+/// slice: the ceil(q·n)th sample.
+fn nearest_rank(sorted: &[f64], q: f64) -> f64 {
+    let rank = (q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.saturating_sub(1).min(sorted.len() - 1)]
+}
+
+/// Keyed latency samples (seconds) with percentile queries — the
+/// serving engine records per-tenant and aggregate request latencies
+/// here and renders them as a table.
+#[derive(Debug, Default, Clone)]
+pub struct LatencyRecorder {
+    samples: BTreeMap<String, Vec<f64>>,
+}
+
+impl LatencyRecorder {
+    pub fn record(&mut self, key: &str, secs: f64) {
+        self.samples.entry(key.to_string()).or_default().push(secs);
+    }
+
+    pub fn keys(&self) -> Vec<&str> {
+        self.samples.keys().map(String::as_str).collect()
+    }
+
+    pub fn count(&self, key: &str) -> usize {
+        self.samples.get(key).map(Vec::len).unwrap_or(0)
+    }
+
+    pub fn mean(&self, key: &str) -> Option<f64> {
+        let s = self.samples.get(key)?;
+        if s.is_empty() {
+            return None;
+        }
+        Some(s.iter().sum::<f64>() / s.len() as f64)
+    }
+
+    /// q in [0, 1]; nearest-rank (ceil(q·n)th order statistic) on a
+    /// sorted copy.
+    pub fn percentile(&self, key: &str, q: f64) -> Option<f64> {
+        let s = self.samples.get(key)?;
+        if s.is_empty() {
+            return None;
+        }
+        let mut sorted = s.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(nearest_rank(&sorted, q))
+    }
+
+    /// One row per key: n, mean/p50/p95/max in milliseconds. Each
+    /// key's samples are sorted once and reused for all percentiles.
+    pub fn table(&self, key_header: &str) -> Table {
+        let mut t = Table::new(&[key_header, "n", "mean ms", "p50 ms",
+                                 "p95 ms", "max ms"]);
+        for (key, s) in &self.samples {
+            if s.is_empty() {
+                continue;
+            }
+            let mut sorted = s.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mean = s.iter().sum::<f64>() / s.len() as f64;
+            let ms = |v: f64| format!("{:.3}", v * 1e3);
+            t.row(&[key.clone(),
+                    s.len().to_string(),
+                    ms(mean),
+                    ms(nearest_rank(&sorted, 0.50)),
+                    ms(nearest_rank(&sorted, 0.95)),
+                    ms(nearest_rank(&sorted, 1.0))]);
+        }
+        t
     }
 }
 
@@ -169,6 +242,26 @@ mod tests {
         assert!(r.contains("| Method"));
         assert!(r.contains("| PaCA (Ours) |"));
         assert_eq!(r.lines().count(), 4);
+    }
+
+    #[test]
+    fn latency_recorder_percentiles() {
+        let mut r = LatencyRecorder::default();
+        for i in 1..=100 {
+            r.record("t0", i as f64 * 1e-3);
+        }
+        r.record("t1", 0.5);
+        assert_eq!(r.count("t0"), 100);
+        assert_eq!(r.count("nope"), 0);
+        assert!((r.mean("t0").unwrap() - 0.0505).abs() < 1e-9);
+        // Nearest-rank: p50 of 1..=100 ms is the 50th sample.
+        assert!((r.percentile("t0", 0.5).unwrap() - 0.050).abs() < 1e-9);
+        assert!((r.percentile("t0", 1.0).unwrap() - 0.100).abs() < 1e-9);
+        assert!((r.percentile("t0", 0.0).unwrap() - 0.001).abs() < 1e-9);
+        assert!(r.percentile("t0", 0.95).unwrap()
+                >= r.percentile("t0", 0.5).unwrap());
+        let tbl = r.table("tenant").render();
+        assert!(tbl.contains("t0") && tbl.contains("t1"));
     }
 
     #[test]

@@ -132,6 +132,12 @@ pub struct Runtime {
 }
 
 impl Runtime {
+    /// Cheap probe used by tests, benches, and `paca serve` to pick a
+    /// non-PJRT path (or skip) on checkouts without `make artifacts`.
+    pub fn artifacts_present(artifacts_dir: &Path) -> bool {
+        artifacts_dir.join("manifest.json").exists()
+    }
+
     pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
         let manifest = Manifest::load(artifacts_dir)?;
         let client = xla::PjRtClient::cpu()

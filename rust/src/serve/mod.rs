@@ -1,0 +1,38 @@
+//! Multi-tenant adapter serving — the inference half of the north star.
+//!
+//! PaCA's central property (paper §2–3) is that an adapter is not an
+//! extra layer but a set of *partial connections inside* the pretrained
+//! weights: per tenant it is just `(idx, P)` — r selected input rows
+//! per target linear — which splices into the shared frozen base in
+//! O(r·d_out) byte copies and un-splices bit-exactly. Serving therefore
+//! pays ZERO per-token adapter overhead (the spliced base IS the
+//! effective model), where LoRA-family serving either merges per tenant
+//! (un-shareable full-weight copies) or keeps adapters unmerged and
+//! pays the serialized extra-kernel path on every request ("LoRA Is
+//! Slower Than You Think"; LoRAFusion).
+//!
+//! Modules:
+//!   * [`registry`]  — LRU-bounded [`registry::AdapterRegistry`] of
+//!     compact per-tenant `(idx, P)` adapters with load/save/evict and
+//!     the hot-splice / exact-un-splice swap built on
+//!     `coordinator::merge::{splice_rows, unsplice_rows}`.
+//!   * [`scheduler`] — request queue → batch plan: FIFO or
+//!     swap-cost-aware coalescing of same-adapter requests.
+//!   * [`trace`]     — synthetic multi-tenant workloads (Zipf tenant
+//!     popularity, exponential arrivals) + JSONL persistence.
+//!   * [`engine`]    — the serving loop: swap → forward → per-request
+//!     latency/throughput metrics. Host GEMM backend always available;
+//!     PJRT backend drives the lowered eval artifact when `make
+//!     artifacts` has run.
+//!   * [`cost`]      — analytic serving-cost extension of `simulator`
+//!     (A100/Gaudi2): merged-PaCA vs unmerged-LoRA serving throughput
+//!     and adapter-swap amortization, for `paca bench --exp serve`.
+//!
+//! Entry point: `paca serve --adapters DIR --requests TRACE --batch N`
+//! (main.rs), which synthesizes the trace/adapters on first run.
+
+pub mod cost;
+pub mod engine;
+pub mod registry;
+pub mod scheduler;
+pub mod trace;

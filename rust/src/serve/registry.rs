@@ -1,0 +1,522 @@
+//! Per-tenant PaCA adapter storage + the hot-splice swap primitive.
+//!
+//! An adapter is the paper's `(idx, P)` per target linear: `idx` names
+//! the r selected input-feature rows, `P` holds their trained values.
+//! For a LLaMA-scale target (d_in × d_out) the adapter is r/d_in of the
+//! weight — e.g. r=64 on 4096×4096 is 1.6% — so millions of tenants are
+//! storable while ONE frozen base serves them all: splicing a tenant in
+//! is O(r·d_out) per target (coordinator::merge::splice_rows), and
+//! un-splicing restores the shared base bit-exactly.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::checkpoint;
+use crate::coordinator::merge;
+use crate::manifest::ModelInfo;
+use crate::peft::Selection;
+use crate::tensor::{DType, HostTensor};
+use crate::util::rng::Rng;
+
+/// The shared frozen base the adapters splice into: target weights
+/// keyed by manifest-style names ("blocks/<layer>/<target>/w").
+pub type WeightMap = BTreeMap<String, HostTensor>;
+
+/// FNV-1a over names + raw tensor bytes — the bit-exactness witness
+/// used to assert the base is untouched after un-merge.
+pub fn fingerprint(weights: &WeightMap) -> u64 {
+    let mut h = crate::util::rng::FNV_OFFSET;
+    for (name, t) in weights {
+        h = crate::util::rng::fnv1a_update(h, name.as_bytes());
+        h = crate::util::rng::fnv1a_update(h, &t.data);
+    }
+    h
+}
+
+/// One target linear's partial connections.
+#[derive(Debug, Clone)]
+pub struct AdapterEntry {
+    /// Target prefix, e.g. "blocks/0/q" (weight lives at `<target>/w`).
+    pub target: String,
+    /// Selected input-feature rows (distinct, paper's random default).
+    pub idx: Vec<u32>,
+    /// Trained rows, shape (idx.len(), d_out).
+    pub p: HostTensor,
+}
+
+/// A tenant's complete adapter: one entry per PEFT target per layer.
+#[derive(Debug, Clone)]
+pub struct PacaAdapter {
+    pub tenant: String,
+    pub rank: usize,
+    pub entries: Vec<AdapterEntry>,
+}
+
+/// Displaced base rows from a splice — consumed by `restore` for the
+/// exact un-merge.
+#[derive(Debug)]
+pub struct SpliceGuard {
+    pub tenant: String,
+    saved: Vec<(String, Vec<u32>, HostTensor)>,
+}
+
+impl PacaAdapter {
+    /// Deterministic synthetic adapter for a tenant on a model geometry
+    /// (stand-in for a PaCA fine-tune output; distinct per tenant).
+    /// Index sets come from the paper's default selection strategy
+    /// (peft::Selection::Random), streamed per (tenant, target).
+    pub fn synthetic(tenant: &str, m: &ModelInfo, rank: usize,
+                     seed: u64) -> PacaAdapter {
+        let none = BTreeMap::new();
+        let mut entries = Vec::new();
+        for layer in 0..m.n_layers {
+            for (t, d_in, d_out) in m.linear_shapes() {
+                let target = format!("blocks/{layer}/{t}");
+                let r = rank.min(d_in);
+                let idx = Selection::Random
+                    .select(seed, &format!("{tenant}/{target}/idx"),
+                            d_in, r, &none)
+                    .expect("random selection is infallible");
+                let mut rng = Rng::for_tag(
+                    seed, &format!("{tenant}/{target}/p"));
+                let p: Vec<f32> = (0..r * d_out)
+                    .map(|_| rng.normal_f32(0.05)).collect();
+                entries.push(AdapterEntry {
+                    target,
+                    idx,
+                    p: HostTensor::from_f32(&[r, d_out], p),
+                });
+            }
+        }
+        PacaAdapter { tenant: tenant.to_string(), rank, entries }
+    }
+
+    /// Extract a serveable adapter from a *trained* PaCA state
+    /// (names/tensors as produced by coordinator::checkpoint): for
+    /// every `<target>/idx` the partial connections P are exactly the
+    /// selected rows of the sibling `<target>/w` — the train→serve
+    /// bridge (the trained rows already live inside the weight).
+    pub fn from_trained_state(tenant: &str, names: &[String],
+                              tensors: &[HostTensor]) -> Result<PacaAdapter> {
+        if names.len() != tensors.len() {
+            return Err(anyhow!("{} names vs {} tensors", names.len(),
+                               tensors.len()));
+        }
+        let by_name: BTreeMap<&str, &HostTensor> =
+            names.iter().map(String::as_str).zip(tensors).collect();
+        let mut entries = Vec::new();
+        let mut rank = 0;
+        for (name, t) in &by_name {
+            let target = match name.strip_suffix("/idx") {
+                Some(p) => p,
+                None => continue,
+            };
+            let wname = format!("{target}/w");
+            let w = by_name.get(wname.as_str()).ok_or_else(|| {
+                anyhow!("{name} has no sibling {wname}")
+            })?;
+            if w.shape.len() != 2 {
+                return Err(anyhow!("{wname}: expected a 2-D weight, \
+                                    got shape {:?}", w.shape));
+            }
+            let idx: Vec<u32> = t.as_i32().iter()
+                .map(|&i| i as u32).collect();
+            if let Some(&bad) = idx.iter()
+                .find(|&&i| (i as usize) >= w.shape[0])
+            {
+                return Err(anyhow!("{name}: row {bad} out of range \
+                                    (rows {})", w.shape[0]));
+            }
+            let p = w.extract_rows(&idx);
+            rank = rank.max(idx.len());
+            entries.push(AdapterEntry { target: target.to_string(),
+                                        idx, p });
+        }
+        if entries.is_empty() {
+            return Err(anyhow!(
+                "state has no <target>/idx tensors — not a PaCA-trained \
+                 artifact"));
+        }
+        Ok(PacaAdapter { tenant: tenant.to_string(), rank, entries })
+    }
+
+    /// `from_trained_state` over a training checkpoint file (the
+    /// output of `paca train -o checkpoint=...`).
+    pub fn from_checkpoint(path: &Path, tenant: &str) -> Result<PacaAdapter> {
+        let (names, tensors) = checkpoint::load(path)?;
+        Self::from_trained_state(tenant, &names, &tensors)
+    }
+
+    /// Compact on-disk size (the multi-tenant scaling argument).
+    pub fn bytes(&self) -> usize {
+        self.entries.iter()
+            .map(|e| e.idx.len() * 4 + e.p.bytes())
+            .sum()
+    }
+
+    /// Persist as a PACA checkpoint (`<target>/idx` + `<target>/p`).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut names = Vec::new();
+        let mut tensors = Vec::new();
+        for e in &self.entries {
+            names.push(format!("{}/idx", e.target));
+            tensors.push(HostTensor::from_i32(
+                &[e.idx.len()],
+                e.idx.iter().map(|&i| i as i32).collect()));
+            names.push(format!("{}/p", e.target));
+            tensors.push(e.p.clone());
+        }
+        checkpoint::save(path, &names, &tensors)
+            .with_context(|| format!("saving adapter {}", self.tenant))
+    }
+
+    pub fn load(path: &Path, tenant: &str) -> Result<PacaAdapter> {
+        let (names, tensors) = checkpoint::load(path)
+            .with_context(|| format!("loading adapter {tenant}"))?;
+        let mut by_target: BTreeMap<String, (Option<Vec<u32>>,
+                                             Option<HostTensor>)> =
+            BTreeMap::new();
+        for (name, t) in names.iter().zip(tensors) {
+            if let Some(target) = name.strip_suffix("/idx") {
+                if t.dtype != DType::I32 {
+                    return Err(anyhow!("{name}: idx must be i32"));
+                }
+                by_target.entry(target.to_string()).or_default().0 =
+                    Some(t.as_i32().iter().map(|&i| i as u32).collect());
+            } else if let Some(target) = name.strip_suffix("/p") {
+                by_target.entry(target.to_string()).or_default().1 =
+                    Some(t);
+            } else {
+                return Err(anyhow!("unexpected adapter tensor {name}"));
+            }
+        }
+        let mut entries = Vec::new();
+        let mut rank = 0;
+        for (target, (idx, p)) in by_target {
+            let idx = idx
+                .ok_or_else(|| anyhow!("{target}: missing idx"))?;
+            let p = p.ok_or_else(|| anyhow!("{target}: missing p"))?;
+            if p.shape.len() != 2 || p.shape[0] != idx.len() {
+                return Err(anyhow!(
+                    "{target}: p shape {:?} does not match {} indices",
+                    p.shape, idx.len()));
+            }
+            rank = rank.max(idx.len());
+            entries.push(AdapterEntry { target, idx, p });
+        }
+        if entries.is_empty() {
+            return Err(anyhow!("adapter {tenant} has no entries"));
+        }
+        Ok(PacaAdapter { tenant: tenant.to_string(), rank, entries })
+    }
+
+    /// Hot-merge this adapter into the shared base. On any failure the
+    /// already-spliced entries are rolled back, leaving the base
+    /// untouched. Returns the guard needed for the exact un-merge.
+    pub fn splice(&self, weights: &mut WeightMap) -> Result<SpliceGuard> {
+        let mut saved: Vec<(String, Vec<u32>, HostTensor)> = Vec::new();
+        for e in &self.entries {
+            let wname = format!("{}/w", e.target);
+            let r = match weights.get_mut(&wname) {
+                Some(w) => merge::splice_rows(w, &e.idx, &e.p),
+                None => Err(anyhow!("base has no target {wname}")),
+            };
+            match r {
+                Ok(displaced) => {
+                    saved.push((e.target.clone(), e.idx.clone(),
+                                displaced));
+                }
+                Err(err) => {
+                    // Roll back to keep the shared base consistent.
+                    let guard = SpliceGuard {
+                        tenant: self.tenant.clone(), saved,
+                    };
+                    guard.restore(weights).ok();
+                    return Err(err.context(format!(
+                        "splicing tenant {}", self.tenant)));
+                }
+            }
+        }
+        Ok(SpliceGuard { tenant: self.tenant.clone(), saved })
+    }
+}
+
+impl SpliceGuard {
+    /// Exact un-merge: put the displaced base rows back (bit-exact —
+    /// byte-level restore via coordinator::merge::unsplice_rows).
+    pub fn restore(self, weights: &mut WeightMap) -> Result<()> {
+        // Reverse order so nested/overlapping splices unwind correctly.
+        for (target, idx, displaced) in self.saved.into_iter().rev() {
+            let wname = format!("{target}/w");
+            let w = weights.get_mut(&wname)
+                .ok_or_else(|| anyhow!("base lost target {wname}"))?;
+            merge::unsplice_rows(w, &idx, &displaced)?;
+        }
+        Ok(())
+    }
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RegistryStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub loads: u64,
+    pub evictions: u64,
+}
+
+/// LRU-bounded in-memory adapter cache, optionally backed by a
+/// directory of `<tenant>.paca` files (cold tenants are loaded on
+/// demand; over-capacity tenants are evicted least-recently-used).
+pub struct AdapterRegistry {
+    dir: Option<PathBuf>,
+    capacity: usize,
+    clock: u64,
+    map: HashMap<String, (u64, PacaAdapter)>,
+    pub stats: RegistryStats,
+}
+
+impl AdapterRegistry {
+    pub fn new(capacity: usize) -> AdapterRegistry {
+        AdapterRegistry { dir: None, capacity: capacity.max(1),
+                          clock: 0, map: HashMap::new(),
+                          stats: RegistryStats::default() }
+    }
+
+    pub fn with_dir(dir: &Path, capacity: usize) -> AdapterRegistry {
+        let mut r = Self::new(capacity);
+        r.dir = Some(dir.to_path_buf());
+        r
+    }
+
+    pub fn adapter_path(dir: &Path, tenant: &str) -> PathBuf {
+        dir.join(format!("{tenant}.paca"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn contains(&self, tenant: &str) -> bool {
+        self.map.contains_key(tenant)
+    }
+
+    pub fn tenants(&self) -> Vec<String> {
+        let mut t: Vec<String> = self.map.keys().cloned().collect();
+        t.sort();
+        t
+    }
+
+    /// Insert (or replace), evicting LRU entries over capacity.
+    pub fn insert(&mut self, adapter: PacaAdapter) {
+        self.clock += 1;
+        self.map.insert(adapter.tenant.clone(), (self.clock, adapter));
+        while self.map.len() > self.capacity {
+            self.evict_lru();
+        }
+    }
+
+    pub fn evict(&mut self, tenant: &str) -> Option<PacaAdapter> {
+        self.map.remove(tenant).map(|(_, a)| a)
+    }
+
+    fn evict_lru(&mut self) {
+        if let Some(t) = self.map.iter()
+            .min_by_key(|(_, (used, _))| *used)
+            .map(|(t, _)| t.clone())
+        {
+            self.map.remove(&t);
+            self.stats.evictions += 1;
+        }
+    }
+
+    /// Fetch a tenant's adapter, loading from the backing directory on
+    /// miss (and evicting LRU if that overflows the bound).
+    pub fn fetch(&mut self, tenant: &str) -> Result<&PacaAdapter> {
+        if self.map.contains_key(tenant) {
+            self.stats.hits += 1;
+        } else {
+            self.stats.misses += 1;
+            let dir = self.dir.clone().ok_or_else(|| {
+                anyhow!("tenant {tenant} not in registry (no backing \
+                         adapter directory configured)")
+            })?;
+            let path = Self::adapter_path(&dir, tenant);
+            let adapter = PacaAdapter::load(&path, tenant)
+                .with_context(|| format!("{}", path.display()))?;
+            self.stats.loads += 1;
+            self.insert(adapter);
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        let slot = self.map.get_mut(tenant).unwrap();
+        slot.0 = clock;
+        Ok(&slot.1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelInfo {
+        ModelInfo { name: "serve-tiny".into(), vocab: 512, d_model: 16,
+                    n_layers: 2, n_heads: 4, d_ff: 24, max_seq: 128,
+                    profile_only: false }
+    }
+
+    fn base(m: &ModelInfo) -> WeightMap {
+        let mut w = WeightMap::new();
+        for layer in 0..m.n_layers {
+            for (t, d_in, d_out) in m.linear_shapes() {
+                let mut rng = Rng::for_tag(7, &format!("{layer}/{t}"));
+                let vals: Vec<f32> = (0..d_in * d_out)
+                    .map(|_| rng.normal_f32(0.02)).collect();
+                w.insert(format!("blocks/{layer}/{t}/w"),
+                         HostTensor::from_f32(&[d_in, d_out], vals));
+            }
+        }
+        w
+    }
+
+    #[test]
+    fn splice_restore_roundtrips_base() {
+        let m = tiny();
+        let mut w = base(&m);
+        let fp0 = fingerprint(&w);
+        let a = PacaAdapter::synthetic("t0", &m, 4, 1);
+        let guard = a.splice(&mut w).unwrap();
+        assert_ne!(fingerprint(&w), fp0, "splice must change the base");
+        guard.restore(&mut w).unwrap();
+        assert_eq!(fingerprint(&w), fp0, "un-merge must be bit-exact");
+    }
+
+    #[test]
+    fn sequential_tenants_are_isolated() {
+        let m = tiny();
+        let mut w = base(&m);
+        let a = PacaAdapter::synthetic("a", &m, 4, 1);
+        let b = PacaAdapter::synthetic("b", &m, 4, 2);
+        // b spliced onto a pristine base…
+        let mut w_direct = w.clone();
+        let g = b.splice(&mut w_direct).unwrap();
+        let fp_b = fingerprint(&w_direct);
+        g.restore(&mut w_direct).unwrap();
+        // …equals b spliced after an a-splice/un-splice cycle.
+        let ga = a.splice(&mut w).unwrap();
+        ga.restore(&mut w).unwrap();
+        let gb = b.splice(&mut w).unwrap();
+        assert_eq!(fingerprint(&w), fp_b,
+                   "tenant a must leave no trace in tenant b's weights");
+        gb.restore(&mut w).unwrap();
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let m = tiny();
+        let a = PacaAdapter::synthetic("t9", &m, 4, 3);
+        let path = std::env::temp_dir().join(format!(
+            "paca-adapter-{}.paca", std::process::id()));
+        a.save(&path).unwrap();
+        let b = PacaAdapter::load(&path, "t9").unwrap();
+        assert_eq!(b.entries.len(), a.entries.len());
+        assert_eq!(b.rank, 4);
+        let ea: &AdapterEntry = &a.entries[0];
+        let eb = b.entries.iter().find(|e| e.target == ea.target)
+            .unwrap();
+        assert_eq!(ea.idx, eb.idx);
+        assert_eq!(ea.p.data, eb.p.data);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn trained_state_exports_a_serveable_adapter() {
+        // A "trained" PaCA state: idx selects rows of w whose values
+        // are the trained partial connections.
+        let names = vec!["blocks/0/q/w".to_string(),
+                         "blocks/0/q/idx".to_string(),
+                         "opt/step".to_string()];
+        let w = HostTensor::from_f32(
+            &[4, 2], vec![0., 0., 10., 11., 0., 0., 20., 21.]);
+        let tensors = vec![w, HostTensor::from_i32(&[2], vec![3, 1]),
+                           HostTensor::scalar_i32(5)];
+        let a = PacaAdapter::from_trained_state("t", &names, &tensors)
+            .unwrap();
+        assert_eq!(a.entries.len(), 1);
+        assert_eq!(a.rank, 2);
+        assert_eq!(a.entries[0].idx, vec![3, 1]);
+        assert_eq!(a.entries[0].p.as_f32(), vec![20., 21., 10., 11.]);
+        // Spliced onto a fresh base, the trained rows land exactly.
+        let mut base = WeightMap::new();
+        base.insert("blocks/0/q/w".into(),
+                    HostTensor::from_f32(&[4, 2], vec![1.; 8]));
+        let g = a.splice(&mut base).unwrap();
+        let v = base["blocks/0/q/w"].as_f32();
+        assert_eq!(v, vec![1., 1., 10., 11., 1., 1., 20., 21.]);
+        g.restore(&mut base).unwrap();
+        assert!(base["blocks/0/q/w"].as_f32().iter()
+                .all(|&x| x == 1.0));
+        // Non-PaCA states (no idx tensors) are rejected.
+        assert!(PacaAdapter::from_trained_state(
+            "t", &names[..1].to_vec(), &tensors[..1].to_vec())
+                .is_err());
+        // A malformed (non-2-D) weight sibling is an error, not a
+        // panic.
+        let bad_names = vec!["blocks/0/q/w".to_string(),
+                             "blocks/0/q/idx".to_string()];
+        let bad = vec![HostTensor::from_f32(&[8], vec![0.; 8]),
+                       HostTensor::from_i32(&[1], vec![0])];
+        assert!(PacaAdapter::from_trained_state("t", &bad_names, &bad)
+                .is_err());
+    }
+
+    #[test]
+    fn registry_lru_bound_and_disk_reload() {
+        let m = tiny();
+        let dir = std::env::temp_dir().join(format!(
+            "paca-reg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for t in ["t0", "t1", "t2"] {
+            PacaAdapter::synthetic(t, &m, 2, 5)
+                .save(&AdapterRegistry::adapter_path(&dir, t)).unwrap();
+        }
+        let mut reg = AdapterRegistry::with_dir(&dir, 2);
+        reg.fetch("t0").unwrap();
+        reg.fetch("t1").unwrap();
+        reg.fetch("t2").unwrap(); // evicts t0
+        assert_eq!(reg.len(), 2);
+        assert!(!reg.contains("t0"));
+        assert_eq!(reg.stats.evictions, 1);
+        // t0 reloads from disk on demand.
+        reg.fetch("t0").unwrap();
+        assert_eq!(reg.stats.loads, 4);
+        assert!(reg.contains("t0"));
+        // LRU: t1 was the least recently used.
+        assert!(!reg.contains("t1"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fetch_unknown_without_dir_errors() {
+        let mut reg = AdapterRegistry::new(4);
+        assert!(reg.fetch("ghost").is_err());
+    }
+
+    #[test]
+    fn adapter_is_compact() {
+        let m = tiny();
+        let a = PacaAdapter::synthetic("t", &m, 2, 1);
+        let base_bytes: usize = base(&m).values().map(|t| t.bytes()).sum();
+        assert!(a.bytes() < base_bytes / 3,
+                "adapter {} vs base {base_bytes}", a.bytes());
+    }
+}

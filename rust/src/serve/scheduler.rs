@@ -1,0 +1,204 @@
+//! Request scheduling: queue → batch plan.
+//!
+//! Serving PaCA adapters from one shared base means the only per-tenant
+//! cost is the adapter *swap* (splice/un-splice) between batches; the
+//! forward itself is method-free. The scheduler therefore has one job:
+//! coalesce same-adapter requests into batches and order batches so
+//! adjacent ones share a tenant whenever possible (swap-cost-aware
+//! batching — LoRAFusion's grouping insight applied to PaCA's splice
+//! model). FIFO is kept as the baseline the bench compares against.
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    pub tenant: String,
+    /// Prompt length in tokens (drives forward cost).
+    pub tokens: usize,
+    /// Synthetic arrival timestamp, seconds from trace start.
+    pub arrival_s: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Batch strictly in arrival order; a batch breaks whenever the
+    /// tenant changes or the batch is full.
+    Fifo,
+    /// Group by tenant (stable in first-arrival order), then chunk —
+    /// one swap per tenant instead of one per tenant *run*.
+    SwapAware,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Result<Policy> {
+        Ok(match s {
+            "fifo" => Policy::Fifo,
+            "swap-aware" | "swap" | "grouped" => Policy::SwapAware,
+            other => {
+                return Err(anyhow!(
+                    "unknown policy {other:?} (fifo | swap-aware)"))
+            }
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::Fifo => "fifo",
+            Policy::SwapAware => "swap-aware",
+        }
+    }
+}
+
+/// One dispatch unit: requests sharing a tenant, served under one
+/// splice of that tenant's adapter.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub tenant: String,
+    pub requests: Vec<Request>,
+}
+
+impl Batch {
+    pub fn tokens(&self) -> usize {
+        self.requests.iter().map(|r| r.tokens).sum()
+    }
+}
+
+/// Plan the queue into batches of at most `batch_size` requests.
+/// Every request appears in exactly one batch; within a tenant,
+/// arrival order is preserved under both policies.
+pub fn plan(requests: &[Request], batch_size: usize,
+            policy: Policy) -> Vec<Batch> {
+    let cap = batch_size.max(1);
+    match policy {
+        Policy::Fifo => {
+            let mut out: Vec<Batch> = Vec::new();
+            for r in requests {
+                let start_new = match out.last() {
+                    Some(b) => b.tenant != r.tenant
+                        || b.requests.len() >= cap,
+                    None => true,
+                };
+                if start_new {
+                    out.push(Batch { tenant: r.tenant.clone(),
+                                     requests: Vec::new() });
+                }
+                out.last_mut().unwrap().requests.push(r.clone());
+            }
+            out
+        }
+        Policy::SwapAware => {
+            // Stable grouping by tenant in first-arrival order.
+            let mut groups: Vec<(String, Vec<Request>)> = Vec::new();
+            for r in requests {
+                match groups.iter_mut().find(|(t, _)| *t == r.tenant) {
+                    Some((_, g)) => g.push(r.clone()),
+                    None => groups.push((r.tenant.clone(),
+                                         vec![r.clone()])),
+                }
+            }
+            let mut out = Vec::new();
+            for (tenant, g) in groups {
+                for chunk in g.chunks(cap) {
+                    out.push(Batch { tenant: tenant.clone(),
+                                     requests: chunk.to_vec() });
+                }
+            }
+            out
+        }
+    }
+}
+
+/// Adapter splices needed to serve the plan starting from the bare
+/// base: 1 for the first batch plus 1 per adjacent tenant change
+/// (consecutive same-tenant batches reuse the live splice).
+pub fn swap_count(batches: &[Batch]) -> usize {
+    let mut swaps = 0;
+    let mut current: Option<&str> = None;
+    for b in batches {
+        if current != Some(b.tenant.as_str()) {
+            swaps += 1;
+            current = Some(&b.tenant);
+        }
+    }
+    swaps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, tenant: &str) -> Request {
+        Request { id, tenant: tenant.into(), tokens: 16,
+                  arrival_s: id as f64 * 0.01 }
+    }
+
+    fn mixed() -> Vec<Request> {
+        // Interleaved tenants — the worst case for FIFO.
+        ["a", "b", "a", "c", "b", "a", "c", "b", "a", "b"]
+            .iter().enumerate()
+            .map(|(i, t)| req(i as u64, t)).collect()
+    }
+
+    fn ids(batches: &[Batch]) -> Vec<u64> {
+        let mut v: Vec<u64> = batches.iter()
+            .flat_map(|b| b.requests.iter().map(|r| r.id)).collect();
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn both_policies_preserve_all_requests() {
+        let reqs = mixed();
+        for policy in [Policy::Fifo, Policy::SwapAware] {
+            let batches = plan(&reqs, 4, policy);
+            assert_eq!(ids(&batches), (0..10).collect::<Vec<_>>(),
+                       "{policy:?}");
+            for b in &batches {
+                assert!(b.requests.len() <= 4);
+                assert!(b.requests.iter().all(|r| r.tenant == b.tenant));
+            }
+        }
+    }
+
+    #[test]
+    fn swap_aware_beats_fifo_on_interleaved_tenants() {
+        let reqs = mixed();
+        let fifo = swap_count(&plan(&reqs, 4, Policy::Fifo));
+        let aware = swap_count(&plan(&reqs, 4, Policy::SwapAware));
+        assert_eq!(aware, 3, "one swap per distinct tenant");
+        assert!(fifo > aware, "fifo {fifo} !> swap-aware {aware}");
+    }
+
+    #[test]
+    fn fifo_preserves_arrival_order() {
+        let reqs = mixed();
+        let batches = plan(&reqs, 4, Policy::Fifo);
+        let flat: Vec<u64> = batches.iter()
+            .flat_map(|b| b.requests.iter().map(|r| r.id)).collect();
+        assert_eq!(flat, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn swap_aware_keeps_per_tenant_order_and_chunks() {
+        let reqs: Vec<Request> = (0..9).map(|i| req(i, "t")).collect();
+        let batches = plan(&reqs, 4, Policy::SwapAware);
+        assert_eq!(batches.len(), 3); // 4 + 4 + 1
+        assert_eq!(batches[2].requests.len(), 1);
+        assert_eq!(swap_count(&batches), 1);
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(Policy::parse("fifo").unwrap(), Policy::Fifo);
+        assert_eq!(Policy::parse("swap-aware").unwrap(),
+                   Policy::SwapAware);
+        assert!(Policy::parse("lifo").is_err());
+    }
+
+    #[test]
+    fn empty_queue_plans_empty() {
+        assert!(plan(&[], 8, Policy::Fifo).is_empty());
+        assert_eq!(swap_count(&[]), 0);
+    }
+}

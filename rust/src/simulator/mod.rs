@@ -91,7 +91,9 @@ impl FlopCount {
 }
 
 /// One GEMM's wall time on the roofline + dispatch overhead.
-fn gemm_time(dev: &DeviceProfile, m: f64, k: f64, n: f64) -> f64 {
+/// (pub(crate): the serving cost model in serve::cost builds its
+/// forward-only path from the same primitives.)
+pub(crate) fn gemm_time(dev: &DeviceProfile, m: f64, k: f64, n: f64) -> f64 {
     let flops = 2.0 * m * k * n;
     let bytes = 2.0 * (m * k + k * n + m * n);
     (flops / (dev.peak_flops * dev.gemm_eff)).max(bytes / dev.mem_bw)
@@ -99,7 +101,7 @@ fn gemm_time(dev: &DeviceProfile, m: f64, k: f64, n: f64) -> f64 {
 }
 
 /// Elementwise / bandwidth-bound pass over `bytes`.
-fn bw_time(dev: &DeviceProfile, bytes: f64) -> f64 {
+pub(crate) fn bw_time(dev: &DeviceProfile, bytes: f64) -> f64 {
     bytes / dev.mem_bw + dev.launch_s
 }
 

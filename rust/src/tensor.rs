@@ -131,6 +131,45 @@ impl HostTensor {
         (0..cols).map(|j| self.f32_at(i * cols + j)).collect()
     }
 
+    /// Byte length of one row of a 2-D tensor.
+    fn row_stride(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "row ops need a 2-D tensor");
+        self.shape[1] * self.dtype.size()
+    }
+
+    /// Gather rows `idx` into a new (idx.len(), cols) tensor. Pure byte
+    /// copy — bit-exact for any dtype (the substrate of the serving
+    /// registry's hot-splice save/restore, coordinator::merge).
+    pub fn extract_rows(&self, idx: &[u32]) -> HostTensor {
+        let stride = self.row_stride();
+        let mut data = Vec::with_capacity(idx.len() * stride);
+        for &i in idx {
+            let i = i as usize;
+            assert!(i < self.shape[0],
+                    "row {i} out of range (rows {})", self.shape[0]);
+            data.extend_from_slice(&self.data[i * stride..(i + 1) * stride]);
+        }
+        HostTensor { shape: vec![idx.len(), self.shape[1]],
+                     dtype: self.dtype, data }
+    }
+
+    /// Scatter `rows` (an (idx.len(), cols) tensor) into rows `idx`,
+    /// overwriting in place — the exact inverse of `extract_rows` over
+    /// the same index set.
+    pub fn write_rows(&mut self, idx: &[u32], rows: &HostTensor) {
+        let stride = self.row_stride();
+        assert_eq!(rows.dtype, self.dtype, "dtype mismatch");
+        assert_eq!(rows.shape, vec![idx.len(), self.shape[1]],
+                   "rows shape mismatch");
+        for (k, &i) in idx.iter().enumerate() {
+            let i = i as usize;
+            assert!(i < self.shape[0],
+                    "row {i} out of range (rows {})", self.shape[0]);
+            self.data[i * stride..(i + 1) * stride]
+                .copy_from_slice(&rows.data[k * stride..(k + 1) * stride]);
+        }
+    }
+
     pub fn to_literal(&self) -> Result<xla::Literal> {
         xla::Literal::create_from_shape_and_untyped_data(
             self.dtype.element_type(), &self.shape, &self.data)
@@ -195,6 +234,22 @@ mod tests {
         t.set_f32(3, 9.5);
         assert_eq!(t.f32_at(3), 9.5);
         assert_eq!(t.f32_at(0), 0.0);
+    }
+
+    #[test]
+    fn extract_write_rows_roundtrip() {
+        let w = HostTensor::from_f32(&[4, 2],
+                                     vec![0., 1., 2., 3., 4., 5., 6., 7.]);
+        let rows = w.extract_rows(&[3, 1]);
+        assert_eq!(rows.shape, vec![2, 2]);
+        assert_eq!(rows.as_f32(), vec![6., 7., 2., 3.]);
+        let mut w2 = w.clone();
+        w2.write_rows(&[0, 2], &rows);
+        assert_eq!(w2.as_f32(), vec![6., 7., 2., 3., 2., 3., 6., 7.]);
+        // writing back what was extracted restores bit-exactly
+        let saved = w2.extract_rows(&[0, 2]);
+        w2.write_rows(&[0, 2], &saved);
+        assert_eq!(w2.as_f32(), vec![6., 7., 2., 3., 2., 3., 6., 7.]);
     }
 
     #[test]

@@ -20,14 +20,30 @@ fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
-/// FNV-1a over the tag, mixed into the stream seed.
-pub fn tag_hash(tag: &str) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
-    for b in tag.as_bytes() {
+/// FNV-1a offset basis — seed for incremental hashing via
+/// `fnv1a_update`.
+pub const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+
+/// Fold `bytes` into a running FNV-1a state (start from FNV_OFFSET).
+/// The single FNV implementation in the crate — tag streams,
+/// checkpoint checksums, and the serving base fingerprint all go
+/// through here.
+pub fn fnv1a_update(mut h: u64, bytes: &[u8]) -> u64 {
+    for b in bytes {
         h ^= *b as u64;
         h = h.wrapping_mul(0x100000001b3);
     }
     h
+}
+
+/// One-shot FNV-1a over a byte buffer.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    fnv1a_update(FNV_OFFSET, bytes)
+}
+
+/// FNV-1a over the tag, mixed into the stream seed.
+pub fn tag_hash(tag: &str) -> u64 {
+    fnv1a(tag.as_bytes())
 }
 
 impl Rng {

@@ -3,6 +3,7 @@
 //! failing seed printed on panic.
 
 use paca::config::SchedKind;
+use paca::coordinator::merge;
 use paca::coordinator::schedule::Schedule;
 use paca::memory;
 use paca::nf4;
@@ -237,6 +238,87 @@ fn prop_checkpoint_roundtrip_random_states() {
                        b.dtype as u8 as usize);
         }
         std::fs::remove_file(&path).ok();
+    });
+}
+
+/// Random 2-D f32 tensor with arbitrary bit patterns in play (normals
+/// at several magnitudes, exact zeros, subnormals).
+fn random_weight(rng: &mut Rng, rows: usize, cols: usize) -> HostTensor {
+    let vals: Vec<f32> = (0..rows * cols).map(|_| match rng.below(8) {
+        0 => 0.0,
+        1 => f32::MIN_POSITIVE / 2.0, // subnormal
+        2 => -rng.normal_f32(1e6),
+        _ => rng.normal_f32(1.0),
+    }).collect();
+    HostTensor::from_f32(&[rows, cols], vals)
+}
+
+#[test]
+fn prop_splice_unsplice_roundtrips_bit_exact() {
+    // The serving registry's contract: splice→unsplice restores the
+    // shared frozen base BYTE-identically, for any geometry, any index
+    // set, any weight bit patterns.
+    prop(150, |rng| {
+        let rows = 1 + rng.below(48);
+        let cols = 1 + rng.below(24);
+        let r = 1 + rng.below(rows);
+        let mut w = random_weight(rng, rows, cols);
+        let orig = w.data.clone();
+        let idx = rng.choice(rows, r);
+        let p = random_weight(rng, r, cols);
+        let saved = merge::splice_rows(&mut w, &idx, &p).unwrap();
+        // Spliced rows carry P; untouched rows are untouched.
+        for (k, &i) in idx.iter().enumerate() {
+            assert_eq!(w.row_f32(i as usize), p.row_f32(k));
+        }
+        assert_eq!(saved.shape, vec![r, cols]);
+        merge::unsplice_rows(&mut w, &idx, &saved).unwrap();
+        assert_eq!(w.data, orig, "un-merge must be bit-exact");
+    });
+}
+
+#[test]
+fn prop_sequential_tenant_splices_never_interact() {
+    // Two tenants' adapters applied through the swap discipline
+    // (splice A → unsplice A → splice B) must leave tenant B's
+    // effective weights identical to B applied on the pristine base —
+    // for disjoint AND overlapping index sets.
+    prop(100, |rng| {
+        let rows = 4 + rng.below(40);
+        let cols = 1 + rng.below(16);
+        let ra = 1 + rng.below(rows);
+        let rb = 1 + rng.below(rows);
+        let base = random_weight(rng, rows, cols);
+
+        let idx_a = rng.choice(rows, ra);
+        let p_a = random_weight(rng, ra, cols);
+        // Tenant B: half the cases reuse indices from A (overlap),
+        // half draw independently (usually disjoint-ish).
+        let idx_b = if rng.below(2) == 0 {
+            let mut i = idx_a.clone();
+            i.truncate(rb.min(ra));
+            i
+        } else {
+            rng.choice(rows, rb)
+        };
+        let p_b = random_weight(rng, idx_b.len(), cols);
+
+        // Reference: B directly on the pristine base.
+        let mut w_ref = base.clone();
+        let g = merge::splice_rows(&mut w_ref, &idx_b, &p_b).unwrap();
+        let spliced_ref = w_ref.data.clone();
+        merge::unsplice_rows(&mut w_ref, &idx_b, &g).unwrap();
+        assert_eq!(w_ref.data, base.data);
+
+        // Swap sequence: A in, A out, B in.
+        let mut w = base.clone();
+        let ga = merge::splice_rows(&mut w, &idx_a, &p_a).unwrap();
+        merge::unsplice_rows(&mut w, &idx_a, &ga).unwrap();
+        let gb = merge::splice_rows(&mut w, &idx_b, &p_b).unwrap();
+        assert_eq!(w.data, spliced_ref,
+                   "tenant A left a trace in tenant B's weights");
+        merge::unsplice_rows(&mut w, &idx_b, &gb).unwrap();
+        assert_eq!(w.data, base.data);
     });
 }
 

@@ -1,0 +1,331 @@
+//! Offline stub of the `xla-rs` PJRT bindings (the API subset the
+//! `paca` crate uses).
+//!
+//! The air-gapped image has no `xla_extension` shared library, so this
+//! crate implements the *host* half of the API for real — `Literal` is
+//! a fully functional typed host buffer (create / shape / raw copy /
+//! tuple / first-element) — while the *device* half degrades
+//! gracefully: `PjRtClient::cpu()` succeeds (so `Runtime::new` and the
+//! manifest-only code paths work), but compiling an HLO module returns
+//! a clear error. Code that needs actual artifact execution (training,
+//! selftest, the PJRT serve backend) reports that error instead of
+//! crashing; everything analytic / host-side runs normally.
+//!
+//! Swap this directory for the real xla-rs checkout (same dependency
+//! key in the workspace Cargo.toml) on a machine with xla_extension to
+//! get the full PJRT CPU path back — no source change needed in paca.
+
+use std::borrow::Borrow;
+use std::rc::Rc;
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} is unavailable in this offline build: the stub xla \
+         crate has no xla_extension/PJRT backend (vendor the real \
+         xla-rs to enable artifact execution)"))
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+impl ElementType {
+    pub fn size(self) -> usize {
+        match self {
+            ElementType::Pred | ElementType::S8 | ElementType::U8 => 1,
+            ElementType::S16 | ElementType::U16 | ElementType::F16
+            | ElementType::Bf16 => 2,
+            ElementType::S32 | ElementType::U32 | ElementType::F32 => 4,
+            ElementType::S64 | ElementType::U64 | ElementType::F64 => 8,
+        }
+    }
+}
+
+/// Host element types that can cross the raw-copy boundary.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+
+impl NativeType for f64 {
+    const TY: ElementType = ElementType::F64;
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+
+impl NativeType for i64 {
+    const TY: ElementType = ElementType::S64;
+}
+
+impl NativeType for i8 {
+    const TY: ElementType = ElementType::S8;
+}
+
+impl NativeType for u8 {
+    const TY: ElementType = ElementType::U8;
+}
+
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().map(|&d| d as usize).product()
+    }
+}
+
+/// A typed host buffer — fully functional in the stub.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    shape: ArrayShape,
+    data: Vec<u8>,
+    /// Non-empty for tuple literals (tuples carry no array shape).
+    tuple: Vec<Literal>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType, dims: &[usize],
+        data: &[u8]) -> Result<Literal, Error> {
+        let n: usize = dims.iter().product();
+        if n * ty.size() != data.len() {
+            return Err(Error(format!(
+                "literal data is {} bytes, shape {dims:?} of {ty:?} \
+                 wants {}", data.len(), n * ty.size())));
+        }
+        Ok(Literal {
+            shape: ArrayShape {
+                dims: dims.iter().map(|&d| d as i64).collect(),
+                ty,
+            },
+            data: data.to_vec(),
+            tuple: Vec::new(),
+        })
+    }
+
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal {
+            shape: ArrayShape { dims: Vec::new(), ty: ElementType::Pred },
+            data: Vec::new(),
+            tuple: elems,
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        if !self.tuple.is_empty() {
+            return Err(Error("tuple literal has no array shape".into()));
+        }
+        Ok(self.shape.clone())
+    }
+
+    pub fn copy_raw_to<T: NativeType>(
+        &self, dst: &mut [T]) -> Result<(), Error> {
+        if T::TY != self.shape.ty {
+            return Err(Error(format!(
+                "copy_raw_to: literal is {:?}, destination wants {:?}",
+                self.shape.ty, T::TY)));
+        }
+        let want = dst.len() * std::mem::size_of::<T>();
+        if want != self.data.len() {
+            return Err(Error(format!(
+                "copy_raw_to: literal has {} bytes, destination {want}",
+                self.data.len())));
+        }
+        // SAFETY: NativeType implementors are plain-old-data scalars
+        // with no invalid bit patterns, and the length was checked.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.data.as_ptr(), dst.as_mut_ptr() as *mut u8, want);
+        }
+        Ok(())
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        if self.tuple.is_empty() {
+            return Err(Error("literal is not a tuple".into()));
+        }
+        Ok(self.tuple)
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T, Error> {
+        if T::TY != self.shape.ty {
+            return Err(Error(format!(
+                "get_first_element: literal is {:?}, wanted {:?}",
+                self.shape.ty, T::TY)));
+        }
+        if self.data.len() < std::mem::size_of::<T>() {
+            return Err(Error("empty literal".into()));
+        }
+        // SAFETY: length checked; T is plain-old-data (NativeType).
+        Ok(unsafe { std::ptr::read_unaligned(self.data.as_ptr() as *const T) })
+    }
+}
+
+/// Parsed HLO module text. The stub only carries the text through to
+/// `compile`, which is where the missing backend is reported.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, Error> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _proto: proto.clone() }
+    }
+}
+
+/// PJRT client handle. Rc-based (deliberately !Send, matching the real
+/// bindings' threading constraints so code written against the stub
+/// stays correct on the real backend).
+#[derive(Clone)]
+pub struct PjRtClient {
+    _marker: Rc<()>,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Ok(PjRtClient { _marker: Rc::new(()) })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu (no xla_extension)".to_string()
+    }
+
+    pub fn buffer_from_host_literal(
+        &self, _device: Option<usize>,
+        lit: &Literal) -> Result<PjRtBuffer, Error> {
+        Ok(PjRtBuffer { lit: lit.clone() })
+    }
+
+    pub fn compile(
+        &self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("HLO compilation"))
+    }
+}
+
+/// Device buffer — in the stub, a host literal in disguise.
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Ok(self.lit.clone())
+    }
+}
+
+/// Never constructed in the stub (`compile` always errors); the methods
+/// exist so dependent code typechecks identically against real xla-rs.
+pub struct PjRtLoadedExecutable {
+    client: PjRtClient,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn client(&self) -> PjRtClient {
+        self.client.clone()
+    }
+
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(
+        &self, _args: &[B]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("PJRT execution"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let vals = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = vals.iter()
+            .flat_map(|v| v.to_le_bytes()).collect();
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32, &[3], &bytes).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[3]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        let mut out = [0f32; 3];
+        lit.copy_raw_to(&mut out).unwrap();
+        assert_eq!(out, vals);
+        assert_eq!(lit.get_first_element::<f32>().unwrap(), 1.0);
+        assert!(lit.get_first_element::<i32>().is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32, &[2], &[0u8; 7]).is_err());
+    }
+
+    #[test]
+    fn tuples() {
+        let a = Literal::create_from_shape_and_untyped_data(
+            ElementType::S8, &[1], &[7]).unwrap();
+        let t = Literal::tuple(vec![a.clone(), a]);
+        assert!(t.array_shape().is_err());
+        assert_eq!(t.to_tuple().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn compile_unavailable_but_client_works() {
+        let c = PjRtClient::cpu().unwrap();
+        assert!(c.platform_name().contains("stub"));
+        let proto = HloModuleProto { text: "HloModule m".into() };
+        let comp = XlaComputation::from_proto(&proto);
+        assert!(c.compile(&comp).is_err());
+    }
+}
