@@ -1,20 +1,32 @@
-//! `cargo bench --bench serve_throughput` — multi-tenant serving:
-//! requests/sec vs adapter count and batch size, FIFO vs swap-aware
-//! batching, under a capacity-bounded registry (cold tenants reload
-//! from disk — the regime where batching policy matters). Emits
-//! BENCH_serve.json to seed the perf trajectory.
+//! `cargo bench --bench serve_throughput` — the serving pipeline
+//! bench, online edition:
 //!
-//! Runs on a fresh checkout: host GEMM backend, synthetic base +
-//! adapters, no artifacts required.
+//!   1. Anchor: on a fully-arrived queue the online scheduler must
+//!      reproduce the offline planner's dispatch sequence (swap
+//!      counts asserted equal for fifo and swap-aware), and offline
+//!      plan replay under a capacity-bounded registry must show
+//!      grouping reducing both swaps and cold loads (asserted).
+//!   2. Online continuous batching on a bursty multi-tenant SLO trace,
+//!      per policy, on the deterministic analytic clock: queueing-
+//!      delay percentiles, deadline misses (slo-aware must beat
+//!      fifo — asserted), swaps, virtual throughput.
+//!   3. Measured wall-clock host-GEMM throughput per policy under a
+//!      capacity-bounded registry (cold tenants reload from disk).
+//!
+//! Emits BENCH_serve.json (per-policy queueing p50/p99, misses,
+//! throughput) to seed the perf trajectory. Runs on a fresh checkout:
+//! host backend, synthetic base + adapters, no artifacts required.
 
 use std::collections::BTreeMap;
-use std::path::PathBuf;
+use std::path::Path;
 
 use paca::manifest::ModelInfo;
-use paca::serve::engine::{Backend, BaseModel, ServeEngine};
+use paca::serve::engine::{BaseModel, ClockModel, HostBackend,
+                          ServeEngine};
 use paca::serve::registry::{AdapterRegistry, PacaAdapter};
-use paca::serve::scheduler::{plan, swap_count, Policy};
-use paca::serve::trace::{self, TraceSpec};
+use paca::serve::scheduler::{plan, swap_count, OnlineScheduler,
+                             Policy};
+use paca::serve::trace::{self, Trace, TraceSpec};
 use paca::util::json::Json;
 
 /// Serving geometry: big enough that an adapter swap (rank-64 row
@@ -27,141 +39,264 @@ fn bench_model() -> ModelInfo {
 }
 
 const RANK: usize = 64;
-const N_REQUESTS: usize = 192;
+const N_REQUESTS: usize = 256;
+const N_TENANTS: usize = 8;
 const MEAN_TOKENS: usize = 16;
+const BATCH: usize = 8;
 
-struct RunResult {
-    req_per_s: f64,
-    tok_per_s: f64,
-    swaps: u64,
-    loads: u64,
-    batches: usize,
-    p95_ms: f64,
+/// Deterministic virtual service model for the online sections: a
+/// swap costs several batch quanta, so a swap-heavy dispatch order
+/// visibly overloads the virtual server at this trace's arrival rate
+/// while a coalescing order keeps it comfortably under capacity.
+/// (`serve_online` feeds `swap_s` to the slo policy as its swap
+/// penalty.)
+const CLOCK: ClockModel = ClockModel::Analytic {
+    swap_s: 5e-3, batch_s: 1e-3, token_s: 5e-5,
+};
+
+/// Bursty SLO trace: ~278 req/s offered in bursts, 60ms deadlines.
+fn bursty_trace() -> Trace {
+    trace::synthesize(&TraceSpec {
+        n_requests: N_REQUESTS,
+        n_tenants: N_TENANTS,
+        mean_tokens: MEAN_TOKENS,
+        burstiness: 4.0,
+        deadline_ms: 60.0,
+        ..Default::default()
+    })
 }
 
-fn run_once(model: &ModelInfo, adapters_dir: &PathBuf,
-            n_tenants: usize, batch: usize, policy: Policy)
-            -> RunResult {
-    let spec = TraceSpec { n_requests: N_REQUESTS, n_tenants,
-                           mean_tokens: MEAN_TOKENS,
-                           ..Default::default() };
-    let requests = trace::synthesize(&spec);
-    let batches = plan(&requests, batch, policy);
-    // Capacity below the tenant count: the interleaved order thrashes
-    // the cache, the grouped order loads each adapter once.
-    let reg = AdapterRegistry::with_dir(adapters_dir,
-                                        (n_tenants / 2).max(2));
-    let base = BaseModel::synthetic(model, 7);
-    let mut eng = ServeEngine::new(base, reg, Backend::Host);
-    eng.serve(&batches).expect("serve");
-    eng.finish().expect("bit-exact base restore");
-    RunResult {
-        req_per_s: eng.throughput_req_per_s(),
-        tok_per_s: eng.throughput_tok_per_s(),
-        swaps: eng.stats.swaps,
-        loads: eng.registry.stats.loads,
-        batches: batches.len(),
-        p95_ms: eng.latencies.percentile("(all)", 0.95)
-            .unwrap_or(0.0) * 1e3,
+fn engine_for(tr: &Trace, adapters_dir: Option<&Path>) -> ServeEngine {
+    let model = bench_model();
+    let base = BaseModel::synthetic(&model, 7);
+    let mut reg = match adapters_dir {
+        // Capacity below the tenant count: an interleaved dispatch
+        // order thrashes the cache, a coalescing one loads each
+        // adapter ~once per residency.
+        Some(dir) => AdapterRegistry::with_dir(dir,
+                                               (N_TENANTS / 2).max(2)),
+        None => AdapterRegistry::new(64),
+    };
+    if adapters_dir.is_none() {
+        for name in tr.pool.names() {
+            reg.insert(PacaAdapter::synthetic(name, &model, RANK, 11));
+        }
     }
+    ServeEngine::new(base, reg, Box::<HostBackend>::default(),
+                     tr.pool.clone())
+}
+
+struct OnlineResult {
+    swaps: u64,
+    offline_swaps: usize,
+    queue_p50_ms: f64,
+    queue_p99_ms: f64,
+    e2e_p99_ms: f64,
+    misses: u64,
+    deadline_total: u64,
+    virt_req_per_s: f64,
+    wall_req_per_s: f64,
+    loads: u64,
+}
+
+fn run_online(policy: Policy, clock: ClockModel,
+              adapters_dir: Option<&Path>) -> OnlineResult {
+    let tr = bursty_trace();
+    let offline_swaps = swap_count(
+        &plan(tr.requests.clone(), BATCH, policy));
+    let mut eng = engine_for(&tr, adapters_dir);
+    let mut sched = OnlineScheduler::new(tr.requests, tr.pool.len(),
+                                         BATCH, policy);
+    eng.serve_online(&mut sched, clock).expect("serve");
+    eng.finish().expect("bit-exact base restore");
+    assert_eq!(eng.stats.requests as usize, N_REQUESTS,
+               "every request must be served exactly once");
+    let pq = |rec: &paca::metrics::LatencyRecorder, q: f64| {
+        rec.percentile("(all)", q).unwrap_or(0.0) * 1e3
+    };
+    OnlineResult {
+        swaps: eng.stats.swaps,
+        offline_swaps,
+        queue_p50_ms: pq(&eng.queueing, 0.50),
+        queue_p99_ms: pq(&eng.queueing, 0.99),
+        e2e_p99_ms: pq(&eng.e2e, 0.99),
+        misses: eng.stats.deadline_misses,
+        deadline_total: eng.stats.deadline_total,
+        virt_req_per_s: eng.virtual_req_per_s(),
+        wall_req_per_s: eng.throughput_req_per_s(),
+        loads: eng.registry.stats.loads,
+    }
+}
+
+/// Replay the offline plan through the engine against a
+/// capacity-bounded disk registry; returns (swaps, cold loads).
+fn run_offline_replay(policy: Policy,
+                      adapters_dir: &Path) -> (u64, u64) {
+    let tr = bursty_trace();
+    let batches = plan(tr.requests.clone(), BATCH, policy);
+    let mut eng = engine_for(&tr, Some(adapters_dir));
+    eng.serve(&batches).expect("offline replay");
+    eng.finish().expect("bit-exact base restore");
+    (eng.stats.swaps, eng.registry.stats.loads)
 }
 
 fn main() {
     let model = bench_model();
+
+    // Shared on-disk adapter store for the registry-bounded sections.
     let adapters_dir = std::env::temp_dir().join(format!(
         "paca-serve-bench-{}", std::process::id()));
     std::fs::create_dir_all(&adapters_dir).unwrap();
-    let max_tenants = 16;
-    for i in 0..max_tenants {
-        let t = trace::tenant_name(i);
-        PacaAdapter::synthetic(&t, &model, RANK, 11)
-            .save(&AdapterRegistry::adapter_path(&adapters_dir, &t))
+    for name in bursty_trace().pool.names() {
+        PacaAdapter::synthetic(name, &model, RANK, 11)
+            .save(&AdapterRegistry::adapter_path(&adapters_dir, name))
             .unwrap();
     }
 
-    println!("== serve throughput: {} requests, rank {RANK}, d={} ==",
-             N_REQUESTS, model.d_model);
-    println!("{:>8} {:>6} {:>11} {:>9} {:>7} {:>7} {:>9} {:>9}",
-             "tenants", "batch", "policy", "req/s", "swaps", "loads",
-             "batches", "p95 ms");
-
-    let mut results: Vec<Json> = Vec::new();
-    for &n_tenants in &[4usize, 16] {
-        for &batch in &[1usize, 4, 16] {
-            let mut per_policy = BTreeMap::new();
-            for policy in [Policy::Fifo, Policy::SwapAware] {
-                let r = run_once(&model, &adapters_dir, n_tenants,
-                                 batch, policy);
-                println!("{:>8} {:>6} {:>11} {:>9.1} {:>7} {:>7} \
-                          {:>9} {:>9.3}",
-                         n_tenants, batch, policy.name(), r.req_per_s,
-                         r.swaps, r.loads, r.batches, r.p95_ms);
-                let mut obj = BTreeMap::new();
-                obj.insert("tenants".into(),
-                           Json::Num(n_tenants as f64));
-                obj.insert("batch".into(), Json::Num(batch as f64));
-                obj.insert("policy".into(),
-                           Json::Str(policy.name().into()));
-                obj.insert("req_per_s".into(), Json::Num(r.req_per_s));
-                obj.insert("tok_per_s".into(), Json::Num(r.tok_per_s));
-                obj.insert("swaps".into(), Json::Num(r.swaps as f64));
-                obj.insert("loads".into(), Json::Num(r.loads as f64));
-                obj.insert("p95_ms".into(), Json::Num(r.p95_ms));
-                results.push(Json::Obj(obj));
-                per_policy.insert(policy.name(), r);
-            }
-            let fifo = &per_policy["fifo"];
-            let aware = &per_policy["swap-aware"];
-            // Deterministic invariant: grouping can only reduce swaps
-            // and cold loads.
-            assert!(aware.swaps <= fifo.swaps,
-                    "swap-aware must not add swaps");
-            assert!(aware.loads <= fifo.loads,
-                    "swap-aware must not add registry loads");
-            println!("{:>8} {:>6} {:>11} {:>+8.1}%  \
-                      (swaps {} -> {}, loads {} -> {})",
-                     "", "", "speedup",
-                     (aware.req_per_s / fifo.req_per_s - 1.0) * 100.0,
-                     fifo.swaps, aware.swaps, fifo.loads, aware.loads);
+    // ---- 1. Online/offline anchor: fully-arrived queues. ----------
+    println!("== anchor: online scheduler vs offline plan \
+              (fully-arrived queue) ==");
+    for policy in [Policy::Fifo, Policy::SwapAware] {
+        let tr = bursty_trace();
+        let offline = plan(tr.requests.clone(), BATCH, policy);
+        let mut sched = OnlineScheduler::new(
+            tr.requests, tr.pool.len(), BATCH, policy);
+        let online = sched.drain_fully_arrived();
+        assert_eq!(online.len(), offline.len(),
+                   "{policy:?}: batch counts diverge");
+        assert_eq!(swap_count(&online), swap_count(&offline),
+                   "{policy:?}: swap counts diverge");
+        for (a, b) in online.iter().zip(&offline) {
+            assert_eq!(a.tenant, b.tenant, "{policy:?}");
+            assert_eq!(a.requests.len(), b.requests.len(),
+                       "{policy:?}");
         }
+        println!("  {:>10}: {} batches, {} swaps — online == offline",
+                 policy.name(), offline.len(), swap_count(&offline));
     }
 
-    // The headline comparison: interleaved tenants, per-request
-    // batches, thrashing registry — swap-aware should win on wall
-    // clock. Wall-clock comparisons are noise-prone on shared CI
-    // runners, so this is a hard failure only under
-    // PACA_BENCH_STRICT=1 (the swap/load-count asserts above are the
-    // deterministic invariant).
-    let fifo = run_once(&model, &adapters_dir, 16, 1, Policy::Fifo);
-    let aware = run_once(&model, &adapters_dir, 16, 1,
-                         Policy::SwapAware);
-    println!("\nheadline (16 tenants, batch 1): fifo {:.1} req/s vs \
-              swap-aware {:.1} req/s ({:+.1}%)",
-             fifo.req_per_s, aware.req_per_s,
-             (aware.req_per_s / fifo.req_per_s - 1.0) * 100.0);
-    if aware.req_per_s <= fifo.req_per_s {
+    // ---- 1b. Offline plan replay under a thrashing registry: the
+    // planner's deterministic invariant — grouping can only reduce
+    // swaps and cold loads (swap-aware touches each tenant once, so
+    // it loads each adapter exactly once).
+    println!("\n== offline plan replay (registry capacity {} of \
+              {N_TENANTS} tenants) ==", (N_TENANTS / 2).max(2));
+    let (fifo_sw, fifo_ld) = run_offline_replay(Policy::Fifo,
+                                                &adapters_dir);
+    let (aware_sw, aware_ld) = run_offline_replay(Policy::SwapAware,
+                                                  &adapters_dir);
+    println!("  fifo: {fifo_sw} swaps, {fifo_ld} loads | swap-aware: \
+              {aware_sw} swaps, {aware_ld} loads");
+    assert!(aware_sw <= fifo_sw,
+            "offline swap-aware must not add swaps");
+    assert!(aware_ld <= fifo_ld,
+            "offline swap-aware must not add registry loads: \
+             {aware_ld} !<= {fifo_ld}");
+    let mut results: Vec<Json> = Vec::new();
+    for (policy, sw, ld) in [("fifo", fifo_sw, fifo_ld),
+                             ("swap-aware", aware_sw, aware_ld)] {
+        let mut obj = BTreeMap::new();
+        obj.insert("policy".into(), Json::Str(policy.into()));
+        obj.insert("clock".into(), Json::Str("offline-replay".into()));
+        obj.insert("swaps".into(), Json::Num(sw as f64));
+        obj.insert("loads".into(), Json::Num(ld as f64));
+        results.push(Json::Obj(obj));
+    }
+
+    // ---- 2. Online continuous batching, analytic clock. -----------
+    println!("\n== online pipeline: bursty trace ({N_REQUESTS} reqs, \
+              {N_TENANTS} tenants, 60ms deadlines, analytic clock) ==");
+    println!("{:>11} {:>6} {:>9} {:>10} {:>10} {:>10} {:>9} {:>11}",
+             "policy", "swaps", "off.swaps", "q p50 ms", "q p99 ms",
+             "e2e p99", "misses", "virt req/s");
+    let mut by_policy: BTreeMap<&str, OnlineResult> = BTreeMap::new();
+    for policy in Policy::ALL {
+        let r = run_online(policy, CLOCK, None);
+        println!("{:>11} {:>6} {:>9} {:>10.3} {:>10.3} {:>10.3} \
+                  {:>6}/{:<3} {:>11.1}",
+                 policy.name(), r.swaps, r.offline_swaps,
+                 r.queue_p50_ms, r.queue_p99_ms, r.e2e_p99_ms,
+                 r.misses, r.deadline_total, r.virt_req_per_s);
+        let mut obj = BTreeMap::new();
+        obj.insert("policy".into(), Json::Str(policy.name().into()));
+        obj.insert("clock".into(), Json::Str("analytic".into()));
+        obj.insert("swaps".into(), Json::Num(r.swaps as f64));
+        obj.insert("offline_swaps".into(),
+                   Json::Num(r.offline_swaps as f64));
+        obj.insert("queue_p50_ms".into(), Json::Num(r.queue_p50_ms));
+        obj.insert("queue_p99_ms".into(), Json::Num(r.queue_p99_ms));
+        obj.insert("e2e_p99_ms".into(), Json::Num(r.e2e_p99_ms));
+        obj.insert("deadline_misses".into(),
+                   Json::Num(r.misses as f64));
+        obj.insert("deadline_total".into(),
+                   Json::Num(r.deadline_total as f64));
+        obj.insert("virt_req_per_s".into(),
+                   Json::Num(r.virt_req_per_s));
+        results.push(Json::Obj(obj));
+        by_policy.insert(policy.name(), r);
+    }
+
+    // Deterministic invariants of the analytic-clock runs.
+    let fifo = &by_policy["fifo"];
+    let aware = &by_policy["swap-aware"];
+    let slo = &by_policy["slo-aware"];
+    assert!(aware.swaps <= fifo.swaps,
+            "swap-aware must not add swaps over fifo");
+    assert!(slo.misses < fifo.misses,
+            "slo-aware must reduce deadline misses vs fifo on the \
+             bursty trace: {} !< {}", slo.misses, fifo.misses);
+    assert!(slo.queue_p99_ms < fifo.queue_p99_ms,
+            "slo-aware must cut tail queueing vs fifo: {} !< {}",
+            slo.queue_p99_ms, fifo.queue_p99_ms);
+    assert_eq!(fifo.deadline_total as usize, N_REQUESTS);
+    println!("\nslo-aware vs fifo: misses {} -> {} ({:.0}% fewer), \
+              queue p99 {:.1}ms -> {:.1}ms",
+             fifo.misses, slo.misses,
+             100.0 * (fifo.misses - slo.misses) as f64
+                 / (fifo.misses as f64).max(1.0),
+             fifo.queue_p99_ms, slo.queue_p99_ms);
+
+    // ---- 3. Measured wall-clock host serving, thrashing registry. -
+    println!("\n== measured host-GEMM wall clock (registry capacity \
+              {} of {N_TENANTS} tenants) ==", (N_TENANTS / 2).max(2));
+    println!("{:>11} {:>9} {:>7} {:>7}", "policy", "req/s", "swaps",
+             "loads");
+    let mut measured: BTreeMap<&str, OnlineResult> = BTreeMap::new();
+    for policy in Policy::ALL {
+        let r = run_online(policy, ClockModel::Measured,
+                           Some(adapters_dir.as_path()));
+        println!("{:>11} {:>9.1} {:>7} {:>7}", policy.name(),
+                 r.wall_req_per_s, r.swaps, r.loads);
+        let mut obj = BTreeMap::new();
+        obj.insert("policy".into(), Json::Str(policy.name().into()));
+        obj.insert("clock".into(), Json::Str("measured".into()));
+        obj.insert("req_per_s".into(), Json::Num(r.wall_req_per_s));
+        obj.insert("swaps".into(), Json::Num(r.swaps as f64));
+        obj.insert("loads".into(), Json::Num(r.loads as f64));
+        results.push(Json::Obj(obj));
+        measured.insert(policy.name(), r);
+    }
+    // Wall-clock comparisons are noise-prone on shared CI runners, so
+    // this is a hard failure only under PACA_BENCH_STRICT=1; the
+    // analytic-clock asserts above are the deterministic invariant.
+    let (f, a) = (&measured["fifo"], &measured["swap-aware"]);
+    if a.wall_req_per_s <= f.wall_req_per_s {
         let msg = format!(
-            "swap-aware batching did not beat FIFO on the mixed-tenant \
-             trace: {} vs {} req/s", aware.req_per_s, fifo.req_per_s);
+            "swap-aware did not beat FIFO on measured wall clock: \
+             {:.1} vs {:.1} req/s", a.wall_req_per_s,
+            f.wall_req_per_s);
         if std::env::var("PACA_BENCH_STRICT").is_ok() {
             panic!("{msg}");
         }
         println!("WARNING: {msg} (timing noise on this host?)");
     }
 
-    // Sanity: plans are equivalent workloads.
-    let spec = TraceSpec { n_requests: N_REQUESTS, n_tenants: 16,
-                           mean_tokens: MEAN_TOKENS,
-                           ..Default::default() };
-    let reqs = trace::synthesize(&spec);
-    assert!(swap_count(&plan(&reqs, 1, Policy::SwapAware))
-            <= swap_count(&plan(&reqs, 1, Policy::Fifo)));
-
     let mut root = BTreeMap::new();
     root.insert("bench".into(), Json::Str("serve_throughput".into()));
     root.insert("model".into(), Json::Str(model.name.clone()));
     root.insert("rank".into(), Json::Num(RANK as f64));
     root.insert("requests".into(), Json::Num(N_REQUESTS as f64));
+    root.insert("batch".into(), Json::Num(BATCH as f64));
     root.insert("results".into(), Json::Arr(results));
     std::fs::write("BENCH_serve.json", Json::Obj(root).to_string())
         .unwrap();

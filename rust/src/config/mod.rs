@@ -145,7 +145,7 @@ pub struct ServeConfig {
     pub requests: String,
     /// Max requests coalesced per same-tenant batch.
     pub batch: usize,
-    /// Scheduling policy: "fifo" | "swap-aware".
+    /// Scheduling policy: "fifo" | "swap-aware" | "slo-aware".
     pub policy: String,
     /// Tenant count when synthesizing adapters/trace.
     pub tenants: usize,
@@ -160,6 +160,11 @@ pub struct ServeConfig {
     pub backend: String,
     /// Mean prompt length for synthesized requests.
     pub mean_tokens: usize,
+    /// Mean per-request deadline (ms after arrival) for synthesized
+    /// traces; 0 = no SLOs.
+    pub deadline_ms: f64,
+    /// Arrival burstiness for synthesized traces (1 = pure Poisson).
+    pub burstiness: f64,
 }
 
 impl Default for ServeConfig {
@@ -176,6 +181,8 @@ impl Default for ServeConfig {
             capacity: 64,
             backend: "auto".into(),
             mean_tokens: 64,
+            deadline_ms: 0.0,
+            burstiness: 1.0,
         }
     }
 }
@@ -206,6 +213,22 @@ impl ServeConfig {
             capacity: u("serve.capacity", d.capacity)?,
             backend: doc.str_or("serve.backend", &d.backend).to_string(),
             mean_tokens: u("serve.mean_tokens", d.mean_tokens)?,
+            deadline_ms: {
+                let v = doc.f64_or("serve.deadline_ms", d.deadline_ms);
+                if v < 0.0 {
+                    return Err(anyhow!(
+                        "serve.deadline_ms must be >= 0, got {v}"));
+                }
+                v
+            },
+            burstiness: {
+                let v = doc.f64_or("serve.burstiness", d.burstiness);
+                if v < 1.0 {
+                    return Err(anyhow!(
+                        "serve.burstiness must be >= 1, got {v}"));
+                }
+                v
+            },
         })
     }
 
@@ -226,6 +249,22 @@ impl ServeConfig {
             "serve.backend" | "backend" => self.backend = v.into(),
             "serve.mean_tokens" | "mean-tokens" => {
                 self.mean_tokens = v.parse()?
+            }
+            "serve.deadline_ms" | "deadline-ms" | "deadline_ms" => {
+                let d: f64 = v.parse()?;
+                if d < 0.0 {
+                    return Err(anyhow!(
+                        "deadline-ms must be >= 0, got {d}"));
+                }
+                self.deadline_ms = d;
+            }
+            "serve.burstiness" | "burstiness" => {
+                let b: f64 = v.parse()?;
+                if b < 1.0 {
+                    return Err(anyhow!(
+                        "burstiness must be >= 1, got {b}"));
+                }
+                self.burstiness = b;
             }
             other => {
                 return Err(anyhow!("unknown serve config key {other:?}"))
@@ -311,6 +350,28 @@ mod tests {
         assert_eq!(c.tenants, 32);
         assert!(c.apply_override("bogus=1").is_err());
         assert!(c.apply_override("no-equals").is_err());
+    }
+
+    #[test]
+    fn serve_slo_keys() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.deadline_ms, 0.0);
+        assert_eq!(c.burstiness, 1.0);
+        c.apply_override("deadline-ms=75.5").unwrap();
+        c.apply_override("burstiness=4").unwrap();
+        c.apply_override("policy=slo-aware").unwrap();
+        assert_eq!(c.deadline_ms, 75.5);
+        assert_eq!(c.burstiness, 4.0);
+        assert!(c.apply_override("deadline-ms=-1").is_err());
+        assert!(c.apply_override("burstiness=0.5").is_err(),
+                "sub-Poisson burstiness is not a thing here");
+        let doc = TomlDoc::parse(
+            "[serve]\ndeadline_ms = 50\nburstiness = 2.5\n").unwrap();
+        let c = ServeConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.deadline_ms, 50.0);
+        assert_eq!(c.burstiness, 2.5);
+        let bad = TomlDoc::parse("[serve]\nburstiness = 0\n").unwrap();
+        assert!(ServeConfig::from_doc(&bad).is_err());
     }
 
     #[test]

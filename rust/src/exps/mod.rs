@@ -473,39 +473,59 @@ pub fn serve_exp(rt: &Runtime, quick: bool) -> Result<String> {
     out.push_str("Projected (serving cost model):\n");
     out.push_str(&cost::comparison_table(&m8b, 64, 512));
 
-    // (b) measured on the host serving engine, mixed-tenant trace.
+    out.push_str("\nLatency vs load (M/D/1 queueing on the serving \
+                  cost model):\n");
+    out.push_str(&cost::latency_table(&m8b, 64, 8, 512));
+
+    // (b) measured on the host serving engine: the online
+    // continuous-batching pipeline over a bursty SLO trace, per
+    // policy, on the deterministic analytic clock.
     let spec = trace::TraceSpec {
         n_requests: if quick { 64 } else { 256 },
         n_tenants: 8,
+        deadline_ms: 60.0,
+        burstiness: 3.0,
         ..Default::default()
     };
-    let requests = trace::synthesize(&spec);
     let model = engine::tiny_model();
-    let mut t = Table::new(&["Policy", "Batches", "Swaps", "req/s",
-                             "p95 ms"]);
-    for policy in [scheduler::Policy::Fifo,
-                   scheduler::Policy::SwapAware] {
+    let mut t = Table::new(&["Policy", "Swaps", "Offline swaps",
+                             "queue p50 ms", "queue p99 ms",
+                             "misses", "virt req/s"]);
+    for policy in scheduler::Policy::ALL {
+        let tr = trace::synthesize(&spec);
         let base = engine::BaseModel::synthetic(&model, 7);
         let mut reg = registry::AdapterRegistry::new(64);
-        for i in 0..spec.n_tenants {
+        for name in tr.pool.names() {
             reg.insert(registry::PacaAdapter::synthetic(
-                &trace::tenant_name(i), &model, 8, 11));
+                name, &model, 8, 11));
         }
-        let mut eng = engine::ServeEngine::new(base, reg,
-                                               engine::Backend::Host);
-        let batches = scheduler::plan(&requests, 8, policy);
-        eng.serve(&batches)?;
+        let offline_swaps = scheduler::swap_count(
+            &scheduler::plan(tr.requests.clone(), 8, policy));
+        let n_ids = tr.pool.len();
+        let mut eng = engine::ServeEngine::new(
+            base, reg, Box::<engine::HostBackend>::default(),
+            tr.pool);
+        let mut sched = scheduler::OnlineScheduler::new(
+            tr.requests, n_ids, 8, policy);
+        eng.serve_online(&mut sched, engine::ClockModel::Analytic {
+            swap_s: 2e-3, batch_s: 5e-4, token_s: 2e-5,
+        })?;
         eng.finish()?; // bit-exact base restore, every policy
+        let pq = |q: f64| format!(
+            "{:.3}", eng.queueing.percentile("(all)", q)
+                .unwrap_or(0.0) * 1e3);
         t.row(&[policy.name().to_string(),
-                batches.len().to_string(),
                 eng.stats.swaps.to_string(),
-                format!("{:.0}", eng.throughput_req_per_s()),
-                format!("{:.3}",
-                        eng.latencies.percentile("(all)", 0.95)
-                            .unwrap_or(0.0) * 1e3)]);
+                offline_swaps.to_string(),
+                pq(0.50),
+                pq(0.99),
+                format!("{}/{}", eng.stats.deadline_misses,
+                        eng.stats.deadline_total),
+                format!("{:.0}", eng.virtual_req_per_s())]);
     }
-    out.push_str("\nMeasured (host engine, tiny base, 8 tenants, \
-                  mixed trace):\n\n");
+    out.push_str("\nMeasured (host engine, online continuous \
+                  batching, bursty 8-tenant trace, 60ms deadlines, \
+                  analytic clock):\n\n");
     out.push_str(&t.render());
     Ok(out)
 }

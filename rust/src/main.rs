@@ -55,7 +55,7 @@ fn is_flag_token(s: &str) -> bool {
     }
     match s.strip_prefix('-') {
         Some(rest) => !rest.chars().next()
-            .map_or(false, |c| c.is_ascii_digit() || c == '.'),
+            .is_some_and(|c| c.is_ascii_digit() || c == '.'),
         None => false,
     }
 }
@@ -102,9 +102,13 @@ fn usage() -> &'static str {
      paca memory --model llama3-8b --method paca --rank 8 \\\n\
      \x20          [--batch 8] [--seq 512]\n\
      paca serve [--adapters dir] [--requests trace.jsonl] [--batch 8] \\\n\
-     \x20          [--policy swap-aware|fifo] [--tenants 8] [--count 256] \\\n\
-     \x20          [--rank 8] [--capacity 64] [--backend auto|host|pjrt]\n\
-     \x20          # missing trace/adapters are synthesized and saved\n\
+     \x20          [--policy swap-aware|fifo|slo-aware] [--tenants 8] \\\n\
+     \x20          [--count 256] [--rank 8] [--capacity 64] \\\n\
+     \x20          [--backend auto|host|pjrt] [--deadline-ms 0] \\\n\
+     \x20          [--burstiness 1]\n\
+     \x20          # online continuous batching over the trace's\n\
+     \x20          # arrival times; missing trace/adapters are\n\
+     \x20          # synthesized and saved\n\
      paca selftest"
 }
 
@@ -275,19 +279,29 @@ fn memory_cmd(flags: &Flags) -> Result<()> {
 /// first lowered eval artifact (compiles it, so a stub xla build
 /// fails here — which "auto" catches and downgrades to host).
 fn pjrt_backend(seed: u64) -> Result<(paca::manifest::ModelInfo,
-                                      engine::Backend)> {
+                                      Box<dyn engine::ForwardBackend>)> {
     let rt = open_runtime()?;
     let eval = rt.manifest.artifacts.values()
         .find(|a| a.kind == "eval_step")
         .ok_or_else(|| anyhow!("no eval artifact in manifest"))?;
     let model = rt.manifest.model(&eval.model)?.clone();
     let fw = engine::PjrtForward::new(&rt, &model.name, seed)?;
-    Ok((model, engine::Backend::Pjrt(fw)))
+    Ok((model, Box::new(fw)))
+}
+
+fn host_backend() -> (paca::manifest::ModelInfo,
+                      Box<dyn engine::ForwardBackend>) {
+    (engine::tiny_model(), Box::<engine::HostBackend>::default())
 }
 
 /// `paca serve`: multi-tenant adapter serving over one shared frozen
-/// base (serve/). Synthesizes the trace and any missing tenant
-/// adapters on first run, so it works end-to-end on a fresh checkout.
+/// base (serve/), driven as an ONLINE continuous-batching pipeline —
+/// requests are admitted as their trace arrival times pass, and the
+/// scheduler makes incremental swap-aware (or SLO-aware) dispatch
+/// decisions. The offline one-shot planner's swap counts are printed
+/// as the comparison baseline. Synthesizes the trace and any missing
+/// tenant adapters on first run, so it works end-to-end on a fresh
+/// checkout.
 fn serve_cmd(flags: &Flags) -> Result<()> {
     let mut cfg = if let Some(path) = flags.named.get("config") {
         let src = std::fs::read_to_string(path)
@@ -327,36 +341,38 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
 
     // Request trace: load, or synthesize + persist for reproducibility.
     let trace_path = Path::new(&cfg.requests);
-    let requests = if trace_path.exists() {
-        let reqs = trace::read_jsonl(trace_path)?;
-        println!("loaded {} requests from {}", reqs.len(),
+    let tr = if trace_path.exists() {
+        let tr = trace::read_jsonl(trace_path)?;
+        println!("loaded {} requests from {}", tr.len(),
                  trace_path.display());
-        reqs
+        tr
     } else {
         let spec = trace::TraceSpec {
             n_requests: cfg.count,
             n_tenants: cfg.tenants,
             mean_tokens: cfg.mean_tokens,
+            deadline_ms: cfg.deadline_ms,
+            burstiness: cfg.burstiness,
             seed: cfg.seed,
             ..Default::default()
         };
-        let reqs = trace::synthesize(&spec);
-        trace::write_jsonl(trace_path, &reqs)?;
+        let tr = trace::synthesize(&spec);
+        trace::write_jsonl(trace_path, &tr)?;
         println!("synthesized {} requests over {} tenants -> {}",
-                 reqs.len(), cfg.tenants, trace_path.display());
-        reqs
+                 tr.len(), cfg.tenants, trace_path.display());
+        tr
     };
-    if requests.is_empty() {
+    if tr.is_empty() {
         bail!("trace {} has no requests", trace_path.display());
     }
-    let tenants = trace::tenants(&requests);
+    let tenants = tr.tenant_names();
 
     // Backend: the PJRT eval artifact when lowered, else the host GEMM
     // reference path (always available). "auto" falls back to host on
     // ANY pjrt failure (missing artifacts, stub xla build, …).
     let artifacts_dir = paca::default_artifacts_dir();
     let (model, backend) = match cfg.backend.as_str() {
-        "host" => (engine::tiny_model(), engine::Backend::Host),
+        "host" => host_backend(),
         "pjrt" => pjrt_backend(cfg.seed)?,
         "auto" => {
             if Runtime::artifacts_present(&artifacts_dir) {
@@ -365,11 +381,11 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
                     Err(e) => {
                         println!("note: pjrt backend unavailable \
                                   ({e:#}); falling back to host");
-                        (engine::tiny_model(), engine::Backend::Host)
+                        host_backend()
                     }
                 }
             } else {
-                (engine::tiny_model(), engine::Backend::Host)
+                host_backend()
             }
         }
         other => bail!("unknown backend {other:?} (auto|host|pjrt)"),
@@ -401,29 +417,34 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
 
     let base = engine::BaseModel::synthetic(&model, cfg.seed);
     println!("serving {}: {} tenants over one {:.1}MB shared base \
-              ({} target weights) | backend {} | batch {} | policy {}",
+              ({} target weights) | backend {} | batch {} | policy {} \
+              | trace span {:.2}s",
              model.name, tenants.len(), base.bytes() as f64 / 1e6,
              base.weights.len(), backend.name(), cfg.batch,
-             policy.name());
+             policy.name(), tr.span_s());
 
-    let batches = scheduler::plan(&requests, cfg.batch, policy);
-    let alt = match policy {
-        scheduler::Policy::Fifo => scheduler::Policy::SwapAware,
-        scheduler::Policy::SwapAware => scheduler::Policy::Fifo,
-    };
-    let alt_swaps = scheduler::swap_count(
-        &scheduler::plan(&requests, cfg.batch, alt));
-    println!("plan: {} batches, {} adapter swaps ({} would need {})",
-             batches.len(), scheduler::swap_count(&batches),
-             alt.name(), alt_swaps);
+    // Offline baseline: what the one-shot planner would do with the
+    // whole queue in hand, per policy.
+    for p in scheduler::Policy::ALL {
+        let plan = scheduler::plan(tr.requests.clone(), cfg.batch, p);
+        println!("offline plan [{:>10}]: {} batches, {} adapter swaps",
+                 p.name(), plan.len(), scheduler::swap_count(&plan));
+    }
 
-    let mut eng = engine::ServeEngine::new(base, reg, backend);
-    eng.serve(&batches).map_err(|e| {
-        e.context(format!(
-            "serving failed — if the adapters in {} were created for \
-             a different model geometry, delete that directory and \
-             re-run", adapters_dir.display()))
-    })?;
+    // The online pipeline: admission by arrival time, incremental
+    // dispatch, measured service times on the virtual clock.
+    let n_tenant_ids = tr.pool.len();
+    let mut eng = engine::ServeEngine::new(base, reg, backend,
+                                           tr.pool);
+    let mut sched = scheduler::OnlineScheduler::new(
+        tr.requests, n_tenant_ids, cfg.batch, policy);
+    eng.serve_online(&mut sched, engine::ClockModel::Measured)
+        .map_err(|e| {
+            e.context(format!(
+                "serving failed — if the adapters in {} were created \
+                 for a different model geometry, delete that \
+                 directory and re-run", adapters_dir.display()))
+        })?;
     eng.finish()?;
     println!("\n{}", eng.report());
     println!("shared frozen base restored bit-exactly after un-merge \
@@ -431,6 +452,8 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
 
     println!("\nProjected at paper scale (serving cost model):");
     println!("{}", cost::comparison_table(&cost::llama3_8b(), 64, 512));
+    println!("{}", cost::latency_table(&cost::llama3_8b(), 64,
+                                       cfg.batch.max(1), 512));
     Ok(())
 }
 

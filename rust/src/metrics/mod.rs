@@ -148,6 +148,110 @@ impl LatencyRecorder {
     }
 }
 
+/// One row per tenant key shared by the recorders: the serving
+/// latency decomposition (queueing delay vs service time vs
+/// end-to-end), p50/p99 in milliseconds. Keys present in `e2e` drive
+/// the row set; the other recorders contribute blanks when missing.
+pub fn latency_breakdown_table(queueing: &LatencyRecorder,
+                               service: &LatencyRecorder,
+                               e2e: &LatencyRecorder,
+                               key_header: &str) -> Table {
+    let mut t = Table::new(&[key_header, "n", "queue p50", "queue p99",
+                             "service p50", "e2e p50", "e2e p99"]);
+    let ms = |v: Option<f64>| match v {
+        Some(v) => format!("{:.3}ms", v * 1e3),
+        None => "-".to_string(),
+    };
+    for key in e2e.keys() {
+        t.row(&[key.to_string(),
+                e2e.count(key).to_string(),
+                ms(queueing.percentile(key, 0.50)),
+                ms(queueing.percentile(key, 0.99)),
+                ms(service.percentile(key, 0.50)),
+                ms(e2e.percentile(key, 0.50)),
+                ms(e2e.percentile(key, 0.99))]);
+    }
+    t
+}
+
+/// Completions binned into fixed-width wall/virtual-clock buckets —
+/// the time-resolved view of serving throughput (bursts and recovery
+/// are invisible in a single aggregate req/s number).
+#[derive(Debug, Clone)]
+pub struct ThroughputTimeline {
+    bucket_s: f64,
+    requests: Vec<u64>,
+    tokens: Vec<u64>,
+}
+
+impl ThroughputTimeline {
+    pub fn new(bucket_s: f64) -> ThroughputTimeline {
+        assert!(bucket_s > 0.0);
+        ThroughputTimeline { bucket_s, requests: Vec::new(),
+                             tokens: Vec::new() }
+    }
+
+    pub fn bucket_s(&self) -> f64 {
+        self.bucket_s
+    }
+
+    /// Record `requests`/`tokens` completing at time `t_s`.
+    pub fn record(&mut self, t_s: f64, requests: u64, tokens: u64) {
+        // Cap the index so one absurd timestamp cannot OOM the
+        // timeline.
+        let i = ((t_s.max(0.0) / self.bucket_s) as usize)
+            .min(1_000_000);
+        if i >= self.requests.len() {
+            self.requests.resize(i + 1, 0);
+            self.tokens.resize(i + 1, 0);
+        }
+        self.requests[i] += requests;
+        self.tokens[i] += tokens;
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    pub fn total_requests(&self) -> u64 {
+        self.requests.iter().sum()
+    }
+
+    /// Highest single-bucket completion rate, req/s.
+    pub fn peak_req_per_s(&self) -> f64 {
+        self.requests.iter().copied().max().unwrap_or(0) as f64
+            / self.bucket_s
+    }
+
+    /// Mean completion rate over the recorded span, req/s.
+    pub fn mean_req_per_s(&self) -> f64 {
+        if self.requests.is_empty() {
+            return 0.0;
+        }
+        self.total_requests() as f64
+            / (self.requests.len() as f64 * self.bucket_s)
+    }
+
+    /// One row per bucket: [t0, t1), completions, req/s, tok/s.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(&["window", "done", "req/s", "tok/s"]);
+        for (i, (&n, &tok)) in self.requests.iter()
+            .zip(&self.tokens).enumerate()
+        {
+            t.row(&[format!("{:.2}-{:.2}s", i as f64 * self.bucket_s,
+                            (i + 1) as f64 * self.bucket_s),
+                    n.to_string(),
+                    format!("{:.1}", n as f64 / self.bucket_s),
+                    format!("{:.0}", tok as f64 / self.bucket_s)]);
+        }
+        t
+    }
+}
+
 /// Fixed-width markdown table builder for the experiment reports.
 #[derive(Debug, Default)]
 pub struct Table {
@@ -262,6 +366,44 @@ mod tests {
                 >= r.percentile("t0", 0.5).unwrap());
         let tbl = r.table("tenant").render();
         assert!(tbl.contains("t0") && tbl.contains("t1"));
+    }
+
+    #[test]
+    fn throughput_timeline_buckets_and_rates() {
+        let mut tl = ThroughputTimeline::new(0.1);
+        assert!(tl.is_empty());
+        tl.record(0.05, 2, 64);
+        tl.record(0.09, 1, 32);
+        tl.record(0.31, 4, 128);
+        assert_eq!(tl.n_buckets(), 4, "0.31 lands in bucket 3");
+        assert_eq!(tl.total_requests(), 7);
+        assert!((tl.peak_req_per_s() - 40.0).abs() < 1e-9,
+                "4 completions in a 0.1s bucket");
+        assert!((tl.mean_req_per_s() - 7.0 / 0.4).abs() < 1e-9);
+        // Negative timestamps clamp into bucket 0 instead of
+        // panicking.
+        tl.record(-1.0, 1, 1);
+        assert_eq!(tl.total_requests(), 8);
+        let r = tl.table().render();
+        assert!(r.contains("req/s"));
+        assert_eq!(r.lines().count(), 2 + 4);
+    }
+
+    #[test]
+    fn latency_breakdown_renders_queue_vs_service() {
+        let mut q = LatencyRecorder::default();
+        let mut s = LatencyRecorder::default();
+        let mut e = LatencyRecorder::default();
+        for i in 1..=10 {
+            q.record("t0", i as f64 * 1e-3);
+            s.record("t0", 2e-3);
+            e.record("t0", i as f64 * 1e-3 + 2e-3);
+        }
+        e.record("t1", 5e-3); // e2e-only key still gets a row
+        let r = latency_breakdown_table(&q, &s, &e, "tenant").render();
+        assert!(r.contains("queue p99"));
+        assert!(r.contains("t0") && r.contains("t1"));
+        assert!(r.contains('-'), "missing recorders render blanks");
     }
 
     #[test]

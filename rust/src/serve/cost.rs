@@ -118,6 +118,100 @@ pub fn serve_throughput_tok_per_s(dev: &DeviceProfile, m: &ModelInfo,
         * seq as f64
 }
 
+/// Mean per-request service time at the given batch geometry,
+/// including the amortized per-batch adapter swap on the merged path.
+pub fn service_time_per_req_s(dev: &DeviceProfile, m: &ModelInfo,
+                              path: ServePath, rank: usize,
+                              batch: usize, seq: usize) -> f64 {
+    let per_batch = match path {
+        ServePath::Merged => {
+            forward_time(dev, m, path, rank, batch, seq)
+                + adapter_swap_time(dev, m, rank)
+        }
+        ServePath::LoraAdapters => {
+            forward_time(dev, m, path, rank, batch, seq)
+        }
+    };
+    per_batch / batch.max(1) as f64
+}
+
+/// Mean queueing delay at offered load `req_per_s` — the analytic
+/// online term the continuous-batching pipeline made observable.
+/// Modeled as M/D/1 (Poisson arrivals, near-deterministic batch
+/// service): Wq = ρ·s / (2·(1−ρ)) with s the per-request service time
+/// and ρ = λ·s the utilization. Returns +inf at or beyond saturation:
+/// the queue grows without bound, which is exactly what the measured
+/// pipeline shows when an overloaded policy's virtual clock falls
+/// behind arrivals.
+pub fn queueing_delay_s(dev: &DeviceProfile, m: &ModelInfo,
+                        path: ServePath, rank: usize, batch: usize,
+                        seq: usize, req_per_s: f64) -> f64 {
+    let s = service_time_per_req_s(dev, m, path, rank, batch, seq);
+    let rho = req_per_s * s;
+    if rho >= 1.0 {
+        return f64::INFINITY;
+    }
+    rho * s / (2.0 * (1.0 - rho))
+}
+
+/// Mean end-to-end request latency at offered load: queueing delay
+/// plus the full batch residence time (a request completes with its
+/// batch).
+pub fn total_latency_s(dev: &DeviceProfile, m: &ModelInfo,
+                       path: ServePath, rank: usize, batch: usize,
+                       seq: usize, req_per_s: f64) -> f64 {
+    let per_batch = service_time_per_req_s(dev, m, path, rank, batch,
+                                           seq) * batch.max(1) as f64;
+    queueing_delay_s(dev, m, path, rank, batch, seq, req_per_s)
+        + per_batch
+}
+
+/// Latency-vs-load projection: queueing + total latency for both
+/// serving paths as offered load sweeps toward the merged path's
+/// saturation point. The unmerged-LoRA column saturates first (its
+/// service time is longer) — the queueing-theoretic restatement of
+/// "LoRA Is Slower Than You Think" under live traffic.
+pub fn latency_table(m: &ModelInfo, rank: usize, batch: usize,
+                     seq: usize) -> String {
+    use crate::metrics::Table;
+    let fmt_ms = |v: f64| if v.is_finite() {
+        format!("{:.1}ms", v * 1e3)
+    } else {
+        "saturated".to_string()
+    };
+    let mut out = String::new();
+    for dev in [&A100_80G, &GAUDI2] {
+        let cap = 1.0 / service_time_per_req_s(
+            dev, m, ServePath::Merged, rank, batch, seq);
+        let mut t = Table::new(&["load req/s", "utilization",
+                                 "PaCA queue", "PaCA e2e",
+                                 "LoRA queue", "LoRA e2e"]);
+        for frac in [0.2, 0.5, 0.8, 0.95] {
+            let load = frac * cap;
+            t.row(&[format!("{load:.1}"),
+                    format!("{:.0}%", frac * 100.0),
+                    fmt_ms(queueing_delay_s(
+                        dev, m, ServePath::Merged, rank, batch, seq,
+                        load)),
+                    fmt_ms(total_latency_s(
+                        dev, m, ServePath::Merged, rank, batch, seq,
+                        load)),
+                    fmt_ms(queueing_delay_s(
+                        dev, m, ServePath::LoraAdapters, rank, batch,
+                        seq, load)),
+                    fmt_ms(total_latency_s(
+                        dev, m, ServePath::LoraAdapters, rank, batch,
+                        seq, load))]);
+        }
+        out.push_str(&format!(
+            "\n{} — {} latency vs load, rank {rank}, batch {batch}, \
+             seq {seq} (loads are fractions of PaCA-merged \
+             capacity):\n\n", dev.name, m.name));
+        out.push_str(&t.render());
+    }
+    out
+}
+
 /// The `paca bench --exp serve` / `paca serve` projection block:
 /// merged-PaCA vs unmerged-LoRA serving throughput across batch sizes
 /// on both device profiles, plus the swap-amortization curve.
@@ -241,5 +335,63 @@ mod tests {
         assert!(s.contains("A100-80GB"));
         assert!(s.contains("Gaudi2"));
         assert!(s.contains("PaCA-merged"));
+    }
+
+    #[test]
+    fn queueing_delay_grows_with_load_and_saturates() {
+        let m = llama3_8b();
+        let cap = 1.0 / service_time_per_req_s(
+            &A100_80G, &m, ServePath::Merged, 64, 8, 512);
+        let q = |frac: f64| queueing_delay_s(
+            &A100_80G, &m, ServePath::Merged, 64, 8, 512, frac * cap);
+        assert!(q(0.2) > 0.0);
+        assert!(q(0.5) > q(0.2), "delay must grow with load");
+        assert!(q(0.95) > 4.0 * q(0.5),
+                "near saturation the queue blows up: {} vs {}",
+                q(0.95), q(0.5));
+        assert!(q(1.0).is_infinite(), "at saturation the queue \
+                                       diverges");
+        assert!(q(1.5).is_infinite());
+        // Vanishing load ⇒ vanishing queueing.
+        assert!(q(1e-6) < 1e-3 * q(0.5));
+    }
+
+    #[test]
+    fn merged_path_queues_less_at_equal_load() {
+        // Same offered load, shorter service time ⇒ lower utilization
+        // ⇒ less queueing AND lower end-to-end latency — and the
+        // unmerged path saturates while merged still has headroom.
+        let m = llama3_8b();
+        let cap_merged = 1.0 / service_time_per_req_s(
+            &A100_80G, &m, ServePath::Merged, 64, 8, 512);
+        let load = 0.7 * cap_merged;
+        let qm = queueing_delay_s(&A100_80G, &m, ServePath::Merged,
+                                  64, 8, 512, load);
+        let ql = queueing_delay_s(&A100_80G, &m,
+                                  ServePath::LoraAdapters, 64, 8, 512,
+                                  load);
+        assert!(qm.is_finite());
+        assert!(ql > qm, "lora queue {ql} !> paca queue {qm}");
+        assert!(total_latency_s(&A100_80G, &m, ServePath::Merged, 64,
+                                8, 512, load)
+                < total_latency_s(&A100_80G, &m,
+                                  ServePath::LoraAdapters, 64, 8, 512,
+                                  load));
+        // 0.95·merged-capacity load saturates the slower lora path on
+        // A100 (its service time is >5% longer at batch 8).
+        let near = 0.95 * cap_merged;
+        assert!(queueing_delay_s(&A100_80G, &m,
+                                 ServePath::LoraAdapters, 64, 8, 512,
+                                 near).is_infinite());
+    }
+
+    #[test]
+    fn latency_table_renders_with_saturation() {
+        let m = llama3_8b();
+        let s = latency_table(&m, 64, 8, 512);
+        assert!(s.contains("PaCA queue"));
+        assert!(s.contains("saturated"),
+                "the lora column must hit saturation at 95% of \
+                 merged capacity");
     }
 }

@@ -1,21 +1,33 @@
-//! The serving engine: swap → forward → metrics.
+//! The serving engine: admission → dispatch → swap → forward →
+//! completion.
 //!
 //! The engine owns ONE shared frozen base; per batch it hot-splices the
 //! batch tenant's `(idx, P)` adapter (registry), runs a forward over
-//! the batch tokens, and records per-request latency. Because the
+//! the batch tokens, and records per-request metrics. Because the
 //! spliced base IS the effective model, the forward is exactly the
 //! frozen model's — PaCA's zero-inference-overhead property — and the
 //! only multi-tenant cost is the swap, which the scheduler amortizes.
 //!
-//! Two forward backends:
-//!   * `Host` — a real (measured, not simulated) GEMM pipeline over the
-//!     base target weights via coordinator::merge::matmul. Always
-//!     available; what `paca serve` and the serve bench use on a fresh
-//!     checkout.
-//!   * `Pjrt` — drives the lowered method-agnostic eval artifact
-//!     (runtime::Executable) with the spliced weights, like
+//! Forwards go through the [`ForwardBackend`] trait:
+//!   * [`HostBackend`] — a real (measured, not simulated) GEMM pipeline
+//!     over the base target weights via coordinator::merge::matmul.
+//!     Always available; what `paca serve` and the serve bench use on a
+//!     fresh checkout. Clamps at [`HOST_MAX_TOKENS`]; the clamp is
+//!     surfaced in `EngineStats::truncated_tokens` and the report.
+//!   * [`PjrtForward`] — drives the lowered method-agnostic eval
+//!     artifact (runtime::Executable) with the spliced weights, like
 //!     Trainer::evaluate does after a host-side merge. Requires
 //!     `make artifacts`.
+//!
+//! Two serving modes:
+//!   * [`ServeEngine::serve`] — replay a static offline batch plan
+//!     (the baseline the online pipeline is anchored against).
+//!   * [`ServeEngine::serve_online`] — the event-driven step loop over
+//!     a virtual clock: admit arrivals, take one incremental dispatch
+//!     from the [`OnlineScheduler`], swap + forward, advance the clock
+//!     by the service time ([`ClockModel::Measured`] wall time or the
+//!     deterministic [`ClockModel::Analytic`]), account queueing delay
+//!     and deadline misses per request.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -26,18 +38,24 @@ use crate::coordinator::merge;
 use crate::data::{Task, TokenGen};
 use crate::init;
 use crate::manifest::ModelInfo;
-use crate::metrics::LatencyRecorder;
+use crate::metrics::{latency_breakdown_table, LatencyRecorder,
+                     ThroughputTimeline};
 use crate::peft::Selection;
 use crate::runtime::{Executable, Runtime};
 use crate::serve::registry::{fingerprint, AdapterRegistry, SpliceGuard,
                              WeightMap};
-use crate::serve::scheduler::Batch;
+use crate::serve::scheduler::{Batch, OnlineScheduler, TenantId,
+                              TenantPool};
 use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
 
 /// Host-backend row cap per forward (keeps debug-mode tests fast; the
-/// GEMM cost model above this point is linear anyway).
-const HOST_MAX_TOKENS: usize = 2048;
+/// GEMM cost model above this point is linear anyway). Batches over
+/// the cap are truncated — visibly: see `EngineStats`.
+pub const HOST_MAX_TOKENS: usize = 2048;
+
+/// Timeline bucket width for the time-resolved throughput view.
+const TIMELINE_BUCKET_S: f64 = 0.1;
 
 /// Default serving geometry when no manifest model is available
 /// (matches the tiny-lm training artifacts).
@@ -82,6 +100,43 @@ impl BaseModel {
     }
 }
 
+/// A serving forward path. Implementations run the CURRENT (spliced)
+/// base weights over `requested_tokens` and return the output
+/// checksum plus the token count actually computed — backends with a
+/// cap (host) or a fixed artifact geometry (PJRT) may compute fewer
+/// or more than requested, and throughput/truncation accounting needs
+/// the actually-computed number.
+pub trait ForwardBackend {
+    fn name(&self) -> &'static str;
+    fn forward(&mut self, base: &BaseModel,
+               requested_tokens: usize) -> Result<(f64, usize)>;
+}
+
+/// Always-available host GEMM backend (see module docs).
+#[derive(Default)]
+pub struct HostBackend {
+    /// Deterministic activation source, grown lazily.
+    input: Vec<f32>,
+}
+
+impl ForwardBackend for HostBackend {
+    fn name(&self) -> &'static str {
+        "host-gemm"
+    }
+
+    fn forward(&mut self, base: &BaseModel,
+               requested_tokens: usize) -> Result<(f64, usize)> {
+        let t = requested_tokens.clamp(1, HOST_MAX_TOKENS);
+        let need = t * base.model.d_model;
+        if self.input.len() < need {
+            let mut rng = Rng::for_tag(0x5e7e, "serve/input");
+            self.input = (0..need)
+                .map(|_| rng.normal_f32(1.0)).collect();
+        }
+        Ok((host_forward(base, &self.input, t), t))
+    }
+}
+
 /// PJRT forward: the method-agnostic eval artifact driven with the
 /// spliced weights (non-target state — embeddings, norms, head — is
 /// initialized once from the manifest specs and reused).
@@ -111,7 +166,7 @@ impl PjrtForward {
         &self.exe.info.model
     }
 
-    fn forward(&mut self, weights: &WeightMap) -> Result<f64> {
+    fn run(&mut self, weights: &WeightMap) -> Result<f64> {
         let (b, s) = (self.exe.info.batch, self.exe.info.seq);
         let batch = self.gen.train_batch(b, s);
         let mut inputs: Vec<xla::Literal> =
@@ -130,17 +185,333 @@ impl PjrtForward {
     }
 }
 
-pub enum Backend {
-    Host,
-    Pjrt(PjrtForward),
+impl ForwardBackend for PjrtForward {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn forward(&mut self, base: &BaseModel,
+               _requested_tokens: usize) -> Result<(f64, usize)> {
+        // The artifact's geometry is fixed at lowering time.
+        let computed = self.exe.info.batch * self.exe.info.seq;
+        Ok((self.run(&base.weights)?, computed))
+    }
 }
 
-impl Backend {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Backend::Host => "host-gemm",
-            Backend::Pjrt(_) => "pjrt",
+/// How the online step loop advances its virtual clock per batch.
+#[derive(Debug, Clone, Copy)]
+pub enum ClockModel {
+    /// Wall time of the real swap + forward (what `paca serve` uses).
+    Measured,
+    /// Deterministic analytic service time — the noise-free mode the
+    /// bench and tests use so queueing/deadline numbers are exactly
+    /// reproducible: `batch_s + token_s·tokens (+ swap_s if the batch
+    /// swapped adapters)`.
+    Analytic { swap_s: f64, batch_s: f64, token_s: f64 },
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct EngineStats {
+    pub requests: u64,
+    /// Tokens the backend actually computed (host clamps oversized
+    /// batches; PJRT runs the artifact's fixed geometry).
+    pub tokens: u64,
+    pub batches: u64,
+    pub swaps: u64,
+    pub swap_s: f64,
+    pub forward_s: f64,
+    pub wall_s: f64,
+    /// Virtual-clock makespan accumulated by `serve_online`.
+    pub virtual_s: f64,
+    /// Requested-but-not-computed tokens (HOST_MAX_TOKENS clamp, or a
+    /// PJRT artifact geometry smaller than the batch) — surfaced
+    /// instead of silently dropped.
+    pub truncated_tokens: u64,
+    pub truncated_batches: u64,
+    /// Requests that carried a finite deadline / those that missed it.
+    pub deadline_total: u64,
+    pub deadline_misses: u64,
+}
+
+pub struct ServeEngine {
+    pub base: BaseModel,
+    pub registry: AdapterRegistry,
+    backend: Box<dyn ForwardBackend>,
+    /// Interner the batches' `TenantId`s resolve through.
+    pub pool: TenantPool,
+    /// Live splice, if any: (tenant, displaced base rows).
+    current: Option<(TenantId, SpliceGuard)>,
+    baseline_fp: u64,
+    /// Per-batch service latency, offline replay path.
+    pub latencies: LatencyRecorder,
+    /// Online decomposition: time from arrival to dispatch…
+    pub queueing: LatencyRecorder,
+    /// …service time of the batch that carried the request…
+    pub service: LatencyRecorder,
+    /// …and end-to-end (arrival → completion).
+    pub e2e: LatencyRecorder,
+    /// Time-bucketed completions on the online clock.
+    pub timeline: ThroughputTimeline,
+    pub stats: EngineStats,
+    /// Accumulated forward outputs (keeps the host GEMMs observable).
+    pub checksum: f64,
+}
+
+impl ServeEngine {
+    pub fn new(base: BaseModel, registry: AdapterRegistry,
+               backend: Box<dyn ForwardBackend>,
+               pool: TenantPool) -> ServeEngine {
+        let baseline_fp = base.fingerprint();
+        ServeEngine { base, registry, backend, pool, current: None,
+                      baseline_fp,
+                      latencies: LatencyRecorder::default(),
+                      queueing: LatencyRecorder::default(),
+                      service: LatencyRecorder::default(),
+                      e2e: LatencyRecorder::default(),
+                      timeline: ThroughputTimeline::new(
+                          TIMELINE_BUCKET_S),
+                      stats: EngineStats::default(), checksum: 0.0 }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Tenant currently spliced into the base, if any.
+    pub fn current_tenant_id(&self) -> Option<TenantId> {
+        self.current.as_ref().map(|(t, _)| *t)
+    }
+
+    pub fn current_tenant(&self) -> Option<&str> {
+        self.current.as_ref().map(|(t, _)| self.pool.name(*t))
+    }
+
+    /// Make `tenant` the live adapter: exact un-merge of the previous
+    /// tenant, then O(r·d_out)-per-target splice of the new one.
+    /// No-op (and no swap counted) if the tenant is already live.
+    pub fn swap_to(&mut self, tenant: TenantId) -> Result<()> {
+        if self.current_tenant_id() == Some(tenant) {
+            return Ok(());
         }
+        let t0 = Instant::now();
+        if let Some((_, guard)) = self.current.take() {
+            guard.restore(&mut self.base.weights)?;
+        }
+        let adapter = self.registry.fetch(self.pool.name(tenant))?;
+        let guard = adapter.splice(&mut self.base.weights)?;
+        self.current = Some((tenant, guard));
+        self.stats.swaps += 1;
+        self.stats.swap_s += t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    /// Swap + forward for one dispatched batch; returns the service
+    /// wall time and whether an adapter swap happened.
+    fn service_batch(&mut self, batch: &Batch) -> Result<(f64, bool)> {
+        let swapped = self.current_tenant_id() != Some(batch.tenant);
+        let t0 = Instant::now();
+        self.swap_to(batch.tenant)?;
+        let tf = Instant::now();
+        let requested = batch.tokens().max(1);
+        let (out, computed) =
+            self.backend.forward(&self.base, requested)?;
+        self.stats.forward_s += tf.elapsed().as_secs_f64();
+        self.checksum += out;
+        // Tokens the backend actually pushed through — tok/s stays
+        // honest when the host backend clamps oversized batches, and
+        // the clamp itself is reported, not swallowed.
+        self.stats.tokens += computed as u64;
+        if computed < requested {
+            self.stats.truncated_tokens += (requested - computed) as u64;
+            self.stats.truncated_batches += 1;
+        }
+        self.stats.batches += 1;
+        Ok((t0.elapsed().as_secs_f64(), swapped))
+    }
+
+    /// Offline replay: serve one planned batch, recording every
+    /// request's service latency (swap + forward wall time).
+    pub fn run_batch(&mut self, batch: &Batch) -> Result<()> {
+        if batch.requests.is_empty() {
+            return Ok(());
+        }
+        let (latency, _) = self.service_batch(batch)?;
+        let name = self.pool.name(batch.tenant);
+        for _ in &batch.requests {
+            self.latencies.record(name, latency);
+            self.latencies.record("(all)", latency);
+            self.stats.requests += 1;
+        }
+        Ok(())
+    }
+
+    /// Replay a static offline plan (the comparison baseline).
+    pub fn serve(&mut self, batches: &[Batch]) -> Result<()> {
+        let t0 = Instant::now();
+        for b in batches {
+            self.run_batch(b)?;
+        }
+        self.stats.wall_s += t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    /// The online continuous-batching step loop: admission → dispatch
+    /// → forward → completion on a virtual clock, until the scheduler
+    /// is drained. Queueing delay (arrival → dispatch), service time,
+    /// end-to-end latency, deadline misses, and time-bucketed
+    /// throughput are all recorded on the virtual clock.
+    pub fn serve_online(&mut self, sched: &mut OnlineScheduler,
+                        clock: ClockModel) -> Result<()> {
+        let wall0 = Instant::now();
+        let mut now = 0.0f64;
+        loop {
+            sched.admit(now);
+            if sched.pending_len() == 0 {
+                match sched.next_arrival() {
+                    // Idle: event-jump the clock to the next arrival.
+                    Some(t) => {
+                        now = now.max(t);
+                        sched.admit(now);
+                    }
+                    None => break,
+                }
+            }
+            // Keep the slo policy's swap hysteresis calibrated to
+            // what a swap actually costs under this clock: the
+            // analytic constant, or the measured running average.
+            sched.swap_penalty_s = match clock {
+                ClockModel::Analytic { swap_s, .. } => swap_s,
+                ClockModel::Measured if self.stats.swaps > 0 => {
+                    self.stats.swap_s / self.stats.swaps as f64
+                }
+                ClockModel::Measured => 0.0,
+            };
+            let live = self.current_tenant_id();
+            let Some(batch) = sched.dispatch(live, now) else { break };
+            if batch.requests.is_empty() {
+                continue;
+            }
+            let (wall_service_s, swapped) = self.service_batch(&batch)?;
+            let service_s = match clock {
+                ClockModel::Measured => wall_service_s,
+                ClockModel::Analytic { swap_s, batch_s, token_s } => {
+                    batch_s
+                        + token_s * batch.tokens() as f64
+                        + if swapped { swap_s } else { 0.0 }
+                }
+            };
+            let start = now;
+            now += service_s;
+            let name = self.pool.name(batch.tenant);
+            let mut tokens = 0u64;
+            for r in &batch.requests {
+                let queue_s = (start - r.arrival_s).max(0.0);
+                let e2e_s = (now - r.arrival_s).max(0.0);
+                self.queueing.record(name, queue_s);
+                self.queueing.record("(all)", queue_s);
+                self.service.record(name, service_s);
+                self.service.record("(all)", service_s);
+                self.e2e.record(name, e2e_s);
+                self.e2e.record("(all)", e2e_s);
+                if r.deadline_s.is_finite() {
+                    self.stats.deadline_total += 1;
+                    if now > r.absolute_deadline() {
+                        self.stats.deadline_misses += 1;
+                    }
+                }
+                tokens += r.tokens as u64;
+                self.stats.requests += 1;
+            }
+            self.timeline.record(now, batch.requests.len() as u64,
+                                 tokens);
+        }
+        self.stats.virtual_s += now;
+        self.stats.wall_s += wall0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    pub fn throughput_req_per_s(&self) -> f64 {
+        self.stats.requests as f64 / self.stats.wall_s.max(1e-12)
+    }
+
+    pub fn throughput_tok_per_s(&self) -> f64 {
+        self.stats.tokens as f64 / self.stats.wall_s.max(1e-12)
+    }
+
+    /// Requests per second of virtual time — the load-meaningful
+    /// throughput of an online run (wall time also counts admission
+    /// idle gaps the virtual clock jumps over).
+    pub fn virtual_req_per_s(&self) -> f64 {
+        self.stats.requests as f64 / self.stats.virtual_s.max(1e-12)
+    }
+
+    /// Un-splice the live adapter and verify the shared frozen base is
+    /// byte-identical to its pre-serving state.
+    pub fn finish(&mut self) -> Result<()> {
+        if let Some((_, guard)) = self.current.take() {
+            guard.restore(&mut self.base.weights)?;
+        }
+        let fp = self.base.fingerprint();
+        if fp != self.baseline_fp {
+            return Err(anyhow!(
+                "shared base corrupted after un-merge: fingerprint \
+                 {fp:016x} != baseline {:016x}", self.baseline_fp));
+        }
+        Ok(())
+    }
+
+    pub fn report(&self) -> String {
+        let s = &self.stats;
+        let mut out = format!(
+            "backend {} | {} requests in {} batches | {} tenants in \
+             registry | {} swaps ({:.1}ms total, {:.1}% of wall)\n",
+            self.backend_name(), s.requests, s.batches,
+            self.registry.len(), s.swaps, s.swap_s * 1e3,
+            100.0 * s.swap_s / s.wall_s.max(1e-12));
+        if s.truncated_tokens > 0 {
+            out.push_str(&format!(
+                "backend truncation: {} requested tokens not computed \
+                 across {} batches (host cap {HOST_MAX_TOKENS} \
+                 tokens/forward) — shrink --batch or --mean-tokens to \
+                 serve full prompts\n",
+                s.truncated_tokens, s.truncated_batches));
+        }
+        out.push('\n');
+        if self.latencies.count("(all)") > 0 {
+            out.push_str("offline replay latency (swap + forward per \
+                          batch):\n");
+            out.push_str(&self.latencies.table("tenant").render());
+            out.push('\n');
+        }
+        if self.e2e.count("(all)") > 0 {
+            out.push_str("online pipeline (virtual clock — queueing \
+                          is arrival→dispatch):\n");
+            out.push_str(&latency_breakdown_table(
+                &self.queueing, &self.service, &self.e2e,
+                "tenant").render());
+            if s.deadline_total > 0 {
+                out.push_str(&format!(
+                    "deadline misses: {}/{} ({:.1}%)\n",
+                    s.deadline_misses, s.deadline_total,
+                    100.0 * s.deadline_misses as f64
+                        / s.deadline_total as f64));
+            }
+            out.push_str(&format!(
+                "virtual makespan {:.3}s | {:.1} req/s virtual \
+                 (peak bucket {:.1} req/s)\n",
+                s.virtual_s, self.virtual_req_per_s(),
+                self.timeline.peak_req_per_s()));
+            if self.timeline.n_buckets() <= 24 {
+                out.push_str(&self.timeline.table().render());
+            }
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "aggregate: {:.1} req/s, {:.0} tok/s \
+             (forward {:.1}ms, swap {:.1}ms, wall {:.1}ms)\n",
+            self.throughput_req_per_s(), self.throughput_tok_per_s(),
+            s.forward_s * 1e3, s.swap_s * 1e3, s.wall_s * 1e3));
+        out
     }
 }
 
@@ -188,201 +559,59 @@ fn host_forward(base: &BaseModel, input: &[f32], tokens: usize) -> f64 {
     xd.iter().map(|v| v.abs() as f64).sum::<f64>() / (t * d) as f64
 }
 
-#[derive(Debug, Default, Clone, Copy)]
-pub struct EngineStats {
-    pub requests: u64,
-    /// Tokens the backend actually computed (host clamps oversized
-    /// batches; PJRT runs the artifact's fixed geometry).
-    pub tokens: u64,
-    pub batches: u64,
-    pub swaps: u64,
-    pub swap_s: f64,
-    pub forward_s: f64,
-    pub wall_s: f64,
-}
-
-pub struct ServeEngine {
-    pub base: BaseModel,
-    pub registry: AdapterRegistry,
-    backend: Backend,
-    /// Live splice, if any: (tenant, displaced base rows).
-    current: Option<(String, SpliceGuard)>,
-    baseline_fp: u64,
-    /// Deterministic activation source for the host backend.
-    input: Vec<f32>,
-    pub latencies: LatencyRecorder,
-    pub stats: EngineStats,
-    /// Accumulated forward outputs (keeps the host GEMMs observable).
-    pub checksum: f64,
-}
-
-impl ServeEngine {
-    pub fn new(base: BaseModel, registry: AdapterRegistry,
-               backend: Backend) -> ServeEngine {
-        let baseline_fp = base.fingerprint();
-        ServeEngine { base, registry, backend, current: None,
-                      baseline_fp, input: Vec::new(),
-                      latencies: LatencyRecorder::default(),
-                      stats: EngineStats::default(), checksum: 0.0 }
-    }
-
-    pub fn backend_name(&self) -> &'static str {
-        self.backend.name()
-    }
-
-    /// Tenant currently spliced into the base, if any.
-    pub fn current_tenant(&self) -> Option<&str> {
-        self.current.as_ref().map(|(t, _)| t.as_str())
-    }
-
-    /// Make `tenant` the live adapter: exact un-merge of the previous
-    /// tenant, then O(r·d_out)-per-target splice of the new one.
-    /// No-op (and no swap counted) if the tenant is already live.
-    pub fn swap_to(&mut self, tenant: &str) -> Result<()> {
-        if self.current_tenant() == Some(tenant) {
-            return Ok(());
-        }
-        let t0 = Instant::now();
-        if let Some((_, guard)) = self.current.take() {
-            guard.restore(&mut self.base.weights)?;
-        }
-        let adapter = self.registry.fetch(tenant)?;
-        let guard = adapter.splice(&mut self.base.weights)?;
-        self.current = Some((tenant.to_string(), guard));
-        self.stats.swaps += 1;
-        self.stats.swap_s += t0.elapsed().as_secs_f64();
-        Ok(())
-    }
-
-    /// Returns (output checksum, tokens actually computed) — the
-    /// host backend clamps at HOST_MAX_TOKENS and the PJRT backend
-    /// runs the eval artifact's fixed (batch, seq) geometry, so the
-    /// computed count is what throughput accounting must use.
-    fn forward(&mut self, tokens: usize) -> Result<(f64, usize)> {
-        match &mut self.backend {
-            Backend::Host => {
-                let t = tokens.clamp(1, HOST_MAX_TOKENS);
-                let need = t * self.base.model.d_model;
-                if self.input.len() < need {
-                    let mut rng = Rng::for_tag(0x5e7e, "serve/input");
-                    self.input = (0..need)
-                        .map(|_| rng.normal_f32(1.0)).collect();
-                }
-                Ok((host_forward(&self.base, &self.input, t), t))
-            }
-            Backend::Pjrt(p) => {
-                let computed = p.exe.info.batch * p.exe.info.seq;
-                Ok((p.forward(&self.base.weights)?, computed))
-            }
-        }
-    }
-
-    /// Serve one batch: swap to its tenant, forward over its tokens,
-    /// record every request's latency (swap + forward wall time).
-    pub fn run_batch(&mut self, batch: &Batch) -> Result<()> {
-        if batch.requests.is_empty() {
-            return Ok(());
-        }
-        let t0 = Instant::now();
-        self.swap_to(&batch.tenant)?;
-        let tf = Instant::now();
-        let (out, computed) = self.forward(batch.tokens().max(1))?;
-        self.stats.forward_s += tf.elapsed().as_secs_f64();
-        self.checksum += out;
-        // Tokens the backend actually pushed through — tok/s stays
-        // honest when the host backend clamps oversized batches.
-        self.stats.tokens += computed as u64;
-        let latency = t0.elapsed().as_secs_f64();
-        self.stats.batches += 1;
-        for _ in &batch.requests {
-            self.latencies.record(&batch.tenant, latency);
-            self.latencies.record("(all)", latency);
-            self.stats.requests += 1;
-        }
-        Ok(())
-    }
-
-    pub fn serve(&mut self, batches: &[Batch]) -> Result<()> {
-        let t0 = Instant::now();
-        for b in batches {
-            self.run_batch(b)?;
-        }
-        self.stats.wall_s += t0.elapsed().as_secs_f64();
-        Ok(())
-    }
-
-    pub fn throughput_req_per_s(&self) -> f64 {
-        self.stats.requests as f64 / self.stats.wall_s.max(1e-12)
-    }
-
-    pub fn throughput_tok_per_s(&self) -> f64 {
-        self.stats.tokens as f64 / self.stats.wall_s.max(1e-12)
-    }
-
-    /// Un-splice the live adapter and verify the shared frozen base is
-    /// byte-identical to its pre-serving state.
-    pub fn finish(&mut self) -> Result<()> {
-        if let Some((_, guard)) = self.current.take() {
-            guard.restore(&mut self.base.weights)?;
-        }
-        let fp = self.base.fingerprint();
-        if fp != self.baseline_fp {
-            return Err(anyhow!(
-                "shared base corrupted after un-merge: fingerprint \
-                 {fp:016x} != baseline {:016x}", self.baseline_fp));
-        }
-        Ok(())
-    }
-
-    pub fn report(&self) -> String {
-        let s = &self.stats;
-        let mut out = format!(
-            "backend {} | {} requests in {} batches | {} tenants in \
-             registry | {} swaps ({:.1}ms total, {:.1}% of wall)\n\n",
-            self.backend_name(), s.requests, s.batches,
-            self.registry.len(), s.swaps, s.swap_s * 1e3,
-            100.0 * s.swap_s / s.wall_s.max(1e-12));
-        out.push_str(&self.latencies.table("tenant").render());
-        out.push_str(&format!(
-            "\naggregate: {:.1} req/s, {:.0} tok/s \
-             (forward {:.1}ms, swap {:.1}ms, wall {:.1}ms)\n",
-            self.throughput_req_per_s(), self.throughput_tok_per_s(),
-            s.forward_s * 1e3, s.swap_s * 1e3, s.wall_s * 1e3));
-        out
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::serve::registry::PacaAdapter;
-    use crate::serve::scheduler::{plan, Policy};
-    use crate::serve::trace::{self, TraceSpec};
+    use crate::serve::scheduler::{plan, Policy, Request};
+    use crate::serve::trace::{self, Trace, TraceSpec};
 
     fn small() -> ModelInfo {
         ModelInfo { d_model: 16, d_ff: 24, ..tiny_model() }
     }
 
-    fn engine(n_tenants: usize) -> ServeEngine {
+    /// Engine whose registry holds an adapter for every tenant in the
+    /// pool.
+    fn engine_for(pool: TenantPool) -> ServeEngine {
         let m = small();
         let base = BaseModel::synthetic(&m, 7);
         let mut reg = AdapterRegistry::new(64);
-        for i in 0..n_tenants {
-            reg.insert(PacaAdapter::synthetic(
-                &trace::tenant_name(i), &m, 4, 11));
+        for name in pool.names() {
+            reg.insert(PacaAdapter::synthetic(name, &m, 4, 11));
         }
-        ServeEngine::new(base, reg, Backend::Host)
+        ServeEngine::new(base, reg, Box::<HostBackend>::default(),
+                         pool)
+    }
+
+    fn bursty_trace() -> Trace {
+        trace::synthesize(&TraceSpec {
+            n_requests: 80, n_tenants: 5, deadline_ms: 30.0,
+            burstiness: 3.0, ..Default::default()
+        })
+    }
+
+    fn one_req_batch(pool: &mut TenantPool, name: &str,
+                     tokens: usize) -> Batch {
+        let tenant = pool.intern(name);
+        Batch {
+            tenant,
+            requests: vec![Request {
+                id: 0, tenant, tokens, arrival_s: 0.0,
+                deadline_s: f64::INFINITY,
+            }],
+        }
     }
 
     #[test]
     fn serves_multi_tenant_trace_and_restores_base() {
         let spec = TraceSpec { n_requests: 80, n_tenants: 5,
                                ..Default::default() };
-        let reqs = trace::synthesize(&spec);
-        let tenants = trace::tenants(&reqs);
+        let trace = trace::synthesize(&spec);
+        let tenants = trace.tenant_names();
         assert!(tenants.len() >= 4, "need ≥4 tenants, got {tenants:?}");
-        let mut eng = engine(spec.n_tenants);
-        let batches = plan(&reqs, 8, Policy::SwapAware);
+        let mut eng = engine_for(trace.pool.clone());
+        let batches = plan(trace.requests.clone(), 8,
+                           Policy::SwapAware);
         eng.serve(&batches).unwrap();
         assert_eq!(eng.stats.requests, 80);
         assert!(eng.stats.swaps as usize >= tenants.len());
@@ -397,47 +626,133 @@ mod tests {
     }
 
     #[test]
-    fn distinct_tenants_compute_distinct_outputs() {
-        let b = |tenant: &str| Batch {
-            tenant: tenant.into(),
-            requests: vec![crate::serve::scheduler::Request {
-                id: 0, tenant: tenant.into(), tokens: 32,
-                arrival_s: 0.0,
-            }],
+    fn online_serves_trace_and_restores_base() {
+        let trace = bursty_trace();
+        let n = trace.requests.len() as u64;
+        let mut eng = engine_for(trace.pool.clone());
+        let mut sched = OnlineScheduler::new(
+            trace.requests, trace.pool.len(), 8, Policy::SloAware);
+        eng.serve_online(&mut sched, ClockModel::Analytic {
+            swap_s: 2e-3, batch_s: 5e-4, token_s: 2e-5,
+        }).unwrap();
+        assert!(sched.is_done());
+        assert_eq!(eng.stats.requests, n);
+        assert_eq!(eng.queueing.count("(all)") as u64, n);
+        assert_eq!(eng.e2e.count("(all)") as u64, n);
+        assert_eq!(eng.stats.deadline_total, n,
+                   "every request carried a deadline");
+        assert!(eng.stats.virtual_s > 0.0);
+        assert_eq!(eng.timeline.total_requests(), n);
+        // e2e = queueing + service, so the decomposition must order.
+        let q50 = eng.queueing.percentile("(all)", 0.5).unwrap();
+        let e50 = eng.e2e.percentile("(all)", 0.5).unwrap();
+        assert!(e50 >= q50);
+        let report = eng.report();
+        assert!(report.contains("online pipeline"));
+        assert!(report.contains("deadline misses"));
+        eng.finish().unwrap();
+    }
+
+    #[test]
+    fn online_analytic_clock_is_deterministic() {
+        let clock = ClockModel::Analytic {
+            swap_s: 2e-3, batch_s: 5e-4, token_s: 2e-5,
         };
-        let mut e1 = engine(2);
-        e1.run_batch(&b(&trace::tenant_name(0))).unwrap();
-        let mut e2 = engine(2);
-        e2.run_batch(&b(&trace::tenant_name(1))).unwrap();
+        let run = || {
+            let trace = bursty_trace();
+            let mut eng = engine_for(trace.pool.clone());
+            let mut sched = OnlineScheduler::new(
+                trace.requests, trace.pool.len(), 8,
+                Policy::SloAware);
+            eng.serve_online(&mut sched, clock).unwrap();
+            (eng.stats.virtual_s, eng.stats.deadline_misses,
+             eng.stats.swaps,
+             eng.queueing.percentile("(all)", 0.99).unwrap())
+        };
+        assert_eq!(run(), run(), "virtual-clock runs must be \
+                                  bit-reproducible");
+    }
+
+    #[test]
+    fn online_fully_arrived_matches_offline_serve() {
+        // The engine-level anchor: both paths serve the same batches,
+        // count the same swaps, and restore the base.
+        let spec = TraceSpec { n_requests: 60, n_tenants: 4,
+                               ..Default::default() };
+        let trace = trace::synthesize(&spec);
+        let mut at_zero = trace.requests.clone();
+        for r in &mut at_zero {
+            r.arrival_s = 0.0;
+        }
+        let mut off = engine_for(trace.pool.clone());
+        off.serve(&plan(at_zero.clone(), 8, Policy::SwapAware))
+            .unwrap();
+        off.finish().unwrap();
+        let mut on = engine_for(trace.pool.clone());
+        let mut sched = OnlineScheduler::new(
+            at_zero, trace.pool.len(), 8, Policy::SwapAware);
+        on.serve_online(&mut sched, ClockModel::Measured).unwrap();
+        on.finish().unwrap();
+        assert_eq!(on.stats.swaps, off.stats.swaps);
+        assert_eq!(on.stats.requests, off.stats.requests);
+        assert_eq!(on.stats.batches, off.stats.batches);
+        assert_eq!(on.checksum, off.checksum,
+                   "same dispatch sequence ⇒ same forwards");
+    }
+
+    #[test]
+    fn distinct_tenants_compute_distinct_outputs() {
+        let mut pool = TenantPool::new();
+        let b0 = one_req_batch(&mut pool, &trace::tenant_name(0), 32);
+        let b1 = one_req_batch(&mut pool, &trace::tenant_name(1), 32);
+        let mut e1 = engine_for(pool.clone());
+        e1.run_batch(&b0).unwrap();
+        let mut e2 = engine_for(pool.clone());
+        e2.run_batch(&b1).unwrap();
         assert_ne!(e1.checksum, e2.checksum,
                    "spliced adapters must change the forward output");
         // …and the same tenant is deterministic.
-        let mut e3 = engine(2);
-        e3.run_batch(&b(&trace::tenant_name(0))).unwrap();
+        let mut e3 = engine_for(pool);
+        e3.run_batch(&b0).unwrap();
         assert_eq!(e1.checksum, e3.checksum);
     }
 
     #[test]
     fn same_tenant_batches_skip_the_swap() {
-        let mut eng = engine(2);
-        let t0 = trace::tenant_name(0);
-        let mk = |id| Batch {
-            tenant: t0.clone(),
-            requests: vec![crate::serve::scheduler::Request {
-                id, tenant: t0.clone(), tokens: 8, arrival_s: 0.0,
-            }],
-        };
-        eng.run_batch(&mk(0)).unwrap();
-        eng.run_batch(&mk(1)).unwrap();
+        let mut pool = TenantPool::new();
+        let b = one_req_batch(&mut pool, &trace::tenant_name(0), 8);
+        let mut eng = engine_for(pool);
+        eng.run_batch(&b).unwrap();
+        eng.run_batch(&b).unwrap();
         assert_eq!(eng.stats.swaps, 1,
                    "consecutive same-tenant batches reuse the splice");
         eng.finish().unwrap();
     }
 
     #[test]
+    fn host_truncation_is_surfaced_not_silent() {
+        let mut pool = TenantPool::new();
+        let big = one_req_batch(&mut pool, &trace::tenant_name(0),
+                                HOST_MAX_TOKENS + 512);
+        let mut eng = engine_for(pool);
+        eng.run_batch(&big).unwrap();
+        assert_eq!(eng.stats.truncated_tokens, 512);
+        assert_eq!(eng.stats.truncated_batches, 1);
+        assert_eq!(eng.stats.tokens, HOST_MAX_TOKENS as u64);
+        assert!(eng.report().contains("backend truncation"),
+                "the clamp must show up in the report");
+        eng.finish().unwrap();
+    }
+
+    #[test]
     fn unknown_tenant_is_an_error_not_a_crash() {
-        let mut eng = engine(1);
-        assert!(eng.swap_to("tenant-999").is_err());
+        let mut pool = TenantPool::new();
+        pool.intern(&trace::tenant_name(0));
+        let mut eng = engine_for(pool);
+        // A tenant interned AFTER the registry was filled has no
+        // adapter to fetch.
+        let ghost = eng.pool.intern("tenant-999");
+        assert!(eng.swap_to(ghost).is_err());
         // Base must still be intact afterwards.
         eng.finish().unwrap();
     }

@@ -16,20 +16,29 @@
 //!     compact per-tenant `(idx, P)` adapters with load/save/evict and
 //!     the hot-splice / exact-un-splice swap built on
 //!     `coordinator::merge::{splice_rows, unsplice_rows}`.
-//!   * [`scheduler`] — request queue → batch plan: FIFO or
-//!     swap-cost-aware coalescing of same-adapter requests.
+//!   * [`scheduler`] — tenant-name interning
+//!     ([`scheduler::TenantPool`]), the offline batch planner (kept as
+//!     the correctness baseline), and the online
+//!     [`scheduler::OnlineScheduler`]: arrival-time admission,
+//!     per-tenant pending queues, incremental fifo / swap-aware /
+//!     slo-aware dispatch with continuous batching.
 //!   * [`trace`]     — synthetic multi-tenant workloads (Zipf tenant
-//!     popularity, exponential arrivals) + JSONL persistence.
-//!   * [`engine`]    — the serving loop: swap → forward → per-request
-//!     latency/throughput metrics. Host GEMM backend always available;
-//!     PJRT backend drives the lowered eval artifact when `make
-//!     artifacts` has run.
+//!     popularity, Poisson or bursty arrivals, per-request SLO
+//!     deadlines) + JSONL persistence.
+//!   * [`engine`]    — the serving engine around the
+//!     [`engine::ForwardBackend`] trait (host GEMM always available;
+//!     PJRT drives the lowered eval artifact when `make artifacts`
+//!     has run): offline plan replay, plus the event-driven
+//!     virtual-clock step loop (`serve_online`) that decomposes
+//!     latency into queueing vs service and tracks deadline misses.
 //!   * [`cost`]      — analytic serving-cost extension of `simulator`
-//!     (A100/Gaudi2): merged-PaCA vs unmerged-LoRA serving throughput
-//!     and adapter-swap amortization, for `paca bench --exp serve`.
+//!     (A100/Gaudi2): merged-PaCA vs unmerged-LoRA throughput,
+//!     adapter-swap amortization, and the M/D/1 queueing-delay term,
+//!     for `paca bench --exp serve`.
 //!
 //! Entry point: `paca serve --adapters DIR --requests TRACE --batch N`
-//! (main.rs), which synthesizes the trace/adapters on first run.
+//! (main.rs), which synthesizes the trace/adapters on first run and
+//! serves it through the online pipeline.
 
 pub mod cost;
 pub mod engine;

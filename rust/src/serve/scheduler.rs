@@ -1,33 +1,126 @@
-//! Request scheduling: queue → batch plan.
+//! Request scheduling: offline batch planning + the online
+//! continuous-batching scheduler.
 //!
 //! Serving PaCA adapters from one shared base means the only per-tenant
 //! cost is the adapter *swap* (splice/un-splice) between batches; the
-//! forward itself is method-free. The scheduler therefore has one job:
-//! coalesce same-adapter requests into batches and order batches so
-//! adjacent ones share a tenant whenever possible (swap-cost-aware
-//! batching — LoRAFusion's grouping insight applied to PaCA's splice
-//! model). FIFO is kept as the baseline the bench compares against.
+//! forward itself is method-free. Scheduling therefore trades two
+//! currencies: swaps saved by coalescing same-adapter requests
+//! (LoRAFusion's grouping insight applied to PaCA's splice model) and
+//! queueing delay paid by requests that wait for their adapter's turn.
+//!
+//! Two layers:
+//!   * [`plan`] — the offline planner: consumes a fully-arrived queue
+//!     and emits a static batch list. Kept as the correctness anchor —
+//!     on a fully-arrived queue the online scheduler must reproduce its
+//!     dispatch sequence (see `tests/properties.rs`).
+//!   * [`OnlineScheduler`] — the event-driven online layer: admits
+//!     requests as their `arrival_s` passes a virtual clock, keeps
+//!     per-tenant pending queues, and makes one incremental dispatch
+//!     decision at a time. New same-tenant arrivals join the next
+//!     dispatch instead of waiting for a full replan (continuous
+//!     batching).
+//!
+//! Tenant names are interned to dense [`TenantId`]s at trace load
+//! ([`TenantPool`]), so the hot loop moves `Copy` ids around instead of
+//! cloning `String`s per request.
+
+use std::collections::hash_map::Entry;
+use std::collections::{HashMap, VecDeque};
 
 use anyhow::{anyhow, Result};
+
+/// Dense interned tenant handle — index into a [`TenantPool`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TenantId(pub u32);
+
+impl TenantId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// String-interning table for tenant names: ids are dense (0..n in
+/// first-appearance order), so per-tenant state can live in plain
+/// `Vec`s indexed by [`TenantId`].
+#[derive(Debug, Clone, Default)]
+pub struct TenantPool {
+    names: Vec<String>,
+    index: HashMap<String, TenantId>,
+}
+
+impl TenantPool {
+    pub fn new() -> TenantPool {
+        TenantPool::default()
+    }
+
+    /// Id for `name`, allocating the next dense id on first sight.
+    pub fn intern(&mut self, name: &str) -> TenantId {
+        if let Some(&id) = self.index.get(name) {
+            return id;
+        }
+        let id = TenantId(self.names.len() as u32);
+        self.names.push(name.to_string());
+        self.index.insert(name.to_string(), id);
+        id
+    }
+
+    pub fn get(&self, name: &str) -> Option<TenantId> {
+        self.index.get(name).copied()
+    }
+
+    pub fn name(&self, id: TenantId) -> &str {
+        &self.names[id.index()]
+    }
+
+    /// Interned names in first-appearance order.
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+}
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Request {
     pub id: u64,
-    pub tenant: String,
+    pub tenant: TenantId,
     /// Prompt length in tokens (drives forward cost).
     pub tokens: usize,
-    /// Synthetic arrival timestamp, seconds from trace start.
+    /// Arrival timestamp, seconds from trace start. The online
+    /// scheduler only sees a request once the clock passes this.
     pub arrival_s: f64,
+    /// Per-request SLO: seconds after arrival by which the request
+    /// must complete. `f64::INFINITY` = no deadline (the default for
+    /// traces that predate the field).
+    pub deadline_s: f64,
+}
+
+impl Request {
+    /// Absolute completion deadline on the trace clock.
+    pub fn absolute_deadline(&self) -> f64 {
+        self.arrival_s + self.deadline_s
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
-    /// Batch strictly in arrival order; a batch breaks whenever the
+    /// Dispatch strictly in arrival order; a batch breaks whenever the
     /// tenant changes or the batch is full.
     Fifo,
-    /// Group by tenant (stable in first-arrival order), then chunk —
-    /// one swap per tenant instead of one per tenant *run*.
+    /// Coalesce by tenant (stable in first-arrival order) — one swap
+    /// per tenant instead of one per tenant *run*. Online, the live
+    /// tenant keeps dispatching while it has pending work.
     SwapAware,
+    /// Earliest-deadline-first across tenants, with the adapter-swap
+    /// cost charged as a slack penalty against switching away from the
+    /// live tenant. Offline (no clock) it plans like `SwapAware`.
+    SloAware,
 }
 
 impl Policy {
@@ -35,9 +128,11 @@ impl Policy {
         Ok(match s {
             "fifo" => Policy::Fifo,
             "swap-aware" | "swap" | "grouped" => Policy::SwapAware,
+            "slo-aware" | "slo" | "deadline" => Policy::SloAware,
             other => {
                 return Err(anyhow!(
-                    "unknown policy {other:?} (fifo | swap-aware)"))
+                    "unknown policy {other:?} (fifo | swap-aware | \
+                     slo-aware)"))
             }
         })
     }
@@ -46,15 +141,19 @@ impl Policy {
         match self {
             Policy::Fifo => "fifo",
             Policy::SwapAware => "swap-aware",
+            Policy::SloAware => "slo-aware",
         }
     }
+
+    pub const ALL: [Policy; 3] =
+        [Policy::Fifo, Policy::SwapAware, Policy::SloAware];
 }
 
 /// One dispatch unit: requests sharing a tenant, served under one
 /// splice of that tenant's adapter.
 #[derive(Debug, Clone)]
 pub struct Batch {
-    pub tenant: String,
+    pub tenant: TenantId,
     pub requests: Vec<Request>,
 }
 
@@ -64,10 +163,12 @@ impl Batch {
     }
 }
 
-/// Plan the queue into batches of at most `batch_size` requests.
-/// Every request appears in exactly one batch; within a tenant,
-/// arrival order is preserved under both policies.
-pub fn plan(requests: &[Request], batch_size: usize,
+/// Offline planner: the whole queue into batches of at most
+/// `batch_size` requests. Every request appears in exactly one batch;
+/// within a tenant, input order is preserved under every policy.
+/// Requests are moved, never cloned. `SloAware` has no clock to
+/// consult offline, so it plans like `SwapAware`.
+pub fn plan(requests: Vec<Request>, batch_size: usize,
             policy: Policy) -> Vec<Batch> {
     let cap = batch_size.max(1);
     match policy {
@@ -80,28 +181,42 @@ pub fn plan(requests: &[Request], batch_size: usize,
                     None => true,
                 };
                 if start_new {
-                    out.push(Batch { tenant: r.tenant.clone(),
+                    out.push(Batch { tenant: r.tenant,
                                      requests: Vec::new() });
                 }
-                out.last_mut().unwrap().requests.push(r.clone());
+                out.last_mut().unwrap().requests.push(r);
             }
             out
         }
-        Policy::SwapAware => {
-            // Stable grouping by tenant in first-arrival order.
-            let mut groups: Vec<(String, Vec<Request>)> = Vec::new();
+        Policy::SwapAware | Policy::SloAware => {
+            // Stable grouping by tenant in first-arrival order: a
+            // HashMap index instead of the old O(n·t) linear scan over
+            // the group list.
+            let mut order: Vec<TenantId> = Vec::new();
+            let mut groups: HashMap<TenantId, Vec<Request>> =
+                HashMap::new();
             for r in requests {
-                match groups.iter_mut().find(|(t, _)| *t == r.tenant) {
-                    Some((_, g)) => g.push(r.clone()),
-                    None => groups.push((r.tenant.clone(),
-                                         vec![r.clone()])),
+                match groups.entry(r.tenant) {
+                    Entry::Occupied(mut e) => e.get_mut().push(r),
+                    Entry::Vacant(e) => {
+                        order.push(r.tenant);
+                        e.insert(vec![r]);
+                    }
                 }
             }
             let mut out = Vec::new();
-            for (tenant, g) in groups {
-                for chunk in g.chunks(cap) {
-                    out.push(Batch { tenant: tenant.clone(),
-                                     requests: chunk.to_vec() });
+            for tenant in order {
+                // Chunk by moving: split_off leaves the head chunk in
+                // place and hands back the tail, so no request is ever
+                // cloned.
+                let mut head = groups.remove(&tenant).unwrap();
+                while head.len() > cap {
+                    let tail = head.split_off(cap);
+                    out.push(Batch { tenant, requests: head });
+                    head = tail;
+                }
+                if !head.is_empty() {
+                    out.push(Batch { tenant, requests: head });
                 }
             }
             out
@@ -114,30 +229,300 @@ pub fn plan(requests: &[Request], batch_size: usize,
 /// (consecutive same-tenant batches reuse the live splice).
 pub fn swap_count(batches: &[Batch]) -> usize {
     let mut swaps = 0;
-    let mut current: Option<&str> = None;
+    let mut current: Option<TenantId> = None;
     for b in batches {
-        if current != Some(b.tenant.as_str()) {
+        if current != Some(b.tenant) {
             swaps += 1;
-            current = Some(&b.tenant);
+            current = Some(b.tenant);
         }
     }
     swaps
+}
+
+/// One tenant's pending FIFO plus a monotonic deque over absolute
+/// deadlines, so the tightest deadline of the queue is O(1) per
+/// dispatch instead of a scan of the whole backlog (which would make
+/// slo-aware dispatch quadratic exactly in the overload regime it
+/// exists for).
+#[derive(Debug, Default)]
+struct PendingQueue {
+    q: VecDeque<(u64, Request)>,
+    /// Non-decreasing absolute deadlines of the requests in `q`;
+    /// front is the queue's minimum.
+    min_deadline: VecDeque<f64>,
+}
+
+impl PendingQueue {
+    fn push(&mut self, seq: u64, r: Request) {
+        let d = r.absolute_deadline();
+        while self.min_deadline.back().is_some_and(|&b| b > d) {
+            self.min_deadline.pop_back();
+        }
+        self.min_deadline.push_back(d);
+        self.q.push_back((seq, r));
+    }
+
+    fn pop(&mut self) -> Option<(u64, Request)> {
+        let (seq, r) = self.q.pop_front()?;
+        // Bitwise-identical value: it came from this request's push.
+        if self.min_deadline.front() == Some(&r.absolute_deadline()) {
+            self.min_deadline.pop_front();
+        }
+        Some((seq, r))
+    }
+
+    fn front_seq(&self) -> Option<u64> {
+        self.q.front().map(|(seq, _)| *seq)
+    }
+
+    /// Tightest absolute deadline among queued requests.
+    fn earliest_deadline(&self) -> Option<f64> {
+        self.min_deadline.front().copied()
+    }
+}
+
+/// The online continuous-batching scheduler.
+///
+/// Owns the not-yet-arrived tail of the trace plus per-tenant pending
+/// queues of admitted requests. The engine's step loop drives it:
+/// `admit(clock)` → `dispatch(live_tenant, clock)` → serve → repeat,
+/// jumping the virtual clock to `next_arrival()` when idle. Admission
+/// order is tracked with a per-request sequence number so FIFO
+/// head-of-line decisions are exact.
+pub struct OnlineScheduler {
+    policy: Policy,
+    cap: usize,
+    /// Not-yet-admitted requests, ascending `arrival_s` — stored
+    /// reversed so `pop()` yields the next arrival.
+    future: Vec<Request>,
+    /// Per-tenant pending queues, indexed by `TenantId`.
+    pending: Vec<PendingQueue>,
+    pending_count: usize,
+    next_seq: u64,
+    /// Seconds of slack the slo-aware policy charges a tenant switch —
+    /// the scheduling price of an adapter swap. The engine's
+    /// `serve_online` loop keeps this calibrated to the active clock
+    /// model (analytic swap cost, or the measured running average);
+    /// set it manually only when driving the scheduler directly.
+    pub swap_penalty_s: f64,
+}
+
+impl OnlineScheduler {
+    /// `n_tenants` bounds the dense `TenantId` space (usually
+    /// `pool.len()`). Requests are stably sorted by arrival, so ties
+    /// keep their input order.
+    pub fn new(mut requests: Vec<Request>, n_tenants: usize,
+               batch_size: usize, policy: Policy) -> OnlineScheduler {
+        requests.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+        for r in &requests {
+            assert!(r.tenant.index() < n_tenants,
+                    "tenant id {} outside pool of {n_tenants}",
+                    r.tenant.0);
+        }
+        requests.reverse();
+        OnlineScheduler {
+            policy,
+            cap: batch_size.max(1),
+            future: requests,
+            pending: (0..n_tenants)
+                .map(|_| PendingQueue::default()).collect(),
+            pending_count: 0,
+            next_seq: 0,
+            swap_penalty_s: 0.0,
+        }
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    /// Admit every request whose arrival has passed; returns how many
+    /// were admitted.
+    pub fn admit(&mut self, clock: f64) -> usize {
+        let mut n = 0;
+        while self.future.last()
+            .is_some_and(|r| r.arrival_s <= clock)
+        {
+            let r = self.future.pop().unwrap();
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            self.pending[r.tenant.index()].push(seq, r);
+            self.pending_count += 1;
+            n += 1;
+        }
+        n
+    }
+
+    /// Arrival time of the next not-yet-admitted request.
+    pub fn next_arrival(&self) -> Option<f64> {
+        self.future.last().map(|r| r.arrival_s)
+    }
+
+    /// Admitted-but-undispatched requests.
+    pub fn pending_len(&self) -> usize {
+        self.pending_count
+    }
+
+    /// True when nothing is pending and nothing is still to arrive.
+    pub fn is_done(&self) -> bool {
+        self.pending_count == 0 && self.future.is_empty()
+    }
+
+    /// Tenant of the earliest-admitted pending request.
+    fn head_of_line(&self) -> Option<TenantId> {
+        self.pending.iter().enumerate()
+            .filter_map(|(t, q)| {
+                q.front_seq().map(|seq| (seq, TenantId(t as u32)))
+            })
+            .min_by_key(|(seq, _)| *seq)
+            .map(|(_, t)| t)
+    }
+
+    fn front_seq(&self, t: TenantId) -> Option<u64> {
+        self.pending[t.index()].front_seq()
+    }
+
+    /// Slo-aware tenant choice: earliest-deadline-first on each
+    /// tenant's tightest slack, where switching away from the live
+    /// tenant pays `swap_penalty_s` of extra slack — so a swap only
+    /// happens when another tenant's deadline pressure exceeds the
+    /// swap cost. Ties prefer the live tenant, then earliest
+    /// admission.
+    fn pick_slo(&self, live: Option<TenantId>,
+                clock: f64) -> Option<TenantId> {
+        let mut best: Option<(f64, bool, u64, TenantId)> = None;
+        for (i, q) in self.pending.iter().enumerate() {
+            let front = match q.front_seq() {
+                Some(seq) => seq,
+                None => continue,
+            };
+            let t = TenantId(i as u32);
+            // O(1): the per-queue monotonic deque tracks the minimum.
+            let slack = q.earliest_deadline()
+                .unwrap_or(f64::INFINITY) - clock;
+            let is_switch = live != Some(t);
+            let score = if is_switch {
+                slack + self.swap_penalty_s
+            } else {
+                slack
+            };
+            // Serve the tenant whose penalized slack is SMALLEST,
+            // preferring the live tenant, then FIFO.
+            let key = (score, is_switch, front, t);
+            let better = match &best {
+                None => true,
+                Some((bs, bsw, bf, _)) => {
+                    match score.total_cmp(bs) {
+                        std::cmp::Ordering::Less => true,
+                        std::cmp::Ordering::Greater => false,
+                        std::cmp::Ordering::Equal => {
+                            (is_switch, front) < (*bsw, *bf)
+                        }
+                    }
+                }
+            };
+            if better {
+                best = Some(key);
+            }
+        }
+        best.map(|(_, _, _, t)| t)
+    }
+
+    /// Pop up to `cap` requests from `t`'s queue, in admission order.
+    fn take(&mut self, t: TenantId) -> Batch {
+        let mut requests = Vec::new();
+        while requests.len() < self.cap {
+            match self.pending[t.index()].pop() {
+                Some((_, r)) => {
+                    self.pending_count -= 1;
+                    requests.push(r);
+                }
+                None => break,
+            }
+        }
+        Batch { tenant: t, requests }
+    }
+
+    /// One incremental dispatch decision. `live` is the tenant whose
+    /// adapter is currently spliced into the base (None = bare base);
+    /// `clock` is the virtual now. Returns None when nothing is
+    /// pending (the caller should jump the clock to `next_arrival`).
+    pub fn dispatch(&mut self, live: Option<TenantId>,
+                    clock: f64) -> Option<Batch> {
+        if self.pending_count == 0 {
+            return None;
+        }
+        match self.policy {
+            Policy::Fifo => {
+                // The batch is the maximal same-tenant *run* in global
+                // admission order, capped at `cap` — exactly the
+                // offline FIFO batch boundary.
+                let t = self.head_of_line()?;
+                let mut requests = Vec::new();
+                while requests.len() < self.cap
+                    && self.head_of_line() == Some(t)
+                {
+                    let (_, r) =
+                        self.pending[t.index()].pop().unwrap();
+                    self.pending_count -= 1;
+                    requests.push(r);
+                }
+                Some(Batch { tenant: t, requests })
+            }
+            Policy::SwapAware => {
+                // Continuous batching: stay on the live tenant while
+                // it has pending work (new same-tenant arrivals join
+                // here), else move to the earliest-admitted tenant.
+                let t = match live {
+                    Some(t) if self.front_seq(t).is_some() => t,
+                    _ => self.head_of_line()?,
+                };
+                Some(self.take(t))
+            }
+            Policy::SloAware => {
+                let t = self.pick_slo(live, clock)?;
+                Some(self.take(t))
+            }
+        }
+    }
+
+    /// Drain the scheduler as if every request had already arrived
+    /// (admission at +inf) — the fully-arrived dispatch sequence the
+    /// offline planner anchors against.
+    pub fn drain_fully_arrived(&mut self) -> Vec<Batch> {
+        self.admit(f64::INFINITY);
+        let mut out: Vec<Batch> = Vec::new();
+        let mut live = None;
+        while let Some(b) = self.dispatch(live, 0.0) {
+            live = Some(b.tenant);
+            out.push(b);
+        }
+        out
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn req(id: u64, tenant: &str) -> Request {
-        Request { id, tenant: tenant.into(), tokens: 16,
-                  arrival_s: id as f64 * 0.01 }
+    fn pool_of(n: usize) -> TenantPool {
+        let mut p = TenantPool::new();
+        for i in 0..n {
+            p.intern(&format!("t{i}"));
+        }
+        p
+    }
+
+    fn req(id: u64, tenant: u32) -> Request {
+        Request { id, tenant: TenantId(tenant), tokens: 16,
+                  arrival_s: id as f64 * 0.01,
+                  deadline_s: f64::INFINITY }
     }
 
     fn mixed() -> Vec<Request> {
         // Interleaved tenants — the worst case for FIFO.
-        ["a", "b", "a", "c", "b", "a", "c", "b", "a", "b"]
-            .iter().enumerate()
-            .map(|(i, t)| req(i as u64, t)).collect()
+        [0u32, 1, 0, 2, 1, 0, 2, 1, 0, 1].iter().enumerate()
+            .map(|(i, &t)| req(i as u64, t)).collect()
     }
 
     fn ids(batches: &[Batch]) -> Vec<u64> {
@@ -148,10 +533,24 @@ mod tests {
     }
 
     #[test]
-    fn both_policies_preserve_all_requests() {
-        let reqs = mixed();
-        for policy in [Policy::Fifo, Policy::SwapAware] {
-            let batches = plan(&reqs, 4, policy);
+    fn tenant_pool_interns_densely() {
+        let mut p = TenantPool::new();
+        let a = p.intern("a");
+        let b = p.intern("b");
+        assert_eq!(p.intern("a"), a, "re-intern must be stable");
+        assert_eq!(a, TenantId(0));
+        assert_eq!(b, TenantId(1));
+        assert_eq!(p.name(a), "a");
+        assert_eq!(p.get("b"), Some(b));
+        assert_eq!(p.get("zz"), None);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.names(), &["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn all_policies_preserve_all_requests() {
+        for policy in Policy::ALL {
+            let batches = plan(mixed(), 4, policy);
             assert_eq!(ids(&batches), (0..10).collect::<Vec<_>>(),
                        "{policy:?}");
             for b in &batches {
@@ -163,17 +562,15 @@ mod tests {
 
     #[test]
     fn swap_aware_beats_fifo_on_interleaved_tenants() {
-        let reqs = mixed();
-        let fifo = swap_count(&plan(&reqs, 4, Policy::Fifo));
-        let aware = swap_count(&plan(&reqs, 4, Policy::SwapAware));
+        let fifo = swap_count(&plan(mixed(), 4, Policy::Fifo));
+        let aware = swap_count(&plan(mixed(), 4, Policy::SwapAware));
         assert_eq!(aware, 3, "one swap per distinct tenant");
         assert!(fifo > aware, "fifo {fifo} !> swap-aware {aware}");
     }
 
     #[test]
     fn fifo_preserves_arrival_order() {
-        let reqs = mixed();
-        let batches = plan(&reqs, 4, Policy::Fifo);
+        let batches = plan(mixed(), 4, Policy::Fifo);
         let flat: Vec<u64> = batches.iter()
             .flat_map(|b| b.requests.iter().map(|r| r.id)).collect();
         assert_eq!(flat, (0..10).collect::<Vec<_>>());
@@ -181,11 +578,14 @@ mod tests {
 
     #[test]
     fn swap_aware_keeps_per_tenant_order_and_chunks() {
-        let reqs: Vec<Request> = (0..9).map(|i| req(i, "t")).collect();
-        let batches = plan(&reqs, 4, Policy::SwapAware);
+        let reqs: Vec<Request> = (0..9).map(|i| req(i, 0)).collect();
+        let batches = plan(reqs, 4, Policy::SwapAware);
         assert_eq!(batches.len(), 3); // 4 + 4 + 1
         assert_eq!(batches[2].requests.len(), 1);
         assert_eq!(swap_count(&batches), 1);
+        let flat: Vec<u64> = batches.iter()
+            .flat_map(|b| b.requests.iter().map(|r| r.id)).collect();
+        assert_eq!(flat, (0..9).collect::<Vec<_>>());
     }
 
     #[test]
@@ -193,12 +593,146 @@ mod tests {
         assert_eq!(Policy::parse("fifo").unwrap(), Policy::Fifo);
         assert_eq!(Policy::parse("swap-aware").unwrap(),
                    Policy::SwapAware);
+        assert_eq!(Policy::parse("slo-aware").unwrap(),
+                   Policy::SloAware);
         assert!(Policy::parse("lifo").is_err());
     }
 
     #[test]
     fn empty_queue_plans_empty() {
-        assert!(plan(&[], 8, Policy::Fifo).is_empty());
+        assert!(plan(Vec::new(), 8, Policy::Fifo).is_empty());
         assert_eq!(swap_count(&[]), 0);
+        let mut s = OnlineScheduler::new(Vec::new(), 0, 8,
+                                         Policy::Fifo);
+        assert!(s.is_done());
+        assert!(s.dispatch(None, 0.0).is_none());
+        assert!(s.next_arrival().is_none());
+    }
+
+    #[test]
+    fn online_admits_by_arrival_time() {
+        let pool = pool_of(3);
+        let reqs = mixed(); // arrivals at id * 0.01
+        let mut s = OnlineScheduler::new(reqs, pool.len(), 4,
+                                         Policy::Fifo);
+        assert_eq!(s.admit(-1.0), 0, "nothing has arrived yet");
+        assert_eq!(s.pending_len(), 0);
+        assert_eq!(s.next_arrival(), Some(0.0));
+        assert_eq!(s.admit(0.035), 4, "ids 0..=3 have arrived");
+        assert_eq!(s.pending_len(), 4);
+        assert_eq!(s.next_arrival(), Some(0.04));
+        assert_eq!(s.admit(10.0), 6, "the rest");
+        assert!(s.next_arrival().is_none());
+        assert!(!s.is_done(), "still pending");
+    }
+
+    #[test]
+    fn online_fully_arrived_matches_offline_plan() {
+        // The refactor's correctness anchor, at unit scale: on a
+        // fully-arrived queue the online dispatch sequence IS the
+        // offline plan, batch for batch, for fifo and swap-aware.
+        for policy in [Policy::Fifo, Policy::SwapAware] {
+            let offline = plan(mixed(), 4, policy);
+            let mut s = OnlineScheduler::new(mixed(), 3, 4, policy);
+            let online = s.drain_fully_arrived();
+            assert_eq!(online.len(), offline.len(), "{policy:?}");
+            for (a, b) in online.iter().zip(&offline) {
+                assert_eq!(a.tenant, b.tenant, "{policy:?}");
+                let ia: Vec<u64> =
+                    a.requests.iter().map(|r| r.id).collect();
+                let ib: Vec<u64> =
+                    b.requests.iter().map(|r| r.id).collect();
+                assert_eq!(ia, ib, "{policy:?}");
+            }
+            assert_eq!(swap_count(&online), swap_count(&offline));
+        }
+    }
+
+    #[test]
+    fn continuous_batching_joins_live_tenant() {
+        // A new same-tenant arrival admitted mid-service joins the
+        // next dispatch instead of waiting behind other tenants.
+        let mut reqs = vec![req(0, 0), req(1, 0), req(2, 1)];
+        reqs.push(Request { id: 3, tenant: TenantId(0), tokens: 16,
+                            arrival_s: 0.5,
+                            deadline_s: f64::INFINITY });
+        let mut s = OnlineScheduler::new(reqs, 2, 1,
+                                         Policy::SwapAware);
+        s.admit(0.1); // ids 0, 1, 2
+        let b0 = s.dispatch(None, 0.1).unwrap();
+        assert_eq!(b0.requests[0].id, 0);
+        // id 3 (tenant 0) arrives while tenant 0 is live.
+        s.admit(0.6);
+        let b1 = s.dispatch(Some(TenantId(0)), 0.6).unwrap();
+        assert_eq!(b1.tenant, TenantId(0));
+        assert_eq!(b1.requests[0].id, 1);
+        let b2 = s.dispatch(Some(TenantId(0)), 0.7).unwrap();
+        assert_eq!(b2.tenant, TenantId(0),
+                   "late arrival keeps the live tenant dispatching");
+        assert_eq!(b2.requests[0].id, 3);
+        let b3 = s.dispatch(Some(TenantId(0)), 0.8).unwrap();
+        assert_eq!(b3.tenant, TenantId(1), "then the queued tenant");
+        assert_eq!(b3.requests[0].id, 2);
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn slo_aware_serves_urgent_tenant_first() {
+        // Tenant 1's deadline is much tighter; slo-aware jumps to it
+        // even though tenant 0 arrived first.
+        let mk = |id, tenant, deadline_s| Request {
+            id, tenant: TenantId(tenant), tokens: 8, arrival_s: 0.0,
+            deadline_s,
+        };
+        let reqs = vec![mk(0, 0, 10.0), mk(1, 1, 0.05)];
+        let mut s = OnlineScheduler::new(reqs, 2, 4, Policy::SloAware);
+        s.admit(0.0);
+        let b = s.dispatch(None, 0.0).unwrap();
+        assert_eq!(b.tenant, TenantId(1), "tighter deadline first");
+        // FIFO on the same queue would serve tenant 0 first.
+        let reqs = vec![mk(0, 0, 10.0), mk(1, 1, 0.05)];
+        let mut s = OnlineScheduler::new(reqs, 2, 4, Policy::Fifo);
+        s.admit(0.0);
+        assert_eq!(s.dispatch(None, 0.0).unwrap().tenant, TenantId(0));
+    }
+
+    #[test]
+    fn slo_aware_swap_penalty_keeps_live_tenant() {
+        // Tenant 1 is slightly more urgent than live tenant 0, but by
+        // less than the swap penalty — the scheduler stays put. With
+        // the penalty at zero it would switch immediately.
+        let mk = |id, tenant, deadline_s| Request {
+            id, tenant: TenantId(tenant), tokens: 8, arrival_s: 0.0,
+            deadline_s,
+        };
+        let reqs = || vec![mk(0, 0, 0.50), mk(1, 0, 0.50),
+                           mk(2, 1, 0.45)];
+        let mut s = OnlineScheduler::new(reqs(), 2, 1,
+                                         Policy::SloAware);
+        s.swap_penalty_s = 0.2;
+        s.admit(0.0);
+        let order: Vec<TenantId> = std::iter::successors(
+            s.dispatch(Some(TenantId(0)), 0.0),
+            |prev| s.dispatch(Some(prev.tenant), 0.0))
+            .map(|b| b.tenant).collect();
+        assert_eq!(order, vec![TenantId(0), TenantId(0), TenantId(1)],
+                   "0.05 of extra urgency does not buy a 0.2 swap");
+        // Same queue, no penalty: the urgent tenant preempts at once.
+        let mut s = OnlineScheduler::new(reqs(), 2, 1,
+                                         Policy::SloAware);
+        s.admit(0.0);
+        assert_eq!(s.dispatch(Some(TenantId(0)), 0.0).unwrap().tenant,
+                   TenantId(1));
+    }
+
+    #[test]
+    fn online_preserves_every_request_exactly_once() {
+        for policy in Policy::ALL {
+            let mut s = OnlineScheduler::new(mixed(), 3, 4, policy);
+            let batches = s.drain_fully_arrived();
+            assert_eq!(ids(&batches), (0..10).collect::<Vec<_>>(),
+                       "{policy:?}");
+            assert!(s.is_done());
+        }
     }
 }

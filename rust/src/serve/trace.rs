@@ -2,17 +2,26 @@
 //!
 //! Tenant popularity is Zipfian (a few hot tenants, a long cold tail —
 //! the observed shape of multi-adapter serving fleets), arrivals are a
-//! Poisson process (exponential inter-arrival times), and prompt
-//! lengths are uniform around a mean. Fully deterministic from the
-//! seed, like every other substrate in the crate.
+//! Poisson process (exponential inter-arrival times) optionally
+//! modulated into bursts, prompt lengths are uniform around a mean,
+//! and each request can carry a per-tenant SLO deadline. Fully
+//! deterministic from the seed, like every other substrate in the
+//! crate.
+//!
+//! A [`Trace`] owns both the requests and the [`TenantPool`] that
+//! interns their tenant names — ids are dense handles, names only
+//! exist at the JSONL boundary and in reports.
 
 use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::serve::scheduler::Request;
+use crate::serve::scheduler::{Request, TenantPool};
 use crate::util::json::Json;
 use crate::util::rng::{Rng, Zipf};
+
+/// Mean burst length (requests) when `burstiness > 1`.
+const BURST_LEN: f64 = 8.0;
 
 #[derive(Debug, Clone)]
 pub struct TraceSpec {
@@ -25,13 +34,22 @@ pub struct TraceSpec {
     pub zipf_s: f64,
     /// Mean arrival rate, requests/second.
     pub req_per_s: f64,
+    /// Arrival burstiness b ≥ 1. At 1 arrivals are pure Poisson; above
+    /// 1 they alternate between fast intra-burst spacing (rate b·λ,
+    /// bursts of ~BURST_LEN requests) and stretched inter-burst gaps
+    /// (rate λ/b) — same requests, much spikier instantaneous load.
+    pub burstiness: f64,
+    /// Mean per-request deadline in milliseconds after arrival
+    /// (jittered ±25% per request); 0 = no deadlines.
+    pub deadline_ms: f64,
     pub seed: u64,
 }
 
 impl Default for TraceSpec {
     fn default() -> TraceSpec {
         TraceSpec { n_requests: 256, n_tenants: 8, mean_tokens: 64,
-                    zipf_s: 1.1, req_per_s: 200.0, seed: 42 }
+                    zipf_s: 1.1, req_per_s: 200.0, burstiness: 1.0,
+                    deadline_ms: 0.0, seed: 42 }
     }
 }
 
@@ -39,42 +57,89 @@ pub fn tenant_name(i: usize) -> String {
     format!("tenant-{i:03}")
 }
 
-pub fn synthesize(spec: &TraceSpec) -> Vec<Request> {
+/// A request trace plus the tenant-name interner its ids live in.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub pool: TenantPool,
+    pub requests: Vec<Request>,
+}
+
+impl Trace {
+    /// Distinct tenant names appearing in the trace, sorted.
+    pub fn tenant_names(&self) -> Vec<String> {
+        let mut t: Vec<String> = self.pool.names().to_vec();
+        t.sort();
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Trace span in seconds (last arrival).
+    pub fn span_s(&self) -> f64 {
+        self.requests.iter().map(|r| r.arrival_s)
+            .fold(0.0, f64::max)
+    }
+}
+
+pub fn synthesize(spec: &TraceSpec) -> Trace {
     assert!(spec.n_tenants > 0 && spec.mean_tokens >= 2);
     let mut rng = Rng::for_tag(spec.seed, "serve/trace");
     let zipf = Zipf::new(spec.n_tenants, spec.zipf_s);
+    let mut pool = TenantPool::new();
+    let rate = spec.req_per_s.max(1e-9);
+    let b = spec.burstiness.max(1.0);
     let mut t = 0.0f64;
-    (0..spec.n_requests as u64).map(|id| {
-        // Exponential inter-arrival at the target rate.
+    let requests = (0..spec.n_requests as u64).map(|id| {
+        // Exponential inter-arrival at the (possibly burst-modulated)
+        // instantaneous rate. The b == 1 path draws exactly the same
+        // stream as the pre-burstiness generator, so existing seeds
+        // reproduce their old traces.
+        let lambda = if b > 1.0 {
+            if rng.next_f64() < 1.0 / BURST_LEN {
+                rate / b // inter-burst gap
+            } else {
+                rate * b // intra-burst spacing
+            }
+        } else {
+            rate
+        };
         let u = rng.next_f64().max(1e-12);
-        t += -u.ln() / spec.req_per_s.max(1e-9);
-        Request {
-            id,
-            tenant: tenant_name(zipf.sample(&mut rng)),
-            tokens: spec.mean_tokens / 2
-                + rng.below(spec.mean_tokens.max(2)),
-            arrival_s: t,
-        }
-    }).collect()
+        t += -u.ln() / lambda;
+        let tenant = pool.intern(&tenant_name(zipf.sample(&mut rng)));
+        let tokens = spec.mean_tokens / 2
+            + rng.below(spec.mean_tokens.max(2));
+        let deadline_s = if spec.deadline_ms > 0.0 {
+            spec.deadline_ms * 1e-3 * (0.75 + 0.5 * rng.next_f64())
+        } else {
+            f64::INFINITY
+        };
+        Request { id, tenant, tokens, arrival_s: t, deadline_s }
+    }).collect();
+    Trace { pool, requests }
 }
 
-/// Distinct tenants appearing in a trace, sorted.
-pub fn tenants(reqs: &[Request]) -> Vec<String> {
-    let mut t: Vec<String> = reqs.iter().map(|r| r.tenant.clone())
-        .collect();
-    t.sort();
-    t.dedup();
-    t
-}
-
-pub fn write_jsonl(path: &Path, reqs: &[Request]) -> Result<()> {
+pub fn write_jsonl(path: &Path, trace: &Trace) -> Result<()> {
     let mut out = String::new();
-    for r in reqs {
+    for r in &trace.requests {
         let mut obj = std::collections::BTreeMap::new();
         obj.insert("id".to_string(), Json::Num(r.id as f64));
-        obj.insert("tenant".to_string(), Json::Str(r.tenant.clone()));
+        obj.insert("tenant".to_string(),
+                   Json::Str(trace.pool.name(r.tenant).to_string()));
         obj.insert("tokens".to_string(), Json::Num(r.tokens as f64));
         obj.insert("arrival_s".to_string(), Json::Num(r.arrival_s));
+        // No-deadline requests simply omit the field, so traces
+        // without SLOs stay readable by (and identical to) the
+        // pre-deadline format.
+        if r.deadline_s.is_finite() {
+            obj.insert("deadline_s".to_string(),
+                       Json::Num(r.deadline_s));
+        }
         out.push_str(&Json::Obj(obj).to_string());
         out.push('\n');
     }
@@ -82,10 +147,10 @@ pub fn write_jsonl(path: &Path, reqs: &[Request]) -> Result<()> {
         .with_context(|| format!("writing {}", path.display()))
 }
 
-pub fn read_jsonl(path: &Path) -> Result<Vec<Request>> {
+pub fn read_jsonl(path: &Path) -> Result<Trace> {
     let src = std::fs::read_to_string(path)
         .with_context(|| format!("reading {}", path.display()))?;
-    let mut reqs = Vec::new();
+    let mut trace = Trace::default();
     for (ln, line) in src.lines().enumerate() {
         let line = line.trim();
         if line.is_empty() {
@@ -94,24 +159,27 @@ pub fn read_jsonl(path: &Path) -> Result<Vec<Request>> {
         let j = Json::parse(line).map_err(|e| {
             anyhow!("{}:{}: {e}", path.display(), ln + 1)
         })?;
-        let str_field = |k: &str| -> Result<String> {
-            j.get(k).and_then(|v| v.as_str()).map(String::from)
-                .ok_or_else(|| anyhow!(
-                    "{}:{}: missing {k}", path.display(), ln + 1))
-        };
         let num_field = |k: &str| -> Result<f64> {
             j.get(k).and_then(|v| v.as_f64())
                 .ok_or_else(|| anyhow!(
                     "{}:{}: missing {k}", path.display(), ln + 1))
         };
-        reqs.push(Request {
+        let name = j.get("tenant").and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!(
+                "{}:{}: missing tenant", path.display(), ln + 1))?;
+        let tenant = trace.pool.intern(name);
+        trace.requests.push(Request {
             id: num_field("id")? as u64,
-            tenant: str_field("tenant")?,
+            tenant,
             tokens: num_field("tokens")? as usize,
             arrival_s: num_field("arrival_s")?,
+            // Older traces predate the SLO field: absent means no
+            // deadline, not deadline-zero.
+            deadline_s: j.get("deadline_s").and_then(|v| v.as_f64())
+                .unwrap_or(f64::INFINITY),
         });
     }
-    Ok(reqs)
+    Ok(trace)
 }
 
 #[cfg(test)]
@@ -125,43 +193,128 @@ mod tests {
         let a = synthesize(&spec);
         let b = synthesize(&spec);
         assert_eq!(a.len(), 100);
-        assert_eq!(a, b, "trace must be seed-deterministic");
-        assert!(tenants(&a).len() >= 2, "multi-tenant by construction");
-        for w in a.windows(2) {
+        assert_eq!(a.requests, b.requests,
+                   "trace must be seed-deterministic");
+        assert!(a.tenant_names().len() >= 2,
+                "multi-tenant by construction");
+        for w in a.requests.windows(2) {
             assert!(w[1].arrival_s > w[0].arrival_s,
                     "arrivals must be increasing");
         }
-        for r in &a {
+        for r in &a.requests {
             assert!(r.tokens >= spec.mean_tokens / 2);
             assert!(r.tokens < 2 * spec.mean_tokens);
+            assert!(r.deadline_s.is_infinite(),
+                    "no deadlines unless requested");
         }
+        assert!(a.span_s() > 0.0);
     }
 
     #[test]
     fn zipf_popularity_is_head_heavy() {
         let spec = TraceSpec { n_requests: 2000, n_tenants: 16,
                                ..Default::default() };
-        let reqs = synthesize(&spec);
-        let head = reqs.iter()
-            .filter(|r| r.tenant == tenant_name(0)).count();
+        let trace = synthesize(&spec);
+        let hot = trace.pool.get(&tenant_name(0)).unwrap();
+        let head = trace.requests.iter()
+            .filter(|r| r.tenant == hot).count();
         assert!(head > 2000 / 16, "tenant-000 should be hot ({head})");
     }
 
     #[test]
-    fn jsonl_roundtrip() {
-        let spec = TraceSpec { n_requests: 32, n_tenants: 4,
+    fn burstiness_raises_interarrival_variance() {
+        let smooth = synthesize(&TraceSpec {
+            n_requests: 1000, ..Default::default() });
+        let bursty = synthesize(&TraceSpec {
+            n_requests: 1000, burstiness: 4.0, ..Default::default() });
+        let cv2 = |t: &Trace| {
+            let gaps: Vec<f64> = t.requests.windows(2)
+                .map(|w| w[1].arrival_s - w[0].arrival_s).collect();
+            let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let var = gaps.iter().map(|g| (g - mean) * (g - mean))
+                .sum::<f64>() / gaps.len() as f64;
+            var / (mean * mean)
+        };
+        // Poisson inter-arrivals have CV² ≈ 1; the burst mixture is
+        // markedly overdispersed.
+        assert!(cv2(&smooth) < 2.0, "smooth CV² {}", cv2(&smooth));
+        assert!(cv2(&bursty) > 2.0 * cv2(&smooth),
+                "bursty CV² {} vs smooth {}", cv2(&bursty),
+                cv2(&smooth));
+    }
+
+    #[test]
+    fn deadlines_are_jittered_around_the_mean() {
+        let spec = TraceSpec { n_requests: 200, deadline_ms: 80.0,
                                ..Default::default() };
-        let reqs = synthesize(&spec);
+        let trace = synthesize(&spec);
+        for r in &trace.requests {
+            assert!(r.deadline_s >= 0.75 * 0.080
+                    && r.deadline_s < 1.25 * 0.080,
+                    "deadline {} outside jitter band", r.deadline_s);
+            assert!(r.absolute_deadline() > r.arrival_s);
+        }
+    }
+
+    #[test]
+    fn jsonl_roundtrip_preserves_everything_in_order() {
+        let spec = TraceSpec { n_requests: 32, n_tenants: 4,
+                               deadline_ms: 50.0,
+                               ..Default::default() };
+        let trace = synthesize(&spec);
         let path = std::env::temp_dir().join(format!(
             "paca-trace-{}.jsonl", std::process::id()));
-        write_jsonl(&path, &reqs).unwrap();
+        write_jsonl(&path, &trace).unwrap();
         let back = read_jsonl(&path).unwrap();
-        assert_eq!(back.len(), reqs.len());
-        for (a, b) in reqs.iter().zip(&back) {
+        assert_eq!(back.len(), trace.len());
+        for (a, b) in trace.requests.iter().zip(&back.requests) {
             assert_eq!(a.id, b.id);
-            assert_eq!(a.tenant, b.tenant);
+            assert_eq!(trace.pool.name(a.tenant),
+                       back.pool.name(b.tenant));
             assert_eq!(a.tokens, b.tokens);
             assert!((a.arrival_s - b.arrival_s).abs() < 1e-9);
+            assert!((a.deadline_s - b.deadline_s).abs() < 1e-9);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_deadline_field_defaults_to_no_deadline() {
+        // A trace written before the SLO field existed must read back
+        // with deadline_s = INFINITY, not 0 (which would mean "already
+        // missed").
+        let path = std::env::temp_dir().join(format!(
+            "paca-trace-old-{}.jsonl", std::process::id()));
+        std::fs::write(&path, concat!(
+            "{\"arrival_s\":0.25,\"id\":0,\"tenant\":\"tenant-000\",",
+            "\"tokens\":32}\n",
+            "{\"arrival_s\":0.5,\"deadline_s\":0.075,\"id\":1,",
+            "\"tenant\":\"tenant-001\",\"tokens\":16}\n")).unwrap();
+        let trace = read_jsonl(&path).unwrap();
+        assert_eq!(trace.len(), 2);
+        assert!(trace.requests[0].deadline_s.is_infinite());
+        assert!((trace.requests[1].deadline_s - 0.075).abs() < 1e-12);
+        // And a no-deadline trace round-trips back WITHOUT the field.
+        write_jsonl(&path, &trace).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(!text.lines().next().unwrap().contains("deadline_s"));
+        assert!(text.lines().nth(1).unwrap().contains("deadline_s"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn interning_is_stable_across_write_read() {
+        let spec = TraceSpec { n_requests: 64, n_tenants: 6,
+                               ..Default::default() };
+        let trace = synthesize(&spec);
+        let path = std::env::temp_dir().join(format!(
+            "paca-trace-intern-{}.jsonl", std::process::id()));
+        write_jsonl(&path, &trace).unwrap();
+        let back = read_jsonl(&path).unwrap();
+        // Names survive; first-appearance order makes ids line up too.
+        assert_eq!(trace.pool.names(), back.pool.names());
+        for (a, b) in trace.requests.iter().zip(&back.requests) {
+            assert_eq!(a.tenant, b.tenant);
         }
         std::fs::remove_file(&path).ok();
     }

@@ -1,0 +1,66 @@
+//! End-to-end CLI smoke test: run the built `paca` binary's `serve`
+//! subcommand against a tiny synthesized trace in a temp dir and
+//! assert it exits 0 with a non-empty report. Uses the host backend,
+//! so it needs no artifacts and runs on a fresh checkout.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "paca-cli-{tag}-{}", std::process::id()))
+}
+
+#[test]
+fn serve_cli_end_to_end() {
+    let dir = tmp("serve");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("trace.jsonl");
+    let adapters = dir.join("adapters");
+    let run = |extra: &[&str]| {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_paca"));
+        cmd.arg("serve")
+            .arg("--backend").arg("host")
+            .arg("--requests").arg(&trace)
+            .arg("--adapters").arg(&adapters)
+            .arg("--count").arg("24")
+            .arg("--tenants").arg("3")
+            .arg("--batch").arg("4")
+            .arg("--mean-tokens").arg("8")
+            .args(extra);
+        cmd.output().expect("spawning paca serve")
+    };
+
+    // First run synthesizes trace + adapters and serves online with
+    // SLO scheduling.
+    let out = run(&["--policy", "slo-aware", "--deadline-ms", "50",
+                    "--burstiness", "2"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(),
+            "paca serve failed:\nstdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(!stdout.trim().is_empty(), "report must not be empty");
+    assert!(stdout.contains("online pipeline"),
+            "online metrics missing:\n{stdout}");
+    assert!(stdout.contains("deadline misses"),
+            "SLO accounting missing:\n{stdout}");
+    assert!(stdout.contains("restored bit-exactly"),
+            "base-restore check missing:\n{stdout}");
+    assert!(trace.exists(), "trace must be persisted");
+    assert!(adapters.join("tenant-000.paca").exists(),
+            "adapters must be persisted");
+
+    // Second run reloads the persisted trace/adapters (round-trip
+    // through JSONL + .paca files) under a different policy.
+    let out = run(&["--policy", "fifo"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "reload run failed:\n{stdout}");
+    assert!(stdout.contains("loaded 24 requests"),
+            "must reuse the persisted trace:\n{stdout}");
+
+    // Bad flags fail loudly, not silently.
+    let out = run(&["--policy", "lifo"]);
+    assert!(!out.status.success(), "unknown policy must error");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -323,6 +323,113 @@ fn prop_sequential_tenant_splices_never_interact() {
 }
 
 #[test]
+fn prop_online_scheduler_reproduces_offline_plan_when_fully_arrived() {
+    // The serving refactor's correctness anchor: for ANY queue whose
+    // requests have all arrived, the online scheduler's incremental
+    // dispatch sequence must equal the offline one-shot plan — same
+    // batches, same order, same swap count — for fifo and swap-aware.
+    use paca::serve::scheduler::{plan, swap_count, OnlineScheduler,
+                                 Policy, Request, TenantId};
+    prop(120, |rng| {
+        let n_tenants = 1 + rng.below(6);
+        let n = 1 + rng.below(60);
+        let cap = 1 + rng.below(6);
+        let requests: Vec<Request> = (0..n as u64).map(|id| Request {
+            id,
+            tenant: TenantId(rng.below(n_tenants) as u32),
+            tokens: 1 + rng.below(64),
+            arrival_s: 0.0,
+            deadline_s: if rng.below(2) == 0 {
+                f64::INFINITY
+            } else {
+                rng.next_f64()
+            },
+        }).collect();
+        for policy in [Policy::Fifo, Policy::SwapAware] {
+            let offline = plan(requests.clone(), cap, policy);
+            let mut sched = OnlineScheduler::new(
+                requests.clone(), n_tenants, cap, policy);
+            let online = sched.drain_fully_arrived();
+            assert!(sched.is_done());
+            assert_eq!(online.len(), offline.len(),
+                       "{policy:?}: batch count");
+            for (a, b) in online.iter().zip(&offline) {
+                assert_eq!(a.tenant, b.tenant, "{policy:?}: order");
+                let ia: Vec<u64> =
+                    a.requests.iter().map(|r| r.id).collect();
+                let ib: Vec<u64> =
+                    b.requests.iter().map(|r| r.id).collect();
+                assert_eq!(ia, ib, "{policy:?}: membership");
+            }
+            assert_eq!(swap_count(&online), swap_count(&offline),
+                       "{policy:?}: swap count");
+        }
+        // Every policy (slo-aware has no offline equivalent to match,
+        // but it must still conserve requests).
+        let mut sched = OnlineScheduler::new(
+            requests.clone(), n_tenants, cap, Policy::SloAware);
+        let served: usize = sched.drain_fully_arrived().iter()
+            .map(|b| b.requests.len()).sum();
+        assert_eq!(served, n);
+    });
+}
+
+#[test]
+fn prop_online_scheduler_conserves_requests_under_any_arrivals() {
+    // Random arrival times, random admission clock walk: every
+    // request is dispatched exactly once, never before it arrives.
+    use paca::serve::scheduler::{OnlineScheduler, Policy, Request,
+                                 TenantId};
+    prop(80, |rng| {
+        let n_tenants = 1 + rng.below(5);
+        let n = 1 + rng.below(50);
+        let cap = 1 + rng.below(5);
+        let requests: Vec<Request> = (0..n as u64).map(|id| Request {
+            id,
+            tenant: TenantId(rng.below(n_tenants) as u32),
+            tokens: 1 + rng.below(32),
+            arrival_s: rng.next_f64() * 2.0,
+            deadline_s: 0.05 + rng.next_f64(),
+        }).collect();
+        let policy = [Policy::Fifo, Policy::SwapAware,
+                      Policy::SloAware][rng.below(3)];
+        let mut sched = OnlineScheduler::new(requests.clone(),
+                                             n_tenants, cap, policy);
+        let mut clock = 0.0f64;
+        let mut live = None;
+        let mut seen: Vec<u64> = Vec::new();
+        loop {
+            sched.admit(clock);
+            if sched.pending_len() == 0 {
+                match sched.next_arrival() {
+                    Some(t) => {
+                        clock = clock.max(t);
+                        sched.admit(clock);
+                    }
+                    None => break,
+                }
+            }
+            let b = sched.dispatch(live, clock).expect("pending work");
+            assert!(!b.requests.is_empty());
+            assert!(b.requests.len() <= cap);
+            for r in &b.requests {
+                assert_eq!(r.tenant, b.tenant);
+                assert!(r.arrival_s <= clock,
+                        "dispatched before arrival");
+                seen.push(r.id);
+            }
+            live = Some(b.tenant);
+            // Random virtual service time.
+            clock += rng.next_f64() * 0.1;
+        }
+        assert!(sched.is_done());
+        seen.sort_unstable();
+        assert_eq!(seen, (0..n as u64).collect::<Vec<_>>(),
+                   "{policy:?}: lost or duplicated requests");
+    });
+}
+
+#[test]
 fn prop_rng_choice_uniformity() {
     // Every index should be selected with roughly equal frequency.
     let mut counts = vec![0usize; 32];
