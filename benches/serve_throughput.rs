@@ -10,12 +10,21 @@
 //!      per policy, on the deterministic analytic clock: queueing-
 //!      delay percentiles, deadline misses (slo-aware must beat
 //!      fifo — asserted), swaps, virtual throughput.
-//!   3. Measured wall-clock host-GEMM throughput per policy under a
+//!   3. Iteration-level vs whole-batch head-to-head on a bursty
+//!      DECODE-heavy trace (analytic clock): the iteration-level loop
+//!      frees slots as requests finish and admits same-tenant joiners
+//!      mid-generation, so it must cut p99 queueing delay vs the
+//!      whole-batch unit of service (asserted; operating point
+//!      validated over 40 seeds by simulation — worst-seed margin
+//!      1.11x, the pinned seed's ~1.3x, and deadline misses improve
+//!      on all 40 seeds too).
+//!   4. Measured wall-clock host-GEMM throughput per policy under a
 //!      capacity-bounded registry (cold tenants reload from disk).
 //!
 //! Emits BENCH_serve.json (per-policy queueing p50/p99, misses,
-//! throughput) to seed the perf trajectory. Runs on a fresh checkout:
-//! host backend, synthetic base + adapters, no artifacts required.
+//! throughput, per-unit decode head-to-head) to seed the perf
+//! trajectory. Runs on a fresh checkout: host backend, synthetic base
+//! + adapters, no artifacts required.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -65,6 +74,33 @@ fn bursty_trace() -> Trace {
         ..Default::default()
     })
 }
+
+/// Decode-heavy bursty SLO trace for the iteration-level head-to-head:
+/// each request owes a mean of 24 decode iterations after prefill, so
+/// a whole-batch unit of service holds the server for its longest
+/// member while iteration-level serving frees slots early and admits
+/// same-tenant joiners mid-generation.
+fn decode_trace() -> Trace {
+    trace::synthesize(&TraceSpec {
+        n_requests: N_REQUESTS,
+        n_tenants: 4,
+        mean_tokens: MEAN_TOKENS,
+        decode_tokens: 24,
+        burstiness: 4.0,
+        deadline_ms: 60.0,
+        req_per_s: 35.0,
+        ..Default::default()
+    })
+}
+
+/// Analytic clock for the decode head-to-head: every iteration pays a
+/// 0.5ms step overhead + 50µs/token, swaps 5ms. Both units of service
+/// pay identical per-step arithmetic (the whole-batch run charges
+/// `(1 + max decode)·batch_s`), so the comparison isolates WHEN work
+/// is scheduled, not how it is priced.
+const DECODE_CLOCK: ClockModel = ClockModel::Analytic {
+    swap_s: 5e-3, batch_s: 5e-4, token_s: 5e-5,
+};
 
 fn engine_for(tr: &Trace, adapters_dir: Option<&Path>) -> ServeEngine {
     let model = bench_model();
@@ -256,7 +292,102 @@ fn main() {
                  / (fifo.misses as f64).max(1.0),
              fifo.queue_p99_ms, slo.queue_p99_ms);
 
-    // ---- 3. Measured wall-clock host serving, thrashing registry. -
+    // ---- 3. Iteration-level vs whole-batch on a decode trace. -----
+    println!("\n== decode head-to-head: iteration-level vs \
+              whole-batch (bursty trace, mean 24 decode tokens, \
+              analytic clock, swap-aware) ==");
+    struct UnitResult {
+        queue_p50_ms: f64,
+        queue_p99_ms: f64,
+        ttft_p99_ms: f64,
+        misses: u64,
+        swaps: u64,
+        steps: u64,
+        mean_slots: f64,
+    }
+    let run_unit = |iterative: bool| -> UnitResult {
+        let tr = decode_trace();
+        let mut eng = engine_for(&tr, None);
+        let mut sched = OnlineScheduler::new(
+            tr.requests, tr.pool.len(), BATCH, Policy::SwapAware);
+        if iterative {
+            eng.serve_iterative(&mut sched, DECODE_CLOCK)
+                .expect("serve_iterative");
+        } else {
+            eng.serve_online(&mut sched, DECODE_CLOCK)
+                .expect("serve_online");
+        }
+        eng.finish().expect("bit-exact base restore");
+        assert_eq!(eng.stats.requests as usize, N_REQUESTS);
+        let pq = |rec: &paca::metrics::LatencyRecorder, q: f64| {
+            rec.percentile("(all)", q).unwrap_or(0.0) * 1e3
+        };
+        UnitResult {
+            queue_p50_ms: pq(&eng.queueing, 0.50),
+            queue_p99_ms: pq(&eng.queueing, 0.99),
+            ttft_p99_ms: pq(&eng.ttft, 0.99),
+            misses: eng.stats.deadline_misses,
+            swaps: eng.stats.swaps,
+            steps: eng.stats.steps,
+            mean_slots: eng.occupancy.mean_slots(),
+        }
+    };
+    let whole = run_unit(false);
+    let iter = run_unit(true);
+    println!("{:>16} {:>10} {:>10} {:>10} {:>8} {:>7} {:>7} {:>6}",
+             "unit", "q p50 ms", "q p99 ms", "ttft p99", "misses",
+             "swaps", "steps", "occ");
+    println!("{:>16} {:>10.3} {:>10.3} {:>10} {:>8} {:>7} {:>7} {:>6}",
+             "whole-batch", whole.queue_p50_ms, whole.queue_p99_ms,
+             "-", whole.misses, whole.swaps, "-", "-");
+    println!("{:>16} {:>10.3} {:>10.3} {:>10.3} {:>8} {:>7} {:>7} \
+              {:>6.1}",
+             "iteration-level", iter.queue_p50_ms, iter.queue_p99_ms,
+             iter.ttft_p99_ms, iter.misses, iter.swaps, iter.steps,
+             iter.mean_slots);
+    // The tentpole's payoff, asserted on the deterministic clock:
+    // splitting the unit of service into token steps cuts tail
+    // queueing (slots free early + mid-generation joins) without
+    // giving back deadline misses.
+    assert!(iter.queue_p99_ms < whole.queue_p99_ms,
+            "iteration-level must cut p99 queueing on a decode-heavy \
+             bursty trace: {} !< {}",
+            iter.queue_p99_ms, whole.queue_p99_ms);
+    assert!(iter.misses <= whole.misses,
+            "iteration-level must not add deadline misses: {} > {}",
+            iter.misses, whole.misses);
+    assert!(iter.steps as usize > N_REQUESTS / BATCH,
+            "decode work must actually be served step-wise");
+    println!("\niteration-level vs whole-batch: queue p99 {:.1}ms -> \
+              {:.1}ms ({:.0}% lower), misses {} -> {}",
+             whole.queue_p99_ms, iter.queue_p99_ms,
+             100.0 * (1.0 - iter.queue_p99_ms / whole.queue_p99_ms),
+             whole.misses, iter.misses);
+    for (unit, r) in [("whole-batch", &whole),
+                      ("iteration-level", &iter)] {
+        let mut obj = BTreeMap::new();
+        obj.insert("unit".into(), Json::Str(unit.into()));
+        obj.insert("clock".into(), Json::Str("analytic".into()));
+        obj.insert("trace".into(), Json::Str("decode-bursty".into()));
+        obj.insert("queue_p50_ms".into(), Json::Num(r.queue_p50_ms));
+        obj.insert("queue_p99_ms".into(), Json::Num(r.queue_p99_ms));
+        obj.insert("deadline_misses".into(),
+                   Json::Num(r.misses as f64));
+        obj.insert("swaps".into(), Json::Num(r.swaps as f64));
+        // TTFT/steps/occupancy only exist for the iteration-level
+        // unit — omit the keys (like the console's "-") rather than
+        // writing fabricated zeros into the perf trajectory.
+        if unit == "iteration-level" {
+            obj.insert("ttft_p99_ms".into(),
+                       Json::Num(r.ttft_p99_ms));
+            obj.insert("steps".into(), Json::Num(r.steps as f64));
+            obj.insert("mean_slots".into(),
+                       Json::Num(r.mean_slots));
+        }
+        results.push(Json::Obj(obj));
+    }
+
+    // ---- 4. Measured wall-clock host serving, thrashing registry. -
     println!("\n== measured host-GEMM wall clock (registry capacity \
               {} of {N_TENANTS} tenants) ==", (N_TENANTS / 2).max(2));
     println!("{:>11} {:>9} {:>7} {:>7}", "policy", "req/s", "swaps",

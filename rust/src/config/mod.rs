@@ -165,6 +165,16 @@ pub struct ServeConfig {
     pub deadline_ms: f64,
     /// Arrival burstiness for synthesized traces (1 = pure Poisson).
     pub burstiness: f64,
+    /// Mean decode length (output tokens after the first) for
+    /// synthesized traces; 0 = prefill-only requests.
+    pub decode_tokens: usize,
+    /// Per-step token budget of the iteration-level engine (prefill
+    /// prompts + one per decoding slot); 0 = unlimited.
+    pub max_batch_tokens: usize,
+    /// Unit of service: "step" (iteration-level continuous batching —
+    /// late same-tenant arrivals join mid-generation) or "batch" (the
+    /// v2 whole-batch pipeline).
+    pub service_unit: String,
 }
 
 impl Default for ServeConfig {
@@ -183,6 +193,9 @@ impl Default for ServeConfig {
             mean_tokens: 64,
             deadline_ms: 0.0,
             burstiness: 1.0,
+            decode_tokens: 0,
+            max_batch_tokens: 0,
+            service_unit: "step".into(),
         }
     }
 }
@@ -229,6 +242,19 @@ impl ServeConfig {
                 }
                 v
             },
+            decode_tokens: u("serve.decode_tokens", d.decode_tokens)?,
+            max_batch_tokens: u("serve.max_batch_tokens",
+                                d.max_batch_tokens)?,
+            service_unit: {
+                let v = doc.str_or("serve.service_unit",
+                                   &d.service_unit).to_string();
+                if v != "step" && v != "batch" {
+                    return Err(anyhow!(
+                        "serve.service_unit must be step|batch, \
+                         got {v:?}"));
+                }
+                v
+            },
         })
     }
 
@@ -265,6 +291,19 @@ impl ServeConfig {
                         "burstiness must be >= 1, got {b}"));
                 }
                 self.burstiness = b;
+            }
+            "serve.decode_tokens" | "decode-tokens"
+                | "decode_tokens" => self.decode_tokens = v.parse()?,
+            "serve.max_batch_tokens" | "max-batch-tokens"
+                | "max_batch_tokens" => {
+                self.max_batch_tokens = v.parse()?
+            }
+            "serve.service_unit" | "service-unit" | "service_unit" => {
+                if v != "step" && v != "batch" {
+                    return Err(anyhow!(
+                        "service-unit must be step|batch, got {v:?}"));
+                }
+                self.service_unit = v.into();
             }
             other => {
                 return Err(anyhow!("unknown serve config key {other:?}"))
@@ -372,6 +411,35 @@ mod tests {
         assert_eq!(c.burstiness, 2.5);
         let bad = TomlDoc::parse("[serve]\nburstiness = 0\n").unwrap();
         assert!(ServeConfig::from_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn serve_decode_keys() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.decode_tokens, 0, "prefill-only by default");
+        assert_eq!(c.max_batch_tokens, 0, "unbudgeted by default");
+        assert_eq!(c.service_unit, "step",
+                   "iteration-level is the default unit");
+        c.apply_override("decode-tokens=24").unwrap();
+        c.apply_override("max-batch-tokens=256").unwrap();
+        c.apply_override("service-unit=batch").unwrap();
+        assert_eq!(c.decode_tokens, 24);
+        assert_eq!(c.max_batch_tokens, 256);
+        assert_eq!(c.service_unit, "batch");
+        assert!(c.apply_override("service-unit=token").is_err());
+        let doc = TomlDoc::parse(
+            "[serve]\ndecode_tokens = 16\nmax_batch_tokens = 128\n\
+             service_unit = \"step\"\n").unwrap();
+        let c = ServeConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.decode_tokens, 16);
+        assert_eq!(c.max_batch_tokens, 128);
+        let bad = TomlDoc::parse(
+            "[serve]\nservice_unit = \"whole\"\n").unwrap();
+        assert!(ServeConfig::from_doc(&bad).is_err());
+        let bad = TomlDoc::parse(
+            "[serve]\nmax_batch_tokens = -4\n").unwrap();
+        assert!(ServeConfig::from_doc(&bad).is_err(),
+                "negative budget must error, not wrap");
     }
 
     #[test]

@@ -477,6 +477,10 @@ pub fn serve_exp(rt: &Runtime, quick: bool) -> Result<String> {
                   cost model):\n");
     out.push_str(&cost::latency_table(&m8b, 64, 8, 512));
 
+    out.push_str("\nIteration-level decode (TTFT/TPOT; the unmerged \
+                  path pays its adapter kernels per output token):\n");
+    out.push_str(&cost::decode_table(&m8b, 64, 512, 512));
+
     // (b) measured on the host serving engine: the online
     // continuous-batching pipeline over a bursty SLO trace, per
     // policy, on the deterministic analytic clock.

@@ -105,10 +105,19 @@ fn usage() -> &'static str {
      \x20          [--policy swap-aware|fifo|slo-aware] [--tenants 8] \\\n\
      \x20          [--count 256] [--rank 8] [--capacity 64] \\\n\
      \x20          [--backend auto|host|pjrt] [--deadline-ms 0] \\\n\
-     \x20          [--burstiness 1]\n\
+     \x20          [--burstiness 1] [--decode-tokens 0] \\\n\
+     \x20          [--max-batch-tokens 0] [--service-unit step|batch]\n\
      \x20          # online continuous batching over the trace's\n\
      \x20          # arrival times; missing trace/adapters are\n\
-     \x20          # synthesized and saved\n\
+     \x20          # synthesized and saved.\n\
+     \x20          # --service-unit step (default) = iteration-level\n\
+     \x20          # decode batching: one token per in-flight sequence\n\
+     \x20          # per step, late same-tenant arrivals join the live\n\
+     \x20          # batch mid-generation, TTFT/TPOT reported;\n\
+     \x20          # \"batch\" = the v2 whole-batch pipeline.\n\
+     \x20          # --decode-tokens N synthesizes decode-heavy traces\n\
+     \x20          # (mean N output tokens after the first);\n\
+     \x20          # --max-batch-tokens caps tokens per step (0 = off)\n\
      paca selftest"
 }
 
@@ -353,6 +362,7 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
             mean_tokens: cfg.mean_tokens,
             deadline_ms: cfg.deadline_ms,
             burstiness: cfg.burstiness,
+            decode_tokens: cfg.decode_tokens,
             seed: cfg.seed,
             ..Default::default()
         };
@@ -416,12 +426,21 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
                                                  cfg.capacity);
 
     let base = engine::BaseModel::synthetic(&model, cfg.seed);
+    let decode_total: usize = tr.requests.iter()
+        .map(|r| r.decode_tokens).sum();
     println!("serving {}: {} tenants over one {:.1}MB shared base \
               ({} target weights) | backend {} | batch {} | policy {} \
-              | trace span {:.2}s",
+              | unit {} | trace span {:.2}s | {} decode tokens{}",
              model.name, tenants.len(), base.bytes() as f64 / 1e6,
              base.weights.len(), backend.name(), cfg.batch,
-             policy.name(), tr.span_s());
+             policy.name(), cfg.service_unit, tr.span_s(),
+             decode_total,
+             if cfg.max_batch_tokens > 0 {
+                 format!(" | step budget {} tokens",
+                         cfg.max_batch_tokens)
+             } else {
+                 String::new()
+             });
 
     // Offline baseline: what the one-shot planner would do with the
     // whole queue in hand, per policy.
@@ -432,19 +451,26 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
     }
 
     // The online pipeline: admission by arrival time, incremental
-    // dispatch, measured service times on the virtual clock.
+    // dispatch, measured service times on the virtual clock —
+    // iteration-level token steps by default, the v2 whole-batch loop
+    // under --service-unit batch.
     let n_tenant_ids = tr.pool.len();
     let mut eng = engine::ServeEngine::new(base, reg, backend,
                                            tr.pool);
     let mut sched = scheduler::OnlineScheduler::new(
         tr.requests, n_tenant_ids, cfg.batch, policy);
-    eng.serve_online(&mut sched, engine::ClockModel::Measured)
-        .map_err(|e| {
-            e.context(format!(
-                "serving failed — if the adapters in {} were created \
-                 for a different model geometry, delete that \
-                 directory and re-run", adapters_dir.display()))
-        })?;
+    sched.max_batch_tokens = cfg.max_batch_tokens;
+    let served = if cfg.service_unit == "batch" {
+        eng.serve_online(&mut sched, engine::ClockModel::Measured)
+    } else {
+        eng.serve_iterative(&mut sched, engine::ClockModel::Measured)
+    };
+    served.map_err(|e| {
+        e.context(format!(
+            "serving failed — if the adapters in {} were created \
+             for a different model geometry, delete that \
+             directory and re-run", adapters_dir.display()))
+    })?;
     eng.finish()?;
     println!("\n{}", eng.report());
     println!("shared frozen base restored bit-exactly after un-merge \
@@ -454,6 +480,8 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
     println!("{}", cost::comparison_table(&cost::llama3_8b(), 64, 512));
     println!("{}", cost::latency_table(&cost::llama3_8b(), 64,
                                        cfg.batch.max(1), 512));
+    println!("{}", cost::decode_table(&cost::llama3_8b(), 64, 512,
+                                      512));
     Ok(())
 }
 

@@ -252,6 +252,71 @@ impl ThroughputTimeline {
     }
 }
 
+/// Per-iteration batch-occupancy record of the iteration-level serving
+/// engine: for every step, how many sequences were in flight and how
+/// many tokens the step computed (prefill prompts + one per decoding
+/// slot). The summary view of how well continuous batching keeps the
+/// batch full — invisible in aggregate throughput numbers.
+#[derive(Debug, Clone, Default)]
+pub struct OccupancyTimeline {
+    slots: Vec<u64>,
+    tokens: Vec<u64>,
+}
+
+impl OccupancyTimeline {
+    /// Record one engine step with `slots` in-flight sequences
+    /// computing `tokens` tokens.
+    pub fn record(&mut self, slots: u64, tokens: u64) {
+        self.slots.push(slots);
+        self.tokens.push(tokens);
+    }
+
+    pub fn n_steps(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn mean_slots(&self) -> f64 {
+        if self.slots.is_empty() {
+            return 0.0;
+        }
+        self.slots.iter().sum::<u64>() as f64
+            / self.slots.len() as f64
+    }
+
+    pub fn peak_slots(&self) -> u64 {
+        self.slots.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Largest single-step token load — the number the
+    /// `--max-batch-tokens` budget bounds.
+    pub fn peak_tokens(&self) -> u64 {
+        self.tokens.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn mean_tokens(&self) -> f64 {
+        if self.tokens.is_empty() {
+            return 0.0;
+        }
+        self.tokens.iter().sum::<u64>() as f64
+            / self.tokens.len() as f64
+    }
+
+    /// One row per step: in-flight slots and step tokens.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(&["step", "slots", "tokens"]);
+        for (i, (&s, &tok)) in self.slots.iter().zip(&self.tokens)
+            .enumerate()
+        {
+            t.row(&[i.to_string(), s.to_string(), tok.to_string()]);
+        }
+        t
+    }
+}
+
 /// Fixed-width markdown table builder for the experiment reports.
 #[derive(Debug, Default)]
 pub struct Table {
@@ -366,6 +431,81 @@ mod tests {
                 >= r.percentile("t0", 0.5).unwrap());
         let tbl = r.table("tenant").render();
         assert!(tbl.contains("t0") && tbl.contains("t1"));
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        // Degenerate recorder shapes must not skew (or panic out of)
+        // the bench asserts that consume them.
+        let r = LatencyRecorder::default();
+        assert_eq!(r.count("missing"), 0);
+        assert!(r.mean("missing").is_none(), "empty recorder");
+        assert!(r.percentile("missing", 0.5).is_none());
+        assert!(r.keys().is_empty());
+
+        // A single sample IS every percentile.
+        let mut r = LatencyRecorder::default();
+        r.record("one", 0.042);
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(r.percentile("one", q), Some(0.042), "q={q}");
+        }
+        assert_eq!(r.mean("one"), Some(0.042));
+
+        // All-equal samples: every percentile equals the value.
+        let mut r = LatencyRecorder::default();
+        for _ in 0..100 {
+            r.record("flat", 7e-3);
+        }
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(r.percentile("flat", q), Some(7e-3), "q={q}");
+        }
+        assert!((r.mean("flat").unwrap() - 7e-3).abs() < 1e-15);
+        // Out-of-range q clamps instead of indexing out of bounds.
+        assert_eq!(r.percentile("flat", -0.5), Some(7e-3));
+        assert_eq!(r.percentile("flat", 2.0), Some(7e-3));
+    }
+
+    #[test]
+    fn ttft_tpot_style_recorders_decompose() {
+        // TTFT ≤ e2e per request, and TPOT = (e2e − ttft)/decode; the
+        // recorders must preserve that ordering through percentiles.
+        let mut ttft = LatencyRecorder::default();
+        let mut tpot = LatencyRecorder::default();
+        let mut e2e = LatencyRecorder::default();
+        for i in 1..=50u32 {
+            let first = i as f64 * 1e-3;
+            let done = first + 10.0 * 2e-3; // 10 decode steps @ 2ms
+            ttft.record("t", first);
+            e2e.record("t", done);
+            tpot.record("t", (done - first) / 10.0);
+        }
+        for q in [0.5, 0.99] {
+            assert!(ttft.percentile("t", q).unwrap()
+                    < e2e.percentile("t", q).unwrap());
+            assert!((tpot.percentile("t", q).unwrap() - 2e-3).abs()
+                    < 1e-12, "constant per-token time");
+        }
+    }
+
+    #[test]
+    fn occupancy_timeline_tracks_slots_and_tokens() {
+        let mut oc = OccupancyTimeline::default();
+        assert!(oc.is_empty());
+        assert_eq!(oc.peak_slots(), 0);
+        assert_eq!(oc.peak_tokens(), 0);
+        assert_eq!(oc.mean_slots(), 0.0);
+        assert_eq!(oc.mean_tokens(), 0.0);
+        oc.record(8, 128); // prefill step: 8 prompts
+        oc.record(8, 8);   // decode step: 1 token per slot
+        oc.record(2, 2);   // batch draining
+        assert_eq!(oc.n_steps(), 3);
+        assert_eq!(oc.peak_slots(), 8);
+        assert_eq!(oc.peak_tokens(), 128);
+        assert!((oc.mean_slots() - 6.0).abs() < 1e-12);
+        assert!((oc.mean_tokens() - 46.0).abs() < 1e-12);
+        let r = oc.table().render();
+        assert!(r.contains("slots"));
+        assert_eq!(r.lines().count(), 2 + 3);
     }
 
     #[test]

@@ -43,8 +43,10 @@ pub fn llama3_8b() -> ModelInfo {
                 profile_only: true }
 }
 
-/// Forward (prefill-style) wall time for one batch of `batch`
-/// sequences of length `seq`.
+/// Forward (prefill) wall time for one batch of `batch` sequences of
+/// length `seq` — the compute-bound phase: big token×weight GEMMs
+/// that amortize every weight read over `batch·seq` rows. Also the
+/// analytic TTFT (the first output token drops when prefill ends).
 pub fn forward_time(dev: &DeviceProfile, m: &ModelInfo, path: ServePath,
                     rank: usize, batch: usize, seq: usize) -> f64 {
     let t = (batch * seq) as f64;
@@ -73,6 +75,56 @@ pub fn forward_time(dev: &DeviceProfile, m: &ModelInfo, path: ServePath,
             + bw_time(dev, t * d * 12.0);
     }
     fwd + gemm_time(dev, t, d, m.vocab as f64)
+}
+
+/// One decode iteration for `batch` in-flight sequences at context
+/// length `ctx` — the OTHER arithmetic-intensity regime: each step
+/// computes one token per sequence, so every target weight is
+/// re-streamed for a `batch`-row GEMM (bandwidth-bound at serving
+/// batch sizes) and the KV cache is read once per layer. The unmerged
+/// LoRA path pays its serialized adapter pair + framework overhead
+/// PER STEP, i.e. per output token — the latency tax "LoRA Is Slower
+/// Than You Think" measures, and the reason iteration-level serving
+/// of merged PaCA adapters is the favourable regime.
+pub fn decode_step_time(dev: &DeviceProfile, m: &ModelInfo,
+                        path: ServePath, rank: usize, batch: usize,
+                        ctx: usize) -> f64 {
+    let b = batch.max(1) as f64;
+    let d = m.d_model as f64;
+    let r = rank as f64;
+    let mut step = 0.0;
+    for _ in 0..m.n_layers {
+        for (_, din, dout) in m.linear_shapes() {
+            let (din, dout) = (din as f64, dout as f64);
+            step += gemm_time(dev, b, din, dout);
+            if path == ServePath::LoraAdapters {
+                step += gemm_time(dev, b, din, r)
+                    + gemm_time(dev, b, r, dout)
+                    + dev.adapter_overhead_s;
+            }
+        }
+        // KV-cache streaming (bf16 K and V over the whole context)
+        // plus the per-token elementwise traffic.
+        step += bw_time(dev, b * ctx as f64 * d * 2.0 * 2.0)
+            + bw_time(dev, b * d * 12.0);
+    }
+    step + gemm_time(dev, b, d, m.vocab as f64)
+}
+
+/// Analytic time-per-output-token at steady decode: one decode step
+/// serves every in-flight sequence one token, so TPOT is simply the
+/// step period.
+pub fn tpot_s(dev: &DeviceProfile, m: &ModelInfo, path: ServePath,
+              rank: usize, batch: usize, ctx: usize) -> f64 {
+    decode_step_time(dev, m, path, rank, batch, ctx)
+}
+
+/// Aggregate decode throughput, output tokens/s across the batch.
+pub fn decode_tok_per_s(dev: &DeviceProfile, m: &ModelInfo,
+                        path: ServePath, rank: usize, batch: usize,
+                        ctx: usize) -> f64 {
+    batch.max(1) as f64
+        / decode_step_time(dev, m, path, rank, batch, ctx)
 }
 
 /// Device cost of one PaCA adapter swap on the merged path: per target
@@ -212,6 +264,45 @@ pub fn latency_table(m: &ModelInfo, rank: usize, batch: usize,
     out
 }
 
+/// Iteration-level serving projection: TTFT (prefill) and TPOT
+/// (decode-step period) for merged PaCA vs unmerged LoRA across batch
+/// sizes. Decode is where unmerged adapters hurt most: the serialized
+/// adapter pair is paid per output token against a bandwidth-bound
+/// base step, so the relative tax is far above the prefill tax.
+pub fn decode_table(m: &ModelInfo, rank: usize, prompt: usize,
+                    ctx: usize) -> String {
+    use crate::metrics::Table;
+    let mut out = String::new();
+    for dev in [&A100_80G, &GAUDI2] {
+        let mut t = Table::new(&["Batch", "TTFT ms", "PaCA TPOT ms",
+                                 "LoRA TPOT ms", "LoRA decode tax",
+                                 "PaCA decode tok/s"]);
+        for batch in [1usize, 4, 8, 16, 32] {
+            let ttft = forward_time(dev, m, ServePath::Merged, rank,
+                                    batch, prompt);
+            let paca = tpot_s(dev, m, ServePath::Merged, rank, batch,
+                              ctx);
+            let lora = tpot_s(dev, m, ServePath::LoraAdapters, rank,
+                              batch, ctx);
+            t.row(&[batch.to_string(),
+                    format!("{:.1}", ttft * 1e3),
+                    format!("{:.2}", paca * 1e3),
+                    format!("{:.2}", lora * 1e3),
+                    format!("{:+.0}%", (lora / paca - 1.0) * 100.0),
+                    format!("{:.0}", decode_tok_per_s(
+                        dev, m, ServePath::Merged, rank, batch,
+                        ctx))]);
+        }
+        out.push_str(&format!(
+            "\n{} — {} iteration-level decode, rank {rank}, prompt \
+             {prompt}, context {ctx} (TPOT = decode-step period; the \
+             unmerged path pays its adapter kernels per output \
+             token):\n\n", dev.name, m.name));
+        out.push_str(&t.render());
+    }
+    out
+}
+
 /// The `paca bench --exp serve` / `paca serve` projection block:
 /// merged-PaCA vs unmerged-LoRA serving throughput across batch sizes
 /// on both device profiles, plus the swap-amortization curve.
@@ -316,6 +407,71 @@ mod tests {
         let t32 = serve_throughput_req_per_s(
             &A100_80G, &m, ServePath::Merged, 64, 32, 512);
         assert!(t32 > t1);
+    }
+
+    #[test]
+    fn decode_tax_exceeds_prefill_tax() {
+        // The iteration-level motivation: unmerged LoRA's serialized
+        // adapter kernels are a fixed per-step cost, so against a
+        // bandwidth-bound decode step they tax FAR more (relatively)
+        // than against a compute-bound prefill.
+        let m = llama3_8b();
+        for dev in [&A100_80G, &GAUDI2] {
+            for batch in [1usize, 8] {
+                let decode_ratio =
+                    tpot_s(dev, &m, ServePath::LoraAdapters, 64,
+                           batch, 512)
+                    / tpot_s(dev, &m, ServePath::Merged, 64, batch,
+                             512);
+                let prefill_ratio =
+                    forward_time(dev, &m, ServePath::LoraAdapters, 64,
+                                 batch, 512)
+                    / forward_time(dev, &m, ServePath::Merged, 64,
+                                   batch, 512);
+                assert!(decode_ratio > 2.0,
+                        "{} b{batch}: decode tax only {decode_ratio}",
+                        dev.name);
+                assert!(decode_ratio > prefill_ratio,
+                        "{} b{batch}: decode {decode_ratio} !> \
+                         prefill {prefill_ratio}", dev.name);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_batching_amortizes_weight_reads() {
+        // A decode step is weight-bandwidth-bound, so its period
+        // barely grows with batch — aggregate decode tok/s scales
+        // nearly linearly until compute binds.
+        let m = llama3_8b();
+        let t1 = decode_tok_per_s(&A100_80G, &m, ServePath::Merged,
+                                  64, 1, 512);
+        let t32 = decode_tok_per_s(&A100_80G, &m, ServePath::Merged,
+                                   64, 32, 512);
+        assert!(t32 > 4.0 * t1, "tok/s {t1} -> {t32}");
+        // Longer context = more KV traffic = slower steps.
+        let short = decode_step_time(&A100_80G, &m, ServePath::Merged,
+                                     64, 8, 128);
+        let long = decode_step_time(&A100_80G, &m, ServePath::Merged,
+                                    64, 8, 8192);
+        assert!(long > short);
+        // And a decode step is far cheaper than a 512-token prefill —
+        // the two phases genuinely sit on different rooflines.
+        let prefill = forward_time(&A100_80G, &m, ServePath::Merged,
+                                   64, 8, 512);
+        let step = decode_step_time(&A100_80G, &m, ServePath::Merged,
+                                    64, 8, 512);
+        assert!(step < 0.25 * prefill, "step {step} vs prefill \
+                                        {prefill}");
+    }
+
+    #[test]
+    fn decode_table_renders() {
+        let m = llama3_8b();
+        let s = decode_table(&m, 64, 512, 512);
+        assert!(s.contains("TTFT ms"));
+        assert!(s.contains("LoRA decode tax"));
+        assert!(s.contains("A100-80GB") && s.contains("Gaudi2"));
     }
 
     #[test]

@@ -19,15 +19,27 @@
 //!     Trainer::evaluate does after a host-side merge. Requires
 //!     `make artifacts`.
 //!
-//! Two serving modes:
+//! Three serving modes:
 //!   * [`ServeEngine::serve`] — replay a static offline batch plan
 //!     (the baseline the online pipeline is anchored against).
-//!   * [`ServeEngine::serve_online`] — the event-driven step loop over
-//!     a virtual clock: admit arrivals, take one incremental dispatch
-//!     from the [`OnlineScheduler`], swap + forward, advance the clock
-//!     by the service time ([`ClockModel::Measured`] wall time or the
-//!     deterministic [`ClockModel::Analytic`]), account queueing delay
-//!     and deadline misses per request.
+//!   * [`ServeEngine::serve_online`] — the event-driven WHOLE-BATCH
+//!     loop over a virtual clock: admit arrivals, take one incremental
+//!     dispatch from the [`OnlineScheduler`], swap + forward the
+//!     batch's full generation (prefill + decode) in one unit, advance
+//!     the clock by the service time ([`ClockModel::Measured`] wall
+//!     time or the deterministic [`ClockModel::Analytic`]), account
+//!     queueing delay and deadline misses per request.
+//!   * [`ServeEngine::serve_iterative`] — decode-style ITERATION-LEVEL
+//!     batching: the unit of service is one token step over a set of
+//!     in-flight slots. Fresh requests prefill (their whole prompt in
+//!     one step, emitting the first token — TTFT); decoding requests
+//!     advance one token per step (TPOT); requests complete and leave
+//!     their slot mid-batch, and late same-tenant arrivals JOIN the
+//!     live batch mid-generation ([`OnlineScheduler::join_live`])
+//!     instead of waiting for the next dispatch. With prefill-only
+//!     requests and a fully-arrived queue it reduces exactly to
+//!     `serve_online` — same forwards, same checksum, same swaps (the
+//!     correctness anchor in tests/properties.rs).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -39,13 +51,13 @@ use crate::data::{Task, TokenGen};
 use crate::init;
 use crate::manifest::ModelInfo;
 use crate::metrics::{latency_breakdown_table, LatencyRecorder,
-                     ThroughputTimeline};
+                     OccupancyTimeline, Table, ThroughputTimeline};
 use crate::peft::Selection;
 use crate::runtime::{Executable, Runtime};
 use crate::serve::registry::{fingerprint, AdapterRegistry, SpliceGuard,
                              WeightMap};
-use crate::serve::scheduler::{Batch, OnlineScheduler, TenantId,
-                              TenantPool};
+use crate::serve::scheduler::{Batch, OnlineScheduler, Request,
+                              TenantId, TenantPool};
 use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
 
@@ -217,6 +229,9 @@ pub struct EngineStats {
     /// batches; PJRT runs the artifact's fixed geometry).
     pub tokens: u64,
     pub batches: u64,
+    /// Iteration steps executed by `serve_iterative` (each step is
+    /// one forward; `batches` counts those too).
+    pub steps: u64,
     pub swaps: u64,
     pub swap_s: f64,
     pub forward_s: f64,
@@ -250,6 +265,13 @@ pub struct ServeEngine {
     pub service: LatencyRecorder,
     /// …and end-to-end (arrival → completion).
     pub e2e: LatencyRecorder,
+    /// Iteration-level decomposition: arrival → first output token…
+    pub ttft: LatencyRecorder,
+    /// …and time per output token after the first (decode requests
+    /// only).
+    pub tpot: LatencyRecorder,
+    /// Per-step in-flight slots / step tokens of `serve_iterative`.
+    pub occupancy: OccupancyTimeline,
     /// Time-bucketed completions on the online clock.
     pub timeline: ThroughputTimeline,
     pub stats: EngineStats,
@@ -268,6 +290,9 @@ impl ServeEngine {
                       queueing: LatencyRecorder::default(),
                       service: LatencyRecorder::default(),
                       e2e: LatencyRecorder::default(),
+                      ttft: LatencyRecorder::default(),
+                      tpot: LatencyRecorder::default(),
+                      occupancy: OccupancyTimeline::default(),
                       timeline: ThroughputTimeline::new(
                           TIMELINE_BUCKET_S),
                       stats: EngineStats::default(), checksum: 0.0 }
@@ -305,14 +330,19 @@ impl ServeEngine {
         Ok(())
     }
 
-    /// Swap + forward for one dispatched batch; returns the service
-    /// wall time and whether an adapter swap happened.
-    fn service_batch(&mut self, batch: &Batch) -> Result<(f64, bool)> {
-        let swapped = self.current_tenant_id() != Some(batch.tenant);
+    /// Swap to `tenant` + one forward of `requested` tokens, with the
+    /// shared accounting (checksum, token/truncation/batch counters);
+    /// returns the wall time and whether an adapter swap happened.
+    /// BOTH units of service — the whole-batch forward and the
+    /// iteration step — go through here, so their accounting is
+    /// bitwise-identical (what the reduction anchor asserts).
+    fn forward_step(&mut self, tenant: TenantId,
+                    requested: usize) -> Result<(f64, bool)> {
+        let swapped = self.current_tenant_id() != Some(tenant);
         let t0 = Instant::now();
-        self.swap_to(batch.tenant)?;
+        self.swap_to(tenant)?;
         let tf = Instant::now();
-        let requested = batch.tokens().max(1);
+        let requested = requested.max(1);
         let (out, computed) =
             self.backend.forward(&self.base, requested)?;
         self.stats.forward_s += tf.elapsed().as_secs_f64();
@@ -327,6 +357,14 @@ impl ServeEngine {
         }
         self.stats.batches += 1;
         Ok((t0.elapsed().as_secs_f64(), swapped))
+    }
+
+    /// Swap + forward for one dispatched batch — the WHOLE-BATCH unit
+    /// of service, i.e. every member's full generation (prefill +
+    /// decode tokens) in a single forward; returns the service wall
+    /// time and whether an adapter swap happened.
+    fn service_batch(&mut self, batch: &Batch) -> Result<(f64, bool)> {
+        self.forward_step(batch.tenant, batch.total_tokens())
     }
 
     /// Offline replay: serve one planned batch, recording every
@@ -364,6 +402,10 @@ impl ServeEngine {
                         clock: ClockModel) -> Result<()> {
         let wall0 = Instant::now();
         let mut now = 0.0f64;
+        // Calibrate BEFORE the first admission: urgency keys freeze
+        // at admit time, so requests arriving before the first
+        // dispatch must already see the clock's decode slack.
+        self.calibrate(sched, clock);
         loop {
             sched.admit(now);
             if sched.pending_len() == 0 {
@@ -376,16 +418,7 @@ impl ServeEngine {
                     None => break,
                 }
             }
-            // Keep the slo policy's swap hysteresis calibrated to
-            // what a swap actually costs under this clock: the
-            // analytic constant, or the measured running average.
-            sched.swap_penalty_s = match clock {
-                ClockModel::Analytic { swap_s, .. } => swap_s,
-                ClockModel::Measured if self.stats.swaps > 0 => {
-                    self.stats.swap_s / self.stats.swaps as f64
-                }
-                ClockModel::Measured => 0.0,
-            };
+            self.calibrate(sched, clock);
             let live = self.current_tenant_id();
             let Some(batch) = sched.dispatch(live, now) else { break };
             if batch.requests.is_empty() {
@@ -395,8 +428,18 @@ impl ServeEngine {
             let service_s = match clock {
                 ClockModel::Measured => wall_service_s,
                 ClockModel::Analytic { swap_s, batch_s, token_s } => {
-                    batch_s
-                        + token_s * batch.tokens() as f64
+                    // The whole-batch unit holds the server for its
+                    // longest member's generation: one prefill step
+                    // plus max(decode) iterations, each paying the
+                    // per-step overhead, every token costing token_s —
+                    // the same arithmetic the iteration-level loop
+                    // pays step by step, minus its ability to free
+                    // slots early and admit joiners mid-flight.
+                    // Prefill-only batches reduce to the v2 formula.
+                    let decode_steps = batch.requests.iter()
+                        .map(|r| r.decode_tokens).max().unwrap_or(0);
+                    batch_s * (1 + decode_steps) as f64
+                        + token_s * batch.total_tokens() as f64
                         + if swapped { swap_s } else { 0.0 }
                 }
             };
@@ -419,11 +462,178 @@ impl ServeEngine {
                         self.stats.deadline_misses += 1;
                     }
                 }
-                tokens += r.tokens as u64;
+                tokens += r.total_tokens() as u64;
                 self.stats.requests += 1;
             }
             self.timeline.record(now, batch.requests.len() as u64,
                                  tokens);
+        }
+        self.stats.virtual_s += now;
+        self.stats.wall_s += wall0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    /// Keep the slo policy's scheduling prices calibrated to what the
+    /// active clock actually charges: the swap hysteresis
+    /// (`swap_penalty_s`) and the per-decode-token urgency credit
+    /// (`decode_slack_s`) — analytic constants, or measured running
+    /// averages.
+    fn calibrate(&self, sched: &mut OnlineScheduler,
+                 clock: ClockModel) {
+        match clock {
+            ClockModel::Analytic { swap_s, token_s, .. } => {
+                sched.swap_penalty_s = swap_s;
+                sched.decode_slack_s = token_s;
+            }
+            ClockModel::Measured => {
+                sched.swap_penalty_s = if self.stats.swaps > 0 {
+                    self.stats.swap_s / self.stats.swaps as f64
+                } else {
+                    0.0
+                };
+                sched.decode_slack_s = if self.stats.tokens > 0 {
+                    self.stats.forward_s / self.stats.tokens as f64
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+
+    /// Decode-style iteration-level batching: the unit of service is
+    /// ONE token step over the in-flight slots (at most the
+    /// scheduler's batch size, bounded by its `max_batch_tokens` step
+    /// budget). A step prefills every freshly dispatched slot (whole
+    /// prompt, emitting the first token) and advances every decoding
+    /// slot by one token; completed slots free mid-batch, and pending
+    /// same-tenant requests — including arrivals admitted
+    /// mid-generation — join the live batch through
+    /// [`OnlineScheduler::join_live`] instead of waiting for the
+    /// batch to drain.
+    ///
+    /// Records everything `serve_online` records, plus TTFT (arrival →
+    /// first token), TPOT (per output token after the first), and the
+    /// per-step batch-occupancy timeline.
+    ///
+    /// Reduction anchor: with prefill-only requests and no token
+    /// budget, every dispatched batch completes in exactly one step,
+    /// so the loop issues the same forwards as `serve_online` — same
+    /// checksum, same swaps, same token counts (property-tested).
+    pub fn serve_iterative(&mut self, sched: &mut OnlineScheduler,
+                           clock: ClockModel) -> Result<()> {
+        let wall0 = Instant::now();
+        let slot_cap = sched.batch_size();
+        let budget = sched.max_batch_tokens;
+        let mut now = 0.0f64;
+        let mut slots: Vec<Slot> = Vec::new();
+        // Calibrate BEFORE the first admission — see `serve_online`.
+        self.calibrate(sched, clock);
+        loop {
+            sched.admit(now);
+            if slots.is_empty() {
+                if sched.pending_len() == 0 {
+                    match sched.next_arrival() {
+                        // Idle: event-jump to the next arrival.
+                        Some(t) => {
+                            now = now.max(t);
+                            sched.admit(now);
+                        }
+                        None => break,
+                    }
+                }
+                self.calibrate(sched, clock);
+                let live = self.current_tenant_id();
+                let Some(batch) = sched.dispatch(live, now) else {
+                    break;
+                };
+                for r in batch.requests {
+                    slot_in(&mut self.queueing, &self.pool,
+                            &mut slots, r, now);
+                }
+                if slots.is_empty() {
+                    continue;
+                }
+            } else if slots.len() < slot_cap
+                && sched.pending_len() > 0
+            {
+                // Continuous batching mid-generation: every in-flight
+                // slot costs one step token, the rest of the budget is
+                // open for same-tenant prefills to join.
+                let live = slots[0].req.tenant;
+                let spare = if budget == 0 {
+                    usize::MAX
+                } else {
+                    budget.saturating_sub(slots.len())
+                };
+                let free = slot_cap - slots.len();
+                for r in sched.join_live(live, free, spare) {
+                    slot_in(&mut self.queueing, &self.pool,
+                            &mut slots, r, now);
+                }
+            }
+
+            // ---- one iteration step over the in-flight batch ----
+            let tenant = slots[0].req.tenant;
+            let step_tokens: usize = slots.iter()
+                .map(|s| if s.prefilled { 1 } else { s.req.tokens })
+                .sum();
+            let (wall_step_s, swapped) =
+                self.forward_step(tenant, step_tokens)?;
+            self.stats.steps += 1;
+            let step_s = match clock {
+                ClockModel::Measured => wall_step_s,
+                ClockModel::Analytic { swap_s, batch_s, token_s } => {
+                    batch_s
+                        + token_s * step_tokens as f64
+                        + if swapped { swap_s } else { 0.0 }
+                }
+            };
+            now += step_s;
+            self.occupancy.record(slots.len() as u64,
+                                  step_tokens as u64);
+            let name = self.pool.name(tenant);
+
+            // Advance every slot by one token; completed slots leave
+            // the batch and settle their metrics.
+            let mut i = 0;
+            while i < slots.len() {
+                if !slots[i].prefilled {
+                    slots[i].prefilled = true;
+                    slots[i].first_token_s = now;
+                    let first_s =
+                        (now - slots[i].req.arrival_s).max(0.0);
+                    self.ttft.record(name, first_s);
+                    self.ttft.record("(all)", first_s);
+                } else {
+                    slots[i].remaining -= 1;
+                }
+                if slots[i].remaining > 0 {
+                    i += 1;
+                    continue;
+                }
+                let s = slots.swap_remove(i);
+                let service_s = (now - s.dispatched_s).max(0.0);
+                let e2e_s = (now - s.req.arrival_s).max(0.0);
+                self.service.record(name, service_s);
+                self.service.record("(all)", service_s);
+                self.e2e.record(name, e2e_s);
+                self.e2e.record("(all)", e2e_s);
+                if s.req.decode_tokens > 0 {
+                    let per_tok = (now - s.first_token_s).max(0.0)
+                        / s.req.decode_tokens as f64;
+                    self.tpot.record(name, per_tok);
+                    self.tpot.record("(all)", per_tok);
+                }
+                if s.req.deadline_s.is_finite() {
+                    self.stats.deadline_total += 1;
+                    if now > s.req.absolute_deadline() {
+                        self.stats.deadline_misses += 1;
+                    }
+                }
+                self.timeline.record(now, 1,
+                                     s.req.total_tokens() as u64);
+                self.stats.requests += 1;
+            }
         }
         self.stats.virtual_s += now;
         self.stats.wall_s += wall0.elapsed().as_secs_f64();
@@ -506,6 +716,35 @@ impl ServeEngine {
             }
             out.push('\n');
         }
+        if self.ttft.count("(all)") > 0 {
+            out.push_str("iteration-level decode (TTFT = arrival → \
+                          first token; TPOT = s per output token \
+                          after the first):\n");
+            let ms = |v: Option<f64>| match v {
+                Some(v) => format!("{:.3}ms", v * 1e3),
+                None => "-".to_string(),
+            };
+            let mut t = Table::new(&["tenant", "n", "ttft p50",
+                                     "ttft p99", "tpot p50",
+                                     "tpot p99"]);
+            for key in self.ttft.keys() {
+                t.row(&[key.to_string(),
+                        self.ttft.count(key).to_string(),
+                        ms(self.ttft.percentile(key, 0.50)),
+                        ms(self.ttft.percentile(key, 0.99)),
+                        ms(self.tpot.percentile(key, 0.50)),
+                        ms(self.tpot.percentile(key, 0.99))]);
+            }
+            out.push_str(&t.render());
+            out.push_str(&format!(
+                "{} iteration steps | batch occupancy mean {:.1} / \
+                 peak {} slots | step tokens mean {:.0} / peak {}\n",
+                s.steps, self.occupancy.mean_slots(),
+                self.occupancy.peak_slots(),
+                self.occupancy.mean_tokens(),
+                self.occupancy.peak_tokens()));
+            out.push('\n');
+        }
         out.push_str(&format!(
             "aggregate: {:.1} req/s, {:.0} tok/s \
              (forward {:.1}ms, swap {:.1}ms, wall {:.1}ms)\n",
@@ -513,6 +752,33 @@ impl ServeEngine {
             s.forward_s * 1e3, s.swap_s * 1e3, s.wall_s * 1e3));
         out
     }
+}
+
+/// One in-flight sequence of the iteration-level loop.
+struct Slot {
+    req: Request,
+    /// Decode tokens still to emit after the first.
+    remaining: usize,
+    /// False until the prompt has been prefilled (first token out).
+    prefilled: bool,
+    /// Virtual time the request entered its slot (queueing ends).
+    dispatched_s: f64,
+    /// Virtual time the first token came out (TTFT ends, TPOT
+    /// starts).
+    first_token_s: f64,
+}
+
+/// Seat `r` in a fresh slot at virtual time `now`, settling its
+/// queueing delay. A free function over the engine's disjoint fields
+/// so both the dispatch and the mid-generation join path share it.
+fn slot_in(queueing: &mut LatencyRecorder, pool: &TenantPool,
+           slots: &mut Vec<Slot>, r: Request, now: f64) {
+    let queue_s = (now - r.arrival_s).max(0.0);
+    let name = pool.name(r.tenant);
+    queueing.record(name, queue_s);
+    queueing.record("(all)", queue_s);
+    slots.push(Slot { remaining: r.decode_tokens, prefilled: false,
+                      dispatched_s: now, first_token_s: now, req: r });
 }
 
 /// Real measured host forward over the target weights: qkv → gated
@@ -596,8 +862,8 @@ mod tests {
         Batch {
             tenant,
             requests: vec![Request {
-                id: 0, tenant, tokens, arrival_s: 0.0,
-                deadline_s: f64::INFINITY,
+                id: 0, tenant, tokens, decode_tokens: 0,
+                arrival_s: 0.0, deadline_s: f64::INFINITY,
             }],
         }
     }
@@ -698,6 +964,147 @@ mod tests {
         assert_eq!(on.stats.batches, off.stats.batches);
         assert_eq!(on.checksum, off.checksum,
                    "same dispatch sequence ⇒ same forwards");
+    }
+
+    #[test]
+    fn iterative_prefill_only_reduces_to_whole_batch() {
+        // THE reduction anchor: with decode_tokens = 0 and a
+        // fully-arrived queue, iteration-level serving issues exactly
+        // the forwards whole-batch serving issues — token-for-token.
+        let spec = TraceSpec { n_requests: 60, n_tenants: 4,
+                               deadline_ms: 40.0, burstiness: 2.0,
+                               ..Default::default() };
+        let trace = trace::synthesize(&spec);
+        let clock = ClockModel::Analytic {
+            swap_s: 2e-3, batch_s: 5e-4, token_s: 2e-5,
+        };
+        let mut at_zero = trace.requests.clone();
+        for r in &mut at_zero {
+            r.arrival_s = 0.0;
+        }
+        for policy in Policy::ALL {
+            let mut whole = engine_for(trace.pool.clone());
+            let mut sched = OnlineScheduler::new(
+                at_zero.clone(), trace.pool.len(), 8, policy);
+            whole.serve_online(&mut sched, clock).unwrap();
+            whole.finish().unwrap();
+            let mut iter = engine_for(trace.pool.clone());
+            let mut sched = OnlineScheduler::new(
+                at_zero.clone(), trace.pool.len(), 8, policy);
+            iter.serve_iterative(&mut sched, clock).unwrap();
+            iter.finish().unwrap();
+            assert_eq!(iter.checksum, whole.checksum,
+                       "{policy:?}: same forwards ⇒ same checksum");
+            assert_eq!(iter.stats.swaps, whole.stats.swaps,
+                       "{policy:?}");
+            assert_eq!(iter.stats.batches, whole.stats.batches,
+                       "{policy:?}: one step per batch");
+            assert_eq!(iter.stats.tokens, whole.stats.tokens,
+                       "{policy:?}");
+            assert_eq!(iter.stats.requests, whole.stats.requests,
+                       "{policy:?}");
+            assert_eq!(iter.stats.virtual_s, whole.stats.virtual_s,
+                       "{policy:?}: identical analytic makespan");
+        }
+    }
+
+    #[test]
+    fn iterative_serves_decode_trace_and_restores_base() {
+        let trace = trace::synthesize(&TraceSpec {
+            n_requests: 60, n_tenants: 4, deadline_ms: 40.0,
+            burstiness: 3.0, decode_tokens: 12,
+            ..Default::default()
+        });
+        let n = trace.requests.len() as u64;
+        let decode_reqs = trace.requests.iter()
+            .filter(|r| r.decode_tokens > 0).count() as u64;
+        let mut eng = engine_for(trace.pool.clone());
+        let mut sched = OnlineScheduler::new(
+            trace.requests, trace.pool.len(), 8, Policy::SloAware);
+        eng.serve_iterative(&mut sched, ClockModel::Analytic {
+            swap_s: 2e-3, batch_s: 5e-4, token_s: 2e-5,
+        }).unwrap();
+        assert!(sched.is_done());
+        assert_eq!(eng.stats.requests, n);
+        assert_eq!(eng.queueing.count("(all)") as u64, n);
+        assert_eq!(eng.ttft.count("(all)") as u64, n);
+        assert_eq!(eng.tpot.count("(all)") as u64, decode_reqs);
+        assert_eq!(eng.e2e.count("(all)") as u64, n);
+        assert_eq!(eng.stats.deadline_total, n);
+        // Decode makes steps strictly outnumber dispatches, and every
+        // step is on the occupancy timeline.
+        assert!(eng.stats.steps > n / 8);
+        assert_eq!(eng.occupancy.n_steps() as u64, eng.stats.steps);
+        assert!(eng.occupancy.peak_slots() <= 8);
+        // TTFT ≤ e2e at matching percentiles.
+        for q in [0.5, 0.99] {
+            assert!(eng.ttft.percentile("(all)", q).unwrap()
+                    <= eng.e2e.percentile("(all)", q).unwrap());
+        }
+        let report = eng.report();
+        assert!(report.contains("iteration-level decode"));
+        assert!(report.contains("ttft p99"));
+        eng.finish().unwrap();
+    }
+
+    #[test]
+    fn late_same_tenant_arrival_joins_mid_generation() {
+        // Request B (same tenant) arrives while A is decoding: it
+        // must enter a free slot at the next step instead of waiting
+        // for A's batch to drain — the whole point of iteration-level
+        // batching.
+        let mut pool = TenantPool::new();
+        let t0 = pool.intern(&trace::tenant_name(0));
+        let reqs = vec![
+            Request { id: 0, tenant: t0, tokens: 4, decode_tokens: 10,
+                      arrival_s: 0.0, deadline_s: f64::INFINITY },
+            Request { id: 1, tenant: t0, tokens: 2, decode_tokens: 0,
+                      arrival_s: 6e-3, deadline_s: f64::INFINITY },
+        ];
+        let mut eng = engine_for(pool);
+        let mut sched = OnlineScheduler::new(reqs, 1, 4,
+                                             Policy::SwapAware);
+        eng.serve_iterative(&mut sched, ClockModel::Analytic {
+            swap_s: 0.0, batch_s: 1e-3, token_s: 1e-3,
+        }).unwrap();
+        assert_eq!(eng.stats.requests, 2);
+        assert_eq!(eng.occupancy.peak_slots(), 2,
+                   "B must share the batch with A mid-generation");
+        // B joined at the first step boundary after its arrival, so
+        // its queueing delay is ~one decode step — far below A's
+        // remaining ~20ms of generation, which a whole-batch unit of
+        // service would have made it wait out.
+        let worst_queue = eng.queueing.percentile("(all)", 1.0)
+            .unwrap();
+        assert!(worst_queue < 2e-3, "queued {worst_queue}s");
+        // …and B (prefill-only) finishes long before A.
+        let b_e2e = eng.e2e.percentile("(all)", 0.0).unwrap();
+        let a_e2e = eng.e2e.percentile("(all)", 1.0).unwrap();
+        assert!(b_e2e < 0.5 * a_e2e, "B {b_e2e}s vs A {a_e2e}s");
+        assert_eq!(eng.tpot.count("(all)"), 1, "only A decodes");
+        eng.finish().unwrap();
+    }
+
+    #[test]
+    fn step_token_budget_bounds_occupancy() {
+        let mut pool = TenantPool::new();
+        let t0 = pool.intern(&trace::tenant_name(0));
+        let reqs: Vec<Request> = (0..8).map(|id| Request {
+            id, tenant: t0, tokens: 16, decode_tokens: 4,
+            arrival_s: 0.0, deadline_s: f64::INFINITY,
+        }).collect();
+        let mut eng = engine_for(pool);
+        let mut sched = OnlineScheduler::new(reqs, 1, 8,
+                                             Policy::SwapAware);
+        sched.max_batch_tokens = 40;
+        eng.serve_iterative(&mut sched, ClockModel::Analytic {
+            swap_s: 1e-3, batch_s: 5e-4, token_s: 2e-5,
+        }).unwrap();
+        assert_eq!(eng.stats.requests, 8);
+        assert!(eng.occupancy.peak_tokens() <= 40,
+                "step budget violated: {} tokens",
+                eng.occupancy.peak_tokens());
+        eng.finish().unwrap();
     }
 
     #[test]

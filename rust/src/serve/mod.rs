@@ -21,20 +21,28 @@
 //!     the correctness baseline), and the online
 //!     [`scheduler::OnlineScheduler`]: arrival-time admission,
 //!     per-tenant pending queues, incremental fifo / swap-aware /
-//!     slo-aware dispatch with continuous batching.
+//!     slo-aware dispatch under a `max_batch_tokens` step budget,
+//!     with continuous batching down to the token level
+//!     (`join_live`: pending same-tenant requests enter a live batch
+//!     mid-generation).
 //!   * [`trace`]     — synthetic multi-tenant workloads (Zipf tenant
 //!     popularity, Poisson or bursty arrivals, per-request SLO
-//!     deadlines) + JSONL persistence.
+//!     deadlines, jittered decode lengths) + JSONL persistence
+//!     (absent fields read back as the old defaults, so archived
+//!     traces stay valid).
 //!   * [`engine`]    — the serving engine around the
 //!     [`engine::ForwardBackend`] trait (host GEMM always available;
 //!     PJRT drives the lowered eval artifact when `make artifacts`
-//!     has run): offline plan replay, plus the event-driven
-//!     virtual-clock step loop (`serve_online`) that decomposes
-//!     latency into queueing vs service and tracks deadline misses.
+//!     has run): offline plan replay, the whole-batch virtual-clock
+//!     loop (`serve_online`), and the decode-style iteration-level
+//!     loop (`serve_iterative`: prefill/decode token steps, slots
+//!     freed mid-batch, TTFT/TPOT + per-step occupancy accounting).
 //!   * [`cost`]      — analytic serving-cost extension of `simulator`
 //!     (A100/Gaudi2): merged-PaCA vs unmerged-LoRA throughput,
-//!     adapter-swap amortization, and the M/D/1 queueing-delay term,
-//!     for `paca bench --exp serve`.
+//!     adapter-swap amortization, the M/D/1 queueing-delay term, and
+//!     the prefill/decode arithmetic-intensity split
+//!     (`decode_step_time`, TTFT/TPOT projections), for
+//!     `paca bench --exp serve`.
 //!
 //! Entry point: `paca serve --adapters DIR --requests TRACE --batch N`
 //! (main.rs), which synthesizes the trace/adapters on first run and

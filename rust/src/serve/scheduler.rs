@@ -90,8 +90,13 @@ impl TenantPool {
 pub struct Request {
     pub id: u64,
     pub tenant: TenantId,
-    /// Prompt length in tokens (drives forward cost).
+    /// Prompt length in tokens (drives prefill cost; the prefill step
+    /// emits the request's first output token).
     pub tokens: usize,
+    /// Output tokens generated AFTER the first one — each costs one
+    /// decode iteration in the iteration-level engine. 0 = prefill-only
+    /// (the default for traces that predate the field).
+    pub decode_tokens: usize,
     /// Arrival timestamp, seconds from trace start. The online
     /// scheduler only sees a request once the clock passes this.
     pub arrival_s: f64,
@@ -105,6 +110,12 @@ impl Request {
     /// Absolute completion deadline on the trace clock.
     pub fn absolute_deadline(&self) -> f64 {
         self.arrival_s + self.deadline_s
+    }
+
+    /// Total tokens the backend must compute for this request
+    /// (prefill + decode).
+    pub fn total_tokens(&self) -> usize {
+        self.tokens + self.decode_tokens
     }
 }
 
@@ -158,8 +169,16 @@ pub struct Batch {
 }
 
 impl Batch {
+    /// Prefill tokens of the batch (what one iteration step computes
+    /// when every member is freshly dispatched).
     pub fn tokens(&self) -> usize {
         self.requests.iter().map(|r| r.tokens).sum()
+    }
+
+    /// Prefill + decode tokens — the whole-batch engine's unit of
+    /// service (it runs a request's full generation in one dispatch).
+    pub fn total_tokens(&self) -> usize {
+        self.requests.iter().map(Request::total_tokens).sum()
     }
 }
 
@@ -239,45 +258,64 @@ pub fn swap_count(batches: &[Batch]) -> usize {
     swaps
 }
 
-/// One tenant's pending FIFO plus a monotonic deque over absolute
-/// deadlines, so the tightest deadline of the queue is O(1) per
-/// dispatch instead of a scan of the whole backlog (which would make
-/// slo-aware dispatch quadratic exactly in the overload regime it
-/// exists for).
+/// One tenant's pending FIFO plus a monotonic deque over *urgency*
+/// keys, so the tightest key of the queue is O(1) per dispatch instead
+/// of a scan of the whole backlog (which would make slo-aware dispatch
+/// quadratic exactly in the overload regime it exists for).
+///
+/// Urgency = absolute deadline − decode_tokens·decode_slack_s: a
+/// request that still owes d decode iterations must START d·step-time
+/// earlier to finish by its deadline, so its effective deadline is
+/// tighter by its remaining decode work. The key is computed once at
+/// push time (with the scheduler's then-current `decode_slack_s`) and
+/// stored alongside the request, so the monotonic deque stays
+/// consistent even if the calibration drifts between push and pop.
 #[derive(Debug, Default)]
 struct PendingQueue {
-    q: VecDeque<(u64, Request)>,
-    /// Non-decreasing absolute deadlines of the requests in `q`;
-    /// front is the queue's minimum.
-    min_deadline: VecDeque<f64>,
+    /// (admission seq, urgency key at push, request).
+    q: VecDeque<(u64, f64, Request)>,
+    /// Non-decreasing urgency keys of the requests in `q`; front is
+    /// the queue's minimum.
+    min_urgency: VecDeque<f64>,
 }
 
 impl PendingQueue {
-    fn push(&mut self, seq: u64, r: Request) {
-        let d = r.absolute_deadline();
-        while self.min_deadline.back().is_some_and(|&b| b > d) {
-            self.min_deadline.pop_back();
+    fn push(&mut self, seq: u64, r: Request, decode_slack_s: f64) {
+        let d = if r.deadline_s.is_finite() {
+            r.absolute_deadline()
+                - r.decode_tokens as f64 * decode_slack_s
+        } else {
+            f64::INFINITY
+        };
+        while self.min_urgency.back().is_some_and(|&b| b > d) {
+            self.min_urgency.pop_back();
         }
-        self.min_deadline.push_back(d);
-        self.q.push_back((seq, r));
+        self.min_urgency.push_back(d);
+        self.q.push_back((seq, d, r));
     }
 
     fn pop(&mut self) -> Option<(u64, Request)> {
-        let (seq, r) = self.q.pop_front()?;
-        // Bitwise-identical value: it came from this request's push.
-        if self.min_deadline.front() == Some(&r.absolute_deadline()) {
-            self.min_deadline.pop_front();
+        let (seq, d, r) = self.q.pop_front()?;
+        // Bitwise-identical value: it was stored at this request's
+        // push.
+        if self.min_urgency.front() == Some(&d) {
+            self.min_urgency.pop_front();
         }
         Some((seq, r))
     }
 
     fn front_seq(&self) -> Option<u64> {
-        self.q.front().map(|(seq, _)| *seq)
+        self.q.front().map(|(seq, _, _)| *seq)
     }
 
-    /// Tightest absolute deadline among queued requests.
-    fn earliest_deadline(&self) -> Option<f64> {
-        self.min_deadline.front().copied()
+    /// Prefill token count of the front request.
+    fn front_tokens(&self) -> Option<usize> {
+        self.q.front().map(|(_, _, r)| r.tokens)
+    }
+
+    /// Tightest urgency key among queued requests.
+    fn earliest_urgency(&self) -> Option<f64> {
+        self.min_urgency.front().copied()
     }
 }
 
@@ -300,11 +338,24 @@ pub struct OnlineScheduler {
     pending_count: usize,
     next_seq: u64,
     /// Seconds of slack the slo-aware policy charges a tenant switch —
-    /// the scheduling price of an adapter swap. The engine's
-    /// `serve_online` loop keeps this calibrated to the active clock
-    /// model (analytic swap cost, or the measured running average);
-    /// set it manually only when driving the scheduler directly.
+    /// the scheduling price of an adapter swap. The engine's serving
+    /// loops keep this calibrated to the active clock model (analytic
+    /// swap cost, or the measured running average); set it manually
+    /// only when driving the scheduler directly.
     pub swap_penalty_s: f64,
+    /// Seconds of urgency credited per remaining decode token when the
+    /// slo-aware policy ranks tenants: a request owing d decode
+    /// iterations must start ~d·step-time earlier, so its effective
+    /// deadline tightens by d·decode_slack_s. Calibrated by the engine
+    /// like `swap_penalty_s` (analytic per-token cost, or the measured
+    /// running average); 0 disables the adjustment.
+    pub decode_slack_s: f64,
+    /// Per-dispatch token budget (prefill tokens of freshly dispatched
+    /// requests — what one iteration step computes). 0 = unlimited.
+    /// A single request larger than the budget still dispatches alone,
+    /// so an oversized prompt degrades to a batch of one instead of
+    /// wedging the queue.
+    pub max_batch_tokens: usize,
 }
 
 impl OnlineScheduler {
@@ -329,11 +380,59 @@ impl OnlineScheduler {
             pending_count: 0,
             next_seq: 0,
             swap_penalty_s: 0.0,
+            decode_slack_s: 0.0,
+            max_batch_tokens: 0,
         }
     }
 
     pub fn policy(&self) -> Policy {
         self.policy
+    }
+
+    /// Max requests per dispatch (the engine's slot count).
+    pub fn batch_size(&self) -> usize {
+        self.cap
+    }
+
+    /// The per-dispatch token budget as a comparable bound
+    /// (`usize::MAX` when unbudgeted).
+    fn step_budget(&self) -> usize {
+        if self.max_batch_tokens == 0 {
+            usize::MAX
+        } else {
+            self.max_batch_tokens
+        }
+    }
+
+    /// THE budget-bounded pop loop — every dispatch path (plain take,
+    /// the fifo run, mid-generation joins) comes through here so the
+    /// cap/budget/first-fits edge rules can never diverge between
+    /// policies. Pops from `t`'s queue in admission order while
+    /// `keep_going` holds, at most `max_requests`, stopping before a
+    /// prefill that would exceed `token_budget` — except the very
+    /// first pop when `first_fits` (a fresh dispatch must make
+    /// progress even on an oversized prompt; joins pass false and
+    /// never exceed).
+    fn pop_bounded(&mut self, t: TenantId, max_requests: usize,
+                   token_budget: usize, first_fits: bool,
+                   keep_going: impl Fn(&OnlineScheduler) -> bool)
+                   -> Vec<Request> {
+        let mut out: Vec<Request> = Vec::new();
+        let mut tokens = 0usize;
+        while out.len() < max_requests && keep_going(self) {
+            match self.pending[t.index()].front_tokens() {
+                Some(next) if (first_fits && out.is_empty())
+                    || next <= token_budget.saturating_sub(tokens) => {
+                    let (_, r) =
+                        self.pending[t.index()].pop().unwrap();
+                    self.pending_count -= 1;
+                    tokens += r.tokens;
+                    out.push(r);
+                }
+                _ => break,
+            }
+        }
+        out
     }
 
     /// Admit every request whose arrival has passed; returns how many
@@ -346,7 +445,8 @@ impl OnlineScheduler {
             let r = self.future.pop().unwrap();
             let seq = self.next_seq;
             self.next_seq += 1;
-            self.pending[r.tenant.index()].push(seq, r);
+            let slack = self.decode_slack_s;
+            self.pending[r.tenant.index()].push(seq, r, slack);
             self.pending_count += 1;
             n += 1;
         }
@@ -383,11 +483,12 @@ impl OnlineScheduler {
     }
 
     /// Slo-aware tenant choice: earliest-deadline-first on each
-    /// tenant's tightest slack, where switching away from the live
-    /// tenant pays `swap_penalty_s` of extra slack — so a swap only
-    /// happens when another tenant's deadline pressure exceeds the
-    /// swap cost. Ties prefer the live tenant, then earliest
-    /// admission.
+    /// tenant's tightest slack (decode-adjusted: remaining decode work
+    /// tightens a request's effective deadline — see [`PendingQueue`]),
+    /// where switching away from the live tenant pays `swap_penalty_s`
+    /// of extra slack — so a swap only happens when another tenant's
+    /// deadline pressure exceeds the swap cost. Ties prefer the live
+    /// tenant, then earliest admission.
     fn pick_slo(&self, live: Option<TenantId>,
                 clock: f64) -> Option<TenantId> {
         let mut best: Option<(f64, bool, u64, TenantId)> = None;
@@ -398,7 +499,7 @@ impl OnlineScheduler {
             };
             let t = TenantId(i as u32);
             // O(1): the per-queue monotonic deque tracks the minimum.
-            let slack = q.earliest_deadline()
+            let slack = q.earliest_urgency()
                 .unwrap_or(f64::INFINITY) - clock;
             let is_switch = live != Some(t);
             let score = if is_switch {
@@ -428,18 +529,14 @@ impl OnlineScheduler {
         best.map(|(_, _, _, t)| t)
     }
 
-    /// Pop up to `cap` requests from `t`'s queue, in admission order.
+    /// Pop up to `cap` requests from `t`'s queue, in admission order,
+    /// stopping before a request whose prefill would push the batch
+    /// over `max_batch_tokens` (the first request always fits — see
+    /// the field docs).
     fn take(&mut self, t: TenantId) -> Batch {
-        let mut requests = Vec::new();
-        while requests.len() < self.cap {
-            match self.pending[t.index()].pop() {
-                Some((_, r)) => {
-                    self.pending_count -= 1;
-                    requests.push(r);
-                }
-                None => break,
-            }
-        }
+        let budget = self.step_budget();
+        let requests =
+            self.pop_bounded(t, self.cap, budget, true, |_| true);
         Batch { tenant: t, requests }
     }
 
@@ -455,18 +552,14 @@ impl OnlineScheduler {
         match self.policy {
             Policy::Fifo => {
                 // The batch is the maximal same-tenant *run* in global
-                // admission order, capped at `cap` — exactly the
-                // offline FIFO batch boundary.
+                // admission order, capped at `cap` and the token
+                // budget — exactly the offline FIFO batch boundary
+                // when unbudgeted.
                 let t = self.head_of_line()?;
-                let mut requests = Vec::new();
-                while requests.len() < self.cap
-                    && self.head_of_line() == Some(t)
-                {
-                    let (_, r) =
-                        self.pending[t.index()].pop().unwrap();
-                    self.pending_count -= 1;
-                    requests.push(r);
-                }
+                let budget = self.step_budget();
+                let requests = self.pop_bounded(
+                    t, self.cap, budget, true,
+                    move |s| s.head_of_line() == Some(t));
                 Some(Batch { tenant: t, requests })
             }
             Policy::SwapAware => {
@@ -484,6 +577,25 @@ impl OnlineScheduler {
                 Some(self.take(t))
             }
         }
+    }
+
+    /// Continuous-batching join: pop up to `max_requests` pending
+    /// requests of the LIVE tenant (admission order) so they can enter
+    /// the in-flight batch mid-generation, their prefills fitting in
+    /// `token_budget` spare step tokens (`usize::MAX` = unlimited).
+    ///
+    /// Policy gating: `SwapAware` and `SloAware` admit any pending
+    /// same-tenant request (that is the point of continuous batching);
+    /// `Fifo` only joins requests that are at the global head of line,
+    /// preserving its strict admission-order discipline. Unlike a
+    /// fresh dispatch, a join never exceeds the budget — the batch
+    /// already has work, so an oversized prompt just waits for the
+    /// batch to drain.
+    pub fn join_live(&mut self, live: TenantId, max_requests: usize,
+                     token_budget: usize) -> Vec<Request> {
+        self.pop_bounded(live, max_requests, token_budget, false,
+                         move |s| s.policy != Policy::Fifo
+                             || s.head_of_line() == Some(live))
     }
 
     /// Drain the scheduler as if every request had already arrived
@@ -515,7 +627,7 @@ mod tests {
 
     fn req(id: u64, tenant: u32) -> Request {
         Request { id, tenant: TenantId(tenant), tokens: 16,
-                  arrival_s: id as f64 * 0.01,
+                  decode_tokens: 0, arrival_s: id as f64 * 0.01,
                   deadline_s: f64::INFINITY }
     }
 
@@ -654,7 +766,7 @@ mod tests {
         // next dispatch instead of waiting behind other tenants.
         let mut reqs = vec![req(0, 0), req(1, 0), req(2, 1)];
         reqs.push(Request { id: 3, tenant: TenantId(0), tokens: 16,
-                            arrival_s: 0.5,
+                            decode_tokens: 0, arrival_s: 0.5,
                             deadline_s: f64::INFINITY });
         let mut s = OnlineScheduler::new(reqs, 2, 1,
                                          Policy::SwapAware);
@@ -681,8 +793,8 @@ mod tests {
         // Tenant 1's deadline is much tighter; slo-aware jumps to it
         // even though tenant 0 arrived first.
         let mk = |id, tenant, deadline_s| Request {
-            id, tenant: TenantId(tenant), tokens: 8, arrival_s: 0.0,
-            deadline_s,
+            id, tenant: TenantId(tenant), tokens: 8, decode_tokens: 0,
+            arrival_s: 0.0, deadline_s,
         };
         let reqs = vec![mk(0, 0, 10.0), mk(1, 1, 0.05)];
         let mut s = OnlineScheduler::new(reqs, 2, 4, Policy::SloAware);
@@ -702,8 +814,8 @@ mod tests {
         // less than the swap penalty — the scheduler stays put. With
         // the penalty at zero it would switch immediately.
         let mk = |id, tenant, deadline_s| Request {
-            id, tenant: TenantId(tenant), tokens: 8, arrival_s: 0.0,
-            deadline_s,
+            id, tenant: TenantId(tenant), tokens: 8, decode_tokens: 0,
+            arrival_s: 0.0, deadline_s,
         };
         let reqs = || vec![mk(0, 0, 0.50), mk(1, 0, 0.50),
                            mk(2, 1, 0.45)];
@@ -734,5 +846,114 @@ mod tests {
                        "{policy:?}");
             assert!(s.is_done());
         }
+    }
+
+    #[test]
+    fn token_budget_splits_batches_without_losing_requests() {
+        // 9 same-tenant requests of 16 tokens under a 40-token budget:
+        // 2 requests per batch (32 ≤ 40 < 48), every request served.
+        let reqs: Vec<Request> = (0..9).map(|i| req(i, 0)).collect();
+        for policy in Policy::ALL {
+            let mut s = OnlineScheduler::new(reqs.clone(), 1, 8,
+                                             policy);
+            s.max_batch_tokens = 40;
+            let batches = s.drain_fully_arrived();
+            assert_eq!(ids(&batches), (0..9).collect::<Vec<_>>(),
+                       "{policy:?}");
+            for b in &batches {
+                assert!(b.tokens() <= 40, "{policy:?}: {} tokens",
+                        b.tokens());
+            }
+            assert_eq!(batches.len(), 5, "{policy:?}: 2+2+2+2+1");
+        }
+    }
+
+    #[test]
+    fn oversized_request_dispatches_alone() {
+        // A prompt larger than the budget must still be served (batch
+        // of one), not wedge the queue.
+        let mut reqs = vec![req(0, 0), req(1, 0)];
+        reqs[0].tokens = 100;
+        let mut s = OnlineScheduler::new(reqs, 1, 8,
+                                         Policy::SwapAware);
+        s.max_batch_tokens = 40;
+        let batches = s.drain_fully_arrived();
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].requests.len(), 1);
+        assert_eq!(batches[0].requests[0].id, 0);
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn join_live_pops_same_tenant_within_budget() {
+        let reqs = vec![req(0, 0), req(1, 0), req(2, 1), req(3, 0)];
+        let mut s = OnlineScheduler::new(reqs, 2, 8,
+                                         Policy::SwapAware);
+        s.admit(10.0);
+        // Live tenant 0 has three pending; budget fits two prefills.
+        let joined = s.join_live(TenantId(0), 8, 32);
+        let ids: Vec<u64> = joined.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1], "admission order, 32-token cap");
+        // Slot cap binds too.
+        let joined = s.join_live(TenantId(0), 0, usize::MAX);
+        assert!(joined.is_empty());
+        // Remaining tenant-0 request joins; tenant 1 never does.
+        let joined = s.join_live(TenantId(0), 8, usize::MAX);
+        assert_eq!(joined.len(), 1);
+        assert_eq!(joined[0].id, 3);
+        assert_eq!(s.pending_len(), 1, "tenant 1 still queued");
+    }
+
+    #[test]
+    fn fifo_join_requires_head_of_line() {
+        // Tenant 1's request sits at the head of the global line, so a
+        // fifo join on live tenant 0 must refuse — serving id 2 first
+        // would reorder arrivals.
+        let reqs = vec![req(0, 1), req(1, 1), req(2, 0)];
+        let mut s = OnlineScheduler::new(reqs, 2, 8, Policy::Fifo);
+        s.admit(10.0);
+        assert!(s.join_live(TenantId(0), 8, usize::MAX).is_empty());
+        // Swap-aware has no such constraint.
+        let reqs = vec![req(0, 1), req(1, 1), req(2, 0)];
+        let mut s = OnlineScheduler::new(reqs, 2, 8,
+                                         Policy::SwapAware);
+        s.admit(10.0);
+        assert_eq!(s.join_live(TenantId(0), 8, usize::MAX).len(), 1);
+    }
+
+    #[test]
+    fn slo_urgency_accounts_for_remaining_decode_work() {
+        // Same deadline, but tenant 1's request owes 100 decode
+        // iterations: with decode slack calibrated it must be served
+        // first; with the adjustment off, the tie prefers the live
+        // tenant 0.
+        let mk = |id, tenant, decode_tokens| Request {
+            id, tenant: TenantId(tenant), tokens: 8, decode_tokens,
+            arrival_s: 0.0, deadline_s: 1.0,
+        };
+        let reqs = || vec![mk(0, 0, 0), mk(1, 1, 100)];
+        let mut s = OnlineScheduler::new(reqs(), 2, 4,
+                                         Policy::SloAware);
+        s.decode_slack_s = 1e-3;
+        s.admit(0.0);
+        assert_eq!(s.dispatch(Some(TenantId(0)), 0.0).unwrap().tenant,
+                   TenantId(1),
+                   "100 pending decode steps tighten the deadline");
+        let mut s = OnlineScheduler::new(reqs(), 2, 4,
+                                         Policy::SloAware);
+        s.admit(0.0);
+        assert_eq!(s.dispatch(Some(TenantId(0)), 0.0).unwrap().tenant,
+                   TenantId(0), "no slack adjustment: live tie wins");
+    }
+
+    #[test]
+    fn batch_total_tokens_includes_decode() {
+        let mut r = req(0, 0);
+        r.decode_tokens = 24;
+        assert_eq!(r.total_tokens(), 40);
+        let b = Batch { tenant: TenantId(0),
+                        requests: vec![r, req(1, 0)] };
+        assert_eq!(b.tokens(), 32, "prefill only");
+        assert_eq!(b.total_tokens(), 56, "prefill + decode");
     }
 }

@@ -42,6 +42,11 @@ pub struct TraceSpec {
     /// Mean per-request deadline in milliseconds after arrival
     /// (jittered ±25% per request); 0 = no deadlines.
     pub deadline_ms: f64,
+    /// Mean decode length — output tokens generated after the first,
+    /// each one decode iteration in the iteration-level engine
+    /// (jittered like `mean_tokens`); 0 = prefill-only requests, the
+    /// shape every pre-decode trace has.
+    pub decode_tokens: usize,
     pub seed: u64,
 }
 
@@ -49,7 +54,7 @@ impl Default for TraceSpec {
     fn default() -> TraceSpec {
         TraceSpec { n_requests: 256, n_tenants: 8, mean_tokens: 64,
                     zipf_s: 1.1, req_per_s: 200.0, burstiness: 1.0,
-                    deadline_ms: 0.0, seed: 42 }
+                    deadline_ms: 0.0, decode_tokens: 0, seed: 42 }
     }
 }
 
@@ -90,6 +95,12 @@ impl Trace {
 pub fn synthesize(spec: &TraceSpec) -> Trace {
     assert!(spec.n_tenants > 0 && spec.mean_tokens >= 2);
     let mut rng = Rng::for_tag(spec.seed, "serve/trace");
+    // Decode lengths come from their OWN tagged stream so that (a)
+    // prefill-only specs consume exactly the pre-decode stream —
+    // existing seeds reproduce their old traces bit-for-bit — and (b)
+    // the same seed with decode on/off yields IDENTICAL arrivals,
+    // tenants and prompts, differing only in decode lengths.
+    let mut dec_rng = Rng::for_tag(spec.seed, "serve/trace/decode");
     let zipf = Zipf::new(spec.n_tenants, spec.zipf_s);
     let mut pool = TenantPool::new();
     let rate = spec.req_per_s.max(1e-9);
@@ -119,7 +130,17 @@ pub fn synthesize(spec: &TraceSpec) -> Trace {
         } else {
             f64::INFINITY
         };
-        Request { id, tenant, tokens, arrival_s: t, deadline_s }
+        // The floor of 1 keeps `--decode-tokens 1` from degenerating
+        // into a prefill-only trace (only d = 1 is affected: d/2 ≥ 1
+        // beyond).
+        let decode_tokens = if spec.decode_tokens > 0 {
+            (spec.decode_tokens / 2).max(1)
+                + dec_rng.below(spec.decode_tokens)
+        } else {
+            0
+        };
+        Request { id, tenant, tokens, decode_tokens, arrival_s: t,
+                  deadline_s }
     }).collect();
     Trace { pool, requests }
 }
@@ -133,12 +154,16 @@ pub fn write_jsonl(path: &Path, trace: &Trace) -> Result<()> {
                    Json::Str(trace.pool.name(r.tenant).to_string()));
         obj.insert("tokens".to_string(), Json::Num(r.tokens as f64));
         obj.insert("arrival_s".to_string(), Json::Num(r.arrival_s));
-        // No-deadline requests simply omit the field, so traces
-        // without SLOs stay readable by (and identical to) the
-        // pre-deadline format.
+        // No-deadline / prefill-only requests simply omit the fields,
+        // so traces without SLOs or decode phases stay readable by
+        // (and byte-identical to) the older formats.
         if r.deadline_s.is_finite() {
             obj.insert("deadline_s".to_string(),
                        Json::Num(r.deadline_s));
+        }
+        if r.decode_tokens > 0 {
+            obj.insert("decode_tokens".to_string(),
+                       Json::Num(r.decode_tokens as f64));
         }
         out.push_str(&Json::Obj(obj).to_string());
         out.push('\n');
@@ -172,6 +197,10 @@ pub fn read_jsonl(path: &Path) -> Result<Trace> {
             id: num_field("id")? as u64,
             tenant,
             tokens: num_field("tokens")? as usize,
+            // Older traces predate the decode field: absent means
+            // prefill-only.
+            decode_tokens: j.get("decode_tokens")
+                .and_then(|v| v.as_usize()).unwrap_or(0),
             arrival_s: num_field("arrival_s")?,
             // Older traces predate the SLO field: absent means no
             // deadline, not deadline-zero.
@@ -206,8 +235,45 @@ mod tests {
             assert!(r.tokens < 2 * spec.mean_tokens);
             assert!(r.deadline_s.is_infinite(),
                     "no deadlines unless requested");
+            assert_eq!(r.decode_tokens, 0,
+                       "prefill-only unless requested");
         }
         assert!(a.span_s() > 0.0);
+    }
+
+    #[test]
+    fn decode_lengths_are_jittered_around_the_mean() {
+        let spec = TraceSpec { n_requests: 300, decode_tokens: 32,
+                               ..Default::default() };
+        let trace = synthesize(&spec);
+        let mut distinct = std::collections::BTreeSet::new();
+        for r in &trace.requests {
+            assert!(r.decode_tokens >= 16 && r.decode_tokens < 48,
+                    "decode {} outside [16, 48)", r.decode_tokens);
+            assert_eq!(r.total_tokens(), r.tokens + r.decode_tokens);
+            distinct.insert(r.decode_tokens);
+        }
+        assert!(distinct.len() > 8, "lengths must actually vary");
+        // Adding decode lengths must not perturb the rest of the
+        // stream: same seed, decode on/off, identical arrivals and
+        // prompts.
+        let plain = synthesize(&TraceSpec { decode_tokens: 0,
+                                            n_requests: 300,
+                                            ..Default::default() });
+        for (a, b) in trace.requests.iter().zip(&plain.requests) {
+            assert_eq!(a.tokens, b.tokens);
+            assert_eq!(a.tenant, b.tenant);
+            assert!((a.arrival_s - b.arrival_s).abs() < 1e-12);
+        }
+        // And the d = 1 edge: asking for decode must never silently
+        // synthesize a prefill-only trace.
+        let one = synthesize(&TraceSpec { n_requests: 50,
+                                          decode_tokens: 1,
+                                          ..Default::default() });
+        for r in &one.requests {
+            assert_eq!(r.decode_tokens, 1,
+                       "--decode-tokens 1 degenerated to 0");
+        }
     }
 
     #[test]
@@ -259,7 +325,7 @@ mod tests {
     #[test]
     fn jsonl_roundtrip_preserves_everything_in_order() {
         let spec = TraceSpec { n_requests: 32, n_tenants: 4,
-                               deadline_ms: 50.0,
+                               deadline_ms: 50.0, decode_tokens: 24,
                                ..Default::default() };
         let trace = synthesize(&spec);
         let path = std::env::temp_dir().join(format!(
@@ -272,9 +338,39 @@ mod tests {
             assert_eq!(trace.pool.name(a.tenant),
                        back.pool.name(b.tenant));
             assert_eq!(a.tokens, b.tokens);
+            assert_eq!(a.decode_tokens, b.decode_tokens);
             assert!((a.arrival_s - b.arrival_s).abs() < 1e-9);
             assert!((a.deadline_s - b.deadline_s).abs() < 1e-9);
         }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn pr2_era_trace_loads_with_defaults_and_roundtrips_bitwise() {
+        // A trace written before `decode_tokens` (and, line 1, before
+        // `deadline_s`) existed: absent fields must read back as
+        // prefill-only / no-deadline, and save(load(file)) must
+        // reproduce the file BYTE-identically — old archives stay
+        // stable under a load/save cycle.
+        let old = concat!(
+            "{\"arrival_s\":0.25,\"id\":0,\"tenant\":\"tenant-000\",",
+            "\"tokens\":32}\n",
+            "{\"arrival_s\":0.5,\"deadline_s\":0.075,\"id\":1,",
+            "\"tenant\":\"tenant-001\",\"tokens\":16}\n");
+        let path = std::env::temp_dir().join(format!(
+            "paca-trace-pr2-{}.jsonl", std::process::id()));
+        std::fs::write(&path, old).unwrap();
+        let trace = read_jsonl(&path).unwrap();
+        assert_eq!(trace.len(), 2);
+        for r in &trace.requests {
+            assert_eq!(r.decode_tokens, 0, "old trace = prefill-only");
+            assert_eq!(r.total_tokens(), r.tokens);
+        }
+        assert!(trace.requests[0].deadline_s.is_infinite());
+        assert!((trace.requests[1].deadline_s - 0.075).abs() < 1e-12);
+        write_jsonl(&path, &trace).unwrap();
+        let back = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(back, old, "load→save must be byte-identical");
         std::fs::remove_file(&path).ok();
     }
 

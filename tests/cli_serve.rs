@@ -64,3 +64,71 @@ fn serve_cli_end_to_end() {
 
     std::fs::remove_dir_all(&dir).ok();
 }
+
+#[test]
+fn serve_cli_iteration_level_decode() {
+    let dir = tmp("serve-iter");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("decode_trace.jsonl");
+    let adapters = dir.join("adapters");
+    let run = |extra: &[&str]| {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_paca"));
+        cmd.arg("serve")
+            .arg("--backend").arg("host")
+            .arg("--requests").arg(&trace)
+            .arg("--adapters").arg(&adapters)
+            .arg("--count").arg("24")
+            .arg("--tenants").arg("3")
+            .arg("--batch").arg("4")
+            .arg("--mean-tokens").arg("8")
+            .args(extra);
+        cmd.output().expect("spawning paca serve")
+    };
+
+    // First run synthesizes a decode-heavy trace and serves it
+    // iteration-level (the default unit) under a step-token budget.
+    let out = run(&["--decode-tokens", "8", "--max-batch-tokens", "96",
+                    "--policy", "slo-aware", "--deadline-ms", "40",
+                    "--burstiness", "2"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(),
+            "paca serve failed:\nstdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("unit step"),
+            "service unit missing from banner:\n{stdout}");
+    assert!(stdout.contains("step budget 96 tokens"),
+            "budget missing from banner:\n{stdout}");
+    // "ttft p99" / "iteration steps" are unique to the engine's
+    // iteration-level report (the always-printed cost projection
+    // block mentions "iteration-level decode" too, so that string
+    // can't discriminate).
+    assert!(stdout.contains("ttft p99"),
+            "TTFT/TPOT report missing:\n{stdout}");
+    assert!(stdout.contains("iteration steps"),
+            "occupancy summary missing:\n{stdout}");
+    assert!(stdout.contains("restored bit-exactly"),
+            "base-restore check missing:\n{stdout}");
+    assert!(trace.exists(), "decode trace must be persisted");
+    let text = std::fs::read_to_string(&trace).unwrap();
+    assert!(text.contains("decode_tokens"),
+            "persisted trace must carry decode lengths:\n{text}");
+
+    // Same persisted trace through the v2 whole-batch unit: still
+    // works, but no iteration-level decode section.
+    let out = run(&["--service-unit", "batch"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "whole-batch run failed:\n{stdout}");
+    assert!(stdout.contains("loaded 24 requests"),
+            "must reuse the persisted decode trace:\n{stdout}");
+    assert!(stdout.contains("unit batch"), "banner:\n{stdout}");
+    assert!(!stdout.contains("ttft p99")
+            && !stdout.contains("iteration steps"),
+            "whole-batch unit must not report TTFT/occupancy:\n\
+             {stdout}");
+
+    // Bad unit fails loudly.
+    let out = run(&["--service-unit", "token"]);
+    assert!(!out.status.success(), "unknown unit must error");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -338,6 +338,7 @@ fn prop_online_scheduler_reproduces_offline_plan_when_fully_arrived() {
             id,
             tenant: TenantId(rng.below(n_tenants) as u32),
             tokens: 1 + rng.below(64),
+            decode_tokens: rng.below(16),
             arrival_s: 0.0,
             deadline_s: if rng.below(2) == 0 {
                 f64::INFINITY
@@ -388,6 +389,7 @@ fn prop_online_scheduler_conserves_requests_under_any_arrivals() {
             id,
             tenant: TenantId(rng.below(n_tenants) as u32),
             tokens: 1 + rng.below(32),
+            decode_tokens: rng.below(16),
             arrival_s: rng.next_f64() * 2.0,
             deadline_s: 0.05 + rng.next_f64(),
         }).collect();
@@ -423,6 +425,240 @@ fn prop_online_scheduler_conserves_requests_under_any_arrivals() {
             clock += rng.next_f64() * 0.1;
         }
         assert!(sched.is_done());
+        seen.sort_unstable();
+        assert_eq!(seen, (0..n as u64).collect::<Vec<_>>(),
+                   "{policy:?}: lost or duplicated requests");
+    });
+}
+
+#[test]
+fn prop_iteration_level_reduces_to_whole_batch_when_prefill_only() {
+    // The Serving-v3 reduction anchor, as a property: for ANY
+    // fully-arrived prefill-only queue, the iteration-level engine
+    // issues EXACTLY the forwards of (a) the whole-batch online
+    // engine and (b) the offline `plan` replay — same per-request
+    // token counts, same output checksum, same swap count. 25 seeded
+    // cases per run.
+    use paca::manifest::ModelInfo;
+    use paca::serve::engine::{tiny_model, BaseModel, ClockModel,
+                              HostBackend, ServeEngine};
+    use paca::serve::registry::{AdapterRegistry, PacaAdapter};
+    use paca::serve::scheduler::{plan, OnlineScheduler, Policy,
+                                 Request, TenantPool};
+    use paca::serve::trace;
+
+    fn small() -> ModelInfo {
+        ModelInfo { d_model: 16, d_ff: 24, ..tiny_model() }
+    }
+
+    fn engine_for(pool: TenantPool) -> ServeEngine {
+        let m = small();
+        let base = BaseModel::synthetic(&m, 7);
+        let mut reg = AdapterRegistry::new(64);
+        for name in pool.names() {
+            reg.insert(PacaAdapter::synthetic(name, &m, 4, 11));
+        }
+        ServeEngine::new(base, reg, Box::<HostBackend>::default(),
+                         pool)
+    }
+
+    let clock = ClockModel::Analytic {
+        swap_s: 2e-3, batch_s: 5e-4, token_s: 2e-5,
+    };
+    prop(25, |rng| {
+        let n_tenants = 1 + rng.below(5);
+        let mut pool = TenantPool::new();
+        for i in 0..n_tenants {
+            pool.intern(&trace::tenant_name(i));
+        }
+        let n = 1 + rng.below(40);
+        let cap = 1 + rng.below(6);
+        let requests: Vec<Request> = (0..n as u64).map(|id| Request {
+            id,
+            tenant: paca::serve::scheduler::TenantId(
+                rng.below(n_tenants) as u32),
+            tokens: 1 + rng.below(24),
+            decode_tokens: 0, // prefill-only: the reduction regime
+            arrival_s: 0.0,
+            deadline_s: if rng.below(2) == 0 {
+                f64::INFINITY
+            } else {
+                0.01 + rng.next_f64() * 0.1
+            },
+        }).collect();
+        for policy in Policy::ALL {
+            let mut whole = engine_for(pool.clone());
+            let mut sched = OnlineScheduler::new(
+                requests.clone(), n_tenants, cap, policy);
+            whole.serve_online(&mut sched, clock).unwrap();
+            whole.finish().unwrap();
+
+            let mut iter = engine_for(pool.clone());
+            let mut sched = OnlineScheduler::new(
+                requests.clone(), n_tenants, cap, policy);
+            iter.serve_iterative(&mut sched, clock).unwrap();
+            iter.finish().unwrap();
+
+            assert_eq!(iter.checksum, whole.checksum,
+                       "{policy:?}: checksum");
+            assert_eq!(iter.stats.tokens, whole.stats.tokens,
+                       "{policy:?}: token counts");
+            assert_eq!(iter.stats.swaps, whole.stats.swaps,
+                       "{policy:?}: swaps");
+            assert_eq!(iter.stats.batches, whole.stats.batches,
+                       "{policy:?}: one step per batch");
+            assert_eq!(iter.stats.requests, whole.stats.requests,
+                       "{policy:?}: requests");
+
+            // And the offline plan replay (fifo/swap-aware only:
+            // slo-aware has no offline equivalent, it plans like
+            // swap-aware).
+            if policy != Policy::SloAware {
+                let mut off = engine_for(pool.clone());
+                off.serve(&plan(requests.clone(), cap, policy))
+                    .unwrap();
+                off.finish().unwrap();
+                assert_eq!(iter.checksum, off.checksum,
+                           "{policy:?}: offline checksum");
+                assert_eq!(iter.stats.tokens, off.stats.tokens,
+                           "{policy:?}: offline tokens");
+                assert_eq!(iter.stats.swaps, off.stats.swaps,
+                           "{policy:?}: offline swaps");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_scheduler_fuzz_invariants_under_random_traces() {
+    // Seeded fuzz over the scheduler–engine pipeline shape: random
+    // arrivals, prompts, decode lengths, deadlines, budgets and
+    // policies, driven through the iteration-level protocol
+    // (dispatch → join_live → step) with random service times.
+    // Invariants: every request dispatched exactly once, never before
+    // its arrival; batches and joins never mix tenants; request
+    // occupancy never exceeds the batch size; per-step token
+    // occupancy (prefill prompts + one per decoding slot) never
+    // exceeds --max-batch-tokens.
+    use paca::serve::scheduler::{OnlineScheduler, Policy, Request,
+                                 TenantId};
+    prop(120, |rng| {
+        let n_tenants = 1 + rng.below(5);
+        let n = 1 + rng.below(60);
+        let cap = 1 + rng.below(6);
+        let max_tok = 24;
+        // Budget 0 = unlimited, else ≥ the largest prompt so the
+        // strict per-step bound must hold.
+        let budget = if rng.below(2) == 0 {
+            0
+        } else {
+            max_tok + rng.below(64)
+        };
+        let requests: Vec<Request> = (0..n as u64).map(|id| Request {
+            id,
+            tenant: TenantId(rng.below(n_tenants) as u32),
+            tokens: 1 + rng.below(max_tok),
+            decode_tokens: rng.below(12),
+            arrival_s: rng.next_f64() * 2.0,
+            deadline_s: if rng.below(3) == 0 {
+                f64::INFINITY
+            } else {
+                0.05 + rng.next_f64()
+            },
+        }).collect();
+        let policy = Policy::ALL[rng.below(3)];
+        let mut sched = OnlineScheduler::new(
+            requests.clone(), n_tenants, cap, policy);
+        sched.max_batch_tokens = budget;
+        sched.decode_slack_s = rng.next_f64() * 1e-3;
+        sched.swap_penalty_s = rng.next_f64() * 5e-3;
+
+        let mut clock = 0.0f64;
+        let mut seen: Vec<u64> = Vec::new();
+        // In-flight decode counts, mirroring the engine's slots.
+        let mut slots: Vec<(u64, usize)> = Vec::new();
+        let mut live: Option<TenantId> = None;
+        loop {
+            sched.admit(clock);
+            if slots.is_empty() {
+                if sched.pending_len() == 0 {
+                    match sched.next_arrival() {
+                        Some(t) => {
+                            clock = clock.max(t);
+                            sched.admit(clock);
+                        }
+                        None => break,
+                    }
+                }
+                let Some(b) = sched.dispatch(live, clock) else {
+                    break;
+                };
+                assert!(!b.requests.is_empty());
+                assert!(b.requests.len() <= cap, "{policy:?}: cap");
+                if budget > 0 {
+                    assert!(b.tokens() <= budget,
+                            "{policy:?}: dispatch {} tokens over \
+                             budget {budget}", b.tokens());
+                }
+                live = Some(b.tenant);
+                let mut step_tokens = 0;
+                for r in b.requests {
+                    assert_eq!(r.tenant, b.tenant,
+                               "{policy:?}: mixed-tenant batch");
+                    assert!(r.arrival_s <= clock,
+                            "{policy:?}: dispatched before arrival");
+                    step_tokens += r.tokens;
+                    seen.push(r.id);
+                    slots.push((r.id, r.decode_tokens));
+                }
+                if budget > 0 {
+                    assert!(step_tokens <= budget);
+                }
+            } else {
+                let t = live.unwrap();
+                let in_flight = slots.len();
+                let spare = if budget == 0 {
+                    usize::MAX
+                } else {
+                    budget.saturating_sub(in_flight)
+                };
+                let free = cap - in_flight;
+                let joined = sched.join_live(t, free, spare);
+                assert!(joined.len() <= free, "{policy:?}: join cap");
+                let mut join_tokens = 0;
+                for r in joined {
+                    assert_eq!(r.tenant, t,
+                               "{policy:?}: join mixed tenants");
+                    assert!(r.arrival_s <= clock,
+                            "{policy:?}: joined before arrival");
+                    join_tokens += r.tokens;
+                    seen.push(r.id);
+                    slots.push((r.id, r.decode_tokens));
+                }
+                assert!(slots.len() <= cap);
+                // Step occupancy: one token per decoding slot plus
+                // the joiners' prefills must fit the budget.
+                if budget > 0 {
+                    assert!(in_flight + join_tokens <= budget,
+                            "{policy:?}: step occupancy {} over \
+                             budget {budget}",
+                            in_flight + join_tokens);
+                }
+            }
+            // One "step": random subset of slots completes (always at
+            // least decrement, so the fuzz terminates).
+            let mut i = 0;
+            while i < slots.len() {
+                if slots[i].1 == 0 || rng.below(3) == 0 {
+                    slots.swap_remove(i);
+                } else {
+                    slots[i].1 -= 1;
+                    i += 1;
+                }
+            }
+            clock += rng.next_f64() * 0.05;
+        }
+        assert!(sched.is_done(), "{policy:?}: drained");
         seen.sort_unstable();
         assert_eq!(seen, (0..n as u64).collect::<Vec<_>>(),
                    "{policy:?}: lost or duplicated requests");
