@@ -165,6 +165,8 @@ pub struct ServeConfig {
     pub deadline_ms: f64,
     /// Arrival burstiness for synthesized traces (1 = pure Poisson).
     pub burstiness: f64,
+    /// Mean arrival rate (requests/second) for synthesized traces.
+    pub req_per_s: f64,
     /// Mean decode length (output tokens after the first) for
     /// synthesized traces; 0 = prefill-only requests.
     pub decode_tokens: usize,
@@ -175,6 +177,19 @@ pub struct ServeConfig {
     /// late same-tenant arrivals join mid-generation) or "batch" (the
     /// v2 whole-batch pipeline).
     pub service_unit: String,
+    /// Paged KV-cache pool size in blocks; 0 = unlimited (no capacity
+    /// gating, no preemption — the PR-3 behaviour).
+    pub kv_blocks: usize,
+    /// Tokens per KV block (block bytes derive from the model's
+    /// kv_bytes_per_token).
+    pub kv_block_tokens: usize,
+    /// Evict the least-urgent decoding slot under memory pressure /
+    /// urgent other-tenant deadlines (bounded pool only); false =
+    /// drain-only.
+    pub preempt: bool,
+    /// Host-backend row cap per forward (was a hard-coded const;
+    /// oversized batches still truncate visibly).
+    pub host_max_tokens: usize,
 }
 
 impl Default for ServeConfig {
@@ -193,9 +208,14 @@ impl Default for ServeConfig {
             mean_tokens: 64,
             deadline_ms: 0.0,
             burstiness: 1.0,
+            req_per_s: 200.0,
             decode_tokens: 0,
             max_batch_tokens: 0,
             service_unit: "step".into(),
+            kv_blocks: 0,
+            kv_block_tokens: 16,
+            preempt: true,
+            host_max_tokens: 2048,
         }
     }
 }
@@ -242,6 +262,14 @@ impl ServeConfig {
                 }
                 v
             },
+            req_per_s: {
+                let v = doc.f64_or("serve.req_per_s", d.req_per_s);
+                if v <= 0.0 {
+                    return Err(anyhow!(
+                        "serve.req_per_s must be > 0, got {v}"));
+                }
+                v
+            },
             decode_tokens: u("serve.decode_tokens", d.decode_tokens)?,
             max_batch_tokens: u("serve.max_batch_tokens",
                                 d.max_batch_tokens)?,
@@ -252,6 +280,26 @@ impl ServeConfig {
                     return Err(anyhow!(
                         "serve.service_unit must be step|batch, \
                          got {v:?}"));
+                }
+                v
+            },
+            kv_blocks: u("serve.kv_blocks", d.kv_blocks)?,
+            kv_block_tokens: {
+                let v = u("serve.kv_block_tokens",
+                          d.kv_block_tokens)?;
+                if v == 0 {
+                    return Err(anyhow!(
+                        "serve.kv_block_tokens must be >= 1"));
+                }
+                v
+            },
+            preempt: doc.bool_or("serve.preempt", d.preempt),
+            host_max_tokens: {
+                let v = u("serve.host_max_tokens",
+                          d.host_max_tokens)?;
+                if v == 0 {
+                    return Err(anyhow!(
+                        "serve.host_max_tokens must be >= 1"));
                 }
                 v
             },
@@ -292,6 +340,14 @@ impl ServeConfig {
                 }
                 self.burstiness = b;
             }
+            "serve.req_per_s" | "req-per-s" | "req_per_s" => {
+                let r: f64 = v.parse()?;
+                if r <= 0.0 {
+                    return Err(anyhow!(
+                        "req-per-s must be > 0, got {r}"));
+                }
+                self.req_per_s = r;
+            }
             "serve.decode_tokens" | "decode-tokens"
                 | "decode_tokens" => self.decode_tokens = v.parse()?,
             "serve.max_batch_tokens" | "max-batch-tokens"
@@ -304,6 +360,38 @@ impl ServeConfig {
                         "service-unit must be step|batch, got {v:?}"));
                 }
                 self.service_unit = v.into();
+            }
+            "serve.kv_blocks" | "kv-blocks" | "kv_blocks" => {
+                self.kv_blocks = v.parse()?
+            }
+            "serve.kv_block_tokens" | "kv-block-tokens"
+                | "kv_block_tokens" => {
+                let n: usize = v.parse()?;
+                if n == 0 {
+                    return Err(anyhow!(
+                        "kv-block-tokens must be >= 1"));
+                }
+                self.kv_block_tokens = n;
+            }
+            "serve.preempt" | "preempt" => {
+                self.preempt = match v {
+                    "true" | "on" | "1" => true,
+                    "false" | "off" | "0" => false,
+                    other => {
+                        return Err(anyhow!(
+                            "preempt must be true|false, got \
+                             {other:?}"))
+                    }
+                };
+            }
+            "serve.host_max_tokens" | "host-max-tokens"
+                | "host_max_tokens" => {
+                let n: usize = v.parse()?;
+                if n == 0 {
+                    return Err(anyhow!(
+                        "host-max-tokens must be >= 1"));
+                }
+                self.host_max_tokens = n;
             }
             other => {
                 return Err(anyhow!("unknown serve config key {other:?}"))
@@ -401,6 +489,10 @@ mod tests {
         c.apply_override("policy=slo-aware").unwrap();
         assert_eq!(c.deadline_ms, 75.5);
         assert_eq!(c.burstiness, 4.0);
+        assert_eq!(c.req_per_s, 200.0, "trace-default arrival rate");
+        c.apply_override("req-per-s=1e6").unwrap();
+        assert_eq!(c.req_per_s, 1e6);
+        assert!(c.apply_override("req-per-s=0").is_err());
         assert!(c.apply_override("deadline-ms=-1").is_err());
         assert!(c.apply_override("burstiness=0.5").is_err(),
                 "sub-Poisson burstiness is not a thing here");
@@ -440,6 +532,46 @@ mod tests {
             "[serve]\nmax_batch_tokens = -4\n").unwrap();
         assert!(ServeConfig::from_doc(&bad).is_err(),
                 "negative budget must error, not wrap");
+    }
+
+    #[test]
+    fn serve_kv_keys() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.kv_blocks, 0, "unlimited pool by default");
+        assert_eq!(c.kv_block_tokens, 16);
+        assert!(c.preempt, "preemption armed by default (inert while \
+                            the pool is unlimited)");
+        assert_eq!(c.host_max_tokens, 2048,
+                   "the old HOST_MAX_TOKENS const is the default");
+        c.apply_override("kv-blocks=64").unwrap();
+        c.apply_override("kv-block-tokens=32").unwrap();
+        c.apply_override("preempt=false").unwrap();
+        c.apply_override("host-max-tokens=512").unwrap();
+        assert_eq!(c.kv_blocks, 64);
+        assert_eq!(c.kv_block_tokens, 32);
+        assert!(!c.preempt);
+        assert_eq!(c.host_max_tokens, 512);
+        c.apply_override("preempt=on").unwrap();
+        assert!(c.preempt);
+        assert!(c.apply_override("kv-block-tokens=0").is_err(),
+                "zero-token blocks are meaningless");
+        assert!(c.apply_override("host-max-tokens=0").is_err());
+        assert!(c.apply_override("preempt=maybe").is_err());
+        let doc = TomlDoc::parse(
+            "[serve]\nkv_blocks = 128\nkv_block_tokens = 8\n\
+             preempt = false\nhost_max_tokens = 4096\n").unwrap();
+        let c = ServeConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.kv_blocks, 128);
+        assert_eq!(c.kv_block_tokens, 8);
+        assert!(!c.preempt);
+        assert_eq!(c.host_max_tokens, 4096);
+        let bad = TomlDoc::parse(
+            "[serve]\nkv_block_tokens = 0\n").unwrap();
+        assert!(ServeConfig::from_doc(&bad).is_err());
+        let bad = TomlDoc::parse(
+            "[serve]\nkv_blocks = -1\n").unwrap();
+        assert!(ServeConfig::from_doc(&bad).is_err(),
+                "negative pool must error, not wrap");
     }
 
     #[test]

@@ -481,6 +481,12 @@ pub fn serve_exp(rt: &Runtime, quick: bool) -> Result<String> {
                   path pays its adapter kernels per output token):\n");
     out.push_str(&cost::decode_table(&m8b, 64, 512, 512));
 
+    out.push_str("\nKV capacity (max concurrent sequences / max \
+                  context in HBM after the frozen base — merged PaCA \
+                  pins zero resident adapter bytes, so the unmerged \
+                  path's adapter set comes straight out of KV):\n");
+    out.push_str(&cost::kv_capacity_table(&m8b, 64, 4096, 8));
+
     // (b) measured on the host serving engine: the online
     // continuous-batching pipeline over a bursty SLO trace, per
     // policy, on the deterministic analytic clock.

@@ -105,8 +105,11 @@ fn usage() -> &'static str {
      \x20          [--policy swap-aware|fifo|slo-aware] [--tenants 8] \\\n\
      \x20          [--count 256] [--rank 8] [--capacity 64] \\\n\
      \x20          [--backend auto|host|pjrt] [--deadline-ms 0] \\\n\
-     \x20          [--burstiness 1] [--decode-tokens 0] \\\n\
-     \x20          [--max-batch-tokens 0] [--service-unit step|batch]\n\
+     \x20          [--burstiness 1] [--req-per-s 200] \\\n\
+     \x20          [--decode-tokens 0] \\\n\
+     \x20          [--max-batch-tokens 0] [--service-unit step|batch] \\\n\
+     \x20          [--kv-blocks 0] [--kv-block-tokens 16] \\\n\
+     \x20          [--preempt true|false] [--host-max-tokens 2048]\n\
      \x20          # online continuous batching over the trace's\n\
      \x20          # arrival times; missing trace/adapters are\n\
      \x20          # synthesized and saved.\n\
@@ -118,6 +121,12 @@ fn usage() -> &'static str {
      \x20          # --decode-tokens N synthesizes decode-heavy traces\n\
      \x20          # (mean N output tokens after the first);\n\
      \x20          # --max-batch-tokens caps tokens per step (0 = off)\n\
+     \x20          # --kv-blocks N bounds the paged KV-cache pool (N\n\
+     \x20          # blocks of --kv-block-tokens tokens; 0 = off);\n\
+     \x20          # admission is capacity-gated and, with --preempt\n\
+     \x20          # true, the least-urgent decoding slot is evicted\n\
+     \x20          # (blocks freed, recompute-on-resume) under memory\n\
+     \x20          # pressure or urgent other-tenant deadlines\n\
      paca selftest"
 }
 
@@ -298,9 +307,10 @@ fn pjrt_backend(seed: u64) -> Result<(paca::manifest::ModelInfo,
     Ok((model, Box::new(fw)))
 }
 
-fn host_backend() -> (paca::manifest::ModelInfo,
-                      Box<dyn engine::ForwardBackend>) {
-    (engine::tiny_model(), Box::<engine::HostBackend>::default())
+fn host_backend(max_tokens: usize) -> (paca::manifest::ModelInfo,
+                                       Box<dyn engine::ForwardBackend>) {
+    (engine::tiny_model(),
+     Box::new(engine::HostBackend::with_cap(max_tokens)))
 }
 
 /// `paca serve`: multi-tenant adapter serving over one shared frozen
@@ -362,6 +372,7 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
             mean_tokens: cfg.mean_tokens,
             deadline_ms: cfg.deadline_ms,
             burstiness: cfg.burstiness,
+            req_per_s: cfg.req_per_s,
             decode_tokens: cfg.decode_tokens,
             seed: cfg.seed,
             ..Default::default()
@@ -382,7 +393,7 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
     // ANY pjrt failure (missing artifacts, stub xla build, …).
     let artifacts_dir = paca::default_artifacts_dir();
     let (model, backend) = match cfg.backend.as_str() {
-        "host" => host_backend(),
+        "host" => host_backend(cfg.host_max_tokens),
         "pjrt" => pjrt_backend(cfg.seed)?,
         "auto" => {
             if Runtime::artifacts_present(&artifacts_dir) {
@@ -391,11 +402,11 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
                     Err(e) => {
                         println!("note: pjrt backend unavailable \
                                   ({e:#}); falling back to host");
-                        host_backend()
+                        host_backend(cfg.host_max_tokens)
                     }
                 }
             } else {
-                host_backend()
+                host_backend(cfg.host_max_tokens)
             }
         }
         other => bail!("unknown backend {other:?} (auto|host|pjrt)"),
@@ -430,7 +441,7 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
         .map(|r| r.decode_tokens).sum();
     println!("serving {}: {} tenants over one {:.1}MB shared base \
               ({} target weights) | backend {} | batch {} | policy {} \
-              | unit {} | trace span {:.2}s | {} decode tokens{}",
+              | unit {} | trace span {:.2}s | {} decode tokens{}{}",
              model.name, tenants.len(), base.bytes() as f64 / 1e6,
              base.weights.len(), backend.name(), cfg.batch,
              policy.name(), cfg.service_unit, tr.span_s(),
@@ -438,6 +449,14 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
              if cfg.max_batch_tokens > 0 {
                  format!(" | step budget {} tokens",
                          cfg.max_batch_tokens)
+             } else {
+                 String::new()
+             },
+             if cfg.kv_blocks > 0 {
+                 format!(" | kv pool {} x {}-token blocks ({})",
+                         cfg.kv_blocks, cfg.kv_block_tokens,
+                         if cfg.preempt { "preempt" }
+                         else { "drain-only" })
              } else {
                  String::new()
              });
@@ -457,6 +476,7 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
     let n_tenant_ids = tr.pool.len();
     let mut eng = engine::ServeEngine::new(base, reg, backend,
                                            tr.pool);
+    eng.configure_kv(cfg.kv_blocks, cfg.kv_block_tokens, cfg.preempt);
     let mut sched = scheduler::OnlineScheduler::new(
         tr.requests, n_tenant_ids, cfg.batch, policy);
     sched.max_batch_tokens = cfg.max_batch_tokens;
@@ -482,6 +502,8 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
                                        cfg.batch.max(1), 512));
     println!("{}", cost::decode_table(&cost::llama3_8b(), 64, 512,
                                       512));
+    println!("{}", cost::kv_capacity_table(&cost::llama3_8b(), 64,
+                                           4096, cfg.batch.max(1)));
     Ok(())
 }
 

@@ -30,6 +30,17 @@ impl ModelInfo {
              ("gate", d, f), ("up", d, f), ("down", f, d)]
     }
 
+    /// Resident KV-cache bytes per token at serving time: one K and
+    /// one V vector of `d_model` each, bf16, per layer. THE single
+    /// derivation of the KV footprint — `serve::cost` streams exactly
+    /// this many bytes per context token per decode step, and the
+    /// paged allocator in `serve::kv` charges it per resident token,
+    /// so the time model and the capacity ledger can never drift
+    /// apart.
+    pub fn kv_bytes_per_token(&self) -> usize {
+        self.n_layers * 2 * self.d_model * 2
+    }
+
     pub fn n_params(&self) -> u64 {
         let per_block: u64 = self.linear_shapes().iter()
             .map(|(_, i, o)| (*i as u64) * (*o as u64)).sum::<u64>()

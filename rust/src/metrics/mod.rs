@@ -317,6 +317,87 @@ impl OccupancyTimeline {
     }
 }
 
+/// Per-step KV-cache occupancy of the paged serving allocator: after
+/// each iteration step, how many pool blocks were live and how many
+/// token slots were actually filled. The capacity-axis companion to
+/// [`OccupancyTimeline`] (which tracks compute occupancy): peak blocks
+/// is what `--kv-blocks` bounds, and the blocks-vs-tokens gap is the
+/// pool's internal fragmentation over time.
+#[derive(Debug, Clone, Default)]
+pub struct KvOccupancyTimeline {
+    blocks: Vec<u64>,
+    tokens: Vec<u64>,
+}
+
+impl KvOccupancyTimeline {
+    /// Record one engine step with `blocks` live pool blocks holding
+    /// `tokens` resident tokens.
+    pub fn record(&mut self, blocks: u64, tokens: u64) {
+        self.blocks.push(blocks);
+        self.tokens.push(tokens);
+    }
+
+    pub fn n_steps(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    pub fn peak_blocks(&self) -> u64 {
+        self.blocks.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn mean_blocks(&self) -> f64 {
+        if self.blocks.is_empty() {
+            return 0.0;
+        }
+        self.blocks.iter().sum::<u64>() as f64
+            / self.blocks.len() as f64
+    }
+
+    pub fn peak_tokens(&self) -> u64 {
+        self.tokens.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn mean_tokens(&self) -> f64 {
+        if self.tokens.is_empty() {
+            return 0.0;
+        }
+        self.tokens.iter().sum::<u64>() as f64
+            / self.tokens.len() as f64
+    }
+
+    /// Mean allocated-but-unfilled fraction of live blocks of
+    /// `block_tokens` tokens each — internal fragmentation averaged
+    /// over the steps where anything was resident.
+    pub fn mean_frag_frac(&self, block_tokens: usize) -> f64 {
+        let mut frac_sum = 0.0;
+        let mut n = 0usize;
+        for (&b, &t) in self.blocks.iter().zip(&self.tokens) {
+            let slots = b * block_tokens as u64;
+            if slots == 0 {
+                continue;
+            }
+            frac_sum += (slots - t) as f64 / slots as f64;
+            n += 1;
+        }
+        if n == 0 { 0.0 } else { frac_sum / n as f64 }
+    }
+
+    /// One row per step: live blocks and resident tokens.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(&["step", "kv blocks", "kv tokens"]);
+        for (i, (&b, &tok)) in self.blocks.iter().zip(&self.tokens)
+            .enumerate()
+        {
+            t.row(&[i.to_string(), b.to_string(), tok.to_string()]);
+        }
+        t
+    }
+}
+
 /// Fixed-width markdown table builder for the experiment reports.
 #[derive(Debug, Default)]
 pub struct Table {
@@ -505,6 +586,27 @@ mod tests {
         assert!((oc.mean_tokens() - 46.0).abs() < 1e-12);
         let r = oc.table().render();
         assert!(r.contains("slots"));
+        assert_eq!(r.lines().count(), 2 + 3);
+    }
+
+    #[test]
+    fn kv_occupancy_timeline_tracks_blocks_and_frag() {
+        let mut kv = KvOccupancyTimeline::default();
+        assert!(kv.is_empty());
+        assert_eq!(kv.peak_blocks(), 0);
+        assert_eq!(kv.mean_blocks(), 0.0);
+        assert_eq!(kv.mean_frag_frac(16), 0.0, "no steps, no frag");
+        kv.record(4, 64);  // 4 blocks × 16 tokens, fully packed
+        kv.record(4, 50);  // 14 slack slots
+        kv.record(0, 0);   // idle step contributes no frag sample
+        assert_eq!(kv.n_steps(), 3);
+        assert_eq!(kv.peak_blocks(), 4);
+        assert_eq!(kv.peak_tokens(), 64);
+        assert!((kv.mean_blocks() - 8.0 / 3.0).abs() < 1e-12);
+        assert!((kv.mean_frag_frac(16) - (14.0 / 64.0) / 2.0).abs()
+                < 1e-12);
+        let r = kv.table().render();
+        assert!(r.contains("kv blocks"));
         assert_eq!(r.lines().count(), 2 + 3);
     }
 

@@ -1,0 +1,431 @@
+//! Paged KV-cache memory manager — the serving stack's SECOND capacity
+//! axis, orthogonal to the `max_batch_tokens` step-compute budget.
+//!
+//! The iteration-level engine (PR 3) bounds how many tokens a step may
+//! COMPUTE, but nothing bounded how many bytes the in-flight sequences
+//! keep RESIDENT: every decoding slot re-reads its whole KV cache each
+//! step, and at paper scale the cache — not the weights — is what
+//! limits how many sequences fit ("23% longer sequences" in the paper
+//! is exactly a KV/activation capacity claim). This module manages
+//! that capacity vLLM-style:
+//!
+//!   * the cache is a bounded pool of fixed-size TOKEN BLOCKS
+//!     (`--kv-blocks N` blocks of `--kv-block-tokens` tokens; block
+//!     bytes derive from [`ModelInfo::kv_bytes_per_token`], the same
+//!     arithmetic `serve::cost::decode_step_time` streams per step);
+//!   * each in-flight sequence holds a block list ([`KvSeq`]) that
+//!     grows one token per decode step — alloc and free are O(1) pops
+//!     and pushes on a free-list stack;
+//!   * the pool keeps an occupancy/fragmentation ledger
+//!     ([`KvStats`]): peak/live blocks and resident tokens, internal
+//!     fragmentation (allocated-but-unfilled token slots in each
+//!     sequence's last block), allocation clamps and grow failures —
+//!     the raw signals the scheduler's admission gate and the engine's
+//!     preemption policy act on.
+//!
+//! `--kv-blocks 0` (the default) is the UNLIMITED pool: block ids are
+//! minted on demand, nothing ever fails, and admission gating is
+//! disabled — the engine provably reduces to the PR-3 iteration loop
+//! (the reduction anchor in tests/properties.rs).
+
+use crate::manifest::ModelInfo;
+
+/// Default block granularity (tokens per block) when none is
+/// configured — small enough that a tiny-model prompt spans several
+/// blocks, big enough that the free list stays short at paper scale.
+pub const DEFAULT_BLOCK_TOKENS: usize = 16;
+
+/// THE token→block rounding rule: blocks needed to hold `tokens`
+/// token slots at a `block_tokens` granularity (a sequence always
+/// holds at least one block). Shared by [`KvPool`]'s allocation and
+/// the scheduler's admission-gate projection, so what the gate
+/// projects and what alloc/grow actually charge can never drift.
+pub fn blocks_for(tokens: usize, block_tokens: usize) -> usize {
+    tokens.max(1).div_ceil(block_tokens.max(1))
+}
+
+/// One in-flight sequence's slice of the pool: the block list plus the
+/// number of token slots actually filled. Handles are move-only and
+/// must be returned via [`KvPool::release`] — dropping one leaks its
+/// blocks (caught by the pool's live-block ledger in tests).
+#[derive(Debug, Default)]
+pub struct KvSeq {
+    blocks: Vec<u32>,
+    tokens: usize,
+}
+
+impl KvSeq {
+    pub fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Token slots allocated but not filled — the sequence's internal
+    /// fragmentation (always < one block).
+    pub fn frag_tokens(&self, block_tokens: usize) -> usize {
+        self.blocks.len() * block_tokens - self.tokens
+    }
+}
+
+/// Occupancy / fragmentation / failure ledger of a [`KvPool`].
+#[derive(Debug, Default, Clone, Copy)]
+pub struct KvStats {
+    /// Sequences allocated / released.
+    pub allocs: u64,
+    pub frees: u64,
+    /// High-water marks over the pool's lifetime.
+    pub peak_blocks: usize,
+    pub peak_tokens: usize,
+    /// `grow` calls refused for lack of free blocks (each is a
+    /// memory-pressure event the engine answers with preemption).
+    pub grow_fails: u64,
+    /// Allocations clamped below the requested size by `alloc_clamped`
+    /// (an oversized request degrading to a capped cache).
+    pub alloc_clamps: u64,
+    /// Tokens that continued WITHOUT cache growth (capped sequences —
+    /// the sliding-window degrade path for requests bigger than the
+    /// entire pool). Never counted against pool blocks.
+    pub overflow_tokens: u64,
+}
+
+/// The paged allocator. Fixed-size token blocks, O(1) alloc/free via a
+/// free-list stack; bounded (`n_blocks > 0`) or unlimited
+/// (`n_blocks == 0`, ids minted on demand, nothing fails).
+#[derive(Debug)]
+pub struct KvPool {
+    /// Pool bound in blocks; 0 = unlimited.
+    n_blocks: usize,
+    block_tokens: usize,
+    /// KV bytes per resident token (model-derived; see
+    /// [`ModelInfo::kv_bytes_per_token`]).
+    bytes_per_token: usize,
+    /// Recycled block ids, LIFO.
+    free: Vec<u32>,
+    /// Next never-used id (bounded: < n_blocks; unlimited: unbounded).
+    next_fresh: u32,
+    /// Live (handed-out) blocks / filled token slots across all
+    /// sequences.
+    used_blocks: usize,
+    resident_tokens: usize,
+    pub stats: KvStats,
+}
+
+impl KvPool {
+    /// `n_blocks == 0` means unlimited.
+    pub fn new(n_blocks: usize, block_tokens: usize,
+               bytes_per_token: usize) -> KvPool {
+        KvPool { n_blocks, block_tokens: block_tokens.max(1),
+                 bytes_per_token, free: Vec::new(), next_fresh: 0,
+                 used_blocks: 0, resident_tokens: 0,
+                 stats: KvStats::default() }
+    }
+
+    /// The unlimited pool the engine defaults to: pure accounting, no
+    /// gating, no failures — PR-3 behaviour.
+    pub fn unlimited(model: &ModelInfo) -> KvPool {
+        KvPool::new(0, DEFAULT_BLOCK_TOKENS,
+                    model.kv_bytes_per_token())
+    }
+
+    pub fn is_bounded(&self) -> bool {
+        self.n_blocks > 0
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn block_bytes(&self) -> usize {
+        self.block_tokens * self.bytes_per_token
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.used_blocks
+    }
+
+    pub fn resident_tokens(&self) -> usize {
+        self.resident_tokens
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_tokens * self.bytes_per_token
+    }
+
+    /// Free blocks (usize::MAX when unlimited) — what the scheduler's
+    /// admission gate compares projected needs against.
+    pub fn free_blocks(&self) -> usize {
+        if self.is_bounded() {
+            self.n_blocks - self.used_blocks
+        } else {
+            usize::MAX
+        }
+    }
+
+    /// Blocks needed to hold `tokens` token slots (the module-level
+    /// [`blocks_for`] rule at this pool's granularity).
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        blocks_for(tokens, self.block_tokens)
+    }
+
+    /// Allocated-but-unfilled token slots across all live sequences —
+    /// the pool's aggregate internal fragmentation.
+    pub fn frag_tokens(&self) -> usize {
+        self.used_blocks * self.block_tokens - self.resident_tokens
+    }
+
+    fn take_block(&mut self) -> Option<u32> {
+        if let Some(id) = self.free.pop() {
+            return Some(id);
+        }
+        if self.is_bounded() && self.next_fresh as usize >= self.n_blocks
+        {
+            return None;
+        }
+        let id = self.next_fresh;
+        self.next_fresh += 1;
+        Some(id)
+    }
+
+    fn note_peaks(&mut self) {
+        self.stats.peak_blocks =
+            self.stats.peak_blocks.max(self.used_blocks);
+        self.stats.peak_tokens =
+            self.stats.peak_tokens.max(self.resident_tokens);
+    }
+
+    /// Allocate a sequence holding `tokens`; None (and no state
+    /// change) if the blocks don't fit the pool.
+    pub fn try_alloc(&mut self, tokens: usize) -> Option<KvSeq> {
+        let need = self.blocks_for(tokens);
+        if need > self.free_blocks() {
+            return None;
+        }
+        let mut blocks = Vec::with_capacity(need);
+        for _ in 0..need {
+            blocks.push(self.take_block().expect("free-count checked"));
+        }
+        self.used_blocks += need;
+        self.resident_tokens += tokens;
+        self.stats.allocs += 1;
+        self.note_peaks();
+        Some(KvSeq { blocks, tokens })
+    }
+
+    /// Allocate as much of `tokens` as fits — the graceful-degrade
+    /// path for a request bigger than the whole pool (mirrors the step
+    /// budget's oversized-prompt rule: serve it capped rather than
+    /// wedge the queue). The shortfall is counted in
+    /// `stats.overflow_tokens`; the pool NEVER over-commits blocks.
+    pub fn alloc_clamped(&mut self, tokens: usize) -> KvSeq {
+        if let Some(seq) = self.try_alloc(tokens) {
+            return seq;
+        }
+        let fit = (self.free_blocks() * self.block_tokens).min(tokens);
+        self.stats.alloc_clamps += 1;
+        self.stats.overflow_tokens += (tokens - fit) as u64;
+        if fit == 0 {
+            self.stats.allocs += 1;
+            return KvSeq::default();
+        }
+        self.try_alloc(fit).expect("clamped size fits by construction")
+    }
+
+    /// Extend `seq` by `extra` token slots, allocating blocks as
+    /// boundaries are crossed. False (and NO state change) when the
+    /// pool is out of blocks — the memory-pressure signal the engine's
+    /// preemption path answers.
+    pub fn grow(&mut self, seq: &mut KvSeq, extra: usize) -> bool {
+        let need = self.blocks_for(seq.tokens + extra)
+            .saturating_sub(seq.blocks.len());
+        if need > self.free_blocks() {
+            self.stats.grow_fails += 1;
+            return false;
+        }
+        for _ in 0..need {
+            seq.blocks.push(self.take_block()
+                            .expect("free-count checked"));
+        }
+        self.used_blocks += need;
+        self.resident_tokens += extra;
+        seq.tokens += extra;
+        self.note_peaks();
+        true
+    }
+
+    /// A capped sequence advanced one token WITHOUT cache growth (no
+    /// free blocks, no evictable victim): pure ledger entry.
+    pub fn overflow(&mut self, tokens: usize) {
+        self.stats.overflow_tokens += tokens as u64;
+    }
+
+    /// Return a sequence's blocks to the free list (O(1) per block).
+    pub fn release(&mut self, seq: KvSeq) {
+        self.used_blocks -= seq.blocks.len();
+        self.resident_tokens -= seq.tokens;
+        for id in seq.blocks {
+            self.free.push(id);
+        }
+        self.stats.frees += 1;
+    }
+
+    /// One-line occupancy summary for reports.
+    pub fn describe(&self) -> String {
+        if self.is_bounded() {
+            format!("{} blocks x {} tokens ({:.1}KB/block, {:.1}MB \
+                     pool)",
+                    self.n_blocks, self.block_tokens,
+                    self.block_bytes() as f64 / 1e3,
+                    (self.n_blocks * self.block_bytes()) as f64 / 1e6)
+        } else {
+            format!("unlimited ({}-token blocks, {:.1}KB/block)",
+                    self.block_tokens,
+                    self.block_bytes() as f64 / 1e3)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::engine::tiny_model;
+
+    fn pool(n: usize, bt: usize) -> KvPool {
+        KvPool::new(n, bt, 4)
+    }
+
+    #[test]
+    fn bytes_per_token_comes_from_the_model() {
+        let m = tiny_model();
+        let p = KvPool::unlimited(&m);
+        assert_eq!(p.block_bytes(),
+                   DEFAULT_BLOCK_TOKENS * m.kv_bytes_per_token());
+        // tiny model: 2 layers × 2 (K,V) × 64 d_model × 2 bytes.
+        assert_eq!(m.kv_bytes_per_token(), 2 * 2 * 64 * 2);
+    }
+
+    #[test]
+    fn alloc_grow_release_roundtrip() {
+        let mut p = pool(8, 4);
+        let mut a = p.try_alloc(6).unwrap(); // 2 blocks
+        assert_eq!(a.n_blocks(), 2);
+        assert_eq!(a.tokens(), 6);
+        assert_eq!(p.used_blocks(), 2);
+        assert_eq!(p.free_blocks(), 6);
+        assert_eq!(a.frag_tokens(4), 2);
+        assert_eq!(p.frag_tokens(), 2);
+        // Grow within the last block: no new block.
+        assert!(p.grow(&mut a, 2));
+        assert_eq!(a.n_blocks(), 2);
+        assert_eq!(p.frag_tokens(), 0);
+        // Next token crosses a boundary.
+        assert!(p.grow(&mut a, 1));
+        assert_eq!(a.n_blocks(), 3);
+        assert_eq!(p.used_blocks(), 3);
+        p.release(a);
+        assert_eq!(p.used_blocks(), 0);
+        assert_eq!(p.resident_tokens(), 0);
+        assert_eq!(p.free_blocks(), 8);
+        assert_eq!(p.stats.peak_blocks, 3);
+        assert_eq!(p.stats.peak_tokens, 9);
+    }
+
+    #[test]
+    fn block_ids_are_recycled_not_leaked() {
+        let mut p = pool(4, 4);
+        let a = p.try_alloc(16).unwrap(); // whole pool
+        assert_eq!(p.free_blocks(), 0);
+        p.release(a);
+        let b = p.try_alloc(16).unwrap(); // must reuse the same ids
+        let mut ids: Vec<u32> = b.blocks.clone();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        p.release(b);
+    }
+
+    #[test]
+    fn bounded_pool_refuses_overcommit() {
+        let mut p = pool(4, 4);
+        let a = p.try_alloc(12).unwrap(); // 3 of 4 blocks
+        assert!(p.try_alloc(8).is_none(), "2 blocks > 1 free");
+        let mut b = p.try_alloc(4).unwrap(); // last block
+        assert_eq!(p.free_blocks(), 0);
+        // Growing past the pool fails WITHOUT state change…
+        assert!(!p.grow(&mut b, 1));
+        assert_eq!(b.tokens(), 4);
+        assert_eq!(p.used_blocks(), 4);
+        assert_eq!(p.stats.grow_fails, 1);
+        // …until a release frees a block.
+        p.release(a);
+        assert!(p.grow(&mut b, 1));
+        p.release(b);
+        assert_eq!(p.used_blocks(), 0);
+    }
+
+    #[test]
+    fn alloc_clamped_degrades_without_overcommit() {
+        let mut p = pool(2, 4);
+        let a = p.alloc_clamped(100); // 100 tokens into an 8-token pool
+        assert_eq!(a.n_blocks(), 2);
+        assert_eq!(a.tokens(), 8);
+        assert_eq!(p.stats.alloc_clamps, 1);
+        assert_eq!(p.stats.overflow_tokens, 92);
+        assert_eq!(p.free_blocks(), 0);
+        // A second clamped alloc on the exhausted pool yields an empty
+        // handle, never a panic or an over-commit.
+        let b = p.alloc_clamped(5);
+        assert_eq!(b.n_blocks(), 0);
+        assert_eq!(p.used_blocks(), 2);
+        p.release(a);
+        p.release(b);
+    }
+
+    #[test]
+    fn unlimited_pool_never_fails_but_still_accounts() {
+        let m = tiny_model();
+        let mut p = KvPool::unlimited(&m);
+        assert!(!p.is_bounded());
+        assert_eq!(p.free_blocks(), usize::MAX);
+        let mut seqs = Vec::new();
+        for _ in 0..100 {
+            let mut s = p.try_alloc(33).unwrap();
+            assert!(p.grow(&mut s, 7));
+            seqs.push(s);
+        }
+        assert_eq!(p.resident_tokens(), 100 * 40);
+        assert_eq!(p.used_blocks(),
+                   100 * p.blocks_for(40));
+        assert_eq!(p.stats.grow_fails, 0);
+        for s in seqs {
+            p.release(s);
+        }
+        assert_eq!(p.used_blocks(), 0);
+        assert_eq!(p.stats.peak_tokens, 4000);
+    }
+
+    #[test]
+    fn blocks_for_rounds_up() {
+        let p = pool(0, 16);
+        assert_eq!(p.blocks_for(0), 1, "a sequence holds ≥1 block");
+        assert_eq!(p.blocks_for(1), 1);
+        assert_eq!(p.blocks_for(16), 1);
+        assert_eq!(p.blocks_for(17), 2);
+        assert_eq!(p.blocks_for(160), 10);
+    }
+
+    #[test]
+    fn describe_mentions_geometry() {
+        let p = KvPool::new(64, 16, 512);
+        let s = p.describe();
+        assert!(s.contains("64 blocks"));
+        assert!(s.contains("16 tokens"));
+        assert!(KvPool::new(0, 16, 512).describe()
+                .contains("unlimited"));
+    }
+}

@@ -30,19 +30,34 @@
 //!     deadlines, jittered decode lengths) + JSONL persistence
 //!     (absent fields read back as the old defaults, so archived
 //!     traces stay valid).
+//!   * [`kv`]        — the paged KV-cache memory manager: a bounded
+//!     pool of fixed-size token blocks (`--kv-blocks` /
+//!     `--kv-block-tokens`, bytes per token from
+//!     `ModelInfo::kv_bytes_per_token`), per-sequence block lists
+//!     with O(1) alloc/free, and the occupancy / fragmentation /
+//!     pressure ledger the admission gate and preemption policy act
+//!     on. `--kv-blocks 0` = unlimited (pure accounting, PR-3
+//!     behaviour).
 //!   * [`engine`]    — the serving engine around the
 //!     [`engine::ForwardBackend`] trait (host GEMM always available;
 //!     PJRT drives the lowered eval artifact when `make artifacts`
 //!     has run): offline plan replay, the whole-batch virtual-clock
 //!     loop (`serve_online`), and the decode-style iteration-level
 //!     loop (`serve_iterative`: prefill/decode token steps, slots
-//!     freed mid-batch, TTFT/TPOT + per-step occupancy accounting).
+//!     freed mid-batch, TTFT/TPOT + per-step occupancy accounting,
+//!     and — under a bounded KV pool — decode preemption: under
+//!     memory pressure or an urgent other-tenant deadline the
+//!     least-urgent decoding slot is evicted, its blocks freed, and
+//!     the request re-queued with recompute-on-resume, emitted-token
+//!     accounting staying exactly-once).
 //!   * [`cost`]      — analytic serving-cost extension of `simulator`
 //!     (A100/Gaudi2): merged-PaCA vs unmerged-LoRA throughput,
-//!     adapter-swap amortization, the M/D/1 queueing-delay term, and
-//!     the prefill/decode arithmetic-intensity split
-//!     (`decode_step_time`, TTFT/TPOT projections), for
-//!     `paca bench --exp serve`.
+//!     adapter-swap amortization, the M/D/1 queueing-delay term, the
+//!     prefill/decode arithmetic-intensity split
+//!     (`decode_step_time`, TTFT/TPOT projections), and the
+//!     KV-capacity tables (max concurrent sequences / max context
+//!     per method — the paper's longer-sequence framing at serving
+//!     time), for `paca bench --exp serve`.
 //!
 //! Entry point: `paca serve --adapters DIR --requests TRACE --batch N`
 //! (main.rs), which synthesizes the trace/adapters on first run and
@@ -50,6 +65,7 @@
 
 pub mod cost;
 pub mod engine;
+pub mod kv;
 pub mod registry;
 pub mod scheduler;
 pub mod trace;

@@ -313,6 +313,12 @@ impl PendingQueue {
         self.q.front().map(|(_, _, r)| r.tokens)
     }
 
+    /// Lifetime token footprint (prefill + owed decode) of the front
+    /// request — what its KV cache is projected to hold at completion.
+    fn front_total_tokens(&self) -> Option<usize> {
+        self.q.front().map(|(_, _, r)| r.total_tokens())
+    }
+
     /// Tightest urgency key among queued requests.
     fn earliest_urgency(&self) -> Option<f64> {
         self.min_urgency.front().copied()
@@ -356,6 +362,19 @@ pub struct OnlineScheduler {
     /// so an oversized prompt degrades to a batch of one instead of
     /// wedging the queue.
     pub max_batch_tokens: usize,
+    /// KV-cache block granularity (tokens per block) of the engine's
+    /// paged pool; 0 disables capacity gating. When set, dispatch and
+    /// joins admit a request only if its PROJECTED cache footprint —
+    /// prefill plus every decode token it still owes, rounded up to
+    /// blocks — fits the free blocks the engine advertised in
+    /// `kv_free_blocks`. Like the token budget, the first request of a
+    /// fresh dispatch always passes (an oversized sequence degrades to
+    /// a capped batch-of-one instead of wedging the queue); joins
+    /// never over-admit.
+    pub kv_block_tokens: usize,
+    /// Free blocks in the engine's pool, refreshed by the serving loop
+    /// before every dispatch/join decision (usize::MAX = unlimited).
+    pub kv_free_blocks: usize,
 }
 
 impl OnlineScheduler {
@@ -382,6 +401,8 @@ impl OnlineScheduler {
             swap_penalty_s: 0.0,
             decode_slack_s: 0.0,
             max_batch_tokens: 0,
+            kv_block_tokens: 0,
+            kv_free_blocks: usize::MAX,
         }
     }
 
@@ -409,30 +430,54 @@ impl OnlineScheduler {
     /// cap/budget/first-fits edge rules can never diverge between
     /// policies. Pops from `t`'s queue in admission order while
     /// `keep_going` holds, at most `max_requests`, stopping before a
-    /// prefill that would exceed `token_budget` — except the very
-    /// first pop when `first_fits` (a fresh dispatch must make
-    /// progress even on an oversized prompt; joins pass false and
-    /// never exceed).
+    /// request whose prefill would exceed `token_budget` or whose
+    /// projected KV blocks (see `kv_block_tokens`) would exceed the
+    /// engine's advertised free blocks — except the very first pop
+    /// when `first_fits` (a fresh dispatch must make progress even on
+    /// an oversized request; joins pass false and never exceed either
+    /// budget).
     fn pop_bounded(&mut self, t: TenantId, max_requests: usize,
                    token_budget: usize, first_fits: bool,
                    keep_going: impl Fn(&OnlineScheduler) -> bool)
                    -> Vec<Request> {
         let mut out: Vec<Request> = Vec::new();
         let mut tokens = 0usize;
+        let mut blocks = 0usize;
         while out.len() < max_requests && keep_going(self) {
-            match self.pending[t.index()].front_tokens() {
-                Some(next) if (first_fits && out.is_empty())
-                    || next <= token_budget.saturating_sub(tokens) => {
-                    let (_, r) =
-                        self.pending[t.index()].pop().unwrap();
-                    self.pending_count -= 1;
-                    tokens += r.tokens;
-                    out.push(r);
+            let q = &self.pending[t.index()];
+            let fits = match (q.front_tokens(), q.front_total_tokens())
+            {
+                (Some(next), Some(total)) => {
+                    next <= token_budget.saturating_sub(tokens)
+                        && self.kv_blocks_of(total)
+                            <= self.kv_free_blocks
+                                .saturating_sub(blocks)
                 }
                 _ => break,
+            };
+            if !(fits || (first_fits && out.is_empty())) {
+                break;
             }
+            let (_, r) = self.pending[t.index()].pop().unwrap();
+            self.pending_count -= 1;
+            tokens += r.tokens;
+            blocks += self.kv_blocks_of(r.total_tokens());
+            out.push(r);
         }
         out
+    }
+
+    /// Projected KV blocks for a lifetime footprint of `total_tokens`
+    /// under the configured block granularity (0 = gating disabled) —
+    /// the allocator's own rounding rule (`serve::kv::blocks_for`),
+    /// so projection and allocation can never drift.
+    pub fn kv_blocks_of(&self, total_tokens: usize) -> usize {
+        if self.kv_block_tokens == 0 {
+            0
+        } else {
+            crate::serve::kv::blocks_for(total_tokens,
+                                         self.kv_block_tokens)
+        }
     }
 
     /// Admit every request whose arrival has passed; returns how many
@@ -596,6 +641,46 @@ impl OnlineScheduler {
         self.pop_bounded(live, max_requests, token_budget, false,
                          move |s| s.policy != Policy::Fifo
                              || s.head_of_line() == Some(live))
+    }
+
+    /// Re-queue a preempted request at the back of its tenant's
+    /// pending queue (a fresh admission sequence number — the request
+    /// gave up its slot, so it re-queues behind already-pending work;
+    /// under slo-aware its urgency key, recomputed from its remaining
+    /// decode debt, is what gets it back in). The engine calls this
+    /// when it evicts a decoding slot; the request's prompt field has
+    /// been extended to cover the recompute-on-resume replay.
+    pub fn requeue(&mut self, r: Request) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let slack = self.decode_slack_s;
+        self.pending[r.tenant.index()].push(seq, r, slack);
+        self.pending_count += 1;
+    }
+
+    /// Tightest decode-adjusted slack among tenants OTHER than `live`:
+    /// seconds until the most urgent other-tenant request must START
+    /// to make its effective deadline. Serving it means paying an
+    /// adapter swap first, so the swap penalty is SUBTRACTED — it
+    /// tightens the real start-by time (unlike `pick_slo`, where the
+    /// penalty is added as hysteresis against switching). Negative
+    /// means it is already past due even with an immediate swap — the
+    /// engine's slo-aware preemption trigger treats those as beyond
+    /// rescue. None when no other tenant has pending work.
+    pub fn urgent_other_slack(&self, live: Option<TenantId>,
+                              clock: f64) -> Option<f64> {
+        let mut best: Option<f64> = None;
+        for (i, q) in self.pending.iter().enumerate() {
+            if live == Some(TenantId(i as u32)) {
+                continue;
+            }
+            let Some(u) = q.earliest_urgency() else { continue };
+            let slack = u - clock - self.swap_penalty_s;
+            if best.is_none_or(|b| slack < b) {
+                best = Some(slack);
+            }
+        }
+        best
     }
 
     /// Drain the scheduler as if every request had already arrived
@@ -919,6 +1004,93 @@ mod tests {
                                          Policy::SwapAware);
         s.admit(10.0);
         assert_eq!(s.join_live(TenantId(0), 8, usize::MAX).len(), 1);
+    }
+
+    #[test]
+    fn kv_gate_bounds_dispatch_and_joins() {
+        // 16-token prompts owing 16 decode tokens → a 32-token
+        // lifetime cache = 2 blocks at 16-token granularity.
+        let reqs = || -> Vec<Request> {
+            (0..4).map(|i| {
+                let mut r = req(i, 0);
+                r.decode_tokens = 16;
+                r
+            }).collect()
+        };
+        let mut s = OnlineScheduler::new(reqs(), 1, 8,
+                                         Policy::SwapAware);
+        s.kv_block_tokens = 16;
+        s.admit(10.0);
+        assert_eq!(s.kv_blocks_of(32), 2);
+        // 5 free blocks: two requests fit (4 blocks), not three.
+        s.kv_free_blocks = 5;
+        let b = s.dispatch(None, 10.0).unwrap();
+        assert_eq!(b.requests.len(), 2, "kv gate must bound dispatch");
+        // 1 free block: a join admits nothing (joins never exceed)…
+        s.kv_free_blocks = 1;
+        assert!(s.join_live(TenantId(0), 8, usize::MAX).is_empty());
+        // …but a FRESH dispatch still makes progress (first fits:
+        // the oversized sequence degrades to a capped batch of one
+        // instead of wedging the queue).
+        s.kv_free_blocks = 0;
+        let b = s.dispatch(Some(TenantId(0)), 10.0).unwrap();
+        assert_eq!(b.requests.len(), 1);
+        // 2 free blocks: exactly one more joins.
+        s.kv_free_blocks = 2;
+        assert_eq!(s.join_live(TenantId(0), 8, usize::MAX).len(), 1);
+        assert!(s.is_done());
+        // Granularity 0 disables the gate entirely (the PR-3 path).
+        let mut s = OnlineScheduler::new(reqs(), 1, 8,
+                                         Policy::SwapAware);
+        s.kv_block_tokens = 0;
+        s.kv_free_blocks = 0;
+        s.admit(10.0);
+        assert_eq!(s.kv_blocks_of(32), 0);
+        assert_eq!(s.dispatch(None, 10.0).unwrap().requests.len(), 4,
+                   "gating off: free blocks are irrelevant");
+    }
+
+    #[test]
+    fn requeue_reenters_behind_pending_work() {
+        let reqs = vec![req(0, 0), req(1, 0)];
+        let mut s = OnlineScheduler::new(reqs, 1, 1,
+                                         Policy::SwapAware);
+        s.admit(10.0);
+        let b = s.dispatch(None, 10.0).unwrap();
+        assert_eq!(b.requests[0].id, 0);
+        // Preempted: id 0 re-queues BEHIND the still-pending id 1.
+        s.requeue(b.requests.into_iter().next().unwrap());
+        assert_eq!(s.pending_len(), 2);
+        assert_eq!(s.dispatch(None, 10.0).unwrap().requests[0].id, 1);
+        assert_eq!(s.dispatch(None, 10.0).unwrap().requests[0].id, 0);
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn urgent_other_slack_probes_other_tenants_only() {
+        let mk = |id, tenant, deadline_s| Request {
+            id, tenant: TenantId(tenant), tokens: 8, decode_tokens: 0,
+            arrival_s: 0.0, deadline_s,
+        };
+        let reqs = vec![mk(0, 0, 0.10), mk(1, 1, 0.30),
+                        mk(2, 2, 0.20)];
+        let mut s = OnlineScheduler::new(reqs, 3, 4, Policy::SloAware);
+        s.swap_penalty_s = 0.01;
+        s.admit(0.0);
+        // Live tenant 0 is excluded; the tightest OTHER is tenant 2
+        // (0.20), tightened by the swap it would have to pay first:
+        // 0.20 − 0.05 − 0.01.
+        let slack = s.urgent_other_slack(Some(TenantId(0)), 0.05)
+            .unwrap();
+        assert!((slack - 0.14).abs() < 1e-12, "got {slack}");
+        // With no live tenant, tenant 0's 0.10 is tightest.
+        let slack = s.urgent_other_slack(None, 0.05).unwrap();
+        assert!((slack - 0.04).abs() < 1e-12, "got {slack}");
+        // Drain tenants 1 and 2: only the live tenant remains → None.
+        let _ = s.dispatch(None, 0.0); // tenant 0 (tightest deadline)
+        let _ = s.dispatch(Some(TenantId(0)), 0.0); // tenant 2
+        let _ = s.dispatch(Some(TenantId(2)), 0.0); // tenant 1
+        assert!(s.urgent_other_slack(Some(TenantId(1)), 0.0).is_none());
     }
 
     #[test]

@@ -132,3 +132,76 @@ fn serve_cli_iteration_level_decode() {
 
     std::fs::remove_dir_all(&dir).ok();
 }
+
+#[test]
+fn serve_cli_kv_pressure_preempts_and_drain_only_does_not() {
+    // End-to-end KV-pressure smoke: a paged pool far smaller than the
+    // in-flight demand (8 × 8-token blocks vs ~32-token lifetime
+    // caches) under an effectively fully-arrived queue
+    // (--req-per-s 1e9 makes the preemption count independent of the
+    // measured host clock — validated by simulation across 5 orders
+    // of magnitude of service time). Preemption must actually fire
+    // and be visible in the report; the same trace in drain-only mode
+    // must serve every request without a single eviction.
+    let dir = tmp("serve-kv");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("kv_trace.jsonl");
+    let adapters = dir.join("adapters");
+    let run = |extra: &[&str]| {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_paca"));
+        cmd.arg("serve")
+            .arg("--backend").arg("host")
+            .arg("--requests").arg(&trace)
+            .arg("--adapters").arg(&adapters)
+            .arg("--count").arg("64")
+            .arg("--tenants").arg("4")
+            .arg("--batch").arg("8")
+            .arg("--mean-tokens").arg("16")
+            .arg("--decode-tokens").arg("16")
+            .arg("--deadline-ms").arg("50")
+            .arg("--burstiness").arg("3")
+            .arg("--req-per-s").arg("1e9")
+            .arg("--policy").arg("slo-aware")
+            .arg("--kv-blocks").arg("8")
+            .arg("--kv-block-tokens").arg("8")
+            .args(extra);
+        cmd.output().expect("spawning paca serve")
+    };
+
+    let out = run(&[]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(),
+            "kv-pressure serve failed:\nstdout:\n{stdout}\nstderr:\n\
+             {stderr}");
+    assert!(stdout.contains("kv pool 8 x 8-token blocks (preempt)"),
+            "kv banner missing:\n{stdout}");
+    assert!(stdout.contains("kv cache:"),
+            "kv occupancy report missing:\n{stdout}");
+    assert!(stdout.contains("preemptions:"),
+            "preemption counters missing:\n{stdout}");
+    assert!(!stdout.contains("preemptions: 0 ("),
+            "the tiny pool must force at least one preemption:\n\
+             {stdout}");
+    assert!(stdout.contains("restored bit-exactly"),
+            "base-restore check missing:\n{stdout}");
+
+    // Same persisted trace, drain-only: still serves exactly-once,
+    // zero evictions, and says so.
+    let out = run(&["--preempt", "false"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "drain-only run failed:\n{stdout}");
+    assert!(stdout.contains("loaded 64 requests"),
+            "must reuse the persisted trace:\n{stdout}");
+    assert!(stdout.contains("(drain-only)"),
+            "drain-only banner missing:\n{stdout}");
+    assert!(stdout.contains("preemptions: 0 ("),
+            "drain-only must never evict:\n{stdout}");
+    assert!(stdout.contains("restored bit-exactly"), "{stdout}");
+
+    // A zero-token block size is rejected up front.
+    let out = run(&["--kv-block-tokens", "0"]);
+    assert!(!out.status.success(), "kv-block-tokens 0 must error");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -666,6 +666,177 @@ fn prop_scheduler_fuzz_invariants_under_random_traces() {
 }
 
 #[test]
+fn prop_kv_pressure_never_overcommits_and_emits_exactly_once() {
+    // 120-seed fuzz of the paged-KV serving engine: random decode
+    // traces under random SMALL block budgets (often smaller than a
+    // single request's lifetime cache — the clamped/overflow degrade
+    // path), preemption on or off, every policy, random step-token
+    // budgets. Invariants, across any number of evict/resume cycles:
+    //   * the pool never over-commits (peak blocks ≤ --kv-blocks);
+    //   * every request completes EXACTLY once (request count and
+    //     queueing/TTFT/e2e sample counts all equal n; TPOT samples
+    //     equal the decode-carrying request count);
+    //   * the engine drains clean — no leaked blocks, no preempted
+    //     request stranded un-resumed (`finish()` checks both).
+    use paca::manifest::ModelInfo;
+    use paca::serve::engine::{tiny_model, BaseModel, ClockModel,
+                              HostBackend, ServeEngine};
+    use paca::serve::registry::{AdapterRegistry, PacaAdapter};
+    use paca::serve::scheduler::{OnlineScheduler, Policy, Request,
+                                 TenantId, TenantPool};
+    use paca::serve::trace;
+
+    fn small() -> ModelInfo {
+        ModelInfo { d_model: 16, d_ff: 24, ..tiny_model() }
+    }
+
+    fn engine_for(pool: TenantPool) -> ServeEngine {
+        let m = small();
+        let base = BaseModel::synthetic(&m, 7);
+        let mut reg = AdapterRegistry::new(64);
+        for name in pool.names() {
+            reg.insert(PacaAdapter::synthetic(name, &m, 4, 11));
+        }
+        ServeEngine::new(base, reg, Box::<HostBackend>::default(),
+                         pool)
+    }
+
+    let clock = ClockModel::Analytic {
+        swap_s: 2e-3, batch_s: 5e-4, token_s: 2e-5,
+    };
+    prop(120, |rng| {
+        let n_tenants = 1 + rng.below(4);
+        let mut pool = TenantPool::new();
+        for i in 0..n_tenants {
+            pool.intern(&trace::tenant_name(i));
+        }
+        let n = 1 + rng.below(40);
+        let cap = 1 + rng.below(6);
+        let requests: Vec<Request> = (0..n as u64).map(|id| Request {
+            id,
+            tenant: TenantId(rng.below(n_tenants) as u32),
+            tokens: 1 + rng.below(24),
+            decode_tokens: rng.below(16),
+            arrival_s: rng.next_f64(),
+            deadline_s: if rng.below(2) == 0 {
+                f64::INFINITY
+            } else {
+                0.02 + rng.next_f64() * 0.2
+            },
+        }).collect();
+        let decode_reqs = requests.iter()
+            .filter(|r| r.decode_tokens > 0).count();
+        let kv_blocks = 2 + rng.below(12);
+        let block_tokens = 1 + rng.below(12);
+        let preempt = rng.below(2) == 0;
+        let policy = Policy::ALL[rng.below(3)];
+        let mut eng = engine_for(pool);
+        eng.configure_kv(kv_blocks, block_tokens, preempt);
+        let mut sched = OnlineScheduler::new(
+            requests, n_tenants, cap, policy);
+        if rng.below(2) == 1 {
+            sched.max_batch_tokens = 24 + rng.below(64);
+        }
+        eng.serve_iterative(&mut sched, clock).unwrap();
+        assert!(sched.is_done(), "{policy:?}: not drained");
+        assert!(eng.kv.stats.peak_blocks <= kv_blocks,
+                "{policy:?}: over-commit {} > {kv_blocks} blocks",
+                eng.kv.stats.peak_blocks);
+        assert_eq!(eng.stats.requests as usize, n,
+                   "{policy:?}: exactly-once completion");
+        assert_eq!(eng.queueing.count("(all)"), n, "{policy:?}");
+        assert_eq!(eng.ttft.count("(all)"), n,
+                   "{policy:?}: one first token per request");
+        assert_eq!(eng.e2e.count("(all)"), n, "{policy:?}");
+        assert_eq!(eng.tpot.count("(all)"), decode_reqs,
+                   "{policy:?}: one TPOT sample per decode request");
+        if !preempt {
+            assert_eq!(eng.stats.preemptions, 0,
+                       "{policy:?}: drain-only must never evict");
+        }
+        // No leaked blocks, no stranded preempted requests.
+        eng.finish().unwrap();
+    });
+}
+
+#[test]
+fn prop_kv_unlimited_reproduces_pr3_iteration_results() {
+    // The reduction anchor: `--kv-blocks 0` (the default, unlimited
+    // pool) and an ample bounded pool in drain-only mode must both be
+    // checksum-/token-/swap-/makespan-identical — i.e. the KV
+    // gating/alloc/grow plumbing is provably pass-through whenever
+    // capacity never binds, so the PR-3 iteration results are
+    // reproduced exactly. 25 seeded decode traces × 3 policies.
+    use paca::manifest::ModelInfo;
+    use paca::serve::engine::{tiny_model, BaseModel, ClockModel,
+                              HostBackend, ServeEngine};
+    use paca::serve::registry::{AdapterRegistry, PacaAdapter};
+    use paca::serve::scheduler::{OnlineScheduler, Policy, Request,
+                                 TenantId, TenantPool};
+    use paca::serve::trace;
+
+    fn small() -> ModelInfo {
+        ModelInfo { d_model: 16, d_ff: 24, ..tiny_model() }
+    }
+
+    fn engine_for(pool: TenantPool) -> ServeEngine {
+        let m = small();
+        let base = BaseModel::synthetic(&m, 7);
+        let mut reg = AdapterRegistry::new(64);
+        for name in pool.names() {
+            reg.insert(PacaAdapter::synthetic(name, &m, 4, 11));
+        }
+        ServeEngine::new(base, reg, Box::<HostBackend>::default(),
+                         pool)
+    }
+
+    let clock = ClockModel::Analytic {
+        swap_s: 2e-3, batch_s: 5e-4, token_s: 2e-5,
+    };
+    prop(25, |rng| {
+        let n_tenants = 1 + rng.below(5);
+        let mut pool = TenantPool::new();
+        for i in 0..n_tenants {
+            pool.intern(&trace::tenant_name(i));
+        }
+        let n = 1 + rng.below(40);
+        let cap = 1 + rng.below(6);
+        let requests: Vec<Request> = (0..n as u64).map(|id| Request {
+            id,
+            tenant: TenantId(rng.below(n_tenants) as u32),
+            tokens: 1 + rng.below(24),
+            decode_tokens: rng.below(12),
+            arrival_s: rng.next_f64() * 0.5,
+            deadline_s: if rng.below(2) == 0 {
+                f64::INFINITY
+            } else {
+                0.02 + rng.next_f64() * 0.1
+            },
+        }).collect();
+        for policy in Policy::ALL {
+            let run = |kv: Option<(usize, usize, bool)>| {
+                let mut eng = engine_for(pool.clone());
+                if let Some((blocks, bt, preempt)) = kv {
+                    eng.configure_kv(blocks, bt, preempt);
+                }
+                let mut sched = OnlineScheduler::new(
+                    requests.clone(), n_tenants, cap, policy);
+                eng.serve_iterative(&mut sched, clock).unwrap();
+                eng.finish().unwrap();
+                (eng.checksum, eng.stats.tokens, eng.stats.swaps,
+                 eng.stats.steps, eng.stats.virtual_s,
+                 eng.stats.deadline_misses)
+            };
+            let unlimited = run(None);
+            let ample = run(Some((1_000_000, 16, false)));
+            assert_eq!(unlimited, ample,
+                       "{policy:?}: an ample bounded pool must be \
+                        bit-inert");
+        }
+    });
+}
+
+#[test]
 fn prop_rng_choice_uniformity() {
     // Every index should be selected with roughly equal frequency.
     let mut counts = vec![0usize; 32];
