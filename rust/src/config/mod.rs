@@ -190,6 +190,16 @@ pub struct ServeConfig {
     /// Host-backend row cap per forward (was a hard-coded const;
     /// oversized batches still truncate visibly).
     pub host_max_tokens: usize,
+    /// Per-tenant prefix-sharing radix KV cache (`--prefix-cache
+    /// on|off`). Off is bit-for-bit the pre-prefix (PR-4) engine.
+    pub prefix_cache: bool,
+    /// Per-tenant system-prompt length for synthesized traces: each
+    /// request's prompt is prepended with its tenant's shared prefix
+    /// of this many tokens; 0 = fully unique prompts.
+    pub shared_prefix_tokens: usize,
+    /// Write the engine report as machine-readable JSON to this path
+    /// (`--report-json PATH`); empty = text report only.
+    pub report_json: String,
 }
 
 impl Default for ServeConfig {
@@ -216,6 +226,9 @@ impl Default for ServeConfig {
             kv_block_tokens: 16,
             preempt: true,
             host_max_tokens: 2048,
+            prefix_cache: true,
+            shared_prefix_tokens: 0,
+            report_json: String::new(),
         }
     }
 }
@@ -303,6 +316,12 @@ impl ServeConfig {
                 }
                 v
             },
+            prefix_cache: doc.bool_or("serve.prefix_cache",
+                                      d.prefix_cache),
+            shared_prefix_tokens: u("serve.shared_prefix_tokens",
+                                    d.shared_prefix_tokens)?,
+            report_json: doc.str_or("serve.report_json",
+                                    &d.report_json).to_string(),
         })
     }
 
@@ -392,6 +411,25 @@ impl ServeConfig {
                         "host-max-tokens must be >= 1"));
                 }
                 self.host_max_tokens = n;
+            }
+            "serve.prefix_cache" | "prefix-cache"
+                | "prefix_cache" => {
+                self.prefix_cache = match v {
+                    "on" | "true" | "1" => true,
+                    "off" | "false" | "0" => false,
+                    other => {
+                        return Err(anyhow!(
+                            "prefix-cache must be on|off, got \
+                             {other:?}"))
+                    }
+                };
+            }
+            "serve.shared_prefix_tokens" | "shared-prefix-tokens"
+                | "shared_prefix_tokens" => {
+                self.shared_prefix_tokens = v.parse()?
+            }
+            "serve.report_json" | "report-json" | "report_json" => {
+                self.report_json = v.into()
             }
             other => {
                 return Err(anyhow!("unknown serve config key {other:?}"))
@@ -587,6 +625,59 @@ mod tests {
         // Negative numeric values must error, not wrap to huge usize.
         let bad = TomlDoc::parse("[serve]\ncount = -1\n").unwrap();
         assert!(ServeConfig::from_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn serve_prefix_and_report_keys() {
+        let mut c = ServeConfig::default();
+        assert!(c.prefix_cache, "prefix cache defaults ON");
+        assert_eq!(c.shared_prefix_tokens, 0);
+        assert_eq!(c.report_json, "");
+        c.apply_override("prefix-cache=off").unwrap();
+        assert!(!c.prefix_cache);
+        c.apply_override("prefix-cache=on").unwrap();
+        assert!(c.prefix_cache);
+        c.apply_override("shared-prefix-tokens=48").unwrap();
+        assert_eq!(c.shared_prefix_tokens, 48);
+        c.apply_override("report-json=out/report.json").unwrap();
+        assert_eq!(c.report_json, "out/report.json");
+        assert!(c.apply_override("prefix-cache=maybe").is_err(),
+                "prefix-cache must be on|off");
+        let doc = TomlDoc::parse(
+            "[serve]\nprefix_cache = false\n\
+             shared_prefix_tokens = 32\n\
+             report_json = \"r.json\"\n").unwrap();
+        let c = ServeConfig::from_doc(&doc).unwrap();
+        assert!(!c.prefix_cache);
+        assert_eq!(c.shared_prefix_tokens, 32);
+        assert_eq!(c.report_json, "r.json");
+    }
+
+    #[test]
+    fn degenerate_cli_values_error_clearly() {
+        // The div-by-zero / silent-wrap family: every degenerate
+        // value is an explicit error at parse time, never a panic (or
+        // a wrapped usize) deep inside `blocks_for`/the engine.
+        let mut c = ServeConfig::default();
+        assert!(c.apply_override("kv-block-tokens=0").is_err(),
+                "a zero-token block would make blocks_for divide by \
+                 zero");
+        assert!(c.apply_override("host-max-tokens=0").is_err());
+        assert!(c.apply_override("shared-prefix-tokens=-1").is_err(),
+                "negative usize must be a parse error, not a wrap");
+        assert!(c.apply_override("kv-blocks=-3").is_err());
+        assert!(c.apply_override("batch=x").is_err());
+        // And the same through TOML.
+        for bad in ["[serve]\nkv_block_tokens = 0\n",
+                    "[serve]\nkv_block_tokens = -2\n",
+                    "[serve]\nhost_max_tokens = 0\n",
+                    "[serve]\nshared_prefix_tokens = -1\n"] {
+            let doc = TomlDoc::parse(bad).unwrap();
+            assert!(ServeConfig::from_doc(&doc).is_err(), "{bad}");
+        }
+        // Untouched config still valid after the failed overrides.
+        assert_eq!(c.kv_block_tokens, 16);
+        assert_eq!(c.host_max_tokens, 2048);
     }
 
     #[test]

@@ -109,7 +109,9 @@ fn usage() -> &'static str {
      \x20          [--decode-tokens 0] \\\n\
      \x20          [--max-batch-tokens 0] [--service-unit step|batch] \\\n\
      \x20          [--kv-blocks 0] [--kv-block-tokens 16] \\\n\
-     \x20          [--preempt true|false] [--host-max-tokens 2048]\n\
+     \x20          [--preempt true|false] [--host-max-tokens 2048] \\\n\
+     \x20          [--prefix-cache on|off] [--shared-prefix-tokens 0] \\\n\
+     \x20          [--report-json report.json]\n\
      \x20          # online continuous batching over the trace's\n\
      \x20          # arrival times; missing trace/adapters are\n\
      \x20          # synthesized and saved.\n\
@@ -127,6 +129,12 @@ fn usage() -> &'static str {
      \x20          # true, the least-urgent decoding slot is evicted\n\
      \x20          # (blocks freed, recompute-on-resume) under memory\n\
      \x20          # pressure or urgent other-tenant deadlines\n\
+     \x20          # --prefix-cache on (default): same-tenant shared\n\
+     \x20          # prompt prefixes (--shared-prefix-tokens N system\n\
+     \x20          # prompts) reuse cached KV blocks copy-on-write\n\
+     \x20          # instead of recomputing prefill; off = exact PR-4\n\
+     \x20          # behaviour. --report-json writes the engine\n\
+     \x20          # report as JSON alongside the text report.\n\
      paca selftest"
 }
 
@@ -357,6 +365,10 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
     if cfg.count == 0 {
         bail!("--count must be >= 1");
     }
+    if cfg.capacity == 0 {
+        bail!("--capacity must be >= 1 (the registry needs room for \
+               at least one resident adapter)");
+    }
 
     // Request trace: load, or synthesize + persist for reproducibility.
     let trace_path = Path::new(&cfg.requests);
@@ -374,6 +386,7 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
             burstiness: cfg.burstiness,
             req_per_s: cfg.req_per_s,
             decode_tokens: cfg.decode_tokens,
+            shared_prefix_tokens: cfg.shared_prefix_tokens,
             seed: cfg.seed,
             ..Default::default()
         };
@@ -441,7 +454,7 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
         .map(|r| r.decode_tokens).sum();
     println!("serving {}: {} tenants over one {:.1}MB shared base \
               ({} target weights) | backend {} | batch {} | policy {} \
-              | unit {} | trace span {:.2}s | {} decode tokens{}{}",
+              | unit {} | trace span {:.2}s | {} decode tokens{}{}{}",
              model.name, tenants.len(), base.bytes() as f64 / 1e6,
              base.weights.len(), backend.name(), cfg.batch,
              policy.name(), cfg.service_unit, tr.span_s(),
@@ -459,6 +472,11 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
                          else { "drain-only" })
              } else {
                  String::new()
+             },
+             if cfg.prefix_cache {
+                 ""
+             } else {
+                 " | prefix cache off"
              });
 
     // Offline baseline: what the one-shot planner would do with the
@@ -477,6 +495,7 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
     let mut eng = engine::ServeEngine::new(base, reg, backend,
                                            tr.pool);
     eng.configure_kv(cfg.kv_blocks, cfg.kv_block_tokens, cfg.preempt);
+    eng.configure_prefix(cfg.prefix_cache);
     let mut sched = scheduler::OnlineScheduler::new(
         tr.requests, n_tenant_ids, cfg.batch, policy);
     sched.max_batch_tokens = cfg.max_batch_tokens;
@@ -495,6 +514,12 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
     println!("\n{}", eng.report());
     println!("shared frozen base restored bit-exactly after un-merge \
               (fingerprint verified)");
+    if !cfg.report_json.is_empty() {
+        let path = Path::new(&cfg.report_json);
+        std::fs::write(path, eng.report_json().to_string())
+            .map_err(|e| anyhow!("writing {}: {e}", path.display()))?;
+        println!("wrote engine report json -> {}", path.display());
+    }
 
     println!("\nProjected at paper scale (serving cost model):");
     println!("{}", cost::comparison_table(&cost::llama3_8b(), 64, 512));
@@ -504,6 +529,10 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
                                       512));
     println!("{}", cost::kv_capacity_table(&cost::llama3_8b(), 64,
                                            4096, cfg.batch.max(1)));
+    if cfg.prefix_cache {
+        println!("{}", cost::prefix_hit_table(&cost::llama3_8b(), 64,
+                                              cfg.batch.max(1), 512));
+    }
     Ok(())
 }
 

@@ -327,14 +327,21 @@ impl OccupancyTimeline {
 pub struct KvOccupancyTimeline {
     blocks: Vec<u64>,
     tokens: Vec<u64>,
+    /// Cache-only (reclaimable) blocks per step — live blocks held
+    /// solely by the prefix cache, i.e. capacity the LRU reclaim can
+    /// hand back on demand. Live minus reclaimable = pinned.
+    reclaimable: Vec<u64>,
 }
 
 impl KvOccupancyTimeline {
     /// Record one engine step with `blocks` live pool blocks holding
-    /// `tokens` resident tokens.
-    pub fn record(&mut self, blocks: u64, tokens: u64) {
+    /// `tokens` resident tokens, `reclaimable` of the blocks held
+    /// only by the prefix cache (0 without one).
+    pub fn record(&mut self, blocks: u64, tokens: u64,
+                  reclaimable: u64) {
         self.blocks.push(blocks);
         self.tokens.push(tokens);
+        self.reclaimable.push(reclaimable);
     }
 
     pub fn n_steps(&self) -> usize {
@@ -369,6 +376,25 @@ impl KvOccupancyTimeline {
             / self.tokens.len() as f64
     }
 
+    pub fn peak_reclaimable(&self) -> u64 {
+        self.reclaimable.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn mean_reclaimable(&self) -> f64 {
+        if self.reclaimable.is_empty() {
+            return 0.0;
+        }
+        self.reclaimable.iter().sum::<u64>() as f64
+            / self.reclaimable.len() as f64
+    }
+
+    /// Pinned (live minus cache-only) blocks at the recorded peak-
+    /// occupancy step have no single meaning across steps; per-step
+    /// pinned is simply blocks − reclaimable, so expose the mean.
+    pub fn mean_pinned(&self) -> f64 {
+        self.mean_blocks() - self.mean_reclaimable()
+    }
+
     /// Mean allocated-but-unfilled fraction of live blocks of
     /// `block_tokens` tokens each — internal fragmentation averaged
     /// over the steps where anything was resident.
@@ -386,13 +412,16 @@ impl KvOccupancyTimeline {
         if n == 0 { 0.0 } else { frac_sum / n as f64 }
     }
 
-    /// One row per step: live blocks and resident tokens.
+    /// One row per step: live blocks, resident tokens, cache-only
+    /// blocks.
     pub fn table(&self) -> Table {
-        let mut t = Table::new(&["step", "kv blocks", "kv tokens"]);
-        for (i, (&b, &tok)) in self.blocks.iter().zip(&self.tokens)
-            .enumerate()
+        let mut t = Table::new(&["step", "kv blocks", "kv tokens",
+                                 "cache-only"]);
+        for (i, ((&b, &tok), &r)) in self.blocks.iter()
+            .zip(&self.tokens).zip(&self.reclaimable).enumerate()
         {
-            t.row(&[i.to_string(), b.to_string(), tok.to_string()]);
+            t.row(&[i.to_string(), b.to_string(), tok.to_string(),
+                    r.to_string()]);
         }
         t
     }
@@ -596,17 +625,21 @@ mod tests {
         assert_eq!(kv.peak_blocks(), 0);
         assert_eq!(kv.mean_blocks(), 0.0);
         assert_eq!(kv.mean_frag_frac(16), 0.0, "no steps, no frag");
-        kv.record(4, 64);  // 4 blocks × 16 tokens, fully packed
-        kv.record(4, 50);  // 14 slack slots
-        kv.record(0, 0);   // idle step contributes no frag sample
+        kv.record(4, 64, 0);  // 4 blocks × 16 tokens, fully packed
+        kv.record(4, 50, 2);  // 14 slack slots, 2 cache-only
+        kv.record(0, 0, 0);   // idle step contributes no frag sample
         assert_eq!(kv.n_steps(), 3);
         assert_eq!(kv.peak_blocks(), 4);
         assert_eq!(kv.peak_tokens(), 64);
         assert!((kv.mean_blocks() - 8.0 / 3.0).abs() < 1e-12);
         assert!((kv.mean_frag_frac(16) - (14.0 / 64.0) / 2.0).abs()
                 < 1e-12);
+        assert_eq!(kv.peak_reclaimable(), 2);
+        assert!((kv.mean_reclaimable() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((kv.mean_pinned() - 2.0).abs() < 1e-12);
         let r = kv.table().render();
         assert!(r.contains("kv blocks"));
+        assert!(r.contains("cache-only"));
         assert_eq!(r.lines().count(), 2 + 3);
     }
 

@@ -134,6 +134,50 @@ pub fn decode_tok_per_s(dev: &DeviceProfile, m: &ModelInfo,
         / decode_step_time(dev, m, path, rank, batch, ctx)
 }
 
+/// Prefill wall time when a fraction `hit` of the prompt is served
+/// from the prefix cache: only the uncached `(1−hit)·seq` suffix is
+/// computed (attention still spans the full context, but at serving
+/// batch sizes the target GEMMs dominate — the same modelling level
+/// as `forward_time`). `hit = 0` reduces exactly to `forward_time`;
+/// the engine enforces ≥ 1 computed token, mirrored by the `.max(1)`
+/// floor. This is the analytic TTFT with a warm cache.
+pub fn prefill_time_cached(dev: &DeviceProfile, m: &ModelInfo,
+                           path: ServePath, rank: usize, batch: usize,
+                           seq: usize, hit: f64) -> f64 {
+    let hit = hit.clamp(0.0, 1.0);
+    let suffix = ((seq as f64 * (1.0 - hit)).ceil() as usize).max(1);
+    forward_time(dev, m, path, rank, batch, suffix)
+}
+
+/// Prefix-cache projection: analytic TTFT vs cache hit rate for the
+/// merged path on both device profiles — what a given steady-state
+/// hit rate (the engine reports the measured one) buys at paper
+/// scale. The `speedup` column is against the cold (hit 0) prefill.
+pub fn prefix_hit_table(m: &ModelInfo, rank: usize, batch: usize,
+                        seq: usize) -> String {
+    use crate::metrics::Table;
+    let mut out = String::new();
+    for dev in [&A100_80G, &GAUDI2] {
+        let cold = prefill_time_cached(dev, m, ServePath::Merged,
+                                       rank, batch, seq, 0.0);
+        let mut t = Table::new(&["hit rate", "TTFT ms", "speedup"]);
+        for hit in [0.0, 0.25, 0.5, 0.75, 0.9] {
+            let warm = prefill_time_cached(
+                dev, m, ServePath::Merged, rank, batch, seq, hit);
+            t.row(&[format!("{:.0}%", hit * 100.0),
+                    format!("{:.1}", warm * 1e3),
+                    format!("{:.2}x", cold / warm)]);
+        }
+        out.push_str(&format!(
+            "\n{} — {} prefix-cache hit-rate projection, rank \
+             {rank}, batch {batch}, prompt {seq} (TTFT = prefill of \
+             the uncached suffix; hit rate is the cached fraction of \
+             the prompt):\n\n", dev.name, m.name));
+        out.push_str(&t.render());
+    }
+    out
+}
+
 /// Device cost of one PaCA adapter swap on the merged path: per target
 /// per layer, save r·d_out displaced rows and write r·d_out adapter
 /// rows (bf16), plus a dispatch per target.
@@ -579,6 +623,39 @@ mod tests {
                                     64, 8, 512);
         assert!(step < 0.25 * prefill, "step {step} vs prefill \
                                         {prefill}");
+    }
+
+    #[test]
+    fn prefill_hit_rate_term_is_monotone_and_anchored() {
+        let m = llama3_8b();
+        for dev in [&A100_80G, &GAUDI2] {
+            let t = |hit| prefill_time_cached(
+                dev, &m, ServePath::Merged, 64, 8, 512, hit);
+            // hit 0 IS forward_time — the reduction anchor of the
+            // analytic term.
+            assert_eq!(t(0.0), forward_time(
+                dev, &m, ServePath::Merged, 64, 8, 512));
+            // Strictly monotone: more cache, less prefill.
+            assert!(t(0.25) < t(0.0), "{}", dev.name);
+            assert!(t(0.5) < t(0.25));
+            assert!(t(0.9) < t(0.5));
+            // Never free: the first output token still needs a
+            // forward, even fully cached (and out-of-range hit rates
+            // clamp instead of exploding).
+            assert!(t(1.0) > 0.0);
+            assert_eq!(t(7.0), t(1.0));
+            assert_eq!(t(-3.0), t(0.0));
+        }
+    }
+
+    #[test]
+    fn prefix_hit_table_renders() {
+        let m = llama3_8b();
+        let s = prefix_hit_table(&m, 64, 8, 512);
+        assert!(s.contains("hit rate"));
+        assert!(s.contains("speedup"));
+        assert!(s.contains("1.00x"), "hit 0 row is the 1x anchor");
+        assert!(s.contains("A100-80GB") && s.contains("Gaudi2"));
     }
 
     #[test]

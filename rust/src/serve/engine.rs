@@ -41,7 +41,7 @@
 //!     `serve_online` — same forwards, same checksum, same swaps (the
 //!     correctness anchor in tests/properties.rs).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -57,11 +57,13 @@ use crate::metrics::{latency_breakdown_table, KvOccupancyTimeline,
 use crate::peft::Selection;
 use crate::runtime::{Executable, Runtime};
 use crate::serve::kv::{KvPool, KvSeq};
+use crate::serve::prefix::PrefixCache;
 use crate::serve::registry::{fingerprint, AdapterRegistry, SpliceGuard,
                              WeightMap};
 use crate::serve::scheduler::{Batch, OnlineScheduler, Policy, Request,
                               TenantId, TenantPool};
 use crate::tensor::HostTensor;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Default host-backend row cap per forward (keeps debug-mode tests
@@ -285,7 +287,13 @@ pub struct EngineStats {
     pub preempt_deadline: u64,
     /// Prompt tokens the resume replays will recompute — the price
     /// paid for freeing preempted KV instead of swapping it out.
+    /// (With the prefix cache on, a resume that hits its own donated
+    /// prefix actually recomputes less — this counter stays the
+    /// cache-free upper bound.)
     pub kv_recompute_tokens: u64,
+    /// Prompt tokens of every seated request (resume replays
+    /// included) — the denominator of the prefix-cache hit rate.
+    pub prefill_tokens: u64,
 }
 
 pub struct ServeEngine {
@@ -319,6 +327,12 @@ pub struct ServeEngine {
     /// The paged KV-cache pool (unlimited by default — configure with
     /// [`ServeEngine::configure_kv`] / `--kv-blocks`).
     pub kv: KvPool,
+    /// Per-tenant prefix-sharing radix cache over the pool
+    /// (`--prefix-cache`, default on; inert until a trace carries
+    /// `shared_prefix_tokens`). Only `serve_iterative` consults it —
+    /// the whole-batch unit of service allocates and frees its whole
+    /// residency per dispatch, so there is nothing to share.
+    pub prefix: PrefixCache,
     /// Preemption enabled? Only consulted when the pool is bounded;
     /// false = drain-only (admission is still capacity-gated, but a
     /// live batch is never evicted).
@@ -360,7 +374,8 @@ impl ServeEngine {
                       kv_timeline: KvOccupancyTimeline::default(),
                       timeline: ThroughputTimeline::new(
                           TIMELINE_BUCKET_S),
-                      kv, preempt: true, resume: HashMap::new(),
+                      kv, prefix: PrefixCache::new(true),
+                      preempt: true, resume: HashMap::new(),
                       stats: EngineStats::default(), checksum: 0.0 }
     }
 
@@ -374,6 +389,12 @@ impl ServeEngine {
         self.kv = KvPool::new(n_blocks, block_tokens,
                               self.base.model.kv_bytes_per_token());
         self.preempt = preempt;
+    }
+
+    /// Arm or disarm the prefix-sharing cache (`--prefix-cache`).
+    /// Off is the reduction anchor: bit-for-bit the PR-4 engine.
+    pub fn configure_prefix(&mut self, enabled: bool) {
+        self.prefix = PrefixCache::new(enabled);
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -510,8 +531,10 @@ impl ServeEngine {
             let kv_seqs: Vec<KvSeq> = batch.requests.iter()
                 .map(|r| self.kv.alloc_clamped(r.total_tokens()))
                 .collect();
-            self.kv_timeline.record(self.kv.used_blocks() as u64,
-                                    self.kv.resident_tokens() as u64);
+            self.kv_timeline.record(
+                self.kv.used_blocks() as u64,
+                self.kv.resident_tokens() as u64,
+                self.kv.reclaimable_blocks() as u64);
             let (wall_service_s, swapped) =
                 match self.service_batch(&batch) {
                     Ok(v) => v,
@@ -605,15 +628,62 @@ impl ServeEngine {
 
     /// Advertise the paged pool's state to the scheduler's admission
     /// gate; gating stays disabled while the pool is unlimited (the
-    /// PR-3 reduction regime).
-    fn sync_kv_gate(&self, sched: &mut OnlineScheduler) {
+    /// PR-3 reduction regime). With the prefix cache on, the gate
+    /// also learns each tenant's cached cover (so dispatch/join
+    /// charge only the uncached suffix) and counts cache-only blocks
+    /// as available (the LRU reclaim yields them on demand). Stale
+    /// subtrees — the registry evicted or reloaded the tenant's
+    /// adapter since the KV was computed — are dropped FIRST, so the
+    /// advertised cover, the engine's own lookups, and the
+    /// scheduler's projections all see the same post-invalidation
+    /// cache.
+    fn sync_kv_gate(&mut self, sched: &mut OnlineScheduler) {
+        // An empty cache advertises nothing and has nothing to go
+        // stale — skip the per-tenant walk (this path runs twice per
+        // dispatch iteration, and every pre-prefix workload would
+        // otherwise pay it for no cover).
+        if self.prefix.enabled() && self.prefix.cached_blocks() > 0 {
+            for t in self.prefix.tenants() {
+                let gen = self.registry
+                    .generation(self.pool.name(t));
+                self.prefix.invalidate_if_stale(t, gen, &mut self.kv);
+            }
+            let bt = self.kv.block_tokens();
+            sched.prefix_block_tokens = bt;
+            sched.kv_prefix_cover.clear();
+            sched.kv_prefix_cover.extend(
+                (0..self.pool.len())
+                    .map(|i| self.prefix.cover(TenantId(i as u32),
+                                               bt)));
+        } else {
+            sched.prefix_block_tokens = 0;
+            sched.kv_prefix_cover.clear();
+        }
         if self.kv.is_bounded() {
             sched.kv_block_tokens = self.kv.block_tokens();
-            sched.kv_free_blocks = self.kv.free_blocks();
+            sched.kv_free_blocks = self.kv.available_blocks();
         } else {
             sched.kv_block_tokens = 0;
             sched.kv_free_blocks = usize::MAX;
         }
+    }
+
+    /// Reclaim cache-only blocks until `need` blocks fit the free
+    /// list (or the cache runs dry). Inert without a populated cache
+    /// — the PR-4 allocation paths are untouched.
+    fn reclaim_shortfall(&mut self, need: usize) {
+        let free = self.kv.free_blocks();
+        if need > free {
+            self.prefix.reclaim(need - free, &mut self.kv);
+        }
+    }
+
+    /// `KvPool::alloc_clamped` behind the cache's reclaim: the cache
+    /// yields unreferenced blocks before an allocation ever clamps on
+    /// them.
+    fn kv_alloc_clamped(&mut self, tokens: usize) -> KvSeq {
+        self.reclaim_shortfall(self.kv.blocks_for(tokens));
+        self.kv.alloc_clamped(tokens)
     }
 
     /// True when eviction is armed: a bounded pool with `preempt` on.
@@ -661,8 +731,12 @@ impl ServeEngine {
     /// evict/resume cycles.
     fn evict_slot(&mut self, slots: &mut Vec<Slot>, idx: usize,
                   sched: &mut OnlineScheduler, memory: bool) {
-        let s = slots.swap_remove(idx);
-        self.kv.release(s.kv);
+        let mut s = slots.swap_remove(idx);
+        // An evicted sequence donates its shared prefix like a
+        // completing one — the resume replay (and everyone else on
+        // this tenant) then hits it instead of recomputing.
+        let seq = std::mem::take(&mut s.kv);
+        self.retire_seq(&s.req, seq);
         // Tokens emitted in THIS residency: the first token if this
         // was the original prefill, plus finished decode iterations.
         let decode_done = s.req.decode_tokens - s.remaining;
@@ -684,12 +758,46 @@ impl ServeEngine {
         sched.requeue(r);
     }
 
-    /// Seat `r` in a fresh slot at virtual time `now`: settle its
-    /// queueing delay (first residency only — a resumed request
-    /// already paid it), allocate its prompt's KV blocks (clamped for
-    /// a first-fits oversized request), and mark resume replays so the
-    /// prefill step emits nothing twice.
-    fn slot_in(&mut self, slots: &mut Vec<Slot>, r: Request, now: f64) {
+    /// Phase 1 of seating a dispatch/join group: the prefix-cache
+    /// hold. Looks up the tenant's cached cover for `r`'s shared
+    /// prefix and ATTACHES the matched blocks (refcount bump, zero
+    /// compute) before any group member allocates its suffix — so one
+    /// member's allocation can never reclaim blocks another member of
+    /// the same admission decision was projected against. None = no
+    /// usable hit; the request seats through the plain PR-4 path.
+    fn hold_prefix(&mut self, r: &Request) -> Option<(KvSeq, usize)> {
+        if !self.prefix.enabled() || r.shared_prefix_tokens == 0 {
+            return None;
+        }
+        let want = crate::serve::prefix::usable_prefix(
+            r.shared_prefix_tokens, r.tokens);
+        let gen = self.registry.generation(self.pool.name(r.tenant));
+        let m = self.prefix.lookup(r.tenant, want, gen, &mut self.kv);
+        if m.tokens == 0 {
+            return None;
+        }
+        Some((self.kv.attach(&m.blocks, m.tokens), m.tokens))
+    }
+
+    /// Seat a whole dispatch/join group: every member's cache hold
+    /// first, then every member's suffix allocation.
+    fn seat(&mut self, slots: &mut Vec<Slot>, reqs: Vec<Request>,
+            now: f64) {
+        let holds: Vec<Option<(KvSeq, usize)>> =
+            reqs.iter().map(|r| self.hold_prefix(r)).collect();
+        for (r, hold) in reqs.into_iter().zip(holds) {
+            self.slot_in(slots, r, now, hold);
+        }
+    }
+
+    /// Seat `r` in a fresh slot at virtual time `now` (phase 2):
+    /// settle its queueing delay (first residency only — a resumed
+    /// request already paid it), allocate the prompt's KV blocks —
+    /// just the uncached suffix past a prefix-cache hold, clamped for
+    /// a first-fits oversized request — and mark resume replays so
+    /// the prefill step emits nothing twice.
+    fn slot_in(&mut self, slots: &mut Vec<Slot>, r: Request, now: f64,
+               hold: Option<(KvSeq, usize)>) {
         let resumed = self.resume.contains_key(&r.id);
         if !resumed {
             let queue_s = (now - r.arrival_s).max(0.0);
@@ -697,11 +805,45 @@ impl ServeEngine {
             self.queueing.record(name, queue_s);
             self.queueing.record("(all)", queue_s);
         }
-        let kv = self.kv.alloc_clamped(r.tokens);
+        self.stats.prefill_tokens += r.tokens as u64;
+        let (kv, prefill_tokens) = match hold {
+            Some((mut seq, hit)) => {
+                // hit ≤ tokens − 1, so the computed suffix is ≥ 1
+                // (the first output token always needs a forward).
+                let suffix = r.tokens - hit;
+                // CoW fork slack only when the match ended on a
+                // partially-filled shared tail — a full-block cover
+                // can never fork, and over-reclaiming here would
+                // evict a cached block (and a future hit) for free.
+                let fork = usize::from(
+                    hit % self.kv.block_tokens() != 0);
+                let need = self.kv.blocks_for(r.tokens)
+                    .saturating_sub(seq.n_blocks())
+                    + fork;
+                self.reclaim_shortfall(need);
+                self.kv.grow_clamped(&mut seq, suffix);
+                (seq, suffix)
+            }
+            None => (self.kv_alloc_clamped(r.tokens), r.tokens),
+        };
         slots.push(Slot { remaining: r.decode_tokens,
                           prefilled: false, resumed,
                           dispatched_s: now, first_token_s: now, kv,
-                          req: r });
+                          prefill_tokens, req: r });
+    }
+
+    /// Return a finished (or evicted) sequence's blocks to the pool —
+    /// donating the blocks that cover the request's shared prefix to
+    /// the tenant's radix cache instead of freeing them, so the next
+    /// same-tenant prompt attaches them without recompute.
+    fn retire_seq(&mut self, r: &Request, seq: KvSeq) {
+        if self.prefix.enabled() && r.shared_prefix_tokens > 0 {
+            let gen = self.registry
+                .generation(self.pool.name(r.tenant));
+            self.prefix.donate(r.tenant, gen, &seq,
+                               r.shared_prefix_tokens, &mut self.kv);
+        }
+        self.kv.release(seq);
     }
 
     /// Decode-style iteration-level batching: the unit of service is
@@ -756,9 +898,7 @@ impl ServeEngine {
                 let Some(batch) = sched.dispatch(live, now) else {
                     break;
                 };
-                for r in batch.requests {
-                    self.slot_in(&mut slots, r, now);
-                }
+                self.seat(&mut slots, batch.requests, now);
                 if slots.is_empty() {
                     continue;
                 }
@@ -815,9 +955,8 @@ impl ServeEngine {
                         budget.saturating_sub(slots.len())
                     };
                     let free = slot_cap - slots.len();
-                    for r in sched.join_live(live, free, spare) {
-                        self.slot_in(&mut slots, r, now);
-                    }
+                    let joiners = sched.join_live(live, free, spare);
+                    self.seat(&mut slots, joiners, now);
                 }
             }
 
@@ -838,6 +977,12 @@ impl ServeEngine {
                     };
                     if self.kv.grow(&mut slots[i].kv, 1) {
                         break 'grow;
+                    }
+                    // Under pressure the cache yields unreferenced
+                    // blocks BEFORE any slot is preempted — reclaim
+                    // and retry the grow.
+                    if self.prefix.reclaim(1, &mut self.kv) > 0 {
+                        continue 'grow;
                     }
                     let victim = if self.preempting() {
                         Self::pick_victim(&slots, Some(id), now,
@@ -860,8 +1005,12 @@ impl ServeEngine {
 
             // ---- one iteration step over the in-flight batch ----
             let tenant = slots[0].req.tenant;
+            // Freshly seated slots charge only their UNCACHED prompt
+            // suffix — matched prefix KV is attached, not recomputed
+            // (with no cache hit, prefill_tokens == the full prompt,
+            // the PR-4 charge).
             let step_tokens: usize = slots.iter()
-                .map(|s| if s.prefilled { 1 } else { s.req.tokens })
+                .map(|s| if s.prefilled { 1 } else { s.prefill_tokens })
                 .sum();
             let (wall_step_s, swapped) =
                 self.forward_step(tenant, step_tokens)?;
@@ -878,8 +1027,10 @@ impl ServeEngine {
             last_step_s = step_s;
             self.occupancy.record(slots.len() as u64,
                                   step_tokens as u64);
-            self.kv_timeline.record(self.kv.used_blocks() as u64,
-                                    self.kv.resident_tokens() as u64);
+            self.kv_timeline.record(
+                self.kv.used_blocks() as u64,
+                self.kv.resident_tokens() as u64,
+                self.kv.reclaimable_blocks() as u64);
             let name = self.pool.name(tenant);
 
             // Advance every slot by one token; completed slots leave
@@ -907,8 +1058,9 @@ impl ServeEngine {
                     i += 1;
                     continue;
                 }
-                let s = slots.swap_remove(i);
-                self.kv.release(s.kv);
+                let mut s = slots.swap_remove(i);
+                let seq = std::mem::take(&mut s.kv);
+                self.retire_seq(&s.req, seq);
                 // A preempted request's own fields were rewritten for
                 // the replay; TTFT/TPOT settle against the originals
                 // pinned in the resume map.
@@ -973,12 +1125,22 @@ impl ServeEngine {
                 "shared base corrupted after un-merge: fingerprint \
                  {fp:016x} != baseline {:016x}", self.baseline_fp));
         }
+        // The prefix cache's holds are pool references too: flush it
+        // so the leak check below sees a quiescent pool. (Live caches
+        // between runs are an engine-lifetime optimization; a drained
+        // engine owns nothing.)
+        self.prefix.clear(&mut self.kv);
         if self.kv.used_blocks() != 0 {
             return Err(anyhow!(
                 "kv pool leaked {} blocks ({} resident tokens) after \
                  drain", self.kv.used_blocks(),
                 self.kv.resident_tokens()));
         }
+        // Beyond live blocks: every minted block must be back on the
+        // free list — a leaked refcount (double-share, lost unref)
+        // fails here even when the block ledger looks clean.
+        self.kv.leak_check()
+            .map_err(|e| anyhow!("kv pool after drain: {e}"))?;
         if !self.resume.is_empty() {
             return Err(anyhow!(
                 "{} preempted requests never resumed to completion",
@@ -1068,10 +1230,20 @@ impl ServeEngine {
         }
         if self.kv.is_bounded() {
             let ks = &self.kv.stats;
+            // The pinned-vs-reclaimable split only exists with the
+            // cache on; keep the off-mode line byte-identical to the
+            // PR-4 report.
+            let reclaim_note = if self.prefix.enabled() {
+                format!(" | cache-only peak {} mean {:.1}",
+                        ks.peak_reclaimable,
+                        self.kv_timeline.mean_reclaimable())
+            } else {
+                String::new()
+            };
             out.push_str(&format!(
                 "kv cache: {} | occupancy peak {}/{} blocks \
                  ({:.1}%) mean {:.1} | resident tokens peak {} | \
-                 frag mean {:.1}%\n",
+                 frag mean {:.1}%{reclaim_note}\n",
                 self.kv.describe(), ks.peak_blocks,
                 self.kv.n_blocks(),
                 100.0 * ks.peak_blocks as f64
@@ -1088,12 +1260,137 @@ impl ServeEngine {
                 ks.alloc_clamps, ks.overflow_tokens,
                 if self.preempt { "" } else { " | drain-only" }));
         }
+        if self.prefix.enabled() && self.stats.steps > 0 {
+            let ps = &self.prefix.stats;
+            let pct = if self.stats.prefill_tokens > 0 {
+                100.0 * ps.hit_tokens as f64
+                    / self.stats.prefill_tokens as f64
+            } else {
+                0.0
+            };
+            out.push_str(&format!(
+                "prefix cache: {} hits / {} lookups | {} prompt \
+                 tokens served from cache ({:.1}% of prefill) | \
+                 donated {} blocks | reclaimed {} | cow forks {} | \
+                 invalidated {} subtrees\n\n",
+                ps.hits, ps.lookups, ps.hit_tokens, pct,
+                ps.donated_blocks, ps.reclaimed_blocks,
+                self.kv.stats.cow_forks, ps.invalidations));
+        }
         out.push_str(&format!(
             "aggregate: {:.1} req/s, {:.0} tok/s \
              (forward {:.1}ms, swap {:.1}ms, wall {:.1}ms)\n",
             self.throughput_req_per_s(), self.throughput_tok_per_s(),
             s.forward_s * 1e3, s.swap_s * 1e3, s.wall_s * 1e3));
         out
+    }
+
+    /// The engine report as machine-readable JSON (`paca serve
+    /// --report-json PATH`): the same latency/TTFT/TPOT/kv/preemption/
+    /// hit-rate counters the text report renders, for CI greps and
+    /// bench tooling. Latency sections appear only when they recorded
+    /// samples (like the text report's conditional blocks).
+    pub fn report_json(&self) -> Json {
+        let s = &self.stats;
+        let num = |v: f64| Json::Num(v);
+        let mut root = BTreeMap::new();
+        root.insert("backend".to_string(),
+                    Json::Str(self.backend_name().to_string()));
+        root.insert("requests".to_string(), num(s.requests as f64));
+        root.insert("batches".to_string(), num(s.batches as f64));
+        root.insert("steps".to_string(), num(s.steps as f64));
+        root.insert("swaps".to_string(), num(s.swaps as f64));
+        root.insert("tokens".to_string(), num(s.tokens as f64));
+        root.insert("prefill_tokens".to_string(),
+                    num(s.prefill_tokens as f64));
+        root.insert("truncated_tokens".to_string(),
+                    num(s.truncated_tokens as f64));
+        root.insert("virtual_s".to_string(), num(s.virtual_s));
+        root.insert("wall_s".to_string(), num(s.wall_s));
+        let mut deadline = BTreeMap::new();
+        deadline.insert("total".to_string(),
+                        num(s.deadline_total as f64));
+        deadline.insert("misses".to_string(),
+                        num(s.deadline_misses as f64));
+        root.insert("deadline".to_string(), Json::Obj(deadline));
+
+        let mut latency = BTreeMap::new();
+        let sections: [(&str, &LatencyRecorder); 6] = [
+            ("offline", &self.latencies), ("queueing", &self.queueing),
+            ("service", &self.service), ("e2e", &self.e2e),
+            ("ttft", &self.ttft), ("tpot", &self.tpot)];
+        for (name, rec) in sections {
+            if rec.count("(all)") == 0 {
+                continue;
+            }
+            let mut o = BTreeMap::new();
+            o.insert("n".to_string(),
+                     num(rec.count("(all)") as f64));
+            for (k, q) in [("p50_ms", 0.50), ("p99_ms", 0.99)] {
+                if let Some(v) = rec.percentile("(all)", q) {
+                    o.insert(k.to_string(), num(v * 1e3));
+                }
+            }
+            if let Some(m) = rec.mean("(all)") {
+                o.insert("mean_ms".to_string(), num(m * 1e3));
+            }
+            latency.insert(name.to_string(), Json::Obj(o));
+        }
+        root.insert("latency".to_string(), Json::Obj(latency));
+
+        let ks = &self.kv.stats;
+        let mut kv = BTreeMap::new();
+        kv.insert("blocks".to_string(),
+                  num(self.kv.n_blocks() as f64));
+        kv.insert("block_tokens".to_string(),
+                  num(self.kv.block_tokens() as f64));
+        kv.insert("peak_blocks".to_string(),
+                  num(ks.peak_blocks as f64));
+        kv.insert("peak_tokens".to_string(),
+                  num(ks.peak_tokens as f64));
+        kv.insert("peak_reclaimable".to_string(),
+                  num(ks.peak_reclaimable as f64));
+        kv.insert("grow_fails".to_string(), num(ks.grow_fails as f64));
+        kv.insert("alloc_clamps".to_string(),
+                  num(ks.alloc_clamps as f64));
+        kv.insert("overflow_tokens".to_string(),
+                  num(ks.overflow_tokens as f64));
+        kv.insert("cow_forks".to_string(), num(ks.cow_forks as f64));
+        root.insert("kv".to_string(), Json::Obj(kv));
+
+        let mut pre = BTreeMap::new();
+        pre.insert("total".to_string(), num(s.preemptions as f64));
+        pre.insert("memory".to_string(),
+                   num(s.preempt_memory as f64));
+        pre.insert("deadline".to_string(),
+                   num(s.preempt_deadline as f64));
+        pre.insert("recompute_tokens".to_string(),
+                   num(s.kv_recompute_tokens as f64));
+        root.insert("preemptions".to_string(), Json::Obj(pre));
+
+        if self.prefix.enabled() && s.steps > 0 {
+            let ps = &self.prefix.stats;
+            let mut p = BTreeMap::new();
+            p.insert("lookups".to_string(), num(ps.lookups as f64));
+            p.insert("hits".to_string(), num(ps.hits as f64));
+            p.insert("hit_tokens".to_string(),
+                     num(ps.hit_tokens as f64));
+            p.insert("hit_rate".to_string(),
+                     num(if s.prefill_tokens > 0 {
+                         ps.hit_tokens as f64
+                             / s.prefill_tokens as f64
+                     } else {
+                         0.0
+                     }));
+            p.insert("donated_blocks".to_string(),
+                     num(ps.donated_blocks as f64));
+            p.insert("reclaimed_blocks".to_string(),
+                     num(ps.reclaimed_blocks as f64));
+            p.insert("invalidations".to_string(),
+                     num(ps.invalidations as f64));
+            root.insert("prefix_cache".to_string(), Json::Obj(p));
+        }
+        Json::Obj(root)
     }
 }
 
@@ -1112,8 +1409,12 @@ struct Slot {
     /// Virtual time the first token came out (TTFT ends, TPOT
     /// starts).
     first_token_s: f64,
+    /// Prompt tokens the prefill step actually computes — the full
+    /// prompt, minus any prefix-cache hit (always ≥ 1).
+    prefill_tokens: usize,
     /// The sequence's paged KV blocks (grown one token per decode
-    /// step, released at completion or eviction).
+    /// step, released at completion or eviction — shared-prefix
+    /// blocks are donated to the tenant's radix cache).
     kv: KvSeq,
 }
 
@@ -1199,6 +1500,7 @@ mod tests {
             tenant,
             requests: vec![Request {
                 id: 0, tenant, tokens, decode_tokens: 0,
+                shared_prefix_tokens: 0,
                 arrival_s: 0.0, deadline_s: f64::INFINITY,
             }],
         }
@@ -1393,8 +1695,10 @@ mod tests {
         let t0 = pool.intern(&trace::tenant_name(0));
         let reqs = vec![
             Request { id: 0, tenant: t0, tokens: 4, decode_tokens: 10,
+                      shared_prefix_tokens: 0,
                       arrival_s: 0.0, deadline_s: f64::INFINITY },
             Request { id: 1, tenant: t0, tokens: 2, decode_tokens: 0,
+                      shared_prefix_tokens: 0,
                       arrival_s: 6e-3, deadline_s: f64::INFINITY },
         ];
         let mut eng = engine_for(pool);
@@ -1427,6 +1731,7 @@ mod tests {
         let t0 = pool.intern(&trace::tenant_name(0));
         let reqs: Vec<Request> = (0..8).map(|id| Request {
             id, tenant: t0, tokens: 16, decode_tokens: 4,
+            shared_prefix_tokens: 0,
             arrival_s: 0.0, deadline_s: f64::INFINITY,
         }).collect();
         let mut eng = engine_for(pool);
@@ -1559,6 +1864,7 @@ mod tests {
         let t0 = pool.intern(&trace::tenant_name(0));
         let reqs: Vec<Request> = (0..2).map(|id| Request {
             id, tenant: t0, tokens: 8, decode_tokens: 32,
+            shared_prefix_tokens: 0,
             arrival_s: 0.0, deadline_s: f64::INFINITY,
         }).collect();
         let mut eng = engine_for(pool);
@@ -1603,10 +1909,10 @@ mod tests {
             let t1 = pool.intern(&trace::tenant_name(1));
             let reqs = vec![
                 Request { id: 0, tenant: t0, tokens: 4,
-                          decode_tokens: 60, arrival_s: 0.0,
+                          decode_tokens: 60, shared_prefix_tokens: 0, arrival_s: 0.0,
                           deadline_s: f64::INFINITY },
                 Request { id: 1, tenant: t1, tokens: 4,
-                          decode_tokens: 0, arrival_s: 5e-3,
+                          decode_tokens: 0, shared_prefix_tokens: 0, arrival_s: 5e-3,
                           deadline_s: 20e-3 },
             ];
             (pool, reqs)
@@ -1632,6 +1938,229 @@ mod tests {
         let (misses, preempts) = run(true);
         assert_eq!(misses, 0, "preemption must rescue B's deadline");
         assert!(preempts >= 1);
+    }
+
+    #[test]
+    fn prefix_cache_hits_cut_prefill_tokens_and_ttft() {
+        // Two same-tenant requests sharing a 16-token system prompt,
+        // far enough apart that the first completes (and donates its
+        // prefix) before the second dispatches. With the cache on,
+        // the second prefill computes only its 8-token suffix — fewer
+        // total tokens AND a lower TTFT on the analytic clock.
+        let mut pool = TenantPool::new();
+        let t0 = pool.intern(&trace::tenant_name(0));
+        let reqs = || -> Vec<Request> {
+            (0..2).map(|id| Request {
+                id, tenant: t0, tokens: 24, decode_tokens: 0,
+                shared_prefix_tokens: 16,
+                arrival_s: id as f64, deadline_s: f64::INFINITY,
+            }).collect()
+        };
+        let clock = ClockModel::Analytic {
+            swap_s: 0.0, batch_s: 1e-3, token_s: 1e-3,
+        };
+        let run = |cache: bool| {
+            let mut eng = engine_for(pool.clone());
+            eng.configure_prefix(cache);
+            let mut sched = OnlineScheduler::new(reqs(), 1, 4,
+                                                 Policy::SwapAware);
+            eng.serve_iterative(&mut sched, clock).unwrap();
+            let out = (eng.stats.tokens, eng.prefix.stats.hits,
+                       eng.prefix.stats.hit_tokens,
+                       eng.ttft.percentile("(all)", 0.0).unwrap());
+            eng.finish().unwrap();
+            out
+        };
+        let (cold_tokens, _, _, cold_best_ttft) = run(false);
+        let (warm_tokens, hits, hit_tokens, warm_best_ttft) =
+            run(true);
+        assert_eq!(cold_tokens, 48);
+        assert_eq!(hits, 1,
+                   "the second request hits the donated prefix");
+        assert_eq!(hit_tokens, 16);
+        assert_eq!(warm_tokens, 48 - 16,
+                   "the hit prefill computes only the suffix");
+        assert!(warm_best_ttft < cold_best_ttft,
+                "cached prefill must land the first token sooner: \
+                 {warm_best_ttft} !< {cold_best_ttft}");
+    }
+
+    #[test]
+    fn shared_partial_tail_forks_copy_on_write_in_the_engine() {
+        // 8-token blocks; the donor's 12-token prompt IS the shared
+        // prefix, so the cache holds one full block plus a 4-token
+        // partial tail. The second request attaches both and extends
+        // — the engine must fork the shared tail, never write it.
+        let mut pool = TenantPool::new();
+        let t0 = pool.intern(&trace::tenant_name(0));
+        let reqs = vec![
+            Request { id: 0, tenant: t0, tokens: 12, decode_tokens: 0,
+                      shared_prefix_tokens: 12, arrival_s: 0.0,
+                      deadline_s: f64::INFINITY },
+            Request { id: 1, tenant: t0, tokens: 20, decode_tokens: 4,
+                      shared_prefix_tokens: 12, arrival_s: 1.0,
+                      deadline_s: f64::INFINITY },
+        ];
+        let mut eng = engine_for(pool);
+        eng.configure_kv(1024, 8, false);
+        let mut sched = OnlineScheduler::new(reqs, 1, 4,
+                                             Policy::SwapAware);
+        eng.serve_iterative(&mut sched, ClockModel::Analytic {
+            swap_s: 0.0, batch_s: 1e-3, token_s: 1e-3,
+        }).unwrap();
+        assert_eq!(eng.prefix.stats.donated_blocks, 2,
+                   "full block + partial tail donated");
+        assert_eq!(eng.prefix.stats.hit_tokens, 12,
+                   "the partial tail matched too");
+        assert_eq!(eng.kv.stats.cow_forks, 1,
+                   "extending the shared tail must fork it");
+        assert_eq!(eng.stats.requests, 2);
+        eng.finish().unwrap();
+    }
+
+    #[test]
+    fn registry_eviction_invalidates_prefix_and_blocks_stale_reuse() {
+        // Tenant 0's prefix is cached, then fetching tenant 1 evicts
+        // tenant 0 from a capacity-1 registry (generation bump). The
+        // re-loaded tenant 0 must NEVER reuse its pre-eviction cached
+        // blocks — they hold KV of a splice that no longer exists.
+        let m = small();
+        let dir = std::env::temp_dir().join(format!(
+            "paca-prefix-reg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut pool = TenantPool::new();
+        let t0 = pool.intern(&trace::tenant_name(0));
+        let t1 = pool.intern(&trace::tenant_name(1));
+        for name in pool.names() {
+            PacaAdapter::synthetic(name, &m, 4, 11)
+                .save(&AdapterRegistry::adapter_path(&dir, name))
+                .unwrap();
+        }
+        let reqs = || vec![
+            Request { id: 0, tenant: t0, tokens: 24, decode_tokens: 0,
+                      shared_prefix_tokens: 16, arrival_s: 0.0,
+                      deadline_s: f64::INFINITY },
+            Request { id: 1, tenant: t1, tokens: 8, decode_tokens: 0,
+                      shared_prefix_tokens: 0, arrival_s: 1.0,
+                      deadline_s: f64::INFINITY },
+            Request { id: 2, tenant: t0, tokens: 24, decode_tokens: 0,
+                      shared_prefix_tokens: 16, arrival_s: 2.0,
+                      deadline_s: f64::INFINITY },
+        ];
+        let run = |capacity: usize| {
+            let base = BaseModel::synthetic(&m, 7);
+            let reg = AdapterRegistry::with_dir(&dir, capacity);
+            let mut eng = ServeEngine::new(
+                base, reg, Box::<HostBackend>::default(),
+                pool.clone());
+            let mut sched = OnlineScheduler::new(
+                reqs(), 2, 4, Policy::SwapAware);
+            eng.serve_iterative(&mut sched, ClockModel::Analytic {
+                swap_s: 1e-4, batch_s: 1e-3, token_s: 1e-4,
+            }).unwrap();
+            let out = (eng.prefix.stats.hits,
+                       eng.prefix.stats.invalidations,
+                       eng.stats.tokens);
+            eng.finish().unwrap();
+            out
+        };
+        // Roomy registry: tenant 0 stays resident, request 2 hits.
+        let (hits, invalidations, warm_tokens) = run(2);
+        assert_eq!(hits, 1);
+        assert_eq!(invalidations, 0);
+        // Capacity 1: the eviction invalidates the subtree.
+        let (hits, invalidations, cold_tokens) = run(1);
+        assert_eq!(hits, 0,
+                   "a re-loaded tenant must never reuse pre-eviction \
+                    cached blocks");
+        assert!(invalidations >= 1);
+        assert_eq!(cold_tokens, warm_tokens + 16,
+                   "the lost hit is recomputed in full");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prefix_off_is_bit_identical_to_a_prefix_free_run() {
+        // The reduction anchor at unit scale (the 25-seed property
+        // lives in tests/properties.rs): --prefix-cache off on a
+        // shared-prefix trace equals (a) off on the same trace with
+        // the prefix FIELD stripped — i.e. a PR-4-era trace with
+        // identical prompts — and (b) cache ON on that stripped
+        // trace (an unmatched cache is provably inert).
+        let trace = trace::synthesize(&TraceSpec {
+            n_requests: 60, n_tenants: 4, deadline_ms: 40.0,
+            burstiness: 2.0, decode_tokens: 8,
+            shared_prefix_tokens: 24, ..Default::default()
+        });
+        let stripped: Vec<Request> = trace.requests.iter().cloned()
+            .map(|mut r| {
+                r.shared_prefix_tokens = 0;
+                r
+            }).collect();
+        let clock = ClockModel::Analytic {
+            swap_s: 2e-3, batch_s: 5e-4, token_s: 2e-5,
+        };
+        for policy in Policy::ALL {
+            let run = |reqs: Vec<Request>, cache: bool| {
+                let mut eng = engine_for(trace.pool.clone());
+                eng.configure_kv(32, 16, true);
+                eng.configure_prefix(cache);
+                let mut sched = OnlineScheduler::new(
+                    reqs, trace.pool.len(), 8, policy);
+                eng.serve_iterative(&mut sched, clock).unwrap();
+                eng.finish().unwrap();
+                (eng.checksum, eng.stats.tokens, eng.stats.swaps,
+                 eng.stats.steps, eng.stats.virtual_s,
+                 eng.stats.deadline_misses, eng.stats.preemptions)
+            };
+            let off = run(trace.requests.clone(), false);
+            let off_stripped = run(stripped.clone(), false);
+            let on_stripped = run(stripped.clone(), true);
+            assert_eq!(off, off_stripped,
+                       "{policy:?}: off-mode must ignore the prefix \
+                        fields entirely");
+            assert_eq!(off, on_stripped,
+                       "{policy:?}: an unmatched cache must be inert");
+        }
+    }
+
+    #[test]
+    fn report_json_exposes_the_counters() {
+        let trace = trace::synthesize(&TraceSpec {
+            n_requests: 40, n_tenants: 3, deadline_ms: 40.0,
+            decode_tokens: 8, shared_prefix_tokens: 32,
+            ..Default::default()
+        });
+        let n = trace.requests.len() as f64;
+        let mut eng = engine_for(trace.pool.clone());
+        eng.configure_kv(64, 16, true);
+        let mut sched = OnlineScheduler::new(
+            trace.requests, trace.pool.len(), 8, Policy::SloAware);
+        eng.serve_iterative(&mut sched, ClockModel::Analytic {
+            swap_s: 2e-3, batch_s: 5e-4, token_s: 2e-5,
+        }).unwrap();
+        let j = eng.report_json();
+        let f = |k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap();
+        assert_eq!(f("requests"), n);
+        assert!(f("steps") > 0.0);
+        assert!(f("tokens") > 0.0);
+        assert_eq!(j.get("deadline").and_then(|d| d.get("total"))
+                   .and_then(|v| v.as_f64()).unwrap(), n);
+        let ttft = j.get("latency").and_then(|l| l.get("ttft"))
+            .expect("iterative run reports ttft");
+        assert_eq!(ttft.get("n").and_then(|v| v.as_f64()).unwrap(), n);
+        assert!(ttft.get("p99_ms").is_some());
+        assert!(j.get("kv").and_then(|k| k.get("peak_blocks"))
+                .is_some());
+        assert!(j.get("preemptions").and_then(|p| p.get("total"))
+                .is_some());
+        let pc = j.get("prefix_cache").expect("cache on by default");
+        assert!(pc.get("hits").and_then(|v| v.as_f64()).unwrap()
+                >= 1.0, "the shared-prefix trace must actually hit");
+        // Machine-readable round trip.
+        let text = j.to_string();
+        assert_eq!(crate::util::json::Json::parse(&text).unwrap(), j);
+        eng.finish().unwrap();
     }
 
     #[test]

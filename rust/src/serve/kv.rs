@@ -16,12 +16,19 @@
 //!   * each in-flight sequence holds a block list ([`KvSeq`]) that
 //!     grows one token per decode step — alloc and free are O(1) pops
 //!     and pushes on a free-list stack;
-//!   * the pool keeps an occupancy/fragmentation ledger
-//!     ([`KvStats`]): peak/live blocks and resident tokens, internal
-//!     fragmentation (allocated-but-unfilled token slots in each
-//!     sequence's last block), allocation clamps and grow failures —
-//!     the raw signals the scheduler's admission gate and the engine's
-//!     preemption policy act on.
+//!   * blocks are REFERENCE-COUNTED (PR 5): the prefix cache
+//!     (`serve::prefix`) and any number of sequences can hold the same
+//!     block, so same-tenant prompts share their system-prompt KV
+//!     instead of recomputing it. A shared partially-filled tail block
+//!     is never written in place — extending one forks it
+//!     copy-on-write ([`KvPool::grow`] allocates a fresh block for the
+//!     extender's share and drops its reference on the shared
+//!     original);
+//!   * the occupancy ledger ([`KvStats`]) distinguishes PINNED blocks
+//!     (referenced by at least one live sequence) from RECLAIMABLE
+//!     ones (held only by the prefix cache, refcount 1): reclaimable
+//!     blocks are free capacity the admission gate may count and the
+//!     cache's LRU reclaim hands back under pressure.
 //!
 //! `--kv-blocks 0` (the default) is the UNLIMITED pool: block ids are
 //! minted on demand, nothing ever fails, and admission gating is
@@ -45,9 +52,10 @@ pub fn blocks_for(tokens: usize, block_tokens: usize) -> usize {
 }
 
 /// One in-flight sequence's slice of the pool: the block list plus the
-/// number of token slots actually filled. Handles are move-only and
-/// must be returned via [`KvPool::release`] — dropping one leaks its
-/// blocks (caught by the pool's live-block ledger in tests).
+/// number of token slots the sequence logically covers (shared prefix
+/// blocks included). Handles are move-only and must be returned via
+/// [`KvPool::release`] — dropping one leaks its references (caught by
+/// the pool's live-block ledger in tests).
 #[derive(Debug, Default)]
 pub struct KvSeq {
     blocks: Vec<u32>,
@@ -61,6 +69,11 @@ impl KvSeq {
 
     pub fn n_blocks(&self) -> usize {
         self.blocks.len()
+    }
+
+    /// Block ids, in sequence order (shared prefix blocks first).
+    pub fn block_ids(&self) -> &[u32] {
+        &self.blocks
     }
 
     /// Token slots allocated but not filled — the sequence's internal
@@ -79,21 +92,31 @@ pub struct KvStats {
     /// High-water marks over the pool's lifetime.
     pub peak_blocks: usize,
     pub peak_tokens: usize,
+    /// Peak cache-only (reclaimable) occupancy.
+    pub peak_reclaimable: usize,
     /// `grow` calls refused for lack of free blocks (each is a
     /// memory-pressure event the engine answers with preemption).
     pub grow_fails: u64,
     /// Allocations clamped below the requested size by `alloc_clamped`
-    /// (an oversized request degrading to a capped cache).
+    /// / `grow_clamped` (an oversized request degrading to a capped
+    /// cache).
     pub alloc_clamps: u64,
     /// Tokens that continued WITHOUT cache growth (capped sequences —
     /// the sliding-window degrade path for requests bigger than the
     /// entire pool). Never counted against pool blocks.
     pub overflow_tokens: u64,
+    /// Copy-on-write forks: a sequence extended a shared
+    /// partially-filled tail block and got its own copy instead of
+    /// corrupting the shared KV.
+    pub cow_forks: u64,
+    /// Dereferences refused because the block was already free — the
+    /// double-free guard (state is left untouched).
+    pub double_free_refused: u64,
 }
 
-/// The paged allocator. Fixed-size token blocks, O(1) alloc/free via a
-/// free-list stack; bounded (`n_blocks > 0`) or unlimited
-/// (`n_blocks == 0`, ids minted on demand, nothing fails).
+/// The paged allocator. Fixed-size token blocks, reference-counted,
+/// O(1) alloc/free via a free-list stack; bounded (`n_blocks > 0`) or
+/// unlimited (`n_blocks == 0`, ids minted on demand, nothing fails).
 #[derive(Debug)]
 pub struct KvPool {
     /// Pool bound in blocks; 0 = unlimited.
@@ -106,10 +129,21 @@ pub struct KvPool {
     free: Vec<u32>,
     /// Next never-used id (bounded: < n_blocks; unlimited: unbounded).
     next_fresh: u32,
-    /// Live (handed-out) blocks / filled token slots across all
-    /// sequences.
+    /// Per-block reference count (sequences + at most one prefix-cache
+    /// hold), indexed by block id; 0 ⇔ the id is on the free list.
+    refs: Vec<u32>,
+    /// Per-block prefix-cache hold flag (set/cleared via
+    /// `mark_cached`/`uncache`).
+    cached: Vec<bool>,
+    /// Per-block filled token slots (counted ONCE however many
+    /// sequences share the block).
+    fill: Vec<u32>,
+    /// Live (refcount > 0) blocks / distinct filled token slots.
     used_blocks: usize,
     resident_tokens: usize,
+    /// Blocks held ONLY by the prefix cache (cached && refs == 1) —
+    /// reclaimable capacity.
+    reclaimable: usize,
     pub stats: KvStats,
 }
 
@@ -119,8 +153,9 @@ impl KvPool {
                bytes_per_token: usize) -> KvPool {
         KvPool { n_blocks, block_tokens: block_tokens.max(1),
                  bytes_per_token, free: Vec::new(), next_fresh: 0,
-                 used_blocks: 0, resident_tokens: 0,
-                 stats: KvStats::default() }
+                 refs: Vec::new(), cached: Vec::new(),
+                 fill: Vec::new(), used_blocks: 0, resident_tokens: 0,
+                 reclaimable: 0, stats: KvStats::default() }
     }
 
     /// The unlimited pool the engine defaults to: pure accounting, no
@@ -150,6 +185,19 @@ impl KvPool {
         self.used_blocks
     }
 
+    /// Live blocks referenced by at least one sequence (live minus
+    /// cache-only holds) — what genuinely cannot be freed right now.
+    pub fn pinned_blocks(&self) -> usize {
+        self.used_blocks - self.reclaimable
+    }
+
+    /// Live blocks held ONLY by the prefix cache — capacity the
+    /// cache's LRU reclaim can hand back on demand, so the admission
+    /// gate may count it as available.
+    pub fn reclaimable_blocks(&self) -> usize {
+        self.reclaimable
+    }
+
     pub fn resident_tokens(&self) -> usize {
         self.resident_tokens
     }
@@ -158,11 +206,22 @@ impl KvPool {
         self.resident_tokens * self.bytes_per_token
     }
 
-    /// Free blocks (usize::MAX when unlimited) — what the scheduler's
-    /// admission gate compares projected needs against.
+    /// Strictly free blocks (usize::MAX when unlimited); reclaimable
+    /// cached blocks are NOT counted — see [`Self::available_blocks`].
     pub fn free_blocks(&self) -> usize {
         if self.is_bounded() {
             self.n_blocks - self.used_blocks
+        } else {
+            usize::MAX
+        }
+    }
+
+    /// Free plus reclaimable blocks — what the scheduler's admission
+    /// gate compares projected needs against (the cache yields its
+    /// unreferenced blocks before admission ever fails on them).
+    pub fn available_blocks(&self) -> usize {
+        if self.is_bounded() {
+            self.free_blocks() + self.reclaimable
         } else {
             usize::MAX
         }
@@ -174,10 +233,20 @@ impl KvPool {
         blocks_for(tokens, self.block_tokens)
     }
 
-    /// Allocated-but-unfilled token slots across all live sequences —
+    /// Allocated-but-unfilled token slots across all live blocks —
     /// the pool's aggregate internal fragmentation.
     pub fn frag_tokens(&self) -> usize {
         self.used_blocks * self.block_tokens - self.resident_tokens
+    }
+
+    /// Current reference count of a minted block (0 = free).
+    pub fn refs_of(&self, id: u32) -> u32 {
+        self.refs[id as usize]
+    }
+
+    /// Filled token slots of a minted block.
+    pub fn fill_of(&self, id: u32) -> usize {
+        self.fill[id as usize] as usize
     }
 
     fn take_block(&mut self) -> Option<u32> {
@@ -190,6 +259,9 @@ impl KvPool {
         }
         let id = self.next_fresh;
         self.next_fresh += 1;
+        self.refs.push(0);
+        self.cached.push(false);
+        self.fill.push(0);
         Some(id)
     }
 
@@ -198,21 +270,109 @@ impl KvPool {
             self.stats.peak_blocks.max(self.used_blocks);
         self.stats.peak_tokens =
             self.stats.peak_tokens.max(self.resident_tokens);
+        self.stats.peak_reclaimable =
+            self.stats.peak_reclaimable.max(self.reclaimable);
+    }
+
+    /// Mint one block with refcount 1 holding `fill` token slots.
+    fn new_block(&mut self, fill: usize) -> Option<u32> {
+        let id = self.take_block()?;
+        let i = id as usize;
+        self.refs[i] = 1;
+        self.cached[i] = false;
+        self.fill[i] = fill as u32;
+        self.used_blocks += 1;
+        self.resident_tokens += fill;
+        Some(id)
+    }
+
+    /// Take one more reference on a live block (a sequence attaching a
+    /// cached prefix block, or the cache taking its donation hold).
+    pub fn share(&mut self, id: u32) {
+        let i = id as usize;
+        assert!(self.refs[i] > 0, "sharing free block {id}");
+        if self.refs[i] == 1 && self.cached[i] {
+            self.reclaimable -= 1;
+        }
+        self.refs[i] += 1;
+    }
+
+    /// Drop one reference; frees the block at zero. Refuses (and
+    /// ledgers) a dereference of an already-free block instead of
+    /// corrupting the free list — the double-free guard.
+    pub fn unref(&mut self, id: u32) -> bool {
+        let i = id as usize;
+        if self.refs[i] == 0 {
+            self.stats.double_free_refused += 1;
+            return false;
+        }
+        self.refs[i] -= 1;
+        if self.refs[i] == 0 {
+            if self.cached[i] {
+                // The cache's own hold is a reference, so a cached
+                // block can only die through `uncache`; clear the
+                // flag defensively if a caller got here anyway.
+                self.cached[i] = false;
+                self.reclaimable -= 1;
+            }
+            self.used_blocks -= 1;
+            self.resident_tokens -= self.fill[i] as usize;
+            self.fill[i] = 0;
+            self.free.push(id);
+        } else if self.refs[i] == 1 && self.cached[i] {
+            self.reclaimable += 1;
+            self.stats.peak_reclaimable =
+                self.stats.peak_reclaimable.max(self.reclaimable);
+        }
+        true
+    }
+
+    /// The prefix cache takes its hold on a live block (one extra
+    /// reference + the cached flag). No-op if already cached.
+    pub fn mark_cached(&mut self, id: u32) {
+        let i = id as usize;
+        if self.cached[i] {
+            return;
+        }
+        self.share(id);
+        self.cached[i] = true;
+        if self.refs[i] == 1 {
+            // Unreachable in practice (the donor still holds it), but
+            // keep the ledger closed under any call order.
+            self.reclaimable += 1;
+        }
+        self.note_peaks();
+    }
+
+    /// The prefix cache drops its hold (reclaim or invalidation): the
+    /// cached flag clears and the cache's reference is released —
+    /// freeing the block if no sequence still pins it.
+    pub fn uncache(&mut self, id: u32) {
+        let i = id as usize;
+        assert!(self.cached[i], "uncaching a block the cache does not \
+                                 hold: {id}");
+        if self.refs[i] == 1 {
+            self.reclaimable -= 1;
+        }
+        self.cached[i] = false;
+        self.unref(id);
     }
 
     /// Allocate a sequence holding `tokens`; None (and no state
-    /// change) if the blocks don't fit the pool.
+    /// change) if the blocks don't fit the pool's FREE list (the
+    /// caller reclaims cached blocks first — see `serve::prefix`).
     pub fn try_alloc(&mut self, tokens: usize) -> Option<KvSeq> {
         let need = self.blocks_for(tokens);
         if need > self.free_blocks() {
             return None;
         }
         let mut blocks = Vec::with_capacity(need);
+        let mut left = tokens;
         for _ in 0..need {
-            blocks.push(self.take_block().expect("free-count checked"));
+            let f = left.min(self.block_tokens);
+            blocks.push(self.new_block(f).expect("free-count checked"));
+            left -= f;
         }
-        self.used_blocks += need;
-        self.resident_tokens += tokens;
         self.stats.allocs += 1;
         self.note_peaks();
         Some(KvSeq { blocks, tokens })
@@ -237,26 +397,118 @@ impl KvPool {
         self.try_alloc(fit).expect("clamped size fits by construction")
     }
 
+    /// Start a sequence on `blocks` already resident in the pool —
+    /// prefix-cache hits. Each block gains a reference; the sequence
+    /// starts at `tokens` logical tokens (the cached coverage). The
+    /// uncached prompt suffix is then added with [`Self::grow`] /
+    /// [`Self::grow_clamped`].
+    pub fn attach(&mut self, blocks: &[u32], tokens: usize) -> KvSeq {
+        for &b in blocks {
+            self.share(b);
+        }
+        self.stats.allocs += 1;
+        KvSeq { blocks: blocks.to_vec(), tokens }
+    }
+
+    /// True when growing `seq` would write into a tail block some
+    /// other holder (cache or sequence) also references — the
+    /// copy-on-write trigger.
+    fn tail_needs_fork(&self, seq: &KvSeq) -> bool {
+        seq.blocks.len() * self.block_tokens > seq.tokens
+            && seq.blocks.last()
+                .is_some_and(|&b| self.refs[b as usize] > 1)
+    }
+
+    /// Fork the shared tail: a fresh block takes over this sequence's
+    /// share of it (the copy-on-write write side), and the sequence
+    /// drops its reference on the shared original.
+    fn fork_tail(&mut self, seq: &mut KvSeq) {
+        let old = *seq.blocks.last().expect("fork of an empty seq");
+        let tail_tokens =
+            seq.tokens - (seq.blocks.len() - 1) * self.block_tokens;
+        let nb = self.new_block(tail_tokens)
+            .expect("caller checked free blocks");
+        *seq.blocks.last_mut().unwrap() = nb;
+        self.unref(old);
+        self.stats.cow_forks += 1;
+    }
+
     /// Extend `seq` by `extra` token slots, allocating blocks as
-    /// boundaries are crossed. False (and NO state change) when the
-    /// pool is out of blocks — the memory-pressure signal the engine's
-    /// preemption path answers.
+    /// boundaries are crossed and copy-on-write-forking a shared
+    /// partially-filled tail before writing into it. False (and NO
+    /// state change) when the pool is out of free blocks — the
+    /// memory-pressure signal the engine's reclaim/preemption path
+    /// answers.
     pub fn grow(&mut self, seq: &mut KvSeq, extra: usize) -> bool {
+        if extra == 0 {
+            return true;
+        }
+        let fork = self.tail_needs_fork(seq);
         let need = self.blocks_for(seq.tokens + extra)
-            .saturating_sub(seq.blocks.len());
+            .saturating_sub(seq.blocks.len())
+            + usize::from(fork);
         if need > self.free_blocks() {
             self.stats.grow_fails += 1;
             return false;
         }
-        for _ in 0..need {
-            seq.blocks.push(self.take_block()
-                            .expect("free-count checked"));
+        if fork {
+            self.fork_tail(seq);
         }
-        self.used_blocks += need;
-        self.resident_tokens += extra;
+        // Fill the tail's spare slots, then whole fresh blocks.
+        let mut left = extra;
+        let tail_space =
+            seq.blocks.len() * self.block_tokens - seq.tokens;
+        if tail_space > 0 {
+            let add = left.min(tail_space);
+            let t = *seq.blocks.last().unwrap() as usize;
+            self.fill[t] += add as u32;
+            self.resident_tokens += add;
+            left -= add;
+        }
+        while left > 0 {
+            let f = left.min(self.block_tokens);
+            seq.blocks.push(self.new_block(f)
+                            .expect("free-count checked"));
+            left -= f;
+        }
         seq.tokens += extra;
         self.note_peaks();
         true
+    }
+
+    /// Grow by as much of `extra` as fits (all of it preferred) — the
+    /// clamped-degrade analogue of [`Self::alloc_clamped`] for the
+    /// uncached suffix of a prefix-cache hit. Returns the tokens
+    /// actually grown; the shortfall is ledgered as overflow.
+    pub fn grow_clamped(&mut self, seq: &mut KvSeq,
+                        extra: usize) -> usize {
+        if self.grow(seq, extra) {
+            return extra;
+        }
+        // grow() counted the grow_fail; now mirror alloc_clamped's
+        // clamp ledger on the shortfall and take what fits.
+        let free = self.free_blocks();
+        let tail_space =
+            seq.blocks.len() * self.block_tokens - seq.tokens;
+        let fit = if self.tail_needs_fork(seq) {
+            // The fork itself costs one free block, which then has
+            // the tail's spare slots.
+            if free == 0 {
+                0
+            } else {
+                tail_space + (free - 1) * self.block_tokens
+            }
+        } else {
+            tail_space + free * self.block_tokens
+        }
+        .min(extra);
+        self.stats.alloc_clamps += 1;
+        self.stats.overflow_tokens += (extra - fit) as u64;
+        if fit > 0 {
+            assert!(self.grow(seq, fit),
+                    "clamped growth fits by construction");
+        }
+        fit
     }
 
     /// A capped sequence advanced one token WITHOUT cache growth (no
@@ -265,14 +517,34 @@ impl KvPool {
         self.stats.overflow_tokens += tokens as u64;
     }
 
-    /// Return a sequence's blocks to the free list (O(1) per block).
+    /// Drop a sequence's references (O(1) per block); blocks nobody
+    /// else holds return to the free list, blocks the prefix cache
+    /// still holds become reclaimable.
     pub fn release(&mut self, seq: KvSeq) {
-        self.used_blocks -= seq.blocks.len();
-        self.resident_tokens -= seq.tokens;
         for id in seq.blocks {
-            self.free.push(id);
+            self.unref(id);
         }
         self.stats.frees += 1;
+    }
+
+    /// Post-drain consistency check: nothing live, nothing cached,
+    /// every minted block back on the free list — i.e. no leaked
+    /// references anywhere. Call after the prefix cache is flushed.
+    pub fn leak_check(&self) -> Result<(), String> {
+        if self.used_blocks != 0 || self.resident_tokens != 0
+            || self.reclaimable != 0
+        {
+            return Err(format!(
+                "{} live blocks ({} resident tokens, {} reclaimable) \
+                 after drain", self.used_blocks, self.resident_tokens,
+                self.reclaimable));
+        }
+        if self.free.len() != self.next_fresh as usize {
+            return Err(format!(
+                "free list holds {} of {} minted blocks — leaked \
+                 refcounts", self.free.len(), self.next_fresh));
+        }
+        Ok(())
     }
 
     /// One-line occupancy summary for reports.
@@ -334,6 +606,7 @@ mod tests {
         assert_eq!(p.free_blocks(), 8);
         assert_eq!(p.stats.peak_blocks, 3);
         assert_eq!(p.stats.peak_tokens, 9);
+        p.leak_check().unwrap();
     }
 
     #[test]
@@ -347,6 +620,7 @@ mod tests {
         ids.sort_unstable();
         assert_eq!(ids, vec![0, 1, 2, 3]);
         p.release(b);
+        p.leak_check().unwrap();
     }
 
     #[test]
@@ -407,6 +681,7 @@ mod tests {
         }
         assert_eq!(p.used_blocks(), 0);
         assert_eq!(p.stats.peak_tokens, 4000);
+        p.leak_check().unwrap();
     }
 
     #[test]
@@ -427,5 +702,169 @@ mod tests {
         assert!(s.contains("16 tokens"));
         assert!(KvPool::new(0, 16, 512).describe()
                 .contains("unlimited"));
+    }
+
+    // ---- PR-5 refcount / CoW / reclaimable-ledger invariants ------
+
+    #[test]
+    fn shared_blocks_free_only_at_refcount_zero() {
+        let mut p = pool(8, 4);
+        let a = p.try_alloc(8).unwrap(); // 2 full blocks
+        let ids = a.blocks.clone();
+        // A second sequence attaches the same 2 blocks.
+        let b = p.attach(&ids, 8);
+        assert_eq!(p.used_blocks(), 2, "sharing mints nothing");
+        assert_eq!(p.resident_tokens(), 8,
+                   "shared slots are counted once");
+        assert_eq!(p.refs_of(ids[0]), 2);
+        p.release(a);
+        assert_eq!(p.used_blocks(), 2, "b still pins the blocks");
+        assert_eq!(p.refs_of(ids[0]), 1);
+        p.release(b);
+        assert_eq!(p.used_blocks(), 0);
+        p.leak_check().unwrap();
+    }
+
+    #[test]
+    fn double_free_is_refused_not_corrupting() {
+        let mut p = pool(4, 4);
+        let a = p.try_alloc(4).unwrap();
+        let id = a.blocks[0];
+        p.release(a);
+        assert_eq!(p.used_blocks(), 0);
+        // A stray dereference of the already-free block is refused…
+        assert!(!p.unref(id));
+        assert_eq!(p.stats.double_free_refused, 1);
+        // …and the free list is intact: the whole pool still allocates
+        // exactly once.
+        let b = p.try_alloc(16).unwrap();
+        assert_eq!(b.n_blocks(), 4);
+        assert!(p.try_alloc(4).is_none());
+        p.release(b);
+        p.leak_check().unwrap();
+    }
+
+    #[test]
+    fn cached_blocks_are_reclaimable_until_pinned() {
+        let mut p = pool(8, 4);
+        let a = p.try_alloc(8).unwrap();
+        let ids = a.blocks.clone();
+        // The cache takes its hold: blocks stay pinned by `a`.
+        p.mark_cached(ids[0]);
+        p.mark_cached(ids[1]);
+        assert_eq!(p.reclaimable_blocks(), 0, "donor still holds them");
+        assert_eq!(p.pinned_blocks(), 2);
+        p.release(a);
+        // Now cache-only: live but reclaimable, not pinned.
+        assert_eq!(p.used_blocks(), 2);
+        assert_eq!(p.reclaimable_blocks(), 2);
+        assert_eq!(p.pinned_blocks(), 0);
+        assert_eq!(p.available_blocks(), 8, "reclaimable counts as \
+                                             available");
+        assert_eq!(p.free_blocks(), 6, "but not as strictly free");
+        // A hit re-pins one of them.
+        let b = p.attach(&ids[..1], 4);
+        assert_eq!(p.reclaimable_blocks(), 1);
+        assert_eq!(p.pinned_blocks(), 1);
+        p.release(b);
+        assert_eq!(p.reclaimable_blocks(), 2);
+        // Uncache frees them.
+        p.uncache(ids[0]);
+        p.uncache(ids[1]);
+        assert_eq!(p.used_blocks(), 0);
+        assert!(p.stats.peak_reclaimable >= 2);
+        p.leak_check().unwrap();
+    }
+
+    #[test]
+    fn growing_a_shared_partial_tail_forks_copy_on_write() {
+        let mut p = pool(8, 4);
+        // Donor: 6 tokens = 1 full block + a 2-token tail.
+        let a = p.try_alloc(6).unwrap();
+        let ids = a.blocks.clone();
+        p.mark_cached(ids[0]);
+        p.mark_cached(ids[1]);
+        p.release(a);
+        // A new sequence attaches the cached prefix and extends it.
+        let mut b = p.attach(&ids, 6);
+        assert!(p.grow(&mut b, 4), "fork + growth fit the pool");
+        assert_eq!(p.stats.cow_forks, 1);
+        // The shared tail was NOT written: it keeps its 2 tokens and
+        // its cache hold; b's new tail is a different block.
+        assert_eq!(p.fill_of(ids[1]), 2);
+        assert_ne!(b.blocks[1], ids[1], "tail must be forked");
+        assert_eq!(b.tokens(), 10);
+        assert_eq!(p.fill_of(b.blocks[1]), 2 + 2,
+                   "fork copies the 2 shared tail tokens and growth \
+                    fills its 2 spare slots; a fresh block takes the \
+                    remaining 2");
+        assert_eq!(p.fill_of(b.blocks[2]), 2);
+        // Full shared blocks are never forked.
+        assert_eq!(b.blocks[0], ids[0]);
+        // The cached tail went back to reclaimable when b forked off.
+        assert_eq!(p.refs_of(ids[1]), 1);
+        assert_eq!(p.reclaimable_blocks(), 1);
+        p.release(b);
+        p.uncache(ids[0]);
+        p.uncache(ids[1]);
+        p.leak_check().unwrap();
+    }
+
+    #[test]
+    fn fork_counts_against_free_blocks() {
+        // Pool of 2: donor fills both (full + partial tail). After the
+        // donor releases, an attacher extending the shared tail needs
+        // ONE free block for the fork — and there is none until the
+        // cache yields.
+        let mut p = pool(2, 4);
+        let a = p.try_alloc(6).unwrap();
+        let ids = a.blocks.clone();
+        p.mark_cached(ids[0]);
+        p.mark_cached(ids[1]);
+        p.release(a);
+        let mut b = p.attach(&ids, 6);
+        assert!(!p.grow(&mut b, 1), "fork needs a free block");
+        assert_eq!(p.stats.grow_fails, 1);
+        // The cache yields the tail (simulating LRU reclaim)… but the
+        // tail is still shared by b, so uncache only unpins it; the
+        // fork still needs the free list. Release b's hold first.
+        p.release(b);
+        p.uncache(ids[1]);
+        assert_eq!(p.free_blocks(), 1);
+        let mut c = p.attach(&ids[..1], 4);
+        assert!(p.grow(&mut c, 2), "full-block tail: append, no fork");
+        assert_eq!(p.stats.cow_forks, 0);
+        p.release(c);
+        p.uncache(ids[0]);
+        p.leak_check().unwrap();
+    }
+
+    #[test]
+    fn grow_clamped_takes_what_fits_and_ledgers_the_rest() {
+        let mut p = pool(3, 4);
+        let mut a = p.try_alloc(4).unwrap(); // 1 block
+        // Ask for 100 more: 2 free blocks = 8 slots fit.
+        assert_eq!(p.grow_clamped(&mut a, 100), 8);
+        assert_eq!(a.tokens(), 12);
+        assert_eq!(p.stats.alloc_clamps, 1);
+        assert_eq!(p.stats.overflow_tokens, 92);
+        assert_eq!(p.used_blocks(), 3);
+        // Nothing left: clamp to zero, ledger only.
+        assert_eq!(p.grow_clamped(&mut a, 5), 0);
+        assert_eq!(p.stats.overflow_tokens, 97);
+        p.release(a);
+        p.leak_check().unwrap();
+    }
+
+    #[test]
+    fn attach_with_no_blocks_is_an_empty_start() {
+        let mut p = pool(4, 4);
+        let mut a = p.attach(&[], 0);
+        assert_eq!(a.n_blocks(), 0);
+        assert!(p.grow(&mut a, 5));
+        assert_eq!(a.n_blocks(), 2);
+        assert_eq!(a.tokens(), 5);
+        p.release(a);
+        p.leak_check().unwrap();
     }
 }

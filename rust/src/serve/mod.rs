@@ -31,13 +31,27 @@
 //!     (absent fields read back as the old defaults, so archived
 //!     traces stay valid).
 //!   * [`kv`]        — the paged KV-cache memory manager: a bounded
-//!     pool of fixed-size token blocks (`--kv-blocks` /
-//!     `--kv-block-tokens`, bytes per token from
+//!     pool of fixed-size REFERENCE-COUNTED token blocks
+//!     (`--kv-blocks` / `--kv-block-tokens`, bytes per token from
 //!     `ModelInfo::kv_bytes_per_token`), per-sequence block lists
-//!     with O(1) alloc/free, and the occupancy / fragmentation /
-//!     pressure ledger the admission gate and preemption policy act
-//!     on. `--kv-blocks 0` = unlimited (pure accounting, PR-3
-//!     behaviour).
+//!     with O(1) alloc/free, copy-on-write forks of shared
+//!     partially-filled tails, and the occupancy / fragmentation /
+//!     pressure ledger — now split into pinned vs reclaimable
+//!     (cache-only) occupancy — that the admission gate and
+//!     preemption policy act on. `--kv-blocks 0` = unlimited (pure
+//!     accounting, PR-3 behaviour).
+//!   * [`prefix`]    — the per-tenant prefix-sharing radix cache
+//!     (`--prefix-cache`, default on): completed and preempted
+//!     sequences donate the blocks covering their shared prompt
+//!     prefix (`--shared-prefix-tokens` system prompts), later
+//!     same-tenant prefills attach them (refcount bump, zero
+//!     compute) and charge only the uncached suffix to the step
+//!     budget and the clock; LRU reclaim yields cache-only blocks
+//!     under pressure, and a registry eviction/reload of a tenant's
+//!     adapter invalidates that tenant's subtree (the splice changed
+//!     the merged weights ⇒ its cached KV is stale). Sharing is
+//!     strictly per-tenant for the same reason. `--prefix-cache off`
+//!     = bit-for-bit the PR-4 engine.
 //!   * [`engine`]    — the serving engine around the
 //!     [`engine::ForwardBackend`] trait (host GEMM always available;
 //!     PJRT drives the lowered eval artifact when `make artifacts`
@@ -66,6 +80,7 @@
 pub mod cost;
 pub mod engine;
 pub mod kv;
+pub mod prefix;
 pub mod registry;
 pub mod scheduler;
 pub mod trace;

@@ -1,0 +1,555 @@
+//! Prefix-sharing radix cache over the paged KV pool (PR 5).
+//!
+//! PaCA's merged serving makes each tenant's forward the bare spliced
+//! base model, so two same-tenant requests that open with the same
+//! tokens — a system prompt, a few-shot header — compute IDENTICAL KV
+//! for that prefix on every request. This module converts that repeat
+//! compute into block reuse on the `serve::kv` pool: completed (and
+//! preempted) sequences DONATE the blocks covering their shared prompt
+//! prefix to a per-tenant radix tree instead of freeing them, and a
+//! later prefill ATTACHES the matched blocks (refcount bump, zero
+//! compute) and pays only the uncached suffix — the measured TTFT and
+//! prefill-token win of "LoRA Is Slower Than You Think" /
+//! LoRAFusion's shared-prefix regime, on the PaCA serving stack.
+//!
+//! Two PaCA-specific correctness rules:
+//!
+//!   * Sharing is strictly PER-TENANT. Hot-splicing a tenant's
+//!     adapter columns changes the merged weights, so the same tokens
+//!     produce DIFFERENT KV under different tenants — a cross-tenant
+//!     hit would serve silently wrong attention state. Each tenant
+//!     gets its own tree; there is no global match path at all.
+//!   * A tenant's cached KV is only valid for the adapter generation
+//!     it was computed under. When the registry evicts or reloads a
+//!     tenant's adapter ([`AdapterRegistry`] bumps the tenant's
+//!     generation), the whole subtree is invalidated — the spliced
+//!     base that produced those blocks no longer exists.
+//!
+//! Because the synthesized workload models one system prompt per
+//! tenant, each per-tenant tree is a single radix PATH: a chain of
+//! blocks, all full except possibly the last ([`Chain`]). Matching is
+//! block-granular — a cached block matches only if the request's
+//! prompt covers the block's entire filled content ([`cover_match`],
+//! shared verbatim with the scheduler's admission projection so the
+//! gate and the attach can never disagree). Donations extend the
+//! chain; a donor whose block out-fills a cached partial tail replaces
+//! it (the radix "longest prefix wins" rule).
+//!
+//! Cached blocks nobody is running on (pool refcount 1 — the cache's
+//! own hold) are RECLAIMABLE: [`PrefixCache::reclaim`] hands them back
+//! under memory pressure, least-recently-hit tenant first, deepest
+//! block first (a chain must stay a prefix — the tail is always the
+//! only removable block). Blocks a live sequence shares stay pinned
+//! and are never reclaimed from under it.
+
+use crate::serve::kv::KvPool;
+use crate::serve::scheduler::TenantId;
+
+/// The usable shared prefix of a prompt: the LAST prompt token is
+/// always computed (it emits the request's first output token), so at
+/// most `prompt_tokens − 1` prefix tokens can ever come from cache.
+/// Shared by the engine's attach and the scheduler's projection — the
+/// same no-drift discipline as [`cover_match`].
+pub fn usable_prefix(shared_prefix_tokens: usize,
+                     prompt_tokens: usize) -> usize {
+    shared_prefix_tokens.min(prompt_tokens.saturating_sub(1))
+}
+
+/// THE block-granular match rule, shared by the cache's lookup and the
+/// scheduler's admission projection: given a tenant's cached cover
+/// (`full_blocks` full blocks plus a partial tail of `tail_fill`
+/// tokens, 0 = none), how much of a `want`-token prefix is served from
+/// cache. Returns (full blocks matched, partial-tail tokens matched);
+/// hit tokens = `full·block_tokens + tail`. A block matches only if
+/// its ENTIRE filled content fits inside `want`.
+pub fn cover_match(full_blocks: usize, tail_fill: usize,
+                   block_tokens: usize,
+                   want: usize) -> (usize, usize) {
+    let bt = block_tokens.max(1);
+    let full = full_blocks.min(want / bt);
+    let tail = if full == full_blocks && tail_fill > 0
+        && full_blocks * bt + tail_fill <= want
+    {
+        tail_fill
+    } else {
+        0
+    };
+    (full, tail)
+}
+
+/// One lookup's result: the cached blocks to attach (in sequence
+/// order) and the prompt tokens they cover.
+#[derive(Debug, Default)]
+pub struct PrefixMatch {
+    pub blocks: Vec<u32>,
+    pub tokens: usize,
+}
+
+/// Hit / donation / reclaim / invalidation ledger.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PrefixStats {
+    pub lookups: u64,
+    /// Lookups that matched at least one block.
+    pub hits: u64,
+    /// Prompt tokens served from cache instead of recomputed.
+    pub hit_tokens: u64,
+    /// Blocks handed to the cache by completing/preempted sequences.
+    pub donated_blocks: u64,
+    /// Cache-only blocks reclaimed under memory pressure (LRU).
+    pub reclaimed_blocks: u64,
+    /// Tenant subtrees dropped because the registry evicted/reloaded
+    /// the tenant's adapter (stale KV) — plus explicit invalidations.
+    pub invalidations: u64,
+}
+
+/// One tenant's radix path: blocks all full except possibly the last.
+#[derive(Debug)]
+struct Chain {
+    blocks: Vec<u32>,
+    /// Filled tokens of the LAST block (== block_tokens when full).
+    tail_fill: usize,
+    /// Adapter generation this KV was computed under (see
+    /// `AdapterRegistry::generation`).
+    gen: u64,
+    /// LRU stamp: monotone counter value of the last hit/donation.
+    last_hit: u64,
+}
+
+impl Chain {
+    /// (full blocks, partial-tail tokens or 0) — the cover the
+    /// scheduler's projection consumes.
+    fn cover(&self, block_tokens: usize) -> (usize, usize) {
+        if self.tail_fill == block_tokens {
+            (self.blocks.len(), 0)
+        } else {
+            (self.blocks.len() - 1, self.tail_fill)
+        }
+    }
+}
+
+/// The per-tenant prefix cache (see module docs).
+#[derive(Debug)]
+pub struct PrefixCache {
+    enabled: bool,
+    /// Chains indexed by dense `TenantId` (grown on demand).
+    chains: Vec<Option<Chain>>,
+    /// Monotone LRU clock.
+    clock: u64,
+    pub stats: PrefixStats,
+}
+
+impl PrefixCache {
+    pub fn new(enabled: bool) -> PrefixCache {
+        PrefixCache { enabled, chains: Vec::new(), clock: 0,
+                      stats: PrefixStats::default() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    fn chain_mut(&mut self, t: TenantId) -> &mut Option<Chain> {
+        let i = t.index();
+        if i >= self.chains.len() {
+            self.chains.resize_with(i + 1, || None);
+        }
+        &mut self.chains[i]
+    }
+
+    /// Tenants that currently have a cached subtree.
+    pub fn tenants(&self) -> Vec<TenantId> {
+        self.chains.iter().enumerate()
+            .filter(|(_, c)| c.is_some())
+            .map(|(i, _)| TenantId(i as u32))
+            .collect()
+    }
+
+    /// Blocks currently held by the cache across all tenants.
+    pub fn cached_blocks(&self) -> usize {
+        self.chains.iter().flatten().map(|c| c.blocks.len()).sum()
+    }
+
+    /// The tenant's cover for admission projection: (full blocks,
+    /// partial-tail tokens). (0, 0) when nothing is cached.
+    pub fn cover(&self, t: TenantId, block_tokens: usize)
+                 -> (usize, usize) {
+        match self.chains.get(t.index()).and_then(Option::as_ref) {
+            Some(c) => c.cover(block_tokens),
+            None => (0, 0),
+        }
+    }
+
+    fn drop_chain(&mut self, t: TenantId, kv: &mut KvPool) -> bool {
+        let Some(chain) = self.chains.get_mut(t.index())
+            .and_then(Option::take)
+        else {
+            return false;
+        };
+        for b in chain.blocks {
+            kv.uncache(b);
+        }
+        true
+    }
+
+    /// Drop the tenant's whole subtree: the registry evicted or
+    /// reloaded its adapter, so every cached block holds KV of a base
+    /// that no longer exists. Blocks live sequences still share are
+    /// merely un-cached (they finish on their own holder's refs).
+    pub fn invalidate_tenant(&mut self, t: TenantId,
+                             kv: &mut KvPool) {
+        if self.drop_chain(t, kv) {
+            self.stats.invalidations += 1;
+        }
+    }
+
+    /// Invalidate the tenant's subtree iff it was built under a
+    /// different adapter generation than `gen` (the engine calls this
+    /// each sync, so scheduler projections, lookups, and donations
+    /// all see the same post-invalidation cache).
+    pub fn invalidate_if_stale(&mut self, t: TenantId, gen: u64,
+                               kv: &mut KvPool) {
+        let stale = self.chains.get(t.index())
+            .and_then(Option::as_ref)
+            .is_some_and(|c| c.gen != gen);
+        if stale {
+            self.invalidate_tenant(t, kv);
+        }
+    }
+
+    /// Flush everything (engine drain): every cache hold is released
+    /// so the pool's leak check sees a quiescent pool. Not counted as
+    /// invalidations — nothing was stale.
+    pub fn clear(&mut self, kv: &mut KvPool) {
+        for i in 0..self.chains.len() {
+            self.drop_chain(TenantId(i as u32), kv);
+        }
+    }
+
+    /// Longest cached prefix of ≤ `want` tokens for `t` under adapter
+    /// generation `gen`. The returned blocks are NOT yet referenced —
+    /// the caller attaches them via [`KvPool::attach`] (the engine
+    /// holds a whole dispatch group's matches before any member
+    /// allocates, so one member's suffix can't reclaim another's
+    /// match).
+    pub fn lookup(&mut self, t: TenantId, want: usize, gen: u64,
+                  kv: &mut KvPool) -> PrefixMatch {
+        if !self.enabled || want == 0 {
+            return PrefixMatch::default();
+        }
+        self.stats.lookups += 1;
+        self.invalidate_if_stale(t, gen, kv);
+        let bt = kv.block_tokens();
+        let clock = {
+            self.clock += 1;
+            self.clock
+        };
+        let Some(chain) = self.chains.get_mut(t.index())
+            .and_then(Option::as_mut)
+        else {
+            return PrefixMatch::default();
+        };
+        let (cf, ct) = chain.cover(bt);
+        let (full, tail) = cover_match(cf, ct, bt, want);
+        let n = full + usize::from(tail > 0);
+        if n == 0 {
+            return PrefixMatch::default();
+        }
+        chain.last_hit = clock;
+        let tokens = full * bt + tail;
+        self.stats.hits += 1;
+        self.stats.hit_tokens += tokens as u64;
+        PrefixMatch { blocks: chain.blocks[..n].to_vec(), tokens }
+    }
+
+    /// A completing (or preempted) sequence hands its shared-prefix
+    /// blocks to the cache instead of freeing them. Only blocks whose
+    /// ENTIRE filled content lies inside the request's
+    /// `shared_prefix_tokens` are donated — a block that also holds
+    /// request-unique prompt or generated tokens would poison the
+    /// tenant's tree. Donations extend the chain (radix: longest
+    /// prefix wins — a full donor block replaces a cached partial
+    /// tail at the same position). The caller still releases the
+    /// sequence afterwards; the cache keeps its own hold.
+    pub fn donate(&mut self, t: TenantId, gen: u64,
+                  seq: &crate::serve::kv::KvSeq,
+                  shared_prefix_tokens: usize, kv: &mut KvPool) {
+        if !self.enabled || shared_prefix_tokens == 0 {
+            return;
+        }
+        let bt = kv.block_tokens();
+        let donate_tokens = shared_prefix_tokens.min(seq.tokens());
+        let full = donate_tokens / bt;
+        // The partial tail is donatable only when the sequence ends
+        // exactly at the prefix boundary (its tail block holds prefix
+        // tokens and nothing else).
+        let tail = if donate_tokens == seq.tokens() {
+            donate_tokens % bt
+        } else {
+            0
+        };
+        if full == 0 && tail == 0 {
+            return;
+        }
+        self.invalidate_if_stale(t, gen, kv);
+        self.clock += 1;
+        let clock = self.clock;
+        let slot = self.chain_mut(t);
+        if slot.is_none() {
+            *slot = Some(Chain { blocks: Vec::new(), tail_fill: bt,
+                                 gen, last_hit: clock });
+        }
+        let chain = slot.as_mut().unwrap();
+        chain.last_hit = clock;
+        let mut donated = 0u64;
+        let blocks = seq.block_ids();
+        for pos in 0..full {
+            let b = blocks[pos];
+            if pos + 1 < chain.blocks.len()
+                || (pos + 1 == chain.blocks.len()
+                    && chain.tail_fill == bt)
+            {
+                continue; // already cached full at this position
+            }
+            if pos + 1 == chain.blocks.len() {
+                // Cached partial tail at this position; the donor's
+                // block here is FULL (it precedes more donor blocks)
+                // — longest prefix wins.
+                kv.uncache(chain.blocks[pos]);
+                chain.blocks[pos] = b;
+            } else {
+                debug_assert_eq!(pos, chain.blocks.len());
+                chain.blocks.push(b);
+            }
+            kv.mark_cached(b);
+            chain.tail_fill = bt;
+            donated += 1;
+        }
+        if tail > 0 {
+            let pos = full;
+            let b = blocks[pos];
+            if pos == chain.blocks.len() {
+                chain.blocks.push(b);
+                kv.mark_cached(b);
+                chain.tail_fill = tail;
+                donated += 1;
+            } else if pos + 1 == chain.blocks.len()
+                && chain.tail_fill < tail
+            {
+                kv.uncache(chain.blocks[pos]);
+                chain.blocks[pos] = b;
+                kv.mark_cached(b);
+                chain.tail_fill = tail;
+                donated += 1;
+            }
+            // Else the cached cover at this position is at least as
+            // long — keep it.
+        }
+        self.stats.donated_blocks += donated;
+    }
+
+    /// Free up to `need` blocks by dropping cache-only (pool refcount
+    /// 1) blocks: least-recently-hit tenant first, tail block first —
+    /// a chain must stay a prefix, so the tail is the only removable
+    /// block; a pinned tail makes the whole chain unreclaimable for
+    /// now. Returns the number of blocks actually freed.
+    pub fn reclaim(&mut self, need: usize, kv: &mut KvPool) -> usize {
+        let mut freed = 0;
+        while freed < need {
+            let mut pick: Option<(u64, usize)> = None;
+            for (i, c) in self.chains.iter().enumerate() {
+                let Some(c) = c else { continue };
+                let Some(&tail) = c.blocks.last() else { continue };
+                if kv.refs_of(tail) != 1 {
+                    continue; // pinned by a live sequence
+                }
+                if pick.is_none_or(|(best, _)| c.last_hit < best) {
+                    pick = Some((c.last_hit, i));
+                }
+            }
+            let Some((_, i)) = pick else { break };
+            let chain = self.chains[i].as_mut().unwrap();
+            let b = chain.blocks.pop().unwrap();
+            kv.uncache(b);
+            chain.tail_fill = kv.block_tokens(); // remaining are full
+            if chain.blocks.is_empty() {
+                self.chains[i] = None;
+            }
+            freed += 1;
+        }
+        self.stats.reclaimed_blocks += freed as u64;
+        freed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::kv::KvPool;
+
+    fn pool(n: usize, bt: usize) -> KvPool {
+        KvPool::new(n, bt, 4)
+    }
+
+    const T0: TenantId = TenantId(0);
+    const T1: TenantId = TenantId(1);
+
+    #[test]
+    fn cover_match_is_block_granular() {
+        // 2 full 16-token blocks + a 4-token tail cached.
+        let m = |want| cover_match(2, 4, 16, want);
+        assert_eq!(m(0), (0, 0));
+        assert_eq!(m(15), (0, 0), "a block matches only whole");
+        assert_eq!(m(16), (1, 0));
+        assert_eq!(m(31), (1, 0));
+        assert_eq!(m(32), (2, 0));
+        assert_eq!(m(35), (2, 0), "tail needs its full 4 tokens");
+        assert_eq!(m(36), (2, 4));
+        assert_eq!(m(500), (2, 4));
+        // No partial tail cached.
+        assert_eq!(cover_match(2, 0, 16, 500), (2, 0));
+    }
+
+    #[test]
+    fn donate_then_lookup_roundtrips_and_shares() {
+        let mut kv = pool(16, 4);
+        let mut pc = PrefixCache::new(true);
+        // Donor: 10-token prompt, 8 of them shared prefix.
+        let a = kv.try_alloc(10).unwrap(); // [4, 4, 2]
+        pc.donate(T0, 0, &a, 8, &mut kv);
+        assert_eq!(pc.stats.donated_blocks, 2,
+                   "only the 2 full prefix blocks; the tail holds \
+                    unique tokens");
+        kv.release(a);
+        assert_eq!(kv.used_blocks(), 2, "donated blocks survive");
+        assert_eq!(kv.reclaimable_blocks(), 2);
+        // Next same-tenant request: wants up to 9 tokens of prefix.
+        let m = pc.lookup(T0, 9, 0, &mut kv);
+        assert_eq!(m.tokens, 8);
+        assert_eq!(m.blocks.len(), 2);
+        assert_eq!(pc.stats.hits, 1);
+        assert_eq!(pc.stats.hit_tokens, 8);
+        let mut b = kv.attach(&m.blocks, m.tokens);
+        assert_eq!(kv.pinned_blocks(), 2);
+        assert!(kv.grow(&mut b, 6)); // unique suffix
+        assert_eq!(b.tokens(), 14);
+        kv.release(b);
+        // A 7-token lookup matches only 1 block.
+        let m = pc.lookup(T0, 7, 0, &mut kv);
+        assert_eq!(m.tokens, 4);
+        // Cross-tenant: NEVER matches.
+        let m = pc.lookup(T1, 8, 0, &mut kv);
+        assert_eq!(m.tokens, 0);
+        pc.clear(&mut kv);
+        kv.leak_check().unwrap();
+    }
+
+    #[test]
+    fn partial_tail_is_donated_and_replaced_by_longer_cover() {
+        let mut kv = pool(16, 4);
+        let mut pc = PrefixCache::new(true);
+        // Donor ends exactly at the 6-token prefix: tail donatable.
+        let a = kv.try_alloc(6).unwrap(); // [4, 2]
+        pc.donate(T0, 0, &a, 6, &mut kv);
+        assert_eq!(pc.stats.donated_blocks, 2);
+        assert_eq!(pc.cover(T0, 4), (1, 2));
+        kv.release(a);
+        // Lookup(6) matches the partial tail too.
+        let m = pc.lookup(T0, 6, 0, &mut kv);
+        assert_eq!(m.tokens, 6);
+        // A longer donor (prefix 8, both blocks full) replaces the
+        // partial tail — longest prefix wins.
+        let b = kv.try_alloc(8).unwrap();
+        pc.donate(T0, 0, &b, 8, &mut kv);
+        assert_eq!(pc.cover(T0, 4), (2, 0));
+        kv.release(b);
+        // A shorter/equal donor never downgrades the cover.
+        let c = kv.try_alloc(6).unwrap();
+        pc.donate(T0, 0, &c, 6, &mut kv);
+        assert_eq!(pc.cover(T0, 4), (2, 0));
+        kv.release(c);
+        assert_eq!(pc.lookup(T0, 8, 0, &mut kv).tokens, 8);
+        pc.clear(&mut kv);
+        kv.leak_check().unwrap();
+    }
+
+    #[test]
+    fn reclaim_takes_lru_tenant_tail_first_and_skips_pinned() {
+        let mut kv = pool(16, 4);
+        let mut pc = PrefixCache::new(true);
+        let a = kv.try_alloc(8).unwrap();
+        pc.donate(T0, 0, &a, 8, &mut kv);
+        kv.release(a);
+        let b = kv.try_alloc(8).unwrap();
+        pc.donate(T1, 0, &b, 8, &mut kv);
+        kv.release(b);
+        // Touch T0: T1 becomes the LRU chain.
+        assert_eq!(pc.lookup(T0, 8, 0, &mut kv).tokens, 8);
+        assert_eq!(kv.reclaimable_blocks(), 4);
+        // Reclaim 3: T1's tail, T1's head, then T0's tail.
+        assert_eq!(pc.reclaim(3, &mut kv), 3);
+        assert_eq!(pc.stats.reclaimed_blocks, 3);
+        assert_eq!(pc.cover(T1, 4), (0, 0), "T1 fully reclaimed");
+        assert_eq!(pc.cover(T0, 4), (1, 0), "T0 kept its head");
+        // Pin T0's remaining block: nothing left to reclaim.
+        let m = pc.lookup(T0, 4, 0, &mut kv);
+        let s = kv.attach(&m.blocks, m.tokens);
+        assert_eq!(pc.reclaim(5, &mut kv), 0,
+                   "a pinned tail blocks the chain");
+        kv.release(s);
+        assert_eq!(pc.reclaim(5, &mut kv), 1);
+        kv.leak_check().unwrap();
+    }
+
+    #[test]
+    fn generation_change_invalidates_the_subtree() {
+        let mut kv = pool(16, 4);
+        let mut pc = PrefixCache::new(true);
+        let a = kv.try_alloc(8).unwrap();
+        pc.donate(T0, 3, &a, 8, &mut kv);
+        kv.release(a);
+        assert_eq!(pc.lookup(T0, 8, 3, &mut kv).tokens, 8,
+                   "same generation hits");
+        // The registry reloaded the adapter: generation 4. The stale
+        // KV must never be served again.
+        assert_eq!(pc.lookup(T0, 8, 4, &mut kv).tokens, 0);
+        assert_eq!(pc.stats.invalidations, 1);
+        assert_eq!(kv.used_blocks(), 0, "stale blocks were freed");
+        assert_eq!(pc.cover(T0, 4), (0, 0));
+        // invalidate_if_stale is idempotent for a missing chain.
+        pc.invalidate_if_stale(T0, 5, &mut kv);
+        assert_eq!(pc.stats.invalidations, 1);
+        // A fresh donation under the new generation works.
+        let b = kv.try_alloc(8).unwrap();
+        pc.donate(T0, 4, &b, 8, &mut kv);
+        kv.release(b);
+        assert_eq!(pc.lookup(T0, 8, 4, &mut kv).tokens, 8);
+        pc.clear(&mut kv);
+        kv.leak_check().unwrap();
+    }
+
+    #[test]
+    fn disabled_cache_is_inert() {
+        let mut kv = pool(16, 4);
+        let mut pc = PrefixCache::new(false);
+        let a = kv.try_alloc(8).unwrap();
+        pc.donate(T0, 0, &a, 8, &mut kv);
+        assert_eq!(pc.lookup(T0, 8, 0, &mut kv).tokens, 0);
+        assert_eq!(pc.stats.lookups, 0);
+        assert_eq!(pc.stats.donated_blocks, 0);
+        assert_eq!(pc.cached_blocks(), 0);
+        kv.release(a);
+        kv.leak_check().unwrap();
+    }
+
+    #[test]
+    fn zero_prefix_requests_donate_nothing() {
+        let mut kv = pool(16, 4);
+        let mut pc = PrefixCache::new(true);
+        let a = kv.try_alloc(8).unwrap();
+        pc.donate(T0, 0, &a, 0, &mut kv);
+        assert_eq!(pc.cached_blocks(), 0);
+        assert_eq!(pc.lookup(T0, 0, 0, &mut kv).tokens, 0);
+        kv.release(a);
+        kv.leak_check().unwrap();
+    }
+}

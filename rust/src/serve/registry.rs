@@ -274,6 +274,15 @@ pub struct AdapterRegistry {
     capacity: usize,
     clock: u64,
     map: HashMap<String, (u64, PacaAdapter)>,
+    /// Per-tenant adapter GENERATION: bumped whenever the tenant's
+    /// resident adapter is evicted or replaced, i.e. whenever the
+    /// weights a future splice will produce may differ from what an
+    /// earlier splice produced. Anything derived from a tenant's
+    /// spliced base — the serving stack's cached prefix KV above all
+    /// — is only valid for the generation it was computed under.
+    /// (Entries outlive eviction on purpose: a re-load after an
+    /// eviction must present a NEW generation.)
+    gen: HashMap<String, u64>,
     pub stats: RegistryStats,
 }
 
@@ -281,6 +290,7 @@ impl AdapterRegistry {
     pub fn new(capacity: usize) -> AdapterRegistry {
         AdapterRegistry { dir: None, capacity: capacity.max(1),
                           clock: 0, map: HashMap::new(),
+                          gen: HashMap::new(),
                           stats: RegistryStats::default() }
     }
 
@@ -316,17 +326,42 @@ impl AdapterRegistry {
         t
     }
 
+    /// The tenant's current adapter generation (0 until its resident
+    /// adapter is first evicted or replaced). Consumers holding
+    /// generation-stamped derived state — the prefix cache's per-
+    /// tenant KV subtrees — compare against this and drop anything
+    /// stale.
+    pub fn generation(&self, tenant: &str) -> u64 {
+        self.gen.get(tenant).copied().unwrap_or(0)
+    }
+
+    fn bump_generation(&mut self, tenant: &str) {
+        *self.gen.entry(tenant.to_string()).or_insert(0) += 1;
+    }
+
     /// Insert (or replace), evicting LRU entries over capacity.
+    /// Replacing a RESIDENT adapter bumps the tenant's generation —
+    /// the new weights may differ, so derived state is stale.
     pub fn insert(&mut self, adapter: PacaAdapter) {
         self.clock += 1;
+        if self.map.contains_key(&adapter.tenant) {
+            self.bump_generation(&adapter.tenant);
+        }
         self.map.insert(adapter.tenant.clone(), (self.clock, adapter));
         while self.map.len() > self.capacity {
             self.evict_lru();
         }
     }
 
+    /// Explicitly evict a tenant (generation bumps: a later reload is
+    /// a NEW generation even if the file is unchanged — the registry
+    /// cannot know, so it must assume staleness).
     pub fn evict(&mut self, tenant: &str) -> Option<PacaAdapter> {
-        self.map.remove(tenant).map(|(_, a)| a)
+        let out = self.map.remove(tenant).map(|(_, a)| a);
+        if out.is_some() {
+            self.bump_generation(tenant);
+        }
+        out
     }
 
     fn evict_lru(&mut self) {
@@ -335,6 +370,7 @@ impl AdapterRegistry {
             .map(|(t, _)| t.clone())
         {
             self.map.remove(&t);
+            self.bump_generation(&t);
             self.stats.evictions += 1;
         }
     }
@@ -503,6 +539,30 @@ mod tests {
         // LRU: t1 was the least recently used.
         assert!(!reg.contains("t1"));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn generations_bump_on_evict_and_replace_only() {
+        let m = tiny();
+        let mut reg = AdapterRegistry::new(2);
+        assert_eq!(reg.generation("t0"), 0);
+        reg.insert(PacaAdapter::synthetic("t0", &m, 2, 5));
+        assert_eq!(reg.generation("t0"), 0,
+                   "first insert is not a replacement");
+        reg.insert(PacaAdapter::synthetic("t0", &m, 2, 6));
+        assert_eq!(reg.generation("t0"), 1, "hot replace bumps");
+        assert!(reg.evict("t0").is_some());
+        assert_eq!(reg.generation("t0"), 2, "evict bumps");
+        assert!(reg.evict("t0").is_none());
+        assert_eq!(reg.generation("t0"), 2,
+                   "evicting an absent tenant is a no-op");
+        // LRU eviction bumps the victim, not the newcomer.
+        reg.insert(PacaAdapter::synthetic("a", &m, 2, 5));
+        reg.insert(PacaAdapter::synthetic("b", &m, 2, 5));
+        reg.insert(PacaAdapter::synthetic("c", &m, 2, 5)); // evicts a
+        assert_eq!(reg.generation("a"), 1);
+        assert_eq!(reg.generation("b"), 0);
+        assert_eq!(reg.generation("c"), 0);
     }
 
     #[test]

@@ -97,6 +97,13 @@ pub struct Request {
     /// decode iteration in the iteration-level engine. 0 = prefill-only
     /// (the default for traces that predate the field).
     pub decode_tokens: usize,
+    /// Leading prompt tokens shared with every other request of this
+    /// TENANT (its system prompt / few-shot header) — what the prefix
+    /// cache can serve without recompute. 0 = fully unique prompt
+    /// (the default for traces that predate the field). Sharing is
+    /// strictly per-tenant: splicing changes the merged weights, so
+    /// the same tokens under another tenant are different KV.
+    pub shared_prefix_tokens: usize,
     /// Arrival timestamp, seconds from trace start. The online
     /// scheduler only sees a request once the clock passes this.
     pub arrival_s: f64,
@@ -308,15 +315,9 @@ impl PendingQueue {
         self.q.front().map(|(seq, _, _)| *seq)
     }
 
-    /// Prefill token count of the front request.
-    fn front_tokens(&self) -> Option<usize> {
-        self.q.front().map(|(_, _, r)| r.tokens)
-    }
-
-    /// Lifetime token footprint (prefill + owed decode) of the front
-    /// request — what its KV cache is projected to hold at completion.
-    fn front_total_tokens(&self) -> Option<usize> {
-        self.q.front().map(|(_, _, r)| r.total_tokens())
+    /// The front request itself (for budget/gate projection).
+    fn front(&self) -> Option<&Request> {
+        self.q.front().map(|(_, _, r)| r)
     }
 
     /// Tightest urgency key among queued requests.
@@ -374,7 +375,28 @@ pub struct OnlineScheduler {
     pub kv_block_tokens: usize,
     /// Free blocks in the engine's pool, refreshed by the serving loop
     /// before every dispatch/join decision (usize::MAX = unlimited).
+    /// With a prefix cache the engine advertises free PLUS reclaimable
+    /// (cache-only blocks its LRU reclaim yields on demand). NOTE:
+    /// with a cache this makes the gate a WATERMARK even for joins —
+    /// a request's projected suffix may be admitted against
+    /// reclaimable capacity that its own attach then pins (the
+    /// matched blocks are counted twice: as cost-free cover here and
+    /// as reclaimable in the advert). Such a sequence degrades to the
+    /// same ledgered clamped cache the budget's oversized-prompt rule
+    /// uses — never an over-commit (fuzz-asserted). Without a cache,
+    /// reclaimable is 0 and the PR-4 join guarantee is unchanged.
     pub kv_free_blocks: usize,
+    /// Block granularity of the prefix-cache cover below (the pool's
+    /// block size; set even when capacity gating is off, because the
+    /// token budget charges the uncached suffix regardless).
+    pub prefix_block_tokens: usize,
+    /// Per-tenant cached-prefix cover advertised by the engine before
+    /// each dispatch/join decision: (full blocks, partial-tail
+    /// tokens). Empty = no prefix cache. Projections run through
+    /// `serve::prefix::cover_match` — the SAME rule the engine's
+    /// attach uses — so what the gate/budget charges and what prefill
+    /// actually computes can never drift.
+    pub kv_prefix_cover: Vec<(usize, usize)>,
 }
 
 impl OnlineScheduler {
@@ -403,6 +425,8 @@ impl OnlineScheduler {
             max_batch_tokens: 0,
             kv_block_tokens: 0,
             kv_free_blocks: usize::MAX,
+            prefix_block_tokens: 0,
+            kv_prefix_cover: Vec::new(),
         }
     }
 
@@ -435,7 +459,10 @@ impl OnlineScheduler {
     /// engine's advertised free blocks — except the very first pop
     /// when `first_fits` (a fresh dispatch must make progress even on
     /// an oversized request; joins pass false and never exceed either
-    /// budget).
+    /// budget). With a prefix cache, both charges cover only the
+    /// UNCACHED part of the request: the prefill step computes (and
+    /// the pool newly allocates) just the suffix beyond the tenant's
+    /// advertised cached cover — see [`Self::projection`].
     fn pop_bounded(&mut self, t: TenantId, max_requests: usize,
                    token_budget: usize, first_fits: bool,
                    keep_going: impl Fn(&OnlineScheduler) -> bool)
@@ -444,27 +471,49 @@ impl OnlineScheduler {
         let mut tokens = 0usize;
         let mut blocks = 0usize;
         while out.len() < max_requests && keep_going(self) {
-            let q = &self.pending[t.index()];
-            let fits = match (q.front_tokens(), q.front_total_tokens())
-            {
-                (Some(next), Some(total)) => {
-                    next <= token_budget.saturating_sub(tokens)
-                        && self.kv_blocks_of(total)
-                            <= self.kv_free_blocks
-                                .saturating_sub(blocks)
-                }
-                _ => break,
+            let Some(front) = self.pending[t.index()].front() else {
+                break;
             };
+            let (charge, need) = self.projection(front);
+            let fits = charge <= token_budget.saturating_sub(tokens)
+                && need <= self.kv_free_blocks.saturating_sub(blocks);
             if !(fits || (first_fits && out.is_empty())) {
                 break;
             }
             let (_, r) = self.pending[t.index()].pop().unwrap();
             self.pending_count -= 1;
-            tokens += r.tokens;
-            blocks += self.kv_blocks_of(r.total_tokens());
+            tokens += charge;
+            blocks += need;
             out.push(r);
         }
         out
+    }
+
+    /// What admitting `r` is projected to cost: (prefill tokens the
+    /// seating step will compute, KV blocks its lifetime cache will
+    /// newly allocate) — both net of the tenant's cached-prefix cover.
+    /// Matched FULL blocks are already resident (they cost nothing);
+    /// everything past them — including a matched partial tail, which
+    /// the engine copy-on-write-forks into a fresh block on extension
+    /// — is charged, so the block projection never undershoots.
+    fn projection(&self, r: &Request) -> (usize, usize) {
+        let bt = self.prefix_block_tokens;
+        let (full, tail) = match self.kv_prefix_cover
+            .get(r.tenant.index())
+        {
+            Some(&(cf, ct)) if bt > 0 => {
+                let want = crate::serve::prefix::usable_prefix(
+                    r.shared_prefix_tokens, r.tokens);
+                crate::serve::prefix::cover_match(cf, ct, bt, want)
+            }
+            _ => (0, 0),
+        };
+        let hit = full * bt + tail;
+        // hit ≤ tokens − 1 by the `want` cap, so both subtractions
+        // stay in range and the charge is always ≥ 1.
+        let charge = r.tokens - hit;
+        let need = self.kv_blocks_of(r.total_tokens() - full * bt);
+        (charge, need)
     }
 
     /// Projected KV blocks for a lifetime footprint of `total_tokens`
@@ -712,7 +761,8 @@ mod tests {
 
     fn req(id: u64, tenant: u32) -> Request {
         Request { id, tenant: TenantId(tenant), tokens: 16,
-                  decode_tokens: 0, arrival_s: id as f64 * 0.01,
+                  decode_tokens: 0, shared_prefix_tokens: 0,
+                  arrival_s: id as f64 * 0.01,
                   deadline_s: f64::INFINITY }
     }
 
@@ -851,7 +901,8 @@ mod tests {
         // next dispatch instead of waiting behind other tenants.
         let mut reqs = vec![req(0, 0), req(1, 0), req(2, 1)];
         reqs.push(Request { id: 3, tenant: TenantId(0), tokens: 16,
-                            decode_tokens: 0, arrival_s: 0.5,
+                            decode_tokens: 0, shared_prefix_tokens: 0,
+                            arrival_s: 0.5,
                             deadline_s: f64::INFINITY });
         let mut s = OnlineScheduler::new(reqs, 2, 1,
                                          Policy::SwapAware);
@@ -879,7 +930,7 @@ mod tests {
         // even though tenant 0 arrived first.
         let mk = |id, tenant, deadline_s| Request {
             id, tenant: TenantId(tenant), tokens: 8, decode_tokens: 0,
-            arrival_s: 0.0, deadline_s,
+            shared_prefix_tokens: 0, arrival_s: 0.0, deadline_s,
         };
         let reqs = vec![mk(0, 0, 10.0), mk(1, 1, 0.05)];
         let mut s = OnlineScheduler::new(reqs, 2, 4, Policy::SloAware);
@@ -900,7 +951,7 @@ mod tests {
         // the penalty at zero it would switch immediately.
         let mk = |id, tenant, deadline_s| Request {
             id, tenant: TenantId(tenant), tokens: 8, decode_tokens: 0,
-            arrival_s: 0.0, deadline_s,
+            shared_prefix_tokens: 0, arrival_s: 0.0, deadline_s,
         };
         let reqs = || vec![mk(0, 0, 0.50), mk(1, 0, 0.50),
                            mk(2, 1, 0.45)];
@@ -1051,6 +1102,58 @@ mod tests {
     }
 
     #[test]
+    fn prefix_cover_charges_only_the_uncached_suffix() {
+        // 40-token prompts whose first 32 tokens are the tenant's
+        // cached prefix (2 full 16-token blocks advertised): the
+        // step budget and the kv gate must both charge only the
+        // 8-token suffix.
+        let reqs = || -> Vec<Request> {
+            (0..5).map(|id| {
+                let mut r = req(id, 0);
+                r.tokens = 40;
+                r.shared_prefix_tokens = 32;
+                r
+            }).collect()
+        };
+        let mut s = OnlineScheduler::new(reqs(), 1, 8,
+                                         Policy::SwapAware);
+        s.max_batch_tokens = 40;
+        s.prefix_block_tokens = 16;
+        s.kv_prefix_cover = vec![(2, 0)];
+        s.admit(10.0);
+        let b = s.dispatch(None, 10.0).unwrap();
+        assert_eq!(b.requests.len(), 5,
+                   "5 × 8-token suffixes fit a 40-token budget");
+        // Without the cover the same budget takes exactly one.
+        let mut s = OnlineScheduler::new(reqs(), 1, 8,
+                                         Policy::SwapAware);
+        s.max_batch_tokens = 40;
+        s.admit(10.0);
+        assert_eq!(s.dispatch(None, 10.0).unwrap().requests.len(), 1);
+        // The kv gate projects suffix blocks too: lifetime 40 − 32
+        // cached = 8 tokens = 1 block each; 3 free blocks admit 3.
+        let mut s = OnlineScheduler::new(reqs(), 1, 8,
+                                         Policy::SwapAware);
+        s.prefix_block_tokens = 16;
+        s.kv_prefix_cover = vec![(2, 0)];
+        s.kv_block_tokens = 16;
+        s.kv_free_blocks = 3;
+        s.admit(10.0);
+        assert_eq!(s.dispatch(None, 10.0).unwrap().requests.len(), 3);
+        // A partial-tail cover only matches when the whole tail fits
+        // inside the usable prefix (block-granular rule).
+        let mut s = OnlineScheduler::new(reqs(), 1, 8,
+                                         Policy::SwapAware);
+        s.max_batch_tokens = 40;
+        s.prefix_block_tokens = 16;
+        s.kv_prefix_cover = vec![(1, 12)]; // covers 16 + 12 = 28 ≤ 32
+        s.admit(10.0);
+        let b = s.dispatch(None, 10.0).unwrap();
+        // charge = 40 − 28 = 12 per request → 3 fit in 40.
+        assert_eq!(b.requests.len(), 3);
+    }
+
+    #[test]
     fn requeue_reenters_behind_pending_work() {
         let reqs = vec![req(0, 0), req(1, 0)];
         let mut s = OnlineScheduler::new(reqs, 1, 1,
@@ -1070,7 +1173,7 @@ mod tests {
     fn urgent_other_slack_probes_other_tenants_only() {
         let mk = |id, tenant, deadline_s| Request {
             id, tenant: TenantId(tenant), tokens: 8, decode_tokens: 0,
-            arrival_s: 0.0, deadline_s,
+            shared_prefix_tokens: 0, arrival_s: 0.0, deadline_s,
         };
         let reqs = vec![mk(0, 0, 0.10), mk(1, 1, 0.30),
                         mk(2, 2, 0.20)];
@@ -1101,7 +1204,7 @@ mod tests {
         // tenant 0.
         let mk = |id, tenant, decode_tokens| Request {
             id, tenant: TenantId(tenant), tokens: 8, decode_tokens,
-            arrival_s: 0.0, deadline_s: 1.0,
+            shared_prefix_tokens: 0, arrival_s: 0.0, deadline_s: 1.0,
         };
         let reqs = || vec![mk(0, 0, 0), mk(1, 1, 100)];
         let mut s = OnlineScheduler::new(reqs(), 2, 4,

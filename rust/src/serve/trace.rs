@@ -47,6 +47,13 @@ pub struct TraceSpec {
     /// (jittered like `mean_tokens`); 0 = prefill-only requests, the
     /// shape every pre-decode trace has.
     pub decode_tokens: usize,
+    /// Per-tenant system-prompt length: every request's prompt is
+    /// PREPENDED with its tenant's shared prefix of this many tokens
+    /// (so `tokens` = shared prefix + the unique draw), and carries
+    /// `shared_prefix_tokens` so the serving stack's prefix cache can
+    /// reuse the prefix KV across same-tenant requests. 0 = fully
+    /// unique prompts, the shape every pre-prefix trace has.
+    pub shared_prefix_tokens: usize,
     pub seed: u64,
 }
 
@@ -54,7 +61,8 @@ impl Default for TraceSpec {
     fn default() -> TraceSpec {
         TraceSpec { n_requests: 256, n_tenants: 8, mean_tokens: 64,
                     zipf_s: 1.1, req_per_s: 200.0, burstiness: 1.0,
-                    deadline_ms: 0.0, decode_tokens: 0, seed: 42 }
+                    deadline_ms: 0.0, decode_tokens: 0,
+                    shared_prefix_tokens: 0, seed: 42 }
     }
 }
 
@@ -139,7 +147,13 @@ pub fn synthesize(spec: &TraceSpec) -> Trace {
         } else {
             0
         };
-        Request { id, tenant, tokens, decode_tokens, arrival_s: t,
+        // The tenant's system prompt rides in front of the unique
+        // draw. No rng is consumed, so prefix on/off yields the SAME
+        // arrivals, tenants, unique lengths and decode lengths — and
+        // prefix-0 specs reproduce old traces bit-for-bit.
+        let shared = spec.shared_prefix_tokens;
+        Request { id, tenant, tokens: shared + tokens, decode_tokens,
+                  shared_prefix_tokens: shared, arrival_s: t,
                   deadline_s }
     }).collect();
     Trace { pool, requests }
@@ -164,6 +178,10 @@ pub fn write_jsonl(path: &Path, trace: &Trace) -> Result<()> {
         if r.decode_tokens > 0 {
             obj.insert("decode_tokens".to_string(),
                        Json::Num(r.decode_tokens as f64));
+        }
+        if r.shared_prefix_tokens > 0 {
+            obj.insert("shared_prefix_tokens".to_string(),
+                       Json::Num(r.shared_prefix_tokens as f64));
         }
         out.push_str(&Json::Obj(obj).to_string());
         out.push('\n');
@@ -200,6 +218,10 @@ pub fn read_jsonl(path: &Path) -> Result<Trace> {
             // Older traces predate the decode field: absent means
             // prefill-only.
             decode_tokens: j.get("decode_tokens")
+                .and_then(|v| v.as_usize()).unwrap_or(0),
+            // Older traces predate the prefix field: absent means a
+            // fully unique prompt.
+            shared_prefix_tokens: j.get("shared_prefix_tokens")
                 .and_then(|v| v.as_usize()).unwrap_or(0),
             arrival_s: num_field("arrival_s")?,
             // Older traces predate the SLO field: absent means no
@@ -277,6 +299,41 @@ mod tests {
     }
 
     #[test]
+    fn shared_prefix_rides_in_front_without_perturbing_the_stream() {
+        let spec = TraceSpec { n_requests: 200, decode_tokens: 8,
+                               shared_prefix_tokens: 48,
+                               ..Default::default() };
+        let with = synthesize(&spec);
+        let without = synthesize(&TraceSpec {
+            shared_prefix_tokens: 0, ..spec.clone() });
+        for (a, b) in with.requests.iter().zip(&without.requests) {
+            assert_eq!(a.shared_prefix_tokens, 48);
+            assert_eq!(b.shared_prefix_tokens, 0);
+            // Same unique draw, same everything else: the prefix is
+            // prepended, not drawn.
+            assert_eq!(a.tokens, b.tokens + 48);
+            assert!(a.tokens > a.shared_prefix_tokens,
+                    "a prompt is its prefix plus a nonempty tail");
+            assert_eq!(a.tenant, b.tenant);
+            assert_eq!(a.decode_tokens, b.decode_tokens);
+            assert!((a.arrival_s - b.arrival_s).abs() < 1e-12);
+        }
+        // And the prefix field round-trips through JSONL only when
+        // nonzero (PR-4-era shape stays byte-stable — see the
+        // pr2-era test).
+        let path = std::env::temp_dir().join(format!(
+            "paca-trace-prefix-{}.jsonl", std::process::id()));
+        write_jsonl(&path, &without).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(!text.contains("shared_prefix_tokens"),
+                "prefix-0 traces must omit the field");
+        write_jsonl(&path, &with).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("shared_prefix_tokens"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn zipf_popularity_is_head_heavy() {
         let spec = TraceSpec { n_requests: 2000, n_tenants: 16,
                                ..Default::default() };
@@ -326,6 +383,7 @@ mod tests {
     fn jsonl_roundtrip_preserves_everything_in_order() {
         let spec = TraceSpec { n_requests: 32, n_tenants: 4,
                                deadline_ms: 50.0, decode_tokens: 24,
+                               shared_prefix_tokens: 48,
                                ..Default::default() };
         let trace = synthesize(&spec);
         let path = std::env::temp_dir().join(format!(
@@ -339,6 +397,7 @@ mod tests {
                        back.pool.name(b.tenant));
             assert_eq!(a.tokens, b.tokens);
             assert_eq!(a.decode_tokens, b.decode_tokens);
+            assert_eq!(a.shared_prefix_tokens, b.shared_prefix_tokens);
             assert!((a.arrival_s - b.arrival_s).abs() < 1e-9);
             assert!((a.deadline_s - b.deadline_s).abs() < 1e-9);
         }
@@ -364,6 +423,8 @@ mod tests {
         assert_eq!(trace.len(), 2);
         for r in &trace.requests {
             assert_eq!(r.decode_tokens, 0, "old trace = prefill-only");
+            assert_eq!(r.shared_prefix_tokens, 0,
+                       "old trace = fully unique prompts");
             assert_eq!(r.total_tokens(), r.tokens);
         }
         assert!(trace.requests[0].deadline_s.is_infinite());

@@ -205,3 +205,83 @@ fn serve_cli_kv_pressure_preempts_and_drain_only_does_not() {
 
     std::fs::remove_dir_all(&dir).ok();
 }
+
+#[test]
+fn serve_cli_prefix_cache_and_report_json() {
+    // Prefix-cache smoke: a shared-prefix trace served with the cache
+    // on (the default) must report a NONZERO hit count — with 16
+    // same-tenant requests against 4 slots per tenant (batch 8 over 4
+    // tenants), later seats structurally follow earlier same-tenant
+    // completions, whose donations they hit regardless of the
+    // measured host clock. Off-mode must reproduce the PR-4 report
+    // shape: same sections, no prefix-cache line. And --report-json
+    // must emit the machine-readable counters next to the text.
+    let dir = tmp("serve-prefix");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("prefix_trace.jsonl");
+    let adapters = dir.join("adapters");
+    let report = dir.join("report.json");
+    let run = |extra: &[&str]| {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_paca"));
+        cmd.arg("serve")
+            .arg("--backend").arg("host")
+            .arg("--requests").arg(&trace)
+            .arg("--adapters").arg(&adapters)
+            .arg("--count").arg("64")
+            .arg("--tenants").arg("4")
+            .arg("--batch").arg("8")
+            .arg("--mean-tokens").arg("8")
+            .arg("--decode-tokens").arg("8")
+            .arg("--shared-prefix-tokens").arg("48")
+            .arg("--req-per-s").arg("1e9")
+            .args(extra);
+        cmd.output().expect("spawning paca serve")
+    };
+
+    let out = run(&["--report-json", report.to_str().unwrap()]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(),
+            "prefix serve failed:\nstdout:\n{stdout}\nstderr:\n\
+             {stderr}");
+    let hit_line = stdout.lines()
+        .find(|l| l.starts_with("prefix cache:"))
+        .unwrap_or_else(|| panic!("no prefix-cache report:\n{stdout}"));
+    assert!(!hit_line.contains(" 0 hits"),
+            "shared-prefix trace must actually hit: {hit_line}");
+    assert!(hit_line.contains("donated"), "{hit_line}");
+    assert!(stdout.contains("restored bit-exactly"), "{stdout}");
+    // The persisted trace carries the prefix field.
+    let text = std::fs::read_to_string(&trace).unwrap();
+    assert!(text.contains("shared_prefix_tokens"), "{text}");
+    // Machine-readable report: parses, and agrees with the text on
+    // the basics.
+    let json = std::fs::read_to_string(&report).unwrap();
+    assert!(json.contains("\"requests\":64"),
+            "report json must carry the counters: {json}");
+    assert!(json.contains("\"prefix_cache\""), "{json}");
+    assert!(json.contains("\"ttft\""), "{json}");
+    assert!(json.contains("\"hit_rate\""), "{json}");
+
+    // Same persisted trace, cache off: the PR-4-identical report
+    // shape — the iteration-level sections are all there, the
+    // prefix-cache line is not.
+    let out = run(&["--prefix-cache", "off"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "off-mode run failed:\n{stdout}");
+    assert!(stdout.contains("loaded 64 requests"), "{stdout}");
+    assert!(stdout.contains("prefix cache off"),
+            "banner must say the cache is off:\n{stdout}");
+    assert!(stdout.contains("ttft p99"), "{stdout}");
+    assert!(stdout.contains("iteration steps"), "{stdout}");
+    assert!(!stdout.contains("prefix cache:"),
+            "off-mode must not grow a prefix-cache report line:\n\
+             {stdout}");
+    assert!(stdout.contains("restored bit-exactly"), "{stdout}");
+
+    // Degenerate flag value fails loudly.
+    let out = run(&["--prefix-cache", "maybe"]);
+    assert!(!out.status.success(), "bad prefix-cache value must error");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -339,6 +339,7 @@ fn prop_online_scheduler_reproduces_offline_plan_when_fully_arrived() {
             tenant: TenantId(rng.below(n_tenants) as u32),
             tokens: 1 + rng.below(64),
             decode_tokens: rng.below(16),
+            shared_prefix_tokens: 0,
             arrival_s: 0.0,
             deadline_s: if rng.below(2) == 0 {
                 f64::INFINITY
@@ -390,6 +391,7 @@ fn prop_online_scheduler_conserves_requests_under_any_arrivals() {
             tenant: TenantId(rng.below(n_tenants) as u32),
             tokens: 1 + rng.below(32),
             decode_tokens: rng.below(16),
+            shared_prefix_tokens: 0,
             arrival_s: rng.next_f64() * 2.0,
             deadline_s: 0.05 + rng.next_f64(),
         }).collect();
@@ -479,6 +481,7 @@ fn prop_iteration_level_reduces_to_whole_batch_when_prefill_only() {
                 rng.below(n_tenants) as u32),
             tokens: 1 + rng.below(24),
             decode_tokens: 0, // prefill-only: the reduction regime
+            shared_prefix_tokens: 0,
             arrival_s: 0.0,
             deadline_s: if rng.below(2) == 0 {
                 f64::INFINITY
@@ -559,6 +562,7 @@ fn prop_scheduler_fuzz_invariants_under_random_traces() {
             tenant: TenantId(rng.below(n_tenants) as u32),
             tokens: 1 + rng.below(max_tok),
             decode_tokens: rng.below(12),
+            shared_prefix_tokens: 0,
             arrival_s: rng.next_f64() * 2.0,
             deadline_s: if rng.below(3) == 0 {
                 f64::INFINITY
@@ -670,8 +674,11 @@ fn prop_kv_pressure_never_overcommits_and_emits_exactly_once() {
     // 120-seed fuzz of the paged-KV serving engine: random decode
     // traces under random SMALL block budgets (often smaller than a
     // single request's lifetime cache — the clamped/overflow degrade
-    // path), preemption on or off, every policy, random step-token
-    // budgets. Invariants, across any number of evict/resume cycles:
+    // path), preemption on or off, the PREFIX CACHE on or off over
+    // random per-tenant shared-prefix lengths (donation, hits, CoW
+    // forks and LRU reclaim all active under pressure), every
+    // policy, random step-token budgets. Invariants, across any
+    // number of evict/resume cycles:
     //   * the pool never over-commits (peak blocks ≤ --kv-blocks);
     //   * every request completes EXACTLY once (request count and
     //     queueing/TTFT/e2e sample counts all equal n; TPOT samples
@@ -712,26 +719,40 @@ fn prop_kv_pressure_never_overcommits_and_emits_exactly_once() {
         }
         let n = 1 + rng.below(40);
         let cap = 1 + rng.below(6);
+        // Per-tenant system-prompt lengths (0 = no sharing): the
+        // cache-on runs must keep every invariant with donations,
+        // hits, CoW forks and LRU reclaim all active.
+        let prefixes: Vec<usize> = (0..n_tenants)
+            .map(|_| rng.below(3) * rng.below(16)).collect();
         let requests: Vec<Request> = (0..n as u64).map(|id| Request {
             id,
             tenant: TenantId(rng.below(n_tenants) as u32),
             tokens: 1 + rng.below(24),
             decode_tokens: rng.below(16),
+            shared_prefix_tokens: 0,
             arrival_s: rng.next_f64(),
             deadline_s: if rng.below(2) == 0 {
                 f64::INFINITY
             } else {
                 0.02 + rng.next_f64() * 0.2
             },
+        }).map(|mut r| {
+            // The shared prefix rides in front of the unique draw,
+            // like trace synthesis does.
+            r.shared_prefix_tokens = prefixes[r.tenant.index()];
+            r.tokens += r.shared_prefix_tokens;
+            r
         }).collect();
         let decode_reqs = requests.iter()
             .filter(|r| r.decode_tokens > 0).count();
         let kv_blocks = 2 + rng.below(12);
         let block_tokens = 1 + rng.below(12);
         let preempt = rng.below(2) == 0;
+        let prefix_cache = rng.below(2) == 0;
         let policy = Policy::ALL[rng.below(3)];
         let mut eng = engine_for(pool);
         eng.configure_kv(kv_blocks, block_tokens, preempt);
+        eng.configure_prefix(prefix_cache);
         let mut sched = OnlineScheduler::new(
             requests, n_tenants, cap, policy);
         if rng.below(2) == 1 {
@@ -754,7 +775,19 @@ fn prop_kv_pressure_never_overcommits_and_emits_exactly_once() {
             assert_eq!(eng.stats.preemptions, 0,
                        "{policy:?}: drain-only must never evict");
         }
-        // No leaked blocks, no stranded preempted requests.
+        if !prefix_cache {
+            assert_eq!(eng.prefix.stats.lookups, 0,
+                       "{policy:?}: off-mode never touches the cache");
+        }
+        // Hit tokens can never exceed what was ever cacheable.
+        assert!(eng.prefix.stats.hit_tokens
+                <= eng.stats.prefill_tokens,
+                "{policy:?}: cache served more than was prefilled");
+        // No leaked blocks, no leaked REFCOUNTS (finish flushes the
+        // prefix cache, then runs the pool's free-list reconciliation
+        // — a double-share or lost unref anywhere in the
+        // share/fork/donate/reclaim paths fails here), and no
+        // stranded preempted requests.
         eng.finish().unwrap();
     });
 }
@@ -806,6 +839,7 @@ fn prop_kv_unlimited_reproduces_pr3_iteration_results() {
             tenant: TenantId(rng.below(n_tenants) as u32),
             tokens: 1 + rng.below(24),
             decode_tokens: rng.below(12),
+            shared_prefix_tokens: 0,
             arrival_s: rng.next_f64() * 0.5,
             deadline_s: if rng.below(2) == 0 {
                 f64::INFINITY
@@ -832,6 +866,128 @@ fn prop_kv_unlimited_reproduces_pr3_iteration_results() {
             assert_eq!(unlimited, ample,
                        "{policy:?}: an ample bounded pool must be \
                         bit-inert");
+        }
+    });
+}
+
+#[test]
+fn prop_prefix_cache_off_is_bit_identical_to_pr4() {
+    // THE PR-5 reduction anchor: `--prefix-cache off` must be
+    // bit-for-bit the PR-4 iterative engine — checksums, token
+    // counts, swaps, steps, makespan, misses, preemptions — for ANY
+    // shared-prefix trace, every policy, 25 seeded cases. Proven two
+    // ways per case:
+    //   * off-mode IGNORES the prefix fields: the same run on the
+    //     trace with `shared_prefix_tokens` stripped (which IS a
+    //     PR-4-era trace with identical prompts) is identical;
+    //   * an unmatched cache is INERT: cache ON over the stripped
+    //     trace is identical too (the plumbing adds nothing when
+    //     nothing ever matches).
+    // And cache ON over the real trace never computes MORE: same
+    // requests exactly-once, tokens ≤ the off-mode run.
+    use paca::manifest::ModelInfo;
+    use paca::serve::engine::{tiny_model, BaseModel, ClockModel,
+                              HostBackend, ServeEngine};
+    use paca::serve::registry::{AdapterRegistry, PacaAdapter};
+    use paca::serve::scheduler::{OnlineScheduler, Policy, Request,
+                                 TenantId, TenantPool};
+    use paca::serve::trace;
+
+    fn small() -> ModelInfo {
+        ModelInfo { d_model: 16, d_ff: 24, ..tiny_model() }
+    }
+
+    fn engine_for(pool: TenantPool) -> ServeEngine {
+        let m = small();
+        let base = BaseModel::synthetic(&m, 7);
+        let mut reg = AdapterRegistry::new(64);
+        for name in pool.names() {
+            reg.insert(PacaAdapter::synthetic(name, &m, 4, 11));
+        }
+        ServeEngine::new(base, reg, Box::<HostBackend>::default(),
+                         pool)
+    }
+
+    let clock = ClockModel::Analytic {
+        swap_s: 2e-3, batch_s: 5e-4, token_s: 2e-5,
+    };
+    prop(25, |rng| {
+        let n_tenants = 1 + rng.below(4);
+        let mut pool = TenantPool::new();
+        for i in 0..n_tenants {
+            pool.intern(&trace::tenant_name(i));
+        }
+        let prefixes: Vec<usize> = (0..n_tenants)
+            .map(|_| rng.below(40)).collect();
+        let n = 1 + rng.below(40);
+        let cap = 1 + rng.below(6);
+        let requests: Vec<Request> = (0..n as u64).map(|id| {
+            let tenant = TenantId(rng.below(n_tenants) as u32);
+            let shared = prefixes[tenant.index()];
+            Request {
+                id,
+                tenant,
+                tokens: shared + 1 + rng.below(24),
+                decode_tokens: rng.below(12),
+                shared_prefix_tokens: shared,
+                arrival_s: rng.next_f64() * 0.5,
+                deadline_s: if rng.below(2) == 0 {
+                    f64::INFINITY
+                } else {
+                    0.02 + rng.next_f64() * 0.1
+                },
+            }
+        }).collect();
+        let stripped: Vec<Request> = requests.iter().cloned()
+            .map(|mut r| {
+                r.shared_prefix_tokens = 0;
+                r
+            }).collect();
+        // Random pool geometry, bounded or not, preempt or drain.
+        let kv = if rng.below(2) == 0 {
+            Some((4 + rng.below(40), 1 + rng.below(12),
+                  rng.below(2) == 0))
+        } else {
+            None
+        };
+        for policy in Policy::ALL {
+            let run = |reqs: Vec<Request>, cache: bool| {
+                let mut eng = engine_for(pool.clone());
+                if let Some((blocks, bt, preempt)) = kv {
+                    eng.configure_kv(blocks, bt, preempt);
+                }
+                eng.configure_prefix(cache);
+                let mut sched = OnlineScheduler::new(
+                    reqs, n_tenants, cap, policy);
+                eng.serve_iterative(&mut sched, clock).unwrap();
+                eng.finish().unwrap();
+                ((eng.checksum, eng.stats.tokens, eng.stats.swaps,
+                  eng.stats.steps, eng.stats.virtual_s,
+                  eng.stats.deadline_misses, eng.stats.preemptions),
+                 eng.stats.requests)
+            };
+            let (off, n_off) = run(requests.clone(), false);
+            let (off_stripped, _) = run(stripped.clone(), false);
+            let (on_stripped, _) = run(stripped.clone(), true);
+            assert_eq!(off, off_stripped,
+                       "{policy:?}: off-mode must ignore the prefix \
+                        fields (PR-4 trace equivalence)");
+            assert_eq!(off, on_stripped,
+                       "{policy:?}: an unmatched cache must be inert");
+            let (on, n_on) = run(requests.clone(), true);
+            assert_eq!(n_on, n_off,
+                       "{policy:?}: cache on still serves \
+                        exactly-once");
+            // Token comparison only where it is structural: with an
+            // unbounded pool there are no preemption replays, so
+            // cache-on computes exactly the off-mode tokens minus
+            // the hits. (Bounded runs can preempt differently —
+            // different victims, different replay recompute.)
+            if kv.is_none() {
+                assert!(on.1 <= off.1,
+                        "{policy:?}: the cache must never ADD \
+                         computed tokens ({} > {})", on.1, off.1);
+            }
         }
     });
 }
