@@ -200,6 +200,13 @@ pub struct ServeConfig {
     /// Write the engine report as machine-readable JSON to this path
     /// (`--report-json PATH`); empty = text report only.
     pub report_json: String,
+    /// Record the step-level engine event stream and export it to
+    /// this path (`--trace-events PATH`); empty = tracing off (the
+    /// null sink — zero cost, bit-identical engine output).
+    pub trace_events: String,
+    /// Event export format: "jsonl" (one event object per line) or
+    /// "chrome" (Chrome/Perfetto trace-event JSON).
+    pub trace_format: String,
 }
 
 impl Default for ServeConfig {
@@ -229,6 +236,8 @@ impl Default for ServeConfig {
             prefix_cache: true,
             shared_prefix_tokens: 0,
             report_json: String::new(),
+            trace_events: String::new(),
+            trace_format: "jsonl".into(),
         }
     }
 }
@@ -322,6 +331,18 @@ impl ServeConfig {
                                     d.shared_prefix_tokens)?,
             report_json: doc.str_or("serve.report_json",
                                     &d.report_json).to_string(),
+            trace_events: doc.str_or("serve.trace_events",
+                                     &d.trace_events).to_string(),
+            trace_format: {
+                let v = doc.str_or("serve.trace_format",
+                                   &d.trace_format).to_string();
+                if v != "jsonl" && v != "chrome" {
+                    return Err(anyhow!(
+                        "serve.trace_format must be jsonl|chrome, \
+                         got {v:?}"));
+                }
+                v
+            },
         })
     }
 
@@ -430,6 +451,17 @@ impl ServeConfig {
             }
             "serve.report_json" | "report-json" | "report_json" => {
                 self.report_json = v.into()
+            }
+            "serve.trace_events" | "trace-events" | "trace_events" => {
+                self.trace_events = v.into()
+            }
+            "serve.trace_format" | "trace-format" | "trace_format" => {
+                if v != "jsonl" && v != "chrome" {
+                    return Err(anyhow!(
+                        "trace-format must be jsonl|chrome, got \
+                         {v:?}"));
+                }
+                self.trace_format = v.into();
             }
             other => {
                 return Err(anyhow!("unknown serve config key {other:?}"))
@@ -651,6 +683,28 @@ mod tests {
         assert!(!c.prefix_cache);
         assert_eq!(c.shared_prefix_tokens, 32);
         assert_eq!(c.report_json, "r.json");
+    }
+
+    #[test]
+    fn serve_trace_keys() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.trace_events, "", "tracing off by default");
+        assert_eq!(c.trace_format, "jsonl");
+        c.apply_override("trace-events=out/events.jsonl").unwrap();
+        c.apply_override("trace-format=chrome").unwrap();
+        assert_eq!(c.trace_events, "out/events.jsonl");
+        assert_eq!(c.trace_format, "chrome");
+        assert!(c.apply_override("trace-format=xml").is_err(),
+                "trace-format must be jsonl|chrome");
+        let doc = TomlDoc::parse(
+            "[serve]\ntrace_events = \"ev.jsonl\"\n\
+             trace_format = \"jsonl\"\n").unwrap();
+        let c = ServeConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.trace_events, "ev.jsonl");
+        assert_eq!(c.trace_format, "jsonl");
+        let bad = TomlDoc::parse(
+            "[serve]\ntrace_format = \"csv\"\n").unwrap();
+        assert!(ServeConfig::from_doc(&bad).is_err());
     }
 
     #[test]

@@ -22,7 +22,7 @@ use paca::memory;
 use paca::metrics::fmt_gb;
 use paca::nf4;
 use paca::runtime::Runtime;
-use paca::serve::{cost, engine, registry, scheduler, trace};
+use paca::serve::{cost, engine, events, registry, scheduler, trace};
 use paca::simulator::A100_80G;
 use paca::tensor::HostTensor;
 use paca::util::rng::Rng;
@@ -111,7 +111,9 @@ fn usage() -> &'static str {
      \x20          [--kv-blocks 0] [--kv-block-tokens 16] \\\n\
      \x20          [--preempt true|false] [--host-max-tokens 2048] \\\n\
      \x20          [--prefix-cache on|off] [--shared-prefix-tokens 0] \\\n\
-     \x20          [--report-json report.json]\n\
+     \x20          [--report-json report.json] \\\n\
+     \x20          [--trace-events events.jsonl] \\\n\
+     \x20          [--trace-format jsonl|chrome]\n\
      \x20          # online continuous batching over the trace's\n\
      \x20          # arrival times; missing trace/adapters are\n\
      \x20          # synthesized and saved.\n\
@@ -135,6 +137,14 @@ fn usage() -> &'static str {
      \x20          # instead of recomputing prefill; off = exact PR-4\n\
      \x20          # behaviour. --report-json writes the engine\n\
      \x20          # report as JSON alongside the text report.\n\
+     \x20          # --trace-events records the step-level engine\n\
+     \x20          # event stream (arrivals, dispatches, splices,\n\
+     \x20          # prefill/decode steps, kv alloc/free, preempt/\n\
+     \x20          # resume), audits it online against the serving\n\
+     \x20          # invariants (nonzero exit on violation), and\n\
+     \x20          # exports it as JSONL or, with --trace-format\n\
+     \x20          # chrome, as a Chrome/Perfetto trace. Off = the\n\
+     \x20          # null sink: zero cost, bit-identical output.\n\
      paca selftest"
 }
 
@@ -496,6 +506,9 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
                                            tr.pool);
     eng.configure_kv(cfg.kv_blocks, cfg.kv_block_tokens, cfg.preempt);
     eng.configure_prefix(cfg.prefix_cache);
+    if !cfg.trace_events.is_empty() {
+        eng.configure_events(events::Events::recording());
+    }
     let mut sched = scheduler::OnlineScheduler::new(
         tr.requests, n_tenant_ids, cfg.batch, policy);
     sched.max_batch_tokens = cfg.max_batch_tokens;
@@ -519,6 +532,33 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
         std::fs::write(path, eng.report_json().to_string())
             .map_err(|e| anyhow!("writing {}: {e}", path.display()))?;
         println!("wrote engine report json -> {}", path.display());
+    }
+    if !cfg.trace_events.is_empty() {
+        let stream = eng.events.snapshot();
+        let path = Path::new(&cfg.trace_events);
+        let body = if cfg.trace_format == "chrome" {
+            events::to_chrome_trace(&stream, eng.pool.names())
+                .to_string()
+        } else {
+            events::to_jsonl(&stream)
+        };
+        std::fs::write(path, body)
+            .map_err(|e| anyhow!("writing {}: {e}", path.display()))?;
+        let violations = eng.events.violation_count();
+        println!("wrote {} engine events ({}) -> {} | auditor: {}",
+                 stream.len(), cfg.trace_format, path.display(),
+                 if violations == 0 {
+                     "clean".to_string()
+                 } else {
+                     format!("{violations} violations")
+                 });
+        if violations > 0 {
+            for v in eng.events.violations() {
+                eprintln!("auditor violation: {v}");
+            }
+            bail!("event auditor found {violations} invariant \
+                   violations in the serve run");
+        }
     }
 
     println!("\nProjected at paper scale (serving cost model):");

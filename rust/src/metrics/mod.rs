@@ -2,6 +2,7 @@
 //! counters, and CSV/markdown reporters used by the bench harness and
 //! EXPERIMENTS.md generation.
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::time::{Duration, Instant};
@@ -76,9 +77,15 @@ impl Stopwatch {
     }
 }
 
-/// Nearest-rank order statistic of an ascending-sorted, non-empty
-/// slice: the ceil(q·n)th sample.
+/// THE percentile rule every consumer shares: nearest-rank order
+/// statistic of an ascending-sorted slice — the ceil(q·n)th sample,
+/// with q clamped into [0, 1] and 0.0 for an empty slice (callers
+/// gate on emptiness for their `Option` APIs; the helper stays
+/// total so no path can index out of bounds).
 fn nearest_rank(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
     let rank = (q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize;
     sorted[rank.saturating_sub(1).min(sorted.len() - 1)]
 }
@@ -89,11 +96,36 @@ fn nearest_rank(sorted: &[f64], q: f64) -> f64 {
 #[derive(Debug, Default, Clone)]
 pub struct LatencyRecorder {
     samples: BTreeMap<String, Vec<f64>>,
+    /// Lazily-built ascending copy per key, reused across percentile
+    /// queries. Samples only ever append, so a cached copy whose
+    /// length matches the raw vec is current; anything shorter is
+    /// rebuilt on the next query. (Interior mutability keeps the
+    /// query API `&self`.)
+    sorted: RefCell<BTreeMap<String, Vec<f64>>>,
 }
 
 impl LatencyRecorder {
     pub fn record(&mut self, key: &str, secs: f64) {
         self.samples.entry(key.to_string()).or_default().push(secs);
+    }
+
+    /// Run `f` over the key's ascending-sorted samples, sorting at
+    /// most once per batch of recorded samples (`None` when the key
+    /// is missing or empty).
+    fn with_sorted<R>(&self, key: &str,
+                      f: impl FnOnce(&[f64]) -> R) -> Option<R> {
+        let raw = self.samples.get(key)?;
+        if raw.is_empty() {
+            return None;
+        }
+        let mut cache = self.sorted.borrow_mut();
+        let entry = cache.entry(key.to_string()).or_default();
+        if entry.len() != raw.len() {
+            entry.clear();
+            entry.extend_from_slice(raw);
+            entry.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        }
+        Some(f(entry))
     }
 
     pub fn keys(&self) -> Vec<&str> {
@@ -112,20 +144,15 @@ impl LatencyRecorder {
         Some(s.iter().sum::<f64>() / s.len() as f64)
     }
 
-    /// q in [0, 1]; nearest-rank (ceil(q·n)th order statistic) on a
-    /// sorted copy.
+    /// q in [0, 1]; nearest-rank (ceil(q·n)th order statistic) on the
+    /// cached sorted copy — repeated queries (the breakdown table
+    /// asks five per row) no longer re-clone and re-sort per call.
     pub fn percentile(&self, key: &str, q: f64) -> Option<f64> {
-        let s = self.samples.get(key)?;
-        if s.is_empty() {
-            return None;
-        }
-        let mut sorted = s.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        Some(nearest_rank(&sorted, q))
+        self.with_sorted(key, |sorted| nearest_rank(sorted, q))
     }
 
-    /// One row per key: n, mean/p50/p95/max in milliseconds. Each
-    /// key's samples are sorted once and reused for all percentiles.
+    /// One row per key: n, mean/p50/p95/max in milliseconds, off the
+    /// same per-key sorted cache the percentile queries use.
     pub fn table(&self, key_header: &str) -> Table {
         let mut t = Table::new(&[key_header, "n", "mean ms", "p50 ms",
                                  "p95 ms", "max ms"]);
@@ -133,16 +160,19 @@ impl LatencyRecorder {
             if s.is_empty() {
                 continue;
             }
-            let mut sorted = s.clone();
-            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
             let mean = s.iter().sum::<f64>() / s.len() as f64;
             let ms = |v: f64| format!("{:.3}", v * 1e3);
+            let row = self.with_sorted(key, |sorted| {
+                [ms(nearest_rank(sorted, 0.50)),
+                 ms(nearest_rank(sorted, 0.95)),
+                 ms(nearest_rank(sorted, 1.0))]
+            }).expect("non-empty key");
             t.row(&[key.clone(),
                     s.len().to_string(),
                     ms(mean),
-                    ms(nearest_rank(&sorted, 0.50)),
-                    ms(nearest_rank(&sorted, 0.95)),
-                    ms(nearest_rank(&sorted, 1.0))]);
+                    row[0].clone(),
+                    row[1].clone(),
+                    row[2].clone()]);
         }
         t
     }
@@ -541,6 +571,43 @@ mod tests {
                 >= r.percentile("t0", 0.5).unwrap());
         let tbl = r.table("tenant").render();
         assert!(tbl.contains("t0") && tbl.contains("t1"));
+    }
+
+    #[test]
+    fn nearest_rank_shared_helper_edges() {
+        // Empty slice is total — no caller path can index out of
+        // bounds.
+        assert_eq!(nearest_rank(&[], 0.5), 0.0);
+        assert_eq!(nearest_rank(&[], 1.0), 0.0);
+        // A single sample IS every percentile, clamping included.
+        for q in [0.0, 0.5, 0.99, 1.0, -3.0, 7.0] {
+            assert_eq!(nearest_rank(&[4.2], q), 4.2, "q={q}");
+        }
+        // q = 1.0 is the max, q = 0.0 the min, for any n.
+        let s = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(nearest_rank(&s, 1.0), 5.0);
+        assert_eq!(nearest_rank(&s, 0.0), 1.0);
+        // Nearest rank, not interpolation: p50 of n=4 is sample 2.
+        assert_eq!(nearest_rank(&[1.0, 2.0, 3.0, 4.0], 0.5), 2.0);
+    }
+
+    #[test]
+    fn percentile_cache_tracks_new_samples() {
+        // The sorted cache must refresh when more samples land
+        // between queries — including values that land out of order.
+        let mut r = LatencyRecorder::default();
+        r.record("k", 0.5);
+        assert_eq!(r.percentile("k", 1.0), Some(0.5));
+        r.record("k", 0.1);
+        assert_eq!(r.percentile("k", 0.0), Some(0.1),
+                   "stale cache would still say 0.5");
+        assert_eq!(r.percentile("k", 1.0), Some(0.5));
+        r.record("k", 0.9);
+        assert_eq!(r.percentile("k", 1.0), Some(0.9));
+        assert_eq!(r.count("k"), 3);
+        // Cloned recorders (the engine snapshots them) keep working.
+        let c = r.clone();
+        assert_eq!(c.percentile("k", 0.5), Some(0.5));
     }
 
     #[test]

@@ -56,6 +56,7 @@ use crate::metrics::{latency_breakdown_table, KvOccupancyTimeline,
                      ThroughputTimeline};
 use crate::peft::Selection;
 use crate::runtime::{Executable, Runtime};
+use crate::serve::events::{EventKind, Events};
 use crate::serve::kv::{KvPool, KvSeq};
 use crate::serve::prefix::PrefixCache;
 use crate::serve::registry::{fingerprint, AdapterRegistry, SpliceGuard,
@@ -254,7 +255,7 @@ pub enum ClockModel {
     Analytic { swap_s: f64, batch_s: f64, token_s: f64 },
 }
 
-#[derive(Debug, Default, Clone, Copy)]
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
 pub struct EngineStats {
     pub requests: u64,
     /// Tokens the backend actually computed (host clamps oversized
@@ -341,6 +342,12 @@ pub struct ServeEngine {
     /// original first-token time and decode length (the requeued
     /// request's own fields were rewritten to cover the replay).
     resume: HashMap<u64, ResumeInfo>,
+    /// Event-stream handle (off by default — see `serve::events`).
+    /// [`ServeEngine::configure_events`] installs an enabled handle
+    /// here and clones it into the KV pool, prefix cache, registry,
+    /// and (at serve start) the scheduler, so all five write one
+    /// totally-ordered stream.
+    pub events: Events,
     pub stats: EngineStats,
     /// Accumulated forward outputs (keeps the host GEMMs observable).
     pub checksum: f64,
@@ -376,7 +383,19 @@ impl ServeEngine {
                           TIMELINE_BUCKET_S),
                       kv, prefix: PrefixCache::new(true),
                       preempt: true, resume: HashMap::new(),
+                      events: Events::off(),
                       stats: EngineStats::default(), checksum: 0.0 }
+    }
+
+    /// Install an event-stream handle (usually [`Events::recording`])
+    /// and fan clones out to every emitting component. Call in any
+    /// order relative to `configure_kv`/`configure_prefix` — those
+    /// re-propagate the handle into the fresh pool/cache.
+    pub fn configure_events(&mut self, events: Events) {
+        self.events = events;
+        self.kv.set_events(self.events.clone());
+        self.prefix.set_events(self.events.clone());
+        self.registry.set_events(self.events.clone());
     }
 
     /// Install a paged KV pool: `n_blocks` blocks (0 = unlimited) of
@@ -388,6 +407,7 @@ impl ServeEngine {
                         block_tokens: usize, preempt: bool) {
         self.kv = KvPool::new(n_blocks, block_tokens,
                               self.base.model.kv_bytes_per_token());
+        self.kv.set_events(self.events.clone());
         self.preempt = preempt;
     }
 
@@ -395,6 +415,7 @@ impl ServeEngine {
     /// Off is the reduction anchor: bit-for-bit the PR-4 engine.
     pub fn configure_prefix(&mut self, enabled: bool) {
         self.prefix = PrefixCache::new(enabled);
+        self.prefix.set_events(self.events.clone());
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -418,13 +439,18 @@ impl ServeEngine {
             return Ok(());
         }
         let t0 = Instant::now();
-        if let Some((_, guard)) = self.current.take() {
+        if let Some((prev, guard)) = self.current.take() {
             guard.restore(&mut self.base.weights)?;
+            self.events.emit(EventKind::SpliceOut, Some(prev.0), None,
+                             0, 0);
         }
         let adapter = self.registry.fetch(self.pool.name(tenant))?;
+        let rank = adapter.rank as u64;
         let guard = adapter.splice(&mut self.base.weights)?;
         self.current = Some((tenant, guard));
         self.stats.swaps += 1;
+        self.events.emit(EventKind::SpliceIn, Some(tenant.0), None,
+                         rank, self.stats.swaps);
         self.stats.swap_s += t0.elapsed().as_secs_f64();
         Ok(())
     }
@@ -501,17 +527,20 @@ impl ServeEngine {
                         clock: ClockModel) -> Result<()> {
         let wall0 = Instant::now();
         let mut now = 0.0f64;
+        sched.events = self.events.clone();
         // Calibrate BEFORE the first admission: urgency keys freeze
         // at admit time, so requests arriving before the first
         // dispatch must already see the clock's decode slack.
         self.calibrate(sched, clock);
         loop {
+            self.events.set_now(now);
             sched.admit(now);
             if sched.pending_len() == 0 {
                 match sched.next_arrival() {
                     // Idle: event-jump the clock to the next arrival.
                     Some(t) => {
                         now = now.max(t);
+                        self.events.set_now(now);
                         sched.admit(now);
                     }
                     None => break,
@@ -568,6 +597,7 @@ impl ServeEngine {
             };
             let start = now;
             now += service_s;
+            self.events.set_now(now);
             let name = self.pool.name(batch.tenant);
             let mut tokens = 0u64;
             for r in &batch.requests {
@@ -587,6 +617,9 @@ impl ServeEngine {
                 }
                 tokens += r.total_tokens() as u64;
                 self.stats.requests += 1;
+                self.events.emit(EventKind::Complete,
+                                 Some(batch.tenant.0), Some(r.id),
+                                 (1 + r.decode_tokens) as u64, 0);
             }
             self.timeline.record(now, batch.requests.len() as u64,
                                  tokens);
@@ -755,6 +788,9 @@ impl ServeEngine {
         } else {
             self.stats.preempt_deadline += 1;
         }
+        self.events.emit(EventKind::Preempt, Some(r.tenant.0),
+                         Some(r.id), u64::from(memory),
+                         r.decode_tokens as u64);
         sched.requeue(r);
     }
 
@@ -804,6 +840,12 @@ impl ServeEngine {
             let name = self.pool.name(r.tenant);
             self.queueing.record(name, queue_s);
             self.queueing.record("(all)", queue_s);
+        } else {
+            // The re-seat's Dispatch (scheduler) already fired, so
+            // the auditor sees the preempt → re-dispatch → resume
+            // order it enforces.
+            self.events.emit(EventKind::Resume, Some(r.tenant.0),
+                             Some(r.id), r.tokens as u64, 0);
         }
         self.stats.prefill_tokens += r.tokens as u64;
         let (kv, prefill_tokens) = match hold {
@@ -826,6 +868,9 @@ impl ServeEngine {
             }
             None => (self.kv_alloc_clamped(r.tokens), r.tokens),
         };
+        self.events.emit(EventKind::PrefillStart, Some(r.tenant.0),
+                         Some(r.id), prefill_tokens as u64,
+                         (r.tokens - prefill_tokens) as u64);
         slots.push(Slot { remaining: r.decode_tokens,
                           prefilled: false, resumed,
                           dispatched_s: now, first_token_s: now, kv,
@@ -877,8 +922,10 @@ impl ServeEngine {
         // how long the current batch would take to drain naturally.
         let mut last_step_s = 0.0f64;
         // Calibrate BEFORE the first admission — see `serve_online`.
+        sched.events = self.events.clone();
         self.calibrate(sched, clock);
         loop {
+            self.events.set_now(now);
             sched.admit(now);
             self.sync_kv_gate(sched);
             if slots.is_empty() {
@@ -887,6 +934,7 @@ impl ServeEngine {
                         // Idle: event-jump to the next arrival.
                         Some(t) => {
                             now = now.max(t);
+                            self.events.set_now(now);
                             sched.admit(now);
                         }
                         None => break,
@@ -1015,6 +1063,7 @@ impl ServeEngine {
             let (wall_step_s, swapped) =
                 self.forward_step(tenant, step_tokens)?;
             self.stats.steps += 1;
+            self.events.set_step(self.stats.steps);
             let step_s = match clock {
                 ClockModel::Measured => wall_step_s,
                 ClockModel::Analytic { swap_s, batch_s, token_s } => {
@@ -1025,6 +1074,7 @@ impl ServeEngine {
             };
             now += step_s;
             last_step_s = step_s;
+            self.events.set_now(now);
             self.occupancy.record(slots.len() as u64,
                                   step_tokens as u64);
             self.kv_timeline.record(
@@ -1044,15 +1094,30 @@ impl ServeEngine {
                         // prefill was emitted in an earlier residency
                         // — nothing new leaves the engine, so TTFT
                         // stays settled and emission exactly-once.
+                        self.events.emit(
+                            EventKind::PrefillEnd,
+                            Some(slots[i].req.tenant.0),
+                            Some(slots[i].req.id), 0,
+                            slots[i].prefill_tokens as u64);
                     } else {
                         slots[i].first_token_s = now;
                         let first_s =
                             (now - slots[i].req.arrival_s).max(0.0);
                         self.ttft.record(name, first_s);
                         self.ttft.record("(all)", first_s);
+                        self.events.emit(
+                            EventKind::PrefillEnd,
+                            Some(slots[i].req.tenant.0),
+                            Some(slots[i].req.id), 1,
+                            slots[i].prefill_tokens as u64);
                     }
                 } else {
                     slots[i].remaining -= 1;
+                    self.events.emit(
+                        EventKind::DecodeStep,
+                        Some(slots[i].req.tenant.0),
+                        Some(slots[i].req.id), 1,
+                        slots[i].remaining as u64);
                 }
                 if slots[i].remaining > 0 {
                     i += 1;
@@ -1091,6 +1156,9 @@ impl ServeEngine {
                 self.timeline.record(now, 1,
                                      s.req.total_tokens() as u64);
                 self.stats.requests += 1;
+                self.events.emit(EventKind::Complete,
+                                 Some(s.req.tenant.0), Some(s.req.id),
+                                 (1 + decode_total) as u64, 0);
             }
         }
         self.stats.virtual_s += now;
@@ -1116,8 +1184,10 @@ impl ServeEngine {
     /// Un-splice the live adapter and verify the shared frozen base is
     /// byte-identical to its pre-serving state.
     pub fn finish(&mut self) -> Result<()> {
-        if let Some((_, guard)) = self.current.take() {
+        if let Some((tenant, guard)) = self.current.take() {
             guard.restore(&mut self.base.weights)?;
+            self.events.emit(EventKind::SpliceOut, Some(tenant.0),
+                             None, 0, 0);
         }
         let fp = self.base.fingerprint();
         if fp != self.baseline_fp {
@@ -1146,6 +1216,9 @@ impl ServeEngine {
                 "{} preempted requests never resumed to completion",
                 self.resume.len()));
         }
+        // End-of-run auditor sweep: open lifecycles, a live splice,
+        // or a non-zero KV ledger become violations here.
+        self.events.finalize();
         Ok(())
     }
 
@@ -1277,6 +1350,23 @@ impl ServeEngine {
                 ps.donated_blocks, ps.reclaimed_blocks,
                 self.kv.stats.cow_forks, ps.invalidations));
         }
+        // Event-trace lines exist only when tracing is on: the
+        // null-sink report stays byte-identical to the untraced one.
+        if self.events.enabled() {
+            let violations = self.events.violation_count();
+            let verdict = if violations == 0 {
+                "auditor clean".to_string()
+            } else {
+                format!("auditor: {violations} VIOLATIONS")
+            };
+            out.push_str(&format!(
+                "event trace: {} events | {}\n",
+                self.events.total(), verdict));
+            for v in self.events.violations() {
+                out.push_str(&format!("  violation: {v}\n"));
+            }
+            out.push('\n');
+        }
         out.push_str(&format!(
             "aggregate: {:.1} req/s, {:.0} tok/s \
              (forward {:.1}ms, swap {:.1}ms, wall {:.1}ms)\n",
@@ -1294,6 +1384,10 @@ impl ServeEngine {
         let s = &self.stats;
         let num = |v: f64| Json::Num(v);
         let mut root = BTreeMap::new();
+        // Report-schema version: bump when a key is renamed or
+        // removed; adding keys is not a bump (consumers must ignore
+        // unknown keys — round-trip-tested).
+        root.insert("schema".to_string(), num(1.0));
         root.insert("backend".to_string(),
                     Json::Str(self.backend_name().to_string()));
         root.insert("requests".to_string(), num(s.requests as f64));
@@ -1390,6 +1484,27 @@ impl ServeEngine {
                      num(ps.invalidations as f64));
             root.insert("prefix_cache".to_string(), Json::Obj(p));
         }
+
+        if self.events.enabled() {
+            let mut ev = BTreeMap::new();
+            ev.insert("total".to_string(),
+                      num(self.events.total() as f64));
+            let mut counts = BTreeMap::new();
+            for (name, n) in self.events.counts() {
+                counts.insert(name.to_string(), num(n as f64));
+            }
+            ev.insert("counts".to_string(), Json::Obj(counts));
+            let violations = self.events.violation_count();
+            ev.insert("auditor_violations".to_string(),
+                      num(violations as f64));
+            ev.insert("auditor".to_string(),
+                      Json::Str(if violations == 0 {
+                          "clean".to_string()
+                      } else {
+                          "violations".to_string()
+                      }));
+            root.insert("events".to_string(), Json::Obj(ev));
+        }
         Json::Obj(root)
     }
 }
@@ -1465,6 +1580,7 @@ fn host_forward(base: &BaseModel, input: &[f32], tokens: usize) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serve::events::span_latencies;
     use crate::serve::registry::PacaAdapter;
     use crate::serve::scheduler::{plan, Policy, Request};
     use crate::serve::trace::{self, Trace, TraceSpec};
@@ -2174,5 +2290,163 @@ mod tests {
         assert!(eng.swap_to(ghost).is_err());
         // Base must still be intact afterwards.
         eng.finish().unwrap();
+    }
+
+    /// Wall-clock fields are the only non-deterministic EngineStats
+    /// members; zero them so two runs of the same virtual-clock
+    /// schedule compare bit-for-bit.
+    fn scrub_wall(mut s: EngineStats) -> EngineStats {
+        s.wall_s = 0.0;
+        s.forward_s = 0.0;
+        s.swap_s = 0.0;
+        s
+    }
+
+    #[test]
+    fn tracing_is_invisible_to_the_engine_and_audits_clean() {
+        // Same trace, same clock, under kv pressure with preemption,
+        // prefix hits and resumes in play: the traced run must leave
+        // bit-identical engine state (the reduction anchor) and the
+        // online auditor must see a violation-free stream.
+        let spec = TraceSpec {
+            n_requests: 60, n_tenants: 4, deadline_ms: 30.0,
+            burstiness: 3.0, decode_tokens: 12,
+            shared_prefix_tokens: 32, ..Default::default()
+        };
+        let clock = ClockModel::Analytic {
+            swap_s: 2e-3, batch_s: 5e-4, token_s: 2e-5,
+        };
+        let run = |events: Events| {
+            let trace = trace::synthesize(&spec);
+            let mut eng = engine_for(trace.pool.clone());
+            eng.configure_events(events);
+            eng.configure_kv(48, 16, true);
+            let mut sched = OnlineScheduler::new(
+                trace.requests, trace.pool.len(), 8,
+                Policy::SloAware);
+            eng.serve_iterative(&mut sched, clock).unwrap();
+            assert!(sched.is_done());
+            eng.finish().unwrap();
+            eng
+        };
+        let plain = run(Events::off());
+        let traced = run(Events::recording());
+        assert_eq!(scrub_wall(traced.stats), scrub_wall(plain.stats));
+        assert_eq!(traced.checksum, plain.checksum);
+        assert_eq!(traced.e2e.percentile("(all)", 0.99),
+                   plain.e2e.percentile("(all)", 0.99));
+        // The untraced report carries no event section.
+        assert!(!plain.report().contains("event trace:"));
+        assert!(traced.report().contains("auditor clean"),
+                "{}", traced.report());
+        assert_eq!(traced.events.violation_count(), 0,
+                   "violations: {:?}", traced.events.violations());
+        assert!(traced.events.total() > 0);
+        let counts: HashMap<&str, u64> =
+            traced.events.counts().into_iter().collect();
+        for kind in ["arrival", "admit", "dispatch", "prefill_start",
+                     "prefill_end", "decode_step", "complete",
+                     "splice_in", "splice_out", "kv_alloc",
+                     "kv_free"] {
+            assert!(counts.contains_key(kind), "no {kind} events");
+        }
+        assert_eq!(counts["arrival"], 60);
+        assert_eq!(counts["complete"], 60);
+        assert_eq!(counts["kv_alloc"], counts["kv_free"],
+                   "alloc/free must balance over a drained run");
+    }
+
+    #[test]
+    fn spans_reconstruct_the_recorders_bit_for_bit() {
+        // Every latency the engine records during an iterative run is
+        // a virtual-clock difference; the span reconstructor folds
+        // the SAME clock stamps out of the event stream, so its
+        // percentiles must be equal as bits, not just close.
+        let trace = trace::synthesize(&TraceSpec {
+            n_requests: 50, n_tenants: 4, deadline_ms: 25.0,
+            burstiness: 3.0, decode_tokens: 10,
+            shared_prefix_tokens: 32, ..Default::default()
+        });
+        let mut eng = engine_for(trace.pool.clone());
+        eng.configure_events(Events::recording());
+        eng.configure_kv(40, 16, true); // tight: resumes in the mix
+        let mut sched = OnlineScheduler::new(
+            trace.requests, trace.pool.len(), 8, Policy::SloAware);
+        eng.serve_iterative(&mut sched, ClockModel::Analytic {
+            swap_s: 2e-3, batch_s: 5e-4, token_s: 2e-5,
+        }).unwrap();
+        eng.finish().unwrap();
+        assert_eq!(eng.events.violation_count(), 0,
+                   "violations: {:?}", eng.events.violations());
+        let events = eng.events.snapshot();
+        let lat = span_latencies(&events, eng.pool.names());
+        let pairs: [(&str, &LatencyRecorder, &LatencyRecorder); 5] = [
+            ("queueing", &eng.queueing, &lat.queueing),
+            ("service", &eng.service, &lat.service),
+            ("e2e", &eng.e2e, &lat.e2e),
+            ("ttft", &eng.ttft, &lat.ttft),
+            ("tpot", &eng.tpot, &lat.tpot),
+        ];
+        let mut keys: Vec<String> = eng.pool.names().to_vec();
+        keys.push("(all)".to_string());
+        for (name, rec, span) in pairs {
+            for key in &keys {
+                assert_eq!(rec.count(key), span.count(key),
+                           "{name}/{key} sample count");
+                for q in [0.0, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+                    assert_eq!(rec.percentile(key, q),
+                               span.percentile(key, q),
+                               "{name}/{key} p{q} drifted");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn report_json_schema_and_events_section() {
+        let trace = trace::synthesize(&TraceSpec {
+            n_requests: 20, n_tenants: 2, decode_tokens: 4,
+            ..Default::default()
+        });
+        let run = |events: Events| {
+            let mut eng = engine_for(trace.pool.clone());
+            eng.configure_events(events);
+            let mut sched = OnlineScheduler::new(
+                trace.requests.clone(), trace.pool.len(), 8,
+                Policy::SwapAware);
+            eng.serve_iterative(&mut sched, ClockModel::Analytic {
+                swap_s: 2e-3, batch_s: 5e-4, token_s: 2e-5,
+            }).unwrap();
+            eng.finish().unwrap();
+            eng
+        };
+        let plain = run(Events::off());
+        let j = plain.report_json();
+        assert_eq!(j.get("schema").and_then(|v| v.as_f64()).unwrap(),
+                   1.0);
+        assert!(j.get("events").is_none(),
+                "events section only exists when tracing is on");
+        let traced = run(Events::recording());
+        let j = traced.report_json();
+        let ev = j.get("events").expect("traced run exports events");
+        assert_eq!(ev.get("auditor").and_then(|v| v.as_str())
+                   .unwrap(), "clean");
+        assert_eq!(ev.get("auditor_violations")
+                   .and_then(|v| v.as_f64()).unwrap(), 0.0);
+        assert!(ev.get("total").and_then(|v| v.as_f64()).unwrap()
+                > 0.0);
+        assert_eq!(ev.get("counts").and_then(|c| c.get("complete"))
+                   .and_then(|v| v.as_f64()).unwrap(), 20.0);
+        // Bump-tolerance round trip: a consumer reading known keys
+        // must survive unknown keys a future schema adds.
+        let text = j.to_string();
+        let extended = format!("{{\"aaa_future_key\":42,{}",
+                               &text[1..]);
+        let back = Json::parse(&extended).unwrap();
+        assert_eq!(back.get("schema").and_then(|v| v.as_f64())
+                   .unwrap(), 1.0);
+        assert_eq!(back.get("events").and_then(|e| e.get("total")),
+                   ev.get("total"));
+        assert!(back.get("aaa_future_key").is_some());
     }
 }

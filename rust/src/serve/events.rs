@@ -1,0 +1,1195 @@
+//! Step-level event tracing for the serving stack: a typed
+//! [`EngineEvent`] stream emitted by the engine, scheduler, KV pool,
+//! prefix cache and adapter registry, behind a zero-cost-when-disabled
+//! [`Events`] handle.
+//!
+//! Three consumers ride on the stream:
+//!   * exporters — [`to_jsonl`] (one JSON object per line) and
+//!     [`to_chrome_trace`] (Chrome trace-event format: open the file
+//!     in Perfetto / `chrome://tracing` and every serve run becomes a
+//!     timeline with one track per tenant and one per engine slot);
+//!   * the span reconstructor — [`build_spans`] / [`span_latencies`]
+//!     rebuild each request's lifecycle (queueing → prefill → decode →
+//!     preempt/resume cycles → completion) from events alone and
+//!     re-derive the queueing/TTFT/TPOT/service/e2e samples the engine
+//!     records directly, so the two accountings can be cross-checked
+//!     bit-for-bit;
+//!   * the online [`EventAuditor`] — an always-on runtime detector for
+//!     the causal invariants the property/fuzz suites check post-hoc:
+//!     no dispatch before arrival, exactly-once completion, paired
+//!     splice/un-splice, a balanced KV alloc/free ledger that never
+//!     over-commits, and (Arrival aside) a non-decreasing virtual
+//!     clock.
+//!
+//! Disabled (the default `Events::off()` handle) every `emit` is a
+//! single `Option` check and no event is ever constructed, so
+//! analytic-clock benches and the reduction anchors stay bit-identical
+//! with tracing off.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::metrics::LatencyRecorder;
+use crate::util::json::Json;
+
+/// Every kind the serving stack emits. `a`/`b` payload meanings are
+/// per-kind (see `docs/events.md`); 0 when unused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Request enters the system. Stamped with the ORIGINAL arrival
+    /// time — the one kind whose timestamp may precede earlier events.
+    /// a = prompt tokens, b = decode tokens.
+    Arrival,
+    /// Admission: the virtual clock passed the arrival time and the
+    /// request joined its tenant's pending queue. a/b as Arrival.
+    Admit,
+    /// The admission gate deferred the head request this attempt
+    /// (step-token budget or KV capacity). a = token charge,
+    /// b = blocks needed.
+    Reject,
+    /// Scheduler handed the request to the engine. a = prompt tokens,
+    /// b = decode tokens AT THIS DISPATCH (the first dispatch carries
+    /// the original decode length; re-dispatches after preemption
+    /// carry the remainder).
+    Dispatch,
+    /// Tenant adapter spliced into the shared base. tenant set.
+    SpliceIn,
+    /// Tenant adapter un-spliced (bit-exact restore). tenant set.
+    SpliceOut,
+    /// Slot seated and its prefill charged. a = prefill tokens
+    /// actually computed, b = prefix-cache hit tokens skipped.
+    PrefillStart,
+    /// Prefill step finished. a = 1 if the first output token was
+    /// emitted here (0 on a resume recompute), b = prefill tokens.
+    PrefillEnd,
+    /// One decode token produced. a = 1, b = decode tokens remaining.
+    DecodeStep,
+    /// Prefix-cache hit on seat. a = hit tokens, b = blocks attached.
+    PrefixHit,
+    /// Completed/preempted sequence donated its prefix blocks.
+    /// a = blocks donated, b = donated chain length.
+    Donate,
+    /// LRU reclaim freed cache-only blocks. a = blocks freed,
+    /// b = blocks needed.
+    Reclaim,
+    /// A tenant's cached subtree was dropped as stale. a = blocks
+    /// dropped, b = cumulative invalidations.
+    Invalidate,
+    /// Copy-on-write fork of a shared partially-filled tail block.
+    /// a = old block id, b = new block id.
+    CowFork,
+    /// One pool block went live. a = 1, b = used blocks after.
+    KvAlloc,
+    /// One pool block was freed. a = 1, b = used blocks after.
+    KvFree,
+    /// Tokens accepted beyond capacity by the clamp path.
+    /// a = overflow tokens this clamp, b = cumulative overflow.
+    Overflow,
+    /// A decoding slot was evicted. a = 1 under memory pressure, 0 for
+    /// a deadline rescue; b = decode tokens remaining.
+    Preempt,
+    /// A previously preempted request was re-seated (recompute
+    /// prefill follows). a = tokens to recompute.
+    Resume,
+    /// Request finished. a = total output tokens emitted.
+    Complete,
+    /// Registry loaded an adapter from disk (name not carried — the
+    /// registry keys by tenant name, not interned id). a = cumulative
+    /// loads, b = resident adapters after.
+    AdapterLoad,
+    /// Registry evicted a resident adapter. a = tenant generation
+    /// after the bump, b = resident adapters after.
+    AdapterEvict,
+}
+
+impl EventKind {
+    pub const ALL: [EventKind; 22] = [
+        EventKind::Arrival, EventKind::Admit, EventKind::Reject,
+        EventKind::Dispatch, EventKind::SpliceIn, EventKind::SpliceOut,
+        EventKind::PrefillStart, EventKind::PrefillEnd,
+        EventKind::DecodeStep, EventKind::PrefixHit, EventKind::Donate,
+        EventKind::Reclaim, EventKind::Invalidate, EventKind::CowFork,
+        EventKind::KvAlloc, EventKind::KvFree, EventKind::Overflow,
+        EventKind::Preempt, EventKind::Resume, EventKind::Complete,
+        EventKind::AdapterLoad, EventKind::AdapterEvict,
+    ];
+    pub const COUNT: usize = Self::ALL.len();
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Arrival => "arrival",
+            EventKind::Admit => "admit",
+            EventKind::Reject => "reject",
+            EventKind::Dispatch => "dispatch",
+            EventKind::SpliceIn => "splice_in",
+            EventKind::SpliceOut => "splice_out",
+            EventKind::PrefillStart => "prefill_start",
+            EventKind::PrefillEnd => "prefill_end",
+            EventKind::DecodeStep => "decode_step",
+            EventKind::PrefixHit => "prefix_hit",
+            EventKind::Donate => "donate",
+            EventKind::Reclaim => "reclaim",
+            EventKind::Invalidate => "invalidate",
+            EventKind::CowFork => "cow_fork",
+            EventKind::KvAlloc => "kv_alloc",
+            EventKind::KvFree => "kv_free",
+            EventKind::Overflow => "overflow",
+            EventKind::Preempt => "preempt",
+            EventKind::Resume => "resume",
+            EventKind::Complete => "complete",
+            EventKind::AdapterLoad => "adapter_load",
+            EventKind::AdapterEvict => "adapter_evict",
+        }
+    }
+
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// One traced event. Timestamps are the engine's VIRTUAL clock
+/// (seconds); `step` is the number of engine steps completed at
+/// emission. Tenant ids are the interned `TenantId` values (raw u32 to
+/// keep this module dependency-free); request ids are trace ids.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EngineEvent {
+    pub t_s: f64,
+    pub step: u64,
+    pub kind: EventKind,
+    pub tenant: Option<u32>,
+    pub request: Option<u64>,
+    pub a: u64,
+    pub b: u64,
+}
+
+impl EngineEvent {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("t_s".into(), Json::Num(self.t_s));
+        m.insert("step".into(), Json::Num(self.step as f64));
+        m.insert("kind".into(), Json::Str(self.kind.name().into()));
+        if let Some(t) = self.tenant {
+            m.insert("tenant".into(), Json::Num(t as f64));
+        }
+        if let Some(r) = self.request {
+            m.insert("request".into(), Json::Num(r as f64));
+        }
+        m.insert("a".into(), Json::Num(self.a as f64));
+        m.insert("b".into(), Json::Num(self.b as f64));
+        Json::Obj(m)
+    }
+}
+
+/// An event consumer. The bus drives every registered sink through
+/// this; [`NullSink`] is the do-nothing default proving the interface
+/// costs nothing beyond the virtual call when tracing is on.
+pub trait EventSink {
+    fn on_event(&mut self, ev: &EngineEvent);
+    /// End of run — flush/verify accumulated state.
+    fn finalize(&mut self) {}
+}
+
+/// Discards everything.
+#[derive(Debug, Default)]
+pub struct NullSink;
+
+impl EventSink for NullSink {
+    fn on_event(&mut self, _ev: &EngineEvent) {}
+}
+
+/// Buffers the full stream for export / span reconstruction.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    pub events: Vec<EngineEvent>,
+}
+
+impl EventSink for Recorder {
+    fn on_event(&mut self, ev: &EngineEvent) {
+        self.events.push(*ev);
+    }
+}
+
+/// Per-request lifecycle state the auditor tracks.
+#[derive(Debug, Default)]
+struct ReqAudit {
+    arrival_s: f64,
+    admitted: bool,
+    seated: bool,
+    completed: bool,
+    /// Preempted and not yet re-dispatched.
+    awaiting_resume: bool,
+    /// Emitted its first output token (the unique `PrefillEnd` with
+    /// a == 1).
+    first_token: bool,
+    dispatches: u64,
+}
+
+/// The online invariant auditor: consumes the stream DURING the run
+/// and records a violation string for every causal invariant broken.
+/// A clean run ends with `violations == 0` after [`EventSink::
+/// finalize`].
+#[derive(Debug, Default)]
+pub struct EventAuditor {
+    /// Pool bound in blocks; 0 = unbounded (no capacity check).
+    kv_capacity: u64,
+    /// Running KV ledger: +a per KvAlloc, −a per KvFree; must equal
+    /// each event's reported `b`, stay in [0, capacity], end at 0.
+    kv_used: i64,
+    /// Tenant currently spliced into the shared base, if any.
+    live_splice: Option<u32>,
+    last_t: f64,
+    req: BTreeMap<u64, ReqAudit>,
+    violations: Vec<String>,
+    violation_count: u64,
+}
+
+/// Keep the report readable when something is badly wrong.
+const MAX_RECORDED_VIOLATIONS: usize = 32;
+
+impl EventAuditor {
+    pub fn with_kv_capacity(blocks: u64) -> EventAuditor {
+        EventAuditor { kv_capacity: blocks, ..Default::default() }
+    }
+
+    pub fn violation_count(&self) -> u64 {
+        self.violation_count
+    }
+
+    pub fn violations(&self) -> &[String] {
+        &self.violations
+    }
+
+    fn violate(&mut self, msg: String) {
+        self.violation_count += 1;
+        if self.violations.len() < MAX_RECORDED_VIOLATIONS {
+            self.violations.push(msg);
+        }
+    }
+
+    fn check(&mut self, ev: &EngineEvent) {
+        use EventKind::*;
+        // Arrival carries the original arrival time and is the one
+        // kind allowed to point backwards; everything else rides the
+        // engine's monotone virtual clock.
+        if ev.kind != Arrival {
+            if ev.t_s < self.last_t {
+                self.violate(format!(
+                    "{} at t={:.6} before prior event t={:.6}",
+                    ev.kind.name(), ev.t_s, self.last_t));
+            }
+            self.last_t = self.last_t.max(ev.t_s);
+        }
+        match ev.kind {
+            Arrival => {
+                let id = ev.request.unwrap_or(u64::MAX);
+                if self.req.contains_key(&id) {
+                    self.violate(format!("request {id}: second arrival"));
+                } else {
+                    self.req.insert(id, ReqAudit {
+                        arrival_s: ev.t_s, ..Default::default()
+                    });
+                }
+            }
+            Admit => self.req_check(ev, |r| {
+                if r.admitted {
+                    return Some("admitted twice".into());
+                }
+                r.admitted = true;
+                None
+            }),
+            Reject => self.req_check(ev, |r| {
+                if !r.admitted || r.seated || r.completed {
+                    return Some("rejected outside pending".into());
+                }
+                None
+            }),
+            Dispatch => {
+                let t = ev.t_s;
+                self.req_check(ev, |r| {
+                    if !r.admitted {
+                        return Some("dispatched before admission"
+                                    .into());
+                    }
+                    if t < r.arrival_s {
+                        return Some(format!(
+                            "dispatched at {t:.6} before arrival {:.6}",
+                            r.arrival_s));
+                    }
+                    if r.seated {
+                        return Some("dispatched while seated".into());
+                    }
+                    if r.completed {
+                        return Some("dispatched after completion"
+                                    .into());
+                    }
+                    r.seated = true;
+                    r.dispatches += 1;
+                    None
+                });
+            }
+            Resume => self.req_check(ev, |r| {
+                if !r.awaiting_resume {
+                    return Some("resume without preemption".into());
+                }
+                if !r.seated {
+                    return Some("resume outside a seat".into());
+                }
+                r.awaiting_resume = false;
+                None
+            }),
+            PrefillStart => self.req_check(ev, |r| {
+                if !r.seated {
+                    return Some("prefill outside a seat".into());
+                }
+                None
+            }),
+            PrefillEnd => {
+                let first = ev.a == 1;
+                self.req_check(ev, |r| {
+                    if !r.seated {
+                        return Some("prefill-end outside a seat"
+                                    .into());
+                    }
+                    if first {
+                        if r.first_token {
+                            return Some("second first-token".into());
+                        }
+                        r.first_token = true;
+                    }
+                    None
+                });
+            }
+            DecodeStep => self.req_check(ev, |r| {
+                if !r.seated {
+                    return Some("decode outside a seat".into());
+                }
+                None
+            }),
+            Preempt => self.req_check(ev, |r| {
+                if !r.seated {
+                    return Some("preempted outside a seat".into());
+                }
+                r.seated = false;
+                r.awaiting_resume = true;
+                None
+            }),
+            Complete => self.req_check(ev, |r| {
+                if r.completed {
+                    return Some("completed twice".into());
+                }
+                if !r.seated {
+                    return Some("completed outside a seat".into());
+                }
+                r.completed = true;
+                r.seated = false;
+                None
+            }),
+            SpliceIn => {
+                if let Some(live) = self.live_splice {
+                    self.violate(format!(
+                        "splice-in of tenant {:?} over live tenant \
+                         {live}", ev.tenant));
+                }
+                self.live_splice = ev.tenant;
+            }
+            SpliceOut => {
+                if self.live_splice != ev.tenant {
+                    self.violate(format!(
+                        "splice-out of tenant {:?} but live is {:?}",
+                        ev.tenant, self.live_splice));
+                }
+                self.live_splice = None;
+            }
+            KvAlloc => {
+                self.kv_used += ev.a as i64;
+                self.kv_ledger_check(ev);
+                if self.kv_capacity > 0
+                    && self.kv_used > self.kv_capacity as i64
+                {
+                    self.violate(format!(
+                        "kv over-commit: {} used > {} capacity",
+                        self.kv_used, self.kv_capacity));
+                }
+            }
+            KvFree => {
+                self.kv_used -= ev.a as i64;
+                if self.kv_used < 0 {
+                    self.violate("kv free of an unallocated block"
+                                 .into());
+                }
+                self.kv_ledger_check(ev);
+            }
+            // Pure counters: no causal state to check.
+            PrefixHit | Donate | Reclaim | Invalidate | CowFork
+                | Overflow | AdapterLoad | AdapterEvict => {}
+        }
+    }
+
+    /// The event's reported post-op occupancy must agree with the
+    /// running ledger — a lost or doubled alloc/free anywhere shows
+    /// up immediately.
+    fn kv_ledger_check(&mut self, ev: &EngineEvent) {
+        if self.kv_used != ev.b as i64 {
+            self.violate(format!(
+                "kv ledger drift at {}: running {} vs reported {}",
+                ev.kind.name(), self.kv_used, ev.b));
+        }
+    }
+
+    fn req_check(&mut self, ev: &EngineEvent,
+                 f: impl FnOnce(&mut ReqAudit) -> Option<String>) {
+        let id = ev.request.unwrap_or(u64::MAX);
+        let msg = match self.req.get_mut(&id) {
+            Some(r) => f(r),
+            None => Some("event before arrival".into()),
+        };
+        if let Some(m) = msg {
+            self.violate(format!("request {id}: {} — {m}",
+                                 ev.kind.name()));
+        }
+    }
+}
+
+impl EventSink for EventAuditor {
+    fn on_event(&mut self, ev: &EngineEvent) {
+        self.check(ev);
+    }
+
+    fn finalize(&mut self) {
+        let mut incomplete = 0usize;
+        let mut stranded = 0usize;
+        for r in self.req.values() {
+            if !r.completed {
+                incomplete += 1;
+            }
+            if r.awaiting_resume {
+                stranded += 1;
+            }
+        }
+        if incomplete > 0 {
+            self.violate(format!(
+                "{incomplete} arrived requests never completed"));
+        }
+        if stranded > 0 {
+            self.violate(format!(
+                "{stranded} preempted requests never resumed"));
+        }
+        if let Some(t) = self.live_splice {
+            self.violate(format!(
+                "tenant {t} still spliced at finish"));
+        }
+        if self.kv_used != 0 {
+            self.violate(format!(
+                "kv ledger nonzero at finish: {} blocks",
+                self.kv_used));
+        }
+    }
+}
+
+/// The shared bus behind an enabled [`Events`] handle: stamps events
+/// with the current virtual clock/step and fans them out to the
+/// recorder and auditor sinks.
+#[derive(Debug, Default)]
+pub struct EventBus {
+    recorder: Recorder,
+    auditor: EventAuditor,
+    counts: [u64; EventKind::COUNT],
+    total: u64,
+    now: f64,
+    step: u64,
+}
+
+impl EventBus {
+    fn dispatch(&mut self, ev: EngineEvent) {
+        self.counts[ev.kind.index()] += 1;
+        self.total += 1;
+        // Through the trait, like any other sink.
+        EventSink::on_event(&mut self.recorder, &ev);
+        EventSink::on_event(&mut self.auditor, &ev);
+    }
+}
+
+/// The handle every serve-layer struct holds. `Events::off()` (the
+/// `Default`) is a `None` — emitting is a single branch and nothing
+/// is allocated, so disabled tracing is provably inert. Clones share
+/// one bus, which is how the engine, scheduler, KV pool, prefix cache
+/// and registry all write one totally-ordered stream.
+#[derive(Debug, Clone, Default)]
+pub struct Events(Option<Rc<RefCell<EventBus>>>);
+
+impl Events {
+    /// Tracing disabled: every emit is a no-op.
+    pub fn off() -> Events {
+        Events(None)
+    }
+
+    /// Tracing enabled: record + audit every event.
+    pub fn recording() -> Events {
+        Events(Some(Rc::new(RefCell::new(EventBus::default()))))
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Tell the auditor the pool bound so it can flag over-commits
+    /// (0 = unbounded).
+    pub fn set_kv_capacity(&self, blocks: u64) {
+        if let Some(bus) = &self.0 {
+            bus.borrow_mut().auditor.kv_capacity = blocks;
+        }
+    }
+
+    /// Advance the stamp clock (the engine calls this at every
+    /// virtual-clock change, before the emissions of that moment).
+    pub fn set_now(&self, t_s: f64) {
+        if let Some(bus) = &self.0 {
+            bus.borrow_mut().now = t_s;
+        }
+    }
+
+    /// Advance the stamp step counter.
+    pub fn set_step(&self, step: u64) {
+        if let Some(bus) = &self.0 {
+            bus.borrow_mut().step = step;
+        }
+    }
+
+    /// Emit at the current stamp clock.
+    pub fn emit(&self, kind: EventKind, tenant: Option<u32>,
+                request: Option<u64>, a: u64, b: u64) {
+        if let Some(bus) = &self.0 {
+            let mut bus = bus.borrow_mut();
+            let ev = EngineEvent { t_s: bus.now, step: bus.step, kind,
+                                   tenant, request, a, b };
+            bus.dispatch(ev);
+        }
+    }
+
+    /// Emit at an explicit time (Arrival's original timestamp;
+    /// admission instants).
+    pub fn emit_at(&self, t_s: f64, kind: EventKind,
+                   tenant: Option<u32>, request: Option<u64>, a: u64,
+                   b: u64) {
+        if let Some(bus) = &self.0 {
+            let mut bus = bus.borrow_mut();
+            let ev = EngineEvent { t_s, step: bus.step, kind, tenant,
+                                   request, a, b };
+            bus.dispatch(ev);
+        }
+    }
+
+    /// Run the auditor's end-of-run checks (engine `finish()` calls
+    /// this after the final un-splice and cache flush).
+    pub fn finalize(&self) {
+        if let Some(bus) = &self.0 {
+            let mut bus = bus.borrow_mut();
+            EventSink::finalize(&mut bus.auditor);
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.0.as_ref().map_or(0, |b| b.borrow().total)
+    }
+
+    /// (kind name, count) for every kind seen at least once.
+    pub fn counts(&self) -> Vec<(&'static str, u64)> {
+        let Some(bus) = &self.0 else { return Vec::new() };
+        let bus = bus.borrow();
+        EventKind::ALL.iter()
+            .map(|k| (k.name(), bus.counts[k.index()]))
+            .filter(|(_, n)| *n > 0)
+            .collect()
+    }
+
+    pub fn violation_count(&self) -> u64 {
+        self.0.as_ref()
+            .map_or(0, |b| b.borrow().auditor.violation_count())
+    }
+
+    pub fn violations(&self) -> Vec<String> {
+        self.0.as_ref().map_or_else(Vec::new, |b| {
+            b.borrow().auditor.violations().to_vec()
+        })
+    }
+
+    /// Copy of the full recorded stream.
+    pub fn snapshot(&self) -> Vec<EngineEvent> {
+        self.0.as_ref().map_or_else(Vec::new, |b| {
+            b.borrow().recorder.events.clone()
+        })
+    }
+}
+
+// ---------------------------------------------------------------- spans
+
+/// One request's lifecycle, reconstructed purely from the stream.
+#[derive(Debug, Clone, Default)]
+pub struct RequestSpan {
+    pub tenant: Option<u32>,
+    pub arrival_s: Option<f64>,
+    pub first_dispatch_s: Option<f64>,
+    pub last_dispatch_s: Option<f64>,
+    /// Clock of the unique first-token `PrefillEnd` (a == 1).
+    pub first_token_s: Option<f64>,
+    pub complete_s: Option<f64>,
+    /// Decode length of the FIRST dispatch — the original request,
+    /// before any preemption rewrote the remainder.
+    pub orig_decode: u64,
+    pub dispatches: u64,
+    pub preempts: u64,
+    pub decode_steps: u64,
+}
+
+impl RequestSpan {
+    /// First seat minus arrival, clamped at 0 — the engine's queueing
+    /// sample arithmetic exactly.
+    pub fn queueing_s(&self) -> Option<f64> {
+        Some((self.first_dispatch_s? - self.arrival_s?).max(0.0))
+    }
+
+    pub fn ttft_s(&self) -> Option<f64> {
+        Some((self.first_token_s? - self.arrival_s?).max(0.0))
+    }
+
+    /// Final residency only (the engine restarts its service clock on
+    /// re-dispatch after preemption).
+    pub fn service_s(&self) -> Option<f64> {
+        Some((self.complete_s? - self.last_dispatch_s?).max(0.0))
+    }
+
+    pub fn e2e_s(&self) -> Option<f64> {
+        Some((self.complete_s? - self.arrival_s?).max(0.0))
+    }
+
+    /// Mean time per output token after the first, over the ORIGINAL
+    /// decode length (recompute replays don't re-count).
+    pub fn tpot_s(&self) -> Option<f64> {
+        if self.orig_decode == 0 {
+            return None;
+        }
+        Some((self.complete_s? - self.first_token_s?).max(0.0)
+             / self.orig_decode as f64)
+    }
+}
+
+/// Fold the stream into per-request spans.
+pub fn build_spans(events: &[EngineEvent])
+                   -> BTreeMap<u64, RequestSpan> {
+    let mut spans: BTreeMap<u64, RequestSpan> = BTreeMap::new();
+    for ev in events {
+        let Some(id) = ev.request else { continue };
+        let s = spans.entry(id).or_default();
+        if ev.tenant.is_some() {
+            s.tenant = ev.tenant;
+        }
+        match ev.kind {
+            EventKind::Arrival => s.arrival_s = Some(ev.t_s),
+            EventKind::Dispatch => {
+                if s.first_dispatch_s.is_none() {
+                    s.first_dispatch_s = Some(ev.t_s);
+                    s.orig_decode = ev.b;
+                }
+                s.last_dispatch_s = Some(ev.t_s);
+                s.dispatches += 1;
+            }
+            EventKind::PrefillEnd if ev.a == 1 => {
+                s.first_token_s = Some(ev.t_s);
+            }
+            EventKind::DecodeStep => s.decode_steps += 1,
+            EventKind::Preempt => s.preempts += 1,
+            EventKind::Complete => s.complete_s = Some(ev.t_s),
+            _ => {}
+        }
+    }
+    spans
+}
+
+/// The engine's latency recorders, re-derived from events alone. Keys
+/// mirror the engine's: the tenant name (via `tenant_names`, indexed
+/// by interned id) and the `"(all)"` aggregate.
+pub struct SpanLatencies {
+    pub queueing: LatencyRecorder,
+    pub service: LatencyRecorder,
+    pub e2e: LatencyRecorder,
+    pub ttft: LatencyRecorder,
+    pub tpot: LatencyRecorder,
+}
+
+pub fn span_latencies(events: &[EngineEvent],
+                      tenant_names: &[String]) -> SpanLatencies {
+    let mut out = SpanLatencies {
+        queueing: LatencyRecorder::default(),
+        service: LatencyRecorder::default(),
+        e2e: LatencyRecorder::default(),
+        ttft: LatencyRecorder::default(),
+        tpot: LatencyRecorder::default(),
+    };
+    let name = |t: Option<u32>| -> String {
+        t.and_then(|i| tenant_names.get(i as usize).cloned())
+            .unwrap_or_else(|| format!("t{}", t.unwrap_or(0)))
+    };
+    for span in build_spans(events).values() {
+        let key = name(span.tenant);
+        let mut rec = |r: &mut LatencyRecorder, v: Option<f64>| {
+            if let Some(v) = v {
+                r.record(&key, v);
+                r.record("(all)", v);
+            }
+        };
+        rec(&mut out.queueing, span.queueing_s());
+        rec(&mut out.service, span.service_s());
+        rec(&mut out.e2e, span.e2e_s());
+        rec(&mut out.ttft, span.ttft_s());
+        rec(&mut out.tpot, span.tpot_s());
+    }
+    out
+}
+
+// ------------------------------------------------------------ exporters
+
+/// One JSON object per line — greppable, streamable, and the format
+/// the CI smoke parses line-by-line.
+pub fn to_jsonl(events: &[EngineEvent]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        out.push_str(&ev.to_json().to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// A closed [start, end] interval on some track.
+struct Interval {
+    name: String,
+    start: f64,
+    end: f64,
+    request: u64,
+    tenant: Option<u32>,
+}
+
+/// Chrome trace-event format (the JSON-object flavour Perfetto and
+/// `chrome://tracing` open directly): pid 1 carries one thread per
+/// TENANT with that tenant's request residencies; pid 2 re-lays the
+/// same residencies onto engine SLOT lanes (greedy interval
+/// packing), so batch occupancy is visible at a glance; pid 0 carries
+/// the splice intervals plus instantaneous pool/cache markers.
+/// Timestamps are µs of virtual time.
+pub fn to_chrome_trace(events: &[EngineEvent],
+                       tenant_names: &[String]) -> Json {
+    let us = |t: f64| (t * 1e6).max(0.0);
+    let name_of = |t: Option<u32>| -> String {
+        t.and_then(|i| tenant_names.get(i as usize).cloned())
+            .unwrap_or_else(|| format!("t{}", t.unwrap_or(0)))
+    };
+    let mut trace: Vec<Json> = Vec::new();
+    let mut meta = |pid: f64, tid: Option<f64>, name: &str| {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(
+            if tid.is_some() { "thread_name" } else { "process_name" }
+                .into()));
+        m.insert("ph".into(), Json::Str("M".into()));
+        m.insert("pid".into(), Json::Num(pid));
+        if let Some(t) = tid {
+            m.insert("tid".into(), Json::Num(t));
+        }
+        let mut args = BTreeMap::new();
+        args.insert("name".into(), Json::Str(name.into()));
+        m.insert("args".into(), Json::Obj(args));
+        trace.push(Json::Obj(m));
+    };
+    meta(0.0, None, "engine");
+    meta(1.0, None, "tenants");
+    meta(2.0, None, "slots");
+    for (i, n) in tenant_names.iter().enumerate() {
+        meta(1.0, Some(i as f64), n);
+    }
+
+    let complete = |name: &str, pid: f64, tid: f64, start: f64,
+                    end: f64, args: BTreeMap<String, Json>| -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(name.into()));
+        m.insert("ph".into(), Json::Str("X".into()));
+        m.insert("pid".into(), Json::Num(pid));
+        m.insert("tid".into(), Json::Num(tid));
+        m.insert("ts".into(), Json::Num(us(start)));
+        m.insert("dur".into(),
+                 Json::Num((us(end) - us(start)).max(0.0)));
+        if !args.is_empty() {
+            m.insert("args".into(), Json::Obj(args));
+        }
+        Json::Obj(m)
+    };
+    let instant = |name: &str, pid: f64, tid: f64, t: f64| -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(name.into()));
+        m.insert("ph".into(), Json::Str("i".into()));
+        m.insert("s".into(), Json::Str("t".into()));
+        m.insert("pid".into(), Json::Num(pid));
+        m.insert("tid".into(), Json::Num(tid));
+        m.insert("ts".into(), Json::Num(us(t)));
+        Json::Obj(m)
+    };
+
+    // Request residencies: Dispatch opens, Preempt/Complete closes.
+    let mut open: BTreeMap<u64, (f64, Option<u32>)> = BTreeMap::new();
+    let mut resid: Vec<Interval> = Vec::new();
+    let mut splice_open: Option<(f64, Option<u32>)> = None;
+    let mut last_t = 0.0f64;
+    for ev in events {
+        last_t = last_t.max(ev.t_s);
+        match ev.kind {
+            EventKind::Dispatch => {
+                if let Some(id) = ev.request {
+                    open.insert(id, (ev.t_s, ev.tenant));
+                }
+            }
+            EventKind::Preempt | EventKind::Complete => {
+                if let Some(id) = ev.request {
+                    if let Some((start, tenant)) = open.remove(&id) {
+                        let tag = if ev.kind == EventKind::Preempt {
+                            format!("req {id} (preempted)")
+                        } else {
+                            format!("req {id}")
+                        };
+                        resid.push(Interval {
+                            name: tag, start, end: ev.t_s,
+                            request: id, tenant,
+                        });
+                    }
+                }
+            }
+            EventKind::SpliceIn => {
+                splice_open = Some((ev.t_s, ev.tenant));
+            }
+            EventKind::SpliceOut => {
+                if let Some((start, tenant)) = splice_open.take() {
+                    let mut args = BTreeMap::new();
+                    args.insert("tenant".into(),
+                                Json::Str(name_of(tenant)));
+                    trace.push(complete(
+                        &format!("splice {}", name_of(tenant)),
+                        0.0, 0.0, start, ev.t_s, args));
+                }
+            }
+            EventKind::Reject => {
+                trace.push(instant(
+                    "reject", 1.0,
+                    ev.tenant.map_or(0.0, |t| t as f64), ev.t_s));
+            }
+            EventKind::PrefixHit => {
+                trace.push(instant(
+                    &format!("prefix hit ({} tok)", ev.a), 1.0,
+                    ev.tenant.map_or(0.0, |t| t as f64), ev.t_s));
+            }
+            EventKind::CowFork => {
+                trace.push(instant("cow fork", 0.0, 1.0, ev.t_s));
+            }
+            EventKind::Reclaim => {
+                trace.push(instant(
+                    &format!("reclaim ({} blk)", ev.a), 0.0, 1.0,
+                    ev.t_s));
+            }
+            EventKind::Overflow => {
+                trace.push(instant("kv overflow", 0.0, 1.0, ev.t_s));
+            }
+            _ => {}
+        }
+    }
+    // Anything still seated at the end of the stream closes there.
+    for (id, (start, tenant)) in open {
+        resid.push(Interval { name: format!("req {id} (open)"), start,
+                              end: last_t, request: id, tenant });
+    }
+    if let Some((start, tenant)) = splice_open {
+        let mut args = BTreeMap::new();
+        args.insert("tenant".into(), Json::Str(name_of(tenant)));
+        trace.push(complete(&format!("splice {}", name_of(tenant)),
+                            0.0, 0.0, start, last_t, args));
+    }
+
+    // Tenant tracks, then slot lanes via greedy interval packing.
+    resid.sort_by(|x, y| x.start.partial_cmp(&y.start).unwrap());
+    let mut lane_end: Vec<f64> = Vec::new();
+    for iv in &resid {
+        let mut args = BTreeMap::new();
+        args.insert("request".into(), Json::Num(iv.request as f64));
+        args.insert("tenant".into(), Json::Str(name_of(iv.tenant)));
+        trace.push(complete(&iv.name, 1.0,
+                            iv.tenant.map_or(0.0, |t| t as f64),
+                            iv.start, iv.end, args.clone()));
+        let lane = match lane_end.iter()
+            .position(|&end| end <= iv.start)
+        {
+            Some(i) => i,
+            None => {
+                lane_end.push(0.0);
+                lane_end.len() - 1
+            }
+        };
+        lane_end[lane] = iv.end;
+        trace.push(complete(&iv.name, 2.0, lane as f64, iv.start,
+                            iv.end, args));
+    }
+
+    let mut root = BTreeMap::new();
+    root.insert("traceEvents".into(), Json::Arr(trace));
+    root.insert("displayTimeUnit".into(), Json::Str("ms".into()));
+    Json::Obj(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: f64, kind: EventKind, tenant: u32, req: u64, a: u64,
+          b: u64) -> EngineEvent {
+        EngineEvent { t_s: t, step: 0, kind, tenant: Some(tenant),
+                      request: Some(req), a, b }
+    }
+
+    /// A minimal clean lifecycle: arrive, admit, dispatch, prefill,
+    /// decode, complete, with a balanced KV ledger and paired splice.
+    fn clean_run(events: &Events) {
+        use EventKind::*;
+        events.emit_at(0.0, Arrival, Some(0), Some(1), 4, 2);
+        events.set_now(0.5);
+        events.emit(Admit, Some(0), Some(1), 4, 2);
+        events.emit(Dispatch, Some(0), Some(1), 4, 2);
+        events.emit(SpliceIn, Some(0), None, 0, 0);
+        events.emit(KvAlloc, None, None, 1, 1);
+        events.emit(PrefillStart, Some(0), Some(1), 4, 0);
+        events.set_now(0.6);
+        events.emit(PrefillEnd, Some(0), Some(1), 1, 4);
+        events.set_now(0.7);
+        events.emit(DecodeStep, Some(0), Some(1), 1, 1);
+        events.set_now(0.8);
+        events.emit(DecodeStep, Some(0), Some(1), 1, 0);
+        events.emit(Complete, Some(0), Some(1), 3, 0);
+        events.emit(KvFree, None, None, 1, 0);
+        events.emit(SpliceOut, Some(0), None, 0, 0);
+        events.finalize();
+    }
+
+    #[test]
+    fn off_handle_is_inert() {
+        let events = Events::off();
+        assert!(!events.enabled());
+        clean_run(&events); // all no-ops
+        assert_eq!(events.total(), 0);
+        assert!(events.snapshot().is_empty());
+        assert_eq!(events.violation_count(), 0);
+        assert!(events.counts().is_empty());
+    }
+
+    #[test]
+    fn recording_handle_counts_and_audits_clean() {
+        let events = Events::recording();
+        assert!(events.enabled());
+        clean_run(&events);
+        assert_eq!(events.total(), 12);
+        assert_eq!(events.violation_count(), 0,
+                   "{:?}", events.violations());
+        let counts: BTreeMap<_, _> =
+            events.counts().into_iter().collect();
+        assert_eq!(counts["arrival"], 1);
+        assert_eq!(counts["decode_step"], 2);
+        assert_eq!(counts["complete"], 1);
+        // Clones share the bus.
+        let alias = events.clone();
+        alias.emit(EventKind::Overflow, None, None, 3, 0);
+        assert_eq!(events.total(), 13);
+    }
+
+    #[test]
+    fn null_sink_satisfies_the_trait() {
+        let mut sink: Box<dyn EventSink> = Box::<NullSink>::default();
+        sink.on_event(&ev(0.0, EventKind::Arrival, 0, 0, 0, 0));
+        sink.finalize();
+    }
+
+    #[test]
+    fn auditor_flags_causal_violations() {
+        use EventKind::*;
+        let catches = |emit: &dyn Fn(&Events)| -> u64 {
+            let events = Events::recording();
+            emit(&events);
+            events.finalize();
+            events.violation_count()
+        };
+        // Dispatch before arrival.
+        assert!(catches(&|e| {
+            e.emit(Dispatch, Some(0), Some(9), 1, 0);
+            // Keep finalize quiet about the incompleteness:
+            e.emit(Complete, Some(0), Some(9), 1, 0);
+        }) > 0);
+        // Dispatch before the arrival TIME.
+        assert!(catches(&|e| {
+            e.emit_at(5.0, Arrival, Some(0), Some(1), 1, 0);
+            e.set_now(1.0);
+            e.emit(Admit, Some(0), Some(1), 1, 0);
+            e.emit(Dispatch, Some(0), Some(1), 1, 0);
+            e.set_now(6.0);
+            e.emit(Complete, Some(0), Some(1), 1, 0);
+        }) > 0);
+        // Double completion.
+        assert!(catches(&|e| {
+            e.emit_at(0.0, Arrival, Some(0), Some(1), 1, 0);
+            e.emit(Admit, Some(0), Some(1), 1, 0);
+            e.emit(Dispatch, Some(0), Some(1), 1, 0);
+            e.emit(Complete, Some(0), Some(1), 1, 0);
+            e.emit(Complete, Some(0), Some(1), 1, 0);
+        }) > 0);
+        // Unpaired splice (still live at finish).
+        assert!(catches(&|e| {
+            e.emit(SpliceIn, Some(3), None, 0, 0);
+        }) > 0);
+        // Splice-in over a live tenant.
+        assert!(catches(&|e| {
+            e.emit(SpliceIn, Some(1), None, 0, 0);
+            e.emit(SpliceIn, Some(2), None, 0, 0);
+            e.emit(SpliceOut, Some(2), None, 0, 0);
+        }) > 0);
+        // KV ledger: free without alloc.
+        assert!(catches(&|e| {
+            e.emit(KvFree, None, None, 1, 0);
+        }) > 0);
+        // KV ledger drift (reported b disagrees).
+        assert!(catches(&|e| {
+            e.emit(KvAlloc, None, None, 1, 7);
+            e.emit(KvFree, None, None, 1, 0);
+        }) > 0);
+        // KV over-commit against a declared bound.
+        let events = Events::recording();
+        events.set_kv_capacity(1);
+        events.emit(KvAlloc, None, None, 1, 1);
+        events.emit(KvAlloc, None, None, 1, 2);
+        assert!(events.violation_count() > 0);
+        // Non-arrival clock regression.
+        assert!(catches(&|e| {
+            e.set_now(2.0);
+            e.emit(Overflow, None, None, 1, 0);
+            e.set_now(1.0);
+            e.emit(Overflow, None, None, 1, 0);
+        }) > 0);
+        // Arrival IS allowed to point backwards.
+        assert_eq!(catches(&|e| {
+            e.set_now(2.0);
+            e.emit(Overflow, None, None, 1, 0);
+            e.emit_at(0.5, Arrival, Some(0), Some(1), 1, 0);
+            e.emit(Admit, Some(0), Some(1), 1, 0);
+            e.emit(Dispatch, Some(0), Some(1), 1, 0);
+            e.emit(Complete, Some(0), Some(1), 1, 0);
+        }), 0);
+    }
+
+    #[test]
+    fn auditor_accepts_preempt_resume_cycles() {
+        use EventKind::*;
+        let e = Events::recording();
+        e.emit_at(0.0, Arrival, Some(0), Some(1), 4, 6);
+        e.set_now(0.1);
+        e.emit(Admit, Some(0), Some(1), 4, 6);
+        e.emit(Dispatch, Some(0), Some(1), 4, 6);
+        e.emit(PrefillStart, Some(0), Some(1), 4, 0);
+        e.set_now(0.2);
+        e.emit(PrefillEnd, Some(0), Some(1), 1, 4);
+        e.set_now(0.3);
+        e.emit(Preempt, Some(0), Some(1), 1, 5);
+        e.set_now(0.9);
+        e.emit(Dispatch, Some(0), Some(1), 5, 5);
+        e.emit(Resume, Some(0), Some(1), 5, 0);
+        e.emit(PrefillStart, Some(0), Some(1), 5, 0);
+        e.set_now(1.0);
+        e.emit(PrefillEnd, Some(0), Some(1), 0, 5); // recompute: a=0
+        e.set_now(1.6);
+        e.emit(Complete, Some(0), Some(1), 6, 0);
+        e.finalize();
+        assert_eq!(e.violation_count(), 0, "{:?}", e.violations());
+        // Resume without a preceding preempt is flagged.
+        let e = Events::recording();
+        e.emit_at(0.0, Arrival, Some(0), Some(1), 1, 0);
+        e.emit(Admit, Some(0), Some(1), 1, 0);
+        e.emit(Dispatch, Some(0), Some(1), 1, 0);
+        e.emit(Resume, Some(0), Some(1), 1, 0);
+        assert!(e.violation_count() > 0);
+    }
+
+    #[test]
+    fn spans_rebuild_the_lifecycle() {
+        let e = Events::recording();
+        clean_run(&e);
+        let spans = build_spans(&e.snapshot());
+        assert_eq!(spans.len(), 1);
+        let s = &spans[&1];
+        assert_eq!(s.arrival_s, Some(0.0));
+        assert_eq!(s.first_dispatch_s, Some(0.5));
+        assert_eq!(s.first_token_s, Some(0.6));
+        assert_eq!(s.complete_s, Some(0.8));
+        assert_eq!(s.orig_decode, 2);
+        assert_eq!(s.decode_steps, 2);
+        assert_eq!(s.queueing_s(), Some(0.5));
+        assert_eq!(s.ttft_s(), Some(0.6));
+        assert_eq!(s.e2e_s(), Some(0.8));
+        assert_eq!(s.service_s(), Some(0.8 - 0.5));
+        assert_eq!(s.tpot_s(), Some((0.8 - 0.6) / 2.0));
+        let lat = span_latencies(&e.snapshot(),
+                                 &["tenant-00".to_string()]);
+        assert_eq!(lat.e2e.count("tenant-00"), 1);
+        assert_eq!(lat.e2e.count("(all)"), 1);
+        assert_eq!(lat.tpot.percentile("(all)", 0.5),
+                   Some((0.8 - 0.6) / 2.0));
+    }
+
+    #[test]
+    fn jsonl_lines_all_parse() {
+        let e = Events::recording();
+        clean_run(&e);
+        let text = to_jsonl(&e.snapshot());
+        assert_eq!(text.lines().count(), 12);
+        for line in text.lines() {
+            let j = Json::parse(line).unwrap();
+            assert!(j.get("kind").and_then(Json::as_str).is_some());
+            assert!(j.get("t_s").and_then(Json::as_f64).is_some());
+            assert!(j.get("step").is_some());
+        }
+        // Round-trip: values survive serialization exactly.
+        let first = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(first.get("kind").and_then(Json::as_str),
+                   Some("arrival"));
+        assert_eq!(first.get("request").and_then(Json::as_usize),
+                   Some(1));
+    }
+
+    #[test]
+    fn chrome_trace_is_wellformed() {
+        let e = Events::recording();
+        clean_run(&e);
+        let j = to_chrome_trace(&e.snapshot(),
+                                &["tenant-00".to_string()]);
+        // Self round-trip through the serializer.
+        let back = Json::parse(&j.to_string()).unwrap();
+        let arr = back.get("traceEvents").and_then(Json::as_arr)
+            .expect("traceEvents array");
+        assert!(!arr.is_empty());
+        let phases: Vec<&str> = arr.iter()
+            .filter_map(|v| v.get("ph").and_then(Json::as_str))
+            .collect();
+        assert!(phases.contains(&"M"), "metadata events");
+        assert!(phases.contains(&"X"), "complete events");
+        // The residency appears on both the tenant and slot tracks.
+        let xs: Vec<&Json> = arr.iter()
+            .filter(|v| v.get("ph").and_then(Json::as_str)
+                    == Some("X"))
+            .collect();
+        let pids: Vec<i64> = xs.iter()
+            .filter_map(|v| v.get("pid").and_then(Json::as_i64))
+            .collect();
+        assert!(pids.contains(&1) && pids.contains(&2));
+        for x in xs {
+            let dur = x.get("dur").and_then(Json::as_f64).unwrap();
+            assert!(dur >= 0.0);
+        }
+    }
+}

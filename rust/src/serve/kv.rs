@@ -36,6 +36,7 @@
 //! (the reduction anchor in tests/properties.rs).
 
 use crate::manifest::ModelInfo;
+use crate::serve::events::{EventKind, Events};
 
 /// Default block granularity (tokens per block) when none is
 /// configured — small enough that a tiny-model prompt spans several
@@ -144,6 +145,10 @@ pub struct KvPool {
     /// Blocks held ONLY by the prefix cache (cached && refs == 1) —
     /// reclaimable capacity.
     reclaimable: usize,
+    /// Event-stream handle (off by default). Alloc/free emit at the
+    /// ONLY two sites where `used_blocks` changes, so the audited
+    /// ledger is exact by construction.
+    events: Events,
     pub stats: KvStats,
 }
 
@@ -155,7 +160,19 @@ impl KvPool {
                  bytes_per_token, free: Vec::new(), next_fresh: 0,
                  refs: Vec::new(), cached: Vec::new(),
                  fill: Vec::new(), used_blocks: 0, resident_tokens: 0,
-                 reclaimable: 0, stats: KvStats::default() }
+                 reclaimable: 0, events: Events::off(),
+                 stats: KvStats::default() }
+    }
+
+    /// Install an event-stream handle (the engine clones its own in;
+    /// also tells the stream's auditor the pool bound so it can flag
+    /// over-commit). Off by default.
+    pub fn set_events(&mut self, events: Events) {
+        // 0 = unbounded for both the pool and the auditor, so always
+        // propagate — a reconfigure from bounded to unbounded must
+        // not leave a stale bound behind.
+        events.set_kv_capacity(self.n_blocks as u64);
+        self.events = events;
     }
 
     /// The unlimited pool the engine defaults to: pure accounting, no
@@ -283,6 +300,8 @@ impl KvPool {
         self.fill[i] = fill as u32;
         self.used_blocks += 1;
         self.resident_tokens += fill;
+        self.events.emit(EventKind::KvAlloc, None, None, 1,
+                         self.used_blocks as u64);
         Some(id)
     }
 
@@ -319,6 +338,8 @@ impl KvPool {
             self.resident_tokens -= self.fill[i] as usize;
             self.fill[i] = 0;
             self.free.push(id);
+            self.events.emit(EventKind::KvFree, None, None, 1,
+                             self.used_blocks as u64);
         } else if self.refs[i] == 1 && self.cached[i] {
             self.reclaimable += 1;
             self.stats.peak_reclaimable =
@@ -390,6 +411,9 @@ impl KvPool {
         let fit = (self.free_blocks() * self.block_tokens).min(tokens);
         self.stats.alloc_clamps += 1;
         self.stats.overflow_tokens += (tokens - fit) as u64;
+        self.events.emit(EventKind::Overflow, None, None,
+                         (tokens - fit) as u64,
+                         self.stats.overflow_tokens);
         if fit == 0 {
             self.stats.allocs += 1;
             return KvSeq::default();
@@ -431,6 +455,8 @@ impl KvPool {
         *seq.blocks.last_mut().unwrap() = nb;
         self.unref(old);
         self.stats.cow_forks += 1;
+        self.events.emit(EventKind::CowFork, None, None,
+                         old as u64, nb as u64);
     }
 
     /// Extend `seq` by `extra` token slots, allocating blocks as
@@ -504,6 +530,9 @@ impl KvPool {
         .min(extra);
         self.stats.alloc_clamps += 1;
         self.stats.overflow_tokens += (extra - fit) as u64;
+        self.events.emit(EventKind::Overflow, None, None,
+                         (extra - fit) as u64,
+                         self.stats.overflow_tokens);
         if fit > 0 {
             assert!(self.grow(seq, fit),
                     "clamped growth fits by construction");
@@ -515,6 +544,8 @@ impl KvPool {
     /// free blocks, no evictable victim): pure ledger entry.
     pub fn overflow(&mut self, tokens: usize) {
         self.stats.overflow_tokens += tokens as u64;
+        self.events.emit(EventKind::Overflow, None, None,
+                         tokens as u64, self.stats.overflow_tokens);
     }
 
     /// Drop a sequence's references (O(1) per block); blocks nobody

@@ -52,6 +52,15 @@
 //!     the merged weights ⇒ its cached KV is stale). Sharing is
 //!     strictly per-tenant for the same reason. `--prefix-cache off`
 //!     = bit-for-bit the PR-4 engine.
+//!   * [`events`]    — step-level observability: the typed
+//!     [`events::EngineEvent`] stream every serve-layer module emits
+//!     behind the zero-cost-when-disabled [`events::Events`] handle
+//!     (`--trace-events PATH`, `--trace-format jsonl|chrome`), the
+//!     per-request span reconstructor that re-derives
+//!     queueing/TTFT/TPOT from events alone, and the online
+//!     [`events::EventAuditor`] enforcing the causal invariants
+//!     (dispatch-after-arrival, exactly-once completion, paired
+//!     splices, a balanced KV ledger) DURING the run.
 //!   * [`engine`]    — the serving engine around the
 //!     [`engine::ForwardBackend`] trait (host GEMM always available;
 //!     PJRT drives the lowered eval artifact when `make artifacts`
@@ -79,6 +88,7 @@
 
 pub mod cost;
 pub mod engine;
+pub mod events;
 pub mod kv;
 pub mod prefix;
 pub mod registry;

@@ -42,6 +42,7 @@
 //! only removable block). Blocks a live sequence shares stay pinned
 //! and are never reclaimed from under it.
 
+use crate::serve::events::{EventKind, Events};
 use crate::serve::kv::KvPool;
 use crate::serve::scheduler::TenantId;
 
@@ -135,13 +136,22 @@ pub struct PrefixCache {
     chains: Vec<Option<Chain>>,
     /// Monotone LRU clock.
     clock: u64,
+    /// Event-stream handle (off by default; the engine installs its
+    /// own so hit/donate/reclaim/invalidate join the run's stream).
+    events: Events,
     pub stats: PrefixStats,
 }
 
 impl PrefixCache {
     pub fn new(enabled: bool) -> PrefixCache {
         PrefixCache { enabled, chains: Vec::new(), clock: 0,
+                      events: Events::off(),
                       stats: PrefixStats::default() }
+    }
+
+    /// Install an event-stream handle. Off by default.
+    pub fn set_events(&mut self, events: Events) {
+        self.events = events;
     }
 
     pub fn enabled(&self) -> bool {
@@ -179,16 +189,20 @@ impl PrefixCache {
         }
     }
 
-    fn drop_chain(&mut self, t: TenantId, kv: &mut KvPool) -> bool {
+    /// Drop a tenant's chain, releasing every cache hold; returns the
+    /// number of blocks dropped (0 = no chain; chains are never
+    /// empty).
+    fn drop_chain(&mut self, t: TenantId, kv: &mut KvPool) -> usize {
         let Some(chain) = self.chains.get_mut(t.index())
             .and_then(Option::take)
         else {
-            return false;
+            return 0;
         };
+        let n = chain.blocks.len();
         for b in chain.blocks {
             kv.uncache(b);
         }
-        true
+        n
     }
 
     /// Drop the tenant's whole subtree: the registry evicted or
@@ -197,8 +211,12 @@ impl PrefixCache {
     /// merely un-cached (they finish on their own holder's refs).
     pub fn invalidate_tenant(&mut self, t: TenantId,
                              kv: &mut KvPool) {
-        if self.drop_chain(t, kv) {
+        let dropped = self.drop_chain(t, kv);
+        if dropped > 0 {
             self.stats.invalidations += 1;
+            self.events.emit(EventKind::Invalidate, Some(t.0), None,
+                             dropped as u64,
+                             self.stats.invalidations);
         }
     }
 
@@ -256,9 +274,12 @@ impl PrefixCache {
         }
         chain.last_hit = clock;
         let tokens = full * bt + tail;
+        let blocks = chain.blocks[..n].to_vec();
         self.stats.hits += 1;
         self.stats.hit_tokens += tokens as u64;
-        PrefixMatch { blocks: chain.blocks[..n].to_vec(), tokens }
+        self.events.emit(EventKind::PrefixHit, Some(t.0), None,
+                         tokens as u64, n as u64);
+        PrefixMatch { blocks, tokens }
     }
 
     /// A completing (or preempted) sequence hands its shared-prefix
@@ -344,7 +365,12 @@ impl PrefixCache {
             // Else the cached cover at this position is at least as
             // long — keep it.
         }
+        let chain_len = chain.blocks.len();
         self.stats.donated_blocks += donated;
+        if donated > 0 {
+            self.events.emit(EventKind::Donate, Some(t.0), None,
+                             donated, chain_len as u64);
+        }
     }
 
     /// Free up to `need` blocks by dropping cache-only (pool refcount
@@ -377,6 +403,10 @@ impl PrefixCache {
             freed += 1;
         }
         self.stats.reclaimed_blocks += freed as u64;
+        if freed > 0 {
+            self.events.emit(EventKind::Reclaim, None, None,
+                             freed as u64, need as u64);
+        }
         freed
     }
 }

@@ -17,6 +17,7 @@ use crate::coordinator::checkpoint;
 use crate::coordinator::merge;
 use crate::manifest::ModelInfo;
 use crate::peft::Selection;
+use crate::serve::events::{EventKind, Events};
 use crate::tensor::{DType, HostTensor};
 use crate::util::rng::Rng;
 
@@ -283,6 +284,10 @@ pub struct AdapterRegistry {
     /// (Entries outlive eviction on purpose: a re-load after an
     /// eviction must present a NEW generation.)
     gen: HashMap<String, u64>,
+    /// Event-stream handle (off by default). Adapter events carry no
+    /// tenant id — the registry is keyed by tenant NAME; the timeline
+    /// still shows when loads/evictions happened relative to steps.
+    events: Events,
     pub stats: RegistryStats,
 }
 
@@ -291,7 +296,13 @@ impl AdapterRegistry {
         AdapterRegistry { dir: None, capacity: capacity.max(1),
                           clock: 0, map: HashMap::new(),
                           gen: HashMap::new(),
+                          events: Events::off(),
                           stats: RegistryStats::default() }
+    }
+
+    /// Install an event-stream handle. Off by default.
+    pub fn set_events(&mut self, events: Events) {
+        self.events = events;
     }
 
     pub fn with_dir(dir: &Path, capacity: usize) -> AdapterRegistry {
@@ -360,6 +371,9 @@ impl AdapterRegistry {
         let out = self.map.remove(tenant).map(|(_, a)| a);
         if out.is_some() {
             self.bump_generation(tenant);
+            self.events.emit(EventKind::AdapterEvict, None, None,
+                             self.generation(tenant),
+                             self.map.len() as u64);
         }
         out
     }
@@ -372,6 +386,9 @@ impl AdapterRegistry {
             self.map.remove(&t);
             self.bump_generation(&t);
             self.stats.evictions += 1;
+            self.events.emit(EventKind::AdapterEvict, None, None,
+                             self.generation(&t),
+                             self.map.len() as u64);
         }
     }
 
@@ -391,6 +408,9 @@ impl AdapterRegistry {
                 .with_context(|| format!("{}", path.display()))?;
             self.stats.loads += 1;
             self.insert(adapter);
+            self.events.emit(EventKind::AdapterLoad, None, None,
+                             self.stats.loads,
+                             self.map.len() as u64);
         }
         self.clock += 1;
         let clock = self.clock;

@@ -29,6 +29,8 @@ use std::collections::{HashMap, VecDeque};
 
 use anyhow::{anyhow, Result};
 
+use crate::serve::events::{EventKind, Events};
+
 /// Dense interned tenant handle — index into a [`TenantPool`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct TenantId(pub u32);
@@ -397,6 +399,11 @@ pub struct OnlineScheduler {
     /// attach uses — so what the gate/budget charges and what prefill
     /// actually computes can never drift.
     pub kv_prefix_cover: Vec<(usize, usize)>,
+    /// Event-stream handle (off by default — every emit is then a
+    /// no-op). The engine installs a clone of its own handle at serve
+    /// start, so admission/dispatch/gate events interleave with the
+    /// engine's in one totally-ordered stream.
+    pub events: Events,
 }
 
 impl OnlineScheduler {
@@ -427,6 +434,7 @@ impl OnlineScheduler {
             kv_free_blocks: usize::MAX,
             prefix_block_tokens: 0,
             kv_prefix_cover: Vec::new(),
+            events: Events::off(),
         }
     }
 
@@ -478,12 +486,19 @@ impl OnlineScheduler {
             let fits = charge <= token_budget.saturating_sub(tokens)
                 && need <= self.kv_free_blocks.saturating_sub(blocks);
             if !(fits || (first_fits && out.is_empty())) {
+                // The gate deferred the head request this attempt.
+                self.events.emit(EventKind::Reject, Some(t.0),
+                                 Some(front.id), charge as u64,
+                                 need as u64);
                 break;
             }
             let (_, r) = self.pending[t.index()].pop().unwrap();
             self.pending_count -= 1;
             tokens += charge;
             blocks += need;
+            self.events.emit(EventKind::Dispatch, Some(t.0),
+                             Some(r.id), r.tokens as u64,
+                             r.decode_tokens as u64);
             out.push(r);
         }
         out
@@ -537,6 +552,17 @@ impl OnlineScheduler {
             .is_some_and(|r| r.arrival_s <= clock)
         {
             let r = self.future.pop().unwrap();
+            // Arrival rides the ORIGINAL timestamp (the one kind that
+            // may point backwards); admission rides the clock that
+            // just passed it.
+            self.events.emit_at(r.arrival_s, EventKind::Arrival,
+                                Some(r.tenant.0), Some(r.id),
+                                r.tokens as u64,
+                                r.decode_tokens as u64);
+            self.events.emit_at(clock, EventKind::Admit,
+                                Some(r.tenant.0), Some(r.id),
+                                r.tokens as u64,
+                                r.decode_tokens as u64);
             let seq = self.next_seq;
             self.next_seq += 1;
             let slack = self.decode_slack_s;

@@ -285,3 +285,112 @@ fn serve_cli_prefix_cache_and_report_json() {
 
     std::fs::remove_dir_all(&dir).ok();
 }
+
+#[test]
+fn serve_cli_event_trace_exports_and_audits() {
+    // Event-tracing smoke under real pressure: a tiny paged pool with
+    // preemption AND a shared-prefix cache, so the exported stream
+    // carries the full vocabulary (dispatches, splices, prefix hits,
+    // kv alloc/free, preempt/resume). Every JSONL line must parse,
+    // the online auditor must come back clean (it would exit nonzero
+    // otherwise), the report JSON must carry the schema + events
+    // section, and the Chrome export must be one well-formed JSON
+    // document.
+    use paca::util::json::Json;
+
+    let dir = tmp("serve-events");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("events_trace.jsonl");
+    let adapters = dir.join("adapters");
+    let events_path = dir.join("events.jsonl");
+    let chrome_path = dir.join("events.chrome.json");
+    let report = dir.join("report.json");
+    let run = |extra: &[&str]| {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_paca"));
+        cmd.arg("serve")
+            .arg("--backend").arg("host")
+            .arg("--requests").arg(&trace)
+            .arg("--adapters").arg(&adapters)
+            .arg("--count").arg("48")
+            .arg("--tenants").arg("4")
+            .arg("--batch").arg("8")
+            .arg("--mean-tokens").arg("12")
+            .arg("--decode-tokens").arg("12")
+            .arg("--shared-prefix-tokens").arg("32")
+            .arg("--deadline-ms").arg("50")
+            .arg("--burstiness").arg("3")
+            .arg("--req-per-s").arg("1e9")
+            .arg("--policy").arg("slo-aware")
+            .arg("--kv-blocks").arg("16")
+            .arg("--kv-block-tokens").arg("8")
+            .args(extra);
+        cmd.output().expect("spawning paca serve")
+    };
+
+    let out = run(&["--trace-events", events_path.to_str().unwrap(),
+                    "--report-json", report.to_str().unwrap()]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(),
+            "traced serve failed:\nstdout:\n{stdout}\nstderr:\n\
+             {stderr}");
+    assert!(stdout.contains("auditor: clean"),
+            "auditor verdict missing:\n{stdout}");
+    assert!(stdout.contains("event trace:"),
+            "event summary missing from report:\n{stdout}");
+
+    // Every exported line is a standalone JSON event with the core
+    // stamps; the stream covers the run's whole vocabulary.
+    let text = std::fs::read_to_string(&events_path).unwrap();
+    let mut kinds = std::collections::HashSet::new();
+    let mut n_lines = 0usize;
+    for line in text.lines() {
+        let j = Json::parse(line).unwrap_or_else(
+            |e| panic!("bad event line {line:?}: {e}"));
+        for key in ["t_s", "step", "kind", "a", "b"] {
+            assert!(j.get(key).is_some(), "{key} missing in {line}");
+        }
+        kinds.insert(j.get("kind").unwrap().as_str().unwrap()
+                     .to_string());
+        n_lines += 1;
+    }
+    assert!(n_lines > 100, "expected a dense stream, got {n_lines}");
+    for kind in ["arrival", "admit", "dispatch", "splice_in",
+                 "splice_out", "prefill_start", "prefill_end",
+                 "decode_step", "complete", "kv_alloc", "kv_free"] {
+        assert!(kinds.contains(kind),
+                "no {kind} in stream: {kinds:?}");
+    }
+
+    // The report JSON grew the schema version and the events section.
+    let rj = Json::parse(&std::fs::read_to_string(&report).unwrap())
+        .unwrap();
+    assert_eq!(rj.get("schema").and_then(|v| v.as_f64()), Some(1.0));
+    let ev = rj.get("events").expect("events section in report json");
+    assert_eq!(ev.get("auditor").and_then(|v| v.as_str()),
+               Some("clean"));
+    assert_eq!(ev.get("total").and_then(|v| v.as_f64()),
+               Some(n_lines as f64));
+
+    // Chrome export over the same persisted trace: one well-formed
+    // JSON document with a traceEvents array.
+    let out = run(&["--trace-events", chrome_path.to_str().unwrap(),
+                    "--trace-format", "chrome"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "chrome run failed:\n{stdout}");
+    assert!(stdout.contains("loaded 48 requests"), "{stdout}");
+    let cj = Json::parse(&std::fs::read_to_string(&chrome_path)
+                         .unwrap()).unwrap();
+    match cj.get("traceEvents") {
+        Some(Json::Arr(evs)) => assert!(
+            !evs.is_empty(), "empty chrome traceEvents"),
+        other => panic!("traceEvents must be an array, got {other:?}"),
+    }
+
+    // Bad format fails loudly.
+    let out = run(&["--trace-events", events_path.to_str().unwrap(),
+                    "--trace-format", "xml"]);
+    assert!(!out.status.success(), "unknown trace format must error");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1019,3 +1019,132 @@ fn prop_tensor_dtype_sizes() {
         assert_eq!(t.bytes(), len * 3);
     });
 }
+
+#[test]
+fn prop_event_tracing_is_inert_and_spans_match_recorders() {
+    // THE PR-6 reduction anchor, two claims over 25 seeded decode
+    // traces × 3 policies on the iterative engine:
+    //   * tracing ON is bit-inert: checksum and every deterministic
+    //     EngineStats counter are identical to the null-sink run, and
+    //     the online auditor sees zero invariant violations over the
+    //     whole sweep (preemptions, resumes, prefix hits and all);
+    //   * the span reconstructor is an independent second opinion
+    //     that AGREES EXACTLY: queueing/service/e2e/ttft/tpot
+    //     percentiles folded out of the event stream equal the
+    //     engine's own LatencyRecorder values as bits (every latency
+    //     is a virtual-clock difference, and the events carry the
+    //     same stamps the recorders subtracted).
+    use paca::manifest::ModelInfo;
+    use paca::metrics::LatencyRecorder;
+    use paca::serve::engine::{tiny_model, BaseModel, ClockModel,
+                              EngineStats, HostBackend, ServeEngine};
+    use paca::serve::events::{span_latencies, Events};
+    use paca::serve::registry::{AdapterRegistry, PacaAdapter};
+    use paca::serve::scheduler::{OnlineScheduler, Policy, Request,
+                                 TenantId, TenantPool};
+    use paca::serve::trace;
+
+    fn small() -> ModelInfo {
+        ModelInfo { d_model: 16, d_ff: 24, ..tiny_model() }
+    }
+
+    fn engine_for(pool: TenantPool) -> ServeEngine {
+        let m = small();
+        let base = BaseModel::synthetic(&m, 7);
+        let mut reg = AdapterRegistry::new(64);
+        for name in pool.names() {
+            reg.insert(PacaAdapter::synthetic(name, &m, 4, 11));
+        }
+        ServeEngine::new(base, reg, Box::<HostBackend>::default(),
+                         pool)
+    }
+
+    /// Wall-clock members are measured, not virtual — zero them so
+    /// the rest of EngineStats compares bit-for-bit.
+    fn scrub(mut s: EngineStats) -> EngineStats {
+        s.wall_s = 0.0;
+        s.forward_s = 0.0;
+        s.swap_s = 0.0;
+        s
+    }
+
+    let clock = ClockModel::Analytic {
+        swap_s: 2e-3, batch_s: 5e-4, token_s: 2e-5,
+    };
+    prop(25, |rng| {
+        let n_tenants = 1 + rng.below(4);
+        let mut pool = TenantPool::new();
+        for i in 0..n_tenants {
+            pool.intern(&trace::tenant_name(i));
+        }
+        let prefixes: Vec<usize> = (0..n_tenants)
+            .map(|_| rng.below(32)).collect();
+        let n = 1 + rng.below(40);
+        let cap = 1 + rng.below(6);
+        // A bounded pool small enough to preempt on some seeds, so
+        // the resume/replay span arithmetic is exercised too.
+        let kv_blocks = 24 + rng.below(64);
+        let requests: Vec<Request> = (0..n as u64).map(|id| {
+            let tenant = TenantId(rng.below(n_tenants) as u32);
+            let shared = prefixes[tenant.index()];
+            Request {
+                id,
+                tenant,
+                tokens: shared + 1 + rng.below(24),
+                decode_tokens: rng.below(12),
+                shared_prefix_tokens: shared,
+                arrival_s: rng.next_f64() * 0.5,
+                deadline_s: if rng.below(2) == 0 {
+                    f64::INFINITY
+                } else {
+                    0.02 + rng.next_f64() * 0.1
+                },
+            }
+        }).collect();
+        for policy in Policy::ALL {
+            let run = |events: Events| {
+                let mut eng = engine_for(pool.clone());
+                eng.configure_events(events);
+                eng.configure_kv(kv_blocks, 16, true);
+                let mut sched = OnlineScheduler::new(
+                    requests.clone(), n_tenants, cap, policy);
+                eng.serve_iterative(&mut sched, clock).unwrap();
+                eng.finish().unwrap();
+                eng
+            };
+            let plain = run(Events::off());
+            let traced = run(Events::recording());
+            assert_eq!(scrub(traced.stats), scrub(plain.stats),
+                       "{policy:?}: tracing must be bit-inert");
+            assert_eq!(traced.checksum, plain.checksum,
+                       "{policy:?}: tracing must not touch forwards");
+            assert_eq!(traced.events.violation_count(), 0,
+                       "{policy:?} violations: {:?}",
+                       traced.events.violations());
+            let stream = traced.events.snapshot();
+            assert_eq!(stream.len() as u64, traced.events.total());
+            let lat = span_latencies(&stream, traced.pool.names());
+            let pairs: [(&str, &LatencyRecorder,
+                         &LatencyRecorder); 5] = [
+                ("queueing", &traced.queueing, &lat.queueing),
+                ("service", &traced.service, &lat.service),
+                ("e2e", &traced.e2e, &lat.e2e),
+                ("ttft", &traced.ttft, &lat.ttft),
+                ("tpot", &traced.tpot, &lat.tpot),
+            ];
+            let mut keys: Vec<String> = traced.pool.names().to_vec();
+            keys.push("(all)".to_string());
+            for (name, rec, span) in pairs {
+                for key in &keys {
+                    assert_eq!(rec.count(key), span.count(key),
+                               "{policy:?} {name}/{key} count");
+                    for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+                        assert_eq!(rec.percentile(key, q),
+                                   span.percentile(key, q),
+                                   "{policy:?} {name}/{key} p{q}");
+                    }
+                }
+            }
+        }
+    });
+}
