@@ -33,13 +33,24 @@
 //!      must produce a nonzero hit rate, cut BOTH total computed
 //!      prefill tokens and TTFT p99, and not add deadline misses
 //!      (asserted; hit/donation/reclaim counters emitted).
-//!   6. Measured wall-clock host-GEMM throughput per policy under a
+//!   6. Chunked prefill + speculative prefetch on a long-prompt
+//!      heavy-tail trace (tenant 0 all 96-token prompts, tenant 1
+//!      short interactive with 60ms deadlines): `--prefill-chunk-
+//!      tokens 16` vs unchunked under the same clock and slot count.
+//!      Chunking must cut decode TPOT p99 (decode slots keep flowing
+//!      past long prompts) with UNCHANGED total computed tokens, no
+//!      TTFT-p99 regression for the short-prompt tenant, and no
+//!      added deadline misses (all asserted). Then prefetch on vs
+//!      off over a sparse shared-prefix trace: idle gaps must donate
+//!      blocks ahead of arrivals, cutting TTFT p99 without adding
+//!      real (non-speculative) compute (asserted).
+//!   7. Measured wall-clock host-GEMM throughput per policy under a
 //!      capacity-bounded registry (cold tenants reload from disk).
 //!
 //! Emits BENCH_serve.json (per-policy queueing p50/p99, misses,
 //! throughput, per-unit decode head-to-head, KV-pressure preemption
-//! head-to-head, prefix-cache on/off head-to-head) to seed the perf
-//! trajectory. Runs on a fresh
+//! head-to-head, prefix-cache on/off head-to-head, chunked-prefill
+//! and prefetch head-to-heads) to seed the perf trajectory. Runs on a fresh
 //! checkout: host backend, synthetic base + adapters, no artifacts
 //! required.
 
@@ -687,7 +698,221 @@ fn main() {
         results.push(Json::Obj(obj));
     }
 
-    // ---- 6. Measured wall-clock host serving, thrashing registry. -
+    // ---- 6. Chunked prefill + speculative prefetch. ---------------
+    println!("\n== chunked prefill: long-prompt heavy-tail trace \
+              (tenant 0 all 96-token prompts, tenant 1 short \
+              interactive w/ 60ms deadlines, chunk 16, analytic \
+              clock, slo-aware) ==");
+    // Tenant 0 is the long-prompt class: every request a 96-token
+    // prompt (the heavy tail), deadline-free, short decode. Tenant 1
+    // keeps the bursty short-prompt interactive profile. Unchunked,
+    // each 96-token prefill is one atomic step that stalls every
+    // co-resident decode slot and blocks urgent switches for its
+    // whole duration; chunked, the same work lands 16 tokens at a
+    // time between decode steps.
+    let long_prompt_trace = || {
+        let mut tr = trace::synthesize(&TraceSpec {
+            n_requests: N_REQUESTS,
+            n_tenants: 2,
+            mean_tokens: MEAN_TOKENS,
+            decode_tokens: 24,
+            burstiness: 4.0,
+            deadline_ms: 60.0,
+            req_per_s: 35.0,
+            ..Default::default()
+        });
+        for r in &mut tr.requests {
+            if r.tenant.index() == 0 {
+                r.tokens = 96;
+                r.decode_tokens = 4;
+                r.deadline_s = f64::INFINITY;
+            }
+        }
+        tr
+    };
+    struct ChunkResult {
+        tokens: u64,
+        tpot_p99_ms: f64,
+        ttft_short_p99_ms: f64,
+        misses: u64,
+        prefill_chunks: u64,
+        chunked_prefills: u64,
+        steps: u64,
+    }
+    let run_chunk = |chunk: usize| -> ChunkResult {
+        let tr = long_prompt_trace();
+        let mut eng = engine_for(&tr, None);
+        eng.configure_chunking(chunk);
+        let mut sched = OnlineScheduler::new(
+            tr.requests, tr.pool.len(), BATCH, Policy::SloAware);
+        sched.prefill_chunk_tokens = chunk;
+        eng.serve_iterative(&mut sched, DECODE_CLOCK)
+            .expect("serve_iterative chunked");
+        let pq = |rec: &paca::metrics::LatencyRecorder, key: &str| {
+            rec.percentile(key, 0.99).unwrap_or(0.0) * 1e3
+        };
+        let r = ChunkResult {
+            tokens: eng.stats.tokens,
+            tpot_p99_ms: pq(&eng.tpot, "(all)"),
+            ttft_short_p99_ms: pq(&eng.ttft,
+                                  &trace::tenant_name(1)),
+            misses: eng.stats.deadline_misses,
+            prefill_chunks: eng.stats.prefill_chunks,
+            chunked_prefills: eng.stats.chunked_prefills,
+            steps: eng.stats.steps,
+        };
+        eng.finish().expect("clean drain after chunked serve");
+        r
+    };
+    let whole_pf = run_chunk(0);
+    let chunked = run_chunk(16);
+    println!("{:>10} {:>10} {:>11} {:>13} {:>8} {:>8} {:>8}",
+             "chunking", "tokens", "tpot p99 ms", "short ttft p99",
+             "misses", "chunks", "steps");
+    for (mode, r) in [("off", &whole_pf), ("chunk-16", &chunked)] {
+        println!("{:>10} {:>10} {:>11.3} {:>13.3} {:>8} {:>8} {:>8}",
+                 mode, r.tokens, r.tpot_p99_ms, r.ttft_short_p99_ms,
+                 r.misses, r.prefill_chunks, r.steps);
+    }
+    // The tentpole's payoff on the deterministic clock: same total
+    // work, split so decode slots never stall behind a long prompt —
+    // and the finer step granularity must not cost the interactive
+    // tenant its TTFT tail or any deadline.
+    assert_eq!(chunked.tokens, whole_pf.tokens,
+               "chunking must not change total computed tokens");
+    assert!(chunked.chunked_prefills > 0,
+            "the 96-token prompts must actually split");
+    assert!(chunked.tpot_p99_ms < whole_pf.tpot_p99_ms,
+            "chunked prefill must cut decode TPOT p99: {} !< {}",
+            chunked.tpot_p99_ms, whole_pf.tpot_p99_ms);
+    assert!(chunked.ttft_short_p99_ms <= whole_pf.ttft_short_p99_ms,
+            "short-prompt TTFT p99 must not regress: {} !<= {}",
+            chunked.ttft_short_p99_ms, whole_pf.ttft_short_p99_ms);
+    assert!(chunked.misses <= whole_pf.misses,
+            "chunking must not add deadline misses: {} > {}",
+            chunked.misses, whole_pf.misses);
+    println!("\nchunked vs unchunked: decode tpot p99 {:.2}ms -> \
+              {:.2}ms ({:.0}% lower), short-tenant ttft p99 {:.1}ms \
+              -> {:.1}ms, misses {} -> {}, {} prompts split over {} \
+              chunk steps",
+             whole_pf.tpot_p99_ms, chunked.tpot_p99_ms,
+             100.0 * (1.0 - chunked.tpot_p99_ms
+                      / whole_pf.tpot_p99_ms.max(1e-12)),
+             whole_pf.ttft_short_p99_ms, chunked.ttft_short_p99_ms,
+             whole_pf.misses, chunked.misses,
+             chunked.chunked_prefills, chunked.prefill_chunks);
+    for (mode, r) in [("off", &whole_pf), ("chunk-16", &chunked)] {
+        let mut obj = BTreeMap::new();
+        obj.insert("chunking".into(), Json::Str(mode.into()));
+        obj.insert("clock".into(), Json::Str("analytic".into()));
+        obj.insert("trace".into(),
+                   Json::Str("long-prompt-heavy-tail".into()));
+        obj.insert("tokens".into(), Json::Num(r.tokens as f64));
+        obj.insert("tpot_p99_ms".into(), Json::Num(r.tpot_p99_ms));
+        obj.insert("ttft_short_p99_ms".into(),
+                   Json::Num(r.ttft_short_p99_ms));
+        obj.insert("deadline_misses".into(),
+                   Json::Num(r.misses as f64));
+        obj.insert("prefill_chunks".into(),
+                   Json::Num(r.prefill_chunks as f64));
+        obj.insert("chunked_prefills".into(),
+                   Json::Num(r.chunked_prefills as f64));
+        obj.insert("steps".into(), Json::Num(r.steps as f64));
+        results.push(Json::Obj(obj));
+    }
+
+    // ---- 6b. Speculative prefix prefetch on a sparse trace. -------
+    println!("\n== speculative prefetch: sparse shared-prefix trace \
+              (4 req/s, 48-token system prompts, prefix cache on, \
+              analytic clock, slo-aware) ==");
+    let sparse_prefix_trace = || {
+        trace::synthesize(&TraceSpec {
+            n_requests: 64,
+            n_tenants: 4,
+            mean_tokens: MEAN_TOKENS,
+            decode_tokens: 8,
+            deadline_ms: 60.0,
+            req_per_s: 4.0,
+            shared_prefix_tokens: 48,
+            ..Default::default()
+        })
+    };
+    struct PrefetchResult {
+        tokens: u64,
+        prefetch_tokens: u64,
+        donated: u64,
+        hit_tokens: u64,
+        ttft_p99_ms: f64,
+    }
+    let run_prefetch = |prefetch: bool| -> PrefetchResult {
+        let tr = sparse_prefix_trace();
+        let mut eng = engine_for(&tr, None);
+        eng.configure_prefix(true);
+        eng.configure_prefetch(prefetch);
+        let mut sched = OnlineScheduler::new(
+            tr.requests, tr.pool.len(), BATCH, Policy::SloAware);
+        eng.serve_iterative(&mut sched, DECODE_CLOCK)
+            .expect("serve_iterative with prefetch");
+        let r = PrefetchResult {
+            tokens: eng.stats.tokens,
+            prefetch_tokens: eng.stats.prefetch_tokens,
+            donated: eng.stats.prefetch_donated_blocks,
+            hit_tokens: eng.prefix.stats.hit_tokens,
+            ttft_p99_ms: eng.ttft.percentile("(all)", 0.99)
+                .unwrap_or(0.0) * 1e3,
+        };
+        eng.finish().expect("clean drain after prefetch serve");
+        r
+    };
+    let no_warm = run_prefetch(false);
+    let warmed = run_prefetch(true);
+    println!("{:>10} {:>10} {:>13} {:>9} {:>10} {:>10}",
+             "prefetch", "tokens", "spec tokens", "donated",
+             "hit tok", "ttft p99");
+    for (mode, r) in [("off", &no_warm), ("on", &warmed)] {
+        println!("{:>10} {:>10} {:>13} {:>9} {:>10} {:>10.3}",
+                 mode, r.tokens, r.prefetch_tokens, r.donated,
+                 r.hit_tokens, r.ttft_p99_ms);
+    }
+    // Idle gaps dwarf a 48-token warm on this clock, so the cold
+    // per-tenant first requests — the off-run's TTFT tail — find
+    // their prefix already resident.
+    assert_eq!(no_warm.prefetch_tokens, 0,
+               "prefetch off must do no speculative work");
+    assert!(warmed.donated > 0,
+            "idle gaps before arrivals must donate blocks");
+    assert!(warmed.hit_tokens >= no_warm.hit_tokens,
+            "a pre-warmed cache cannot hit less: {} !>= {}",
+            warmed.hit_tokens, no_warm.hit_tokens);
+    assert!(warmed.ttft_p99_ms < no_warm.ttft_p99_ms,
+            "prefetch must cut TTFT p99 on the sparse trace: \
+             {} !< {}", warmed.ttft_p99_ms, no_warm.ttft_p99_ms);
+    assert!(warmed.tokens - warmed.prefetch_tokens <= no_warm.tokens,
+            "speculative work must replace demand prefill, not add \
+             real compute: {} - {} vs {}", warmed.tokens,
+            warmed.prefetch_tokens, no_warm.tokens);
+    println!("\nprefetch on vs off: ttft p99 {:.2}ms -> {:.2}ms, {} \
+              blocks donated ahead of arrival, hit tokens {} -> {}",
+             no_warm.ttft_p99_ms, warmed.ttft_p99_ms, warmed.donated,
+             no_warm.hit_tokens, warmed.hit_tokens);
+    for (mode, r) in [("off", &no_warm), ("on", &warmed)] {
+        let mut obj = BTreeMap::new();
+        obj.insert("prefetch".into(), Json::Str(mode.into()));
+        obj.insert("clock".into(), Json::Str("analytic".into()));
+        obj.insert("trace".into(),
+                   Json::Str("sparse-shared-prefix".into()));
+        obj.insert("tokens".into(), Json::Num(r.tokens as f64));
+        obj.insert("prefetch_tokens".into(),
+                   Json::Num(r.prefetch_tokens as f64));
+        obj.insert("donated_blocks".into(),
+                   Json::Num(r.donated as f64));
+        obj.insert("hit_tokens".into(),
+                   Json::Num(r.hit_tokens as f64));
+        obj.insert("ttft_p99_ms".into(), Json::Num(r.ttft_p99_ms));
+        results.push(Json::Obj(obj));
+    }
+
+    // ---- 7. Measured wall-clock host serving, thrashing registry. -
     println!("\n== measured host-GEMM wall clock (registry capacity \
               {} of {N_TENANTS} tenants) ==", (N_TENANTS / 2).max(2));
     println!("{:>11} {:>9} {:>7} {:>7}", "policy", "req/s", "swaps",

@@ -207,6 +207,29 @@ pub struct ServeConfig {
     /// Event export format: "jsonl" (one event object per line) or
     /// "chrome" (Chrome/Perfetto trace-event JSON).
     pub trace_format: String,
+    /// Chunked prefill: split each prompt into chunks of at most this
+    /// many tokens, interleaved with decode steps so long prompts
+    /// never stall the decoding slots; 0 = unchunked (the whole
+    /// prompt in one step — the `--kv-blocks 0` convention).
+    pub prefill_chunk_tokens: usize,
+    /// Speculative prefix prefetch: spend genuinely idle step budget
+    /// prefilling a known-but-cold tenant's shared prefix into the
+    /// radix cache ahead of its next arrival. Requires the prefix
+    /// cache; off is bit-for-bit today's engine.
+    pub prefetch: bool,
+    /// Cache-aware dispatch: among equally-urgent pending requests,
+    /// prefer tenants whose prefix chains are already warm (and group
+    /// cold same-prefix requests so the first prefill's donation
+    /// serves the rest). Off is bit-for-bit today's ordering.
+    pub cache_aware: bool,
+    /// Heavy-tail prompt mix for synthesized traces: probability in
+    /// [0, 1) that a prompt gains a lognormal stretch; 0 = the
+    /// historical uniform lengths.
+    pub prompt_tail: f64,
+    /// Turns per chat session for synthesized traces (each follow-up
+    /// turn re-sends the growing conversation as its shared prefix);
+    /// 0 or 1 = single-turn requests.
+    pub chat_turns: usize,
 }
 
 impl Default for ServeConfig {
@@ -238,6 +261,11 @@ impl Default for ServeConfig {
             report_json: String::new(),
             trace_events: String::new(),
             trace_format: "jsonl".into(),
+            prefill_chunk_tokens: 0,
+            prefetch: false,
+            cache_aware: false,
+            prompt_tail: 0.0,
+            chat_turns: 0,
         }
     }
 }
@@ -343,7 +371,54 @@ impl ServeConfig {
                 }
                 v
             },
+            prefill_chunk_tokens: u("serve.prefill_chunk_tokens",
+                                    d.prefill_chunk_tokens)?,
+            prefetch: doc.bool_or("serve.prefetch", d.prefetch),
+            cache_aware: doc.bool_or("serve.cache_aware",
+                                     d.cache_aware),
+            prompt_tail: {
+                let v = doc.f64_or("serve.prompt_tail", d.prompt_tail);
+                if !(0.0..1.0).contains(&v) {
+                    return Err(anyhow!(
+                        "serve.prompt_tail must be in [0, 1), \
+                         got {v}"));
+                }
+                v
+            },
+            chat_turns: u("serve.chat_turns", d.chat_turns)?,
         })
+    }
+
+    /// Cross-field checks that no single `apply_override` can see —
+    /// run once after all flags/TOML keys have landed (the CLI calls
+    /// this before building the engine).
+    pub fn validate(&self) -> Result<()> {
+        if self.max_batch_tokens > 0
+            && self.prefill_chunk_tokens > self.max_batch_tokens
+        {
+            return Err(anyhow!(
+                "prefill-chunk-tokens ({}) exceeds max-batch-tokens \
+                 ({}): a chunk that large can never be admitted",
+                self.prefill_chunk_tokens, self.max_batch_tokens));
+        }
+        if self.prefill_chunk_tokens > 0 && self.service_unit != "step"
+        {
+            return Err(anyhow!(
+                "prefill-chunk-tokens requires service-unit=step \
+                 (the whole-batch unit has no step budget to \
+                 interleave chunks into)"));
+        }
+        if self.prefetch && !self.prefix_cache {
+            return Err(anyhow!(
+                "prefetch requires prefix-cache=on: speculative \
+                 prefill warms the radix cache, which is off"));
+        }
+        if self.prefetch && self.service_unit != "step" {
+            return Err(anyhow!(
+                "prefetch requires service-unit=step (idle step \
+                 budget is what it spends)"));
+        }
+        Ok(())
     }
 
     /// Apply `key=value` (CLI flag names double as keys).
@@ -462,6 +537,42 @@ impl ServeConfig {
                          {v:?}"));
                 }
                 self.trace_format = v.into();
+            }
+            "serve.prefill_chunk_tokens" | "prefill-chunk-tokens"
+                | "prefill_chunk_tokens" => {
+                self.prefill_chunk_tokens = v.parse()?
+            }
+            "serve.prefetch" | "prefetch" => {
+                self.prefetch = match v {
+                    "on" | "true" | "1" => true,
+                    "off" | "false" | "0" => false,
+                    other => {
+                        return Err(anyhow!(
+                            "prefetch must be on|off, got {other:?}"))
+                    }
+                };
+            }
+            "serve.cache_aware" | "cache-aware" | "cache_aware" => {
+                self.cache_aware = match v {
+                    "on" | "true" | "1" => true,
+                    "off" | "false" | "0" => false,
+                    other => {
+                        return Err(anyhow!(
+                            "cache-aware must be on|off, got \
+                             {other:?}"))
+                    }
+                };
+            }
+            "serve.prompt_tail" | "prompt-tail" | "prompt_tail" => {
+                let p: f64 = v.parse()?;
+                if !(0.0..1.0).contains(&p) {
+                    return Err(anyhow!(
+                        "prompt-tail must be in [0, 1), got {p}"));
+                }
+                self.prompt_tail = p;
+            }
+            "serve.chat_turns" | "chat-turns" | "chat_turns" => {
+                self.chat_turns = v.parse()?
             }
             other => {
                 return Err(anyhow!("unknown serve config key {other:?}"))
@@ -732,6 +843,89 @@ mod tests {
         // Untouched config still valid after the failed overrides.
         assert_eq!(c.kv_block_tokens, 16);
         assert_eq!(c.host_max_tokens, 2048);
+    }
+
+    #[test]
+    fn serve_chunked_prefill_and_prefetch_keys() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.prefill_chunk_tokens, 0, "unchunked by default");
+        assert!(!c.prefetch, "prefetch off by default");
+        assert!(!c.cache_aware, "historical ordering by default");
+        assert_eq!(c.prompt_tail, 0.0);
+        assert_eq!(c.chat_turns, 0);
+        c.apply_override("prefill-chunk-tokens=32").unwrap();
+        c.apply_override("prefetch=on").unwrap();
+        c.apply_override("cache-aware=on").unwrap();
+        c.apply_override("prompt-tail=0.2").unwrap();
+        c.apply_override("chat-turns=3").unwrap();
+        assert_eq!(c.prefill_chunk_tokens, 32);
+        assert!(c.prefetch && c.cache_aware);
+        assert_eq!(c.prompt_tail, 0.2);
+        assert_eq!(c.chat_turns, 3);
+        assert!(c.validate().is_ok());
+        assert!(c.apply_override("prefetch=maybe").is_err());
+        assert!(c.apply_override("cache-aware=2").is_err());
+        let doc = TomlDoc::parse(
+            "[serve]\nprefill_chunk_tokens = 16\nprefetch = true\n\
+             cache_aware = true\nprompt_tail = 0.1\n\
+             chat_turns = 2\n").unwrap();
+        let c = ServeConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.prefill_chunk_tokens, 16);
+        assert!(c.prefetch && c.cache_aware);
+        assert_eq!(c.prompt_tail, 0.1);
+        assert_eq!(c.chat_turns, 2);
+    }
+
+    #[test]
+    fn degenerate_chunk_and_tail_combinations_error_clearly() {
+        // The PR-5 degenerate-value family, extended: values that
+        // parse fine in isolation but can never serve must fail at
+        // validate(), with chunk 0 = "unchunked" mirroring the
+        // `--kv-blocks 0` convention.
+        let mut c = ServeConfig::default();
+        assert!(c.apply_override("prompt-tail=1.0").is_err(),
+                "tail probability 1 would stretch EVERY prompt — \
+                 outside the mix's design range");
+        assert!(c.apply_override("prompt-tail=-0.1").is_err());
+        assert!(c.apply_override("prefill-chunk-tokens=-1").is_err(),
+                "negative usize must be a parse error, not a wrap");
+        // A chunk larger than the step budget can never be admitted.
+        c.apply_override("max-batch-tokens=64").unwrap();
+        c.apply_override("prefill-chunk-tokens=128").unwrap();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("prefill-chunk-tokens"), "{err}");
+        // Chunk 0 (unchunked) and chunk ≤ budget are both fine.
+        c.apply_override("prefill-chunk-tokens=0").unwrap();
+        assert!(c.validate().is_ok());
+        c.apply_override("prefill-chunk-tokens=64").unwrap();
+        assert!(c.validate().is_ok());
+        // An UNBUDGETED engine accepts any chunk size.
+        c.apply_override("max-batch-tokens=0").unwrap();
+        c.apply_override("prefill-chunk-tokens=4096").unwrap();
+        assert!(c.validate().is_ok());
+        // Chunking and prefetch are step-mode features.
+        c.apply_override("service-unit=batch").unwrap();
+        assert!(c.validate().is_err());
+        c.apply_override("prefill-chunk-tokens=0").unwrap();
+        assert!(c.validate().is_ok());
+        c.apply_override("prefetch=on").unwrap();
+        assert!(c.validate().is_err());
+        c.apply_override("service-unit=step").unwrap();
+        assert!(c.validate().is_ok());
+        // Prefetch warms the prefix cache, so it needs one.
+        c.apply_override("prefix-cache=off").unwrap();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("prefix-cache"), "{err}");
+        c.apply_override("prefetch=off").unwrap();
+        assert!(c.validate().is_ok());
+        // And the TOML path hits the same range checks.
+        for bad in ["[serve]\nprompt_tail = 1.5\n",
+                    "[serve]\nprompt_tail = -0.2\n",
+                    "[serve]\nprefill_chunk_tokens = -8\n",
+                    "[serve]\nchat_turns = -2\n"] {
+            let doc = TomlDoc::parse(bad).unwrap();
+            assert!(ServeConfig::from_doc(&doc).is_err(), "{bad}");
+        }
     }
 
     #[test]

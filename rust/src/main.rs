@@ -113,7 +113,10 @@ fn usage() -> &'static str {
      \x20          [--prefix-cache on|off] [--shared-prefix-tokens 0] \\\n\
      \x20          [--report-json report.json] \\\n\
      \x20          [--trace-events events.jsonl] \\\n\
-     \x20          [--trace-format jsonl|chrome]\n\
+     \x20          [--trace-format jsonl|chrome] \\\n\
+     \x20          [--prefill-chunk-tokens 0] [--prefetch on|off] \\\n\
+     \x20          [--cache-aware on|off] [--prompt-tail 0] \\\n\
+     \x20          [--chat-turns 0]\n\
      \x20          # online continuous batching over the trace's\n\
      \x20          # arrival times; missing trace/adapters are\n\
      \x20          # synthesized and saved.\n\
@@ -145,6 +148,17 @@ fn usage() -> &'static str {
      \x20          # exports it as JSONL or, with --trace-format\n\
      \x20          # chrome, as a Chrome/Perfetto trace. Off = the\n\
      \x20          # null sink: zero cost, bit-identical output.\n\
+     \x20          # --prefill-chunk-tokens N splits each prompt into\n\
+     \x20          # N-token chunks interleaved with decode steps so\n\
+     \x20          # long prompts never stall the decoding slots (0 =\n\
+     \x20          # unchunked); --prefetch on spends idle step budget\n\
+     \x20          # prefilling cold shared prefixes into the radix\n\
+     \x20          # cache ahead of arrival; --cache-aware on prefers\n\
+     \x20          # warm-chain tenants among equally-urgent pending\n\
+     \x20          # requests. --prompt-tail P / --chat-turns K shape\n\
+     \x20          # synthesized traces: a lognormal heavy-tail prompt\n\
+     \x20          # mix, and K-turn chat sessions that re-hit their\n\
+     \x20          # own growing prefix.\n\
      paca selftest"
 }
 
@@ -359,6 +373,7 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
             _ => cfg.apply_override(&format!("{k}={v}"))?,
         }
     }
+    cfg.validate()?;
     let policy = scheduler::Policy::parse(&cfg.policy)?;
     if cfg.batch == 0 {
         bail!("--batch must be >= 1");
@@ -397,6 +412,8 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
             req_per_s: cfg.req_per_s,
             decode_tokens: cfg.decode_tokens,
             shared_prefix_tokens: cfg.shared_prefix_tokens,
+            prompt_tail: cfg.prompt_tail,
+            chat_turns: cfg.chat_turns,
             seed: cfg.seed,
             ..Default::default()
         };
@@ -464,7 +481,7 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
         .map(|r| r.decode_tokens).sum();
     println!("serving {}: {} tenants over one {:.1}MB shared base \
               ({} target weights) | backend {} | batch {} | policy {} \
-              | unit {} | trace span {:.2}s | {} decode tokens{}{}{}",
+              | unit {} | trace span {:.2}s | {} decode tokens{}{}{}{}{}{}",
              model.name, tenants.len(), base.bytes() as f64 / 1e6,
              base.weights.len(), backend.name(), cfg.batch,
              policy.name(), cfg.service_unit, tr.span_s(),
@@ -487,6 +504,22 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
                  ""
              } else {
                  " | prefix cache off"
+             },
+             if cfg.prefill_chunk_tokens > 0 {
+                 format!(" | prefill chunks of {} tokens",
+                         cfg.prefill_chunk_tokens)
+             } else {
+                 String::new()
+             },
+             if cfg.prefetch {
+                 " | speculative prefix prefetch"
+             } else {
+                 ""
+             },
+             if cfg.cache_aware {
+                 " | cache-aware dispatch"
+             } else {
+                 ""
              });
 
     // Offline baseline: what the one-shot planner would do with the
@@ -506,12 +539,16 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
                                            tr.pool);
     eng.configure_kv(cfg.kv_blocks, cfg.kv_block_tokens, cfg.preempt);
     eng.configure_prefix(cfg.prefix_cache);
+    eng.configure_chunking(cfg.prefill_chunk_tokens);
+    eng.configure_prefetch(cfg.prefetch);
     if !cfg.trace_events.is_empty() {
         eng.configure_events(events::Events::recording());
     }
     let mut sched = scheduler::OnlineScheduler::new(
         tr.requests, n_tenant_ids, cfg.batch, policy);
     sched.max_batch_tokens = cfg.max_batch_tokens;
+    sched.prefill_chunk_tokens = cfg.prefill_chunk_tokens;
+    sched.cache_aware = cfg.cache_aware;
     let served = if cfg.service_unit == "batch" {
         eng.serve_online(&mut sched, engine::ClockModel::Measured)
     } else {
@@ -572,6 +609,10 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
     if cfg.prefix_cache {
         println!("{}", cost::prefix_hit_table(&cost::llama3_8b(), 64,
                                               cfg.batch.max(1), 512));
+    }
+    if cfg.prefill_chunk_tokens > 0 {
+        println!("{}", cost::chunked_prefill_table(
+            &cost::llama3_8b(), 64, 4096, cfg.batch.max(1), 512));
     }
     Ok(())
 }

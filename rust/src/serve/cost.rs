@@ -178,6 +178,85 @@ pub fn prefix_hit_table(m: &ModelInfo, rank: usize, batch: usize,
     out
 }
 
+/// Prefill chunks a prompt splits into under `--prefill-chunk-tokens`
+/// — the shared arithmetic of the chunked projections. Chunk 0 means
+/// unchunked (the whole prompt is one "chunk"), matching the engine's
+/// convention.
+pub fn prefill_chunks(prompt: usize, chunk: usize) -> usize {
+    if chunk == 0 || prompt == 0 {
+        1
+    } else {
+        prompt.div_ceil(chunk)
+    }
+}
+
+/// Worst-case stall a DECODING slot suffers in one step while a long
+/// prompt prefills alongside it: the step cannot complete until the
+/// co-scheduled prefill work does, so unchunked (chunk 0) the decoder
+/// waits out the WHOLE prompt's forward — the batch-of-one pathology —
+/// while chunked it waits only one chunk's worth. This is the analytic
+/// decode-TPOT-tail term the chunked engine flattens.
+pub fn prefill_stall_s(dev: &DeviceProfile, m: &ModelInfo,
+                       path: ServePath, rank: usize, prompt: usize,
+                       chunk: usize) -> f64 {
+    let per_step = if chunk == 0 { prompt } else { chunk.min(prompt) };
+    forward_time(dev, m, path, rank, 1, per_step.max(1))
+}
+
+/// Analytic TTFT of the long prompt itself under chunking: its own
+/// prefill compute is conserved (the chunks sum to the prompt), but
+/// every chunk after the first rides a later step that also serves
+/// the co-resident decoders — so the prompt's first token pays
+/// `interleave_s` (one decode step of the sharing batch, see
+/// [`decode_step_time`]) per extra chunk. Chunk 0 reduces exactly to
+/// `forward_time`: the stall/TTFT trade is the whole projection.
+pub fn chunked_ttft_s(dev: &DeviceProfile, m: &ModelInfo,
+                      path: ServePath, rank: usize, prompt: usize,
+                      chunk: usize, interleave_s: f64) -> f64 {
+    let chunks = prefill_chunks(prompt, chunk);
+    forward_time(dev, m, path, rank, 1, prompt.max(1))
+        + (chunks - 1) as f64 * interleave_s
+}
+
+/// Chunked-prefill projection: the decode-stall vs long-prompt-TTFT
+/// trade as the chunk size sweeps, merged path, both devices — what a
+/// given `--prefill-chunk-tokens` buys the decoding slots and costs
+/// the long prompt. The chunk-0 row is the unchunked anchor.
+pub fn chunked_prefill_table(m: &ModelInfo, rank: usize, prompt: usize,
+                             batch: usize, ctx: usize) -> String {
+    use crate::metrics::Table;
+    let mut out = String::new();
+    for dev in [&A100_80G, &GAUDI2] {
+        let base = prefill_stall_s(dev, m, ServePath::Merged, rank,
+                                   prompt, 0);
+        let step = decode_step_time(dev, m, ServePath::Merged, rank,
+                                    batch, ctx);
+        let mut t = Table::new(&["chunk", "chunks", "decode stall ms",
+                                 "stall cut", "long-prompt TTFT ms"]);
+        for chunk in [0usize, 512, 256, 128, 64] {
+            let stall = prefill_stall_s(dev, m, ServePath::Merged,
+                                        rank, prompt, chunk);
+            let ttft = chunked_ttft_s(dev, m, ServePath::Merged, rank,
+                                      prompt, chunk, step);
+            let label = if chunk == 0 { "off".to_string() }
+                        else { chunk.to_string() };
+            t.row(&[label,
+                    prefill_chunks(prompt, chunk).to_string(),
+                    format!("{:.1}", stall * 1e3),
+                    format!("{:.1}x", base / stall),
+                    format!("{:.1}", ttft * 1e3)]);
+        }
+        out.push_str(&format!(
+            "\n{} — {} chunked prefill, rank {rank}, prompt {prompt}, \
+             {batch} decoding slots at ctx {ctx} (stall = the longest \
+             wait chunked prefill injects into one decode step; TTFT \
+             = the long prompt's own first token):\n\n",
+            dev.name, m.name));
+        out.push_str(&t.render());
+    }
+    out
+}
+
 /// Device cost of one PaCA adapter swap on the merged path: per target
 /// per layer, save r·d_out displaced rows and write r·d_out adapter
 /// rows (bf16), plus a dispatch per target.
@@ -646,6 +725,54 @@ mod tests {
             assert_eq!(t(7.0), t(1.0));
             assert_eq!(t(-3.0), t(0.0));
         }
+    }
+
+    #[test]
+    fn chunked_prefill_trades_stall_for_ttft_and_anchors_at_zero() {
+        let m = llama3_8b();
+        for dev in [&A100_80G, &GAUDI2] {
+            let stall = |c| prefill_stall_s(
+                dev, &m, ServePath::Merged, 64, 4096, c);
+            let step = decode_step_time(dev, &m, ServePath::Merged,
+                                        64, 8, 512);
+            let ttft = |c| chunked_ttft_s(
+                dev, &m, ServePath::Merged, 64, 4096, c, step);
+            // Chunk 0 IS the unchunked engine: the stall is the whole
+            // prompt's forward and the TTFT is plain forward_time —
+            // the reduction anchor of the analytic term.
+            assert_eq!(stall(0), forward_time(
+                dev, &m, ServePath::Merged, 64, 1, 4096));
+            assert_eq!(ttft(0), forward_time(
+                dev, &m, ServePath::Merged, 64, 1, 4096));
+            // A chunk at least the prompt changes nothing.
+            assert_eq!(stall(4096), stall(0));
+            assert_eq!(ttft(8192), ttft(0));
+            // Smaller chunks: strictly less stall injected per decode
+            // step, strictly more interleaved steps before the long
+            // prompt's own first token.
+            assert!(stall(256) < stall(1024));
+            assert!(stall(64) < stall(256));
+            assert!(stall(64) < 0.1 * stall(0),
+                    "{}: a 64-token chunk must cut the 4096-token \
+                     stall by well over 10x", dev.name);
+            assert!(ttft(256) > ttft(1024));
+            assert!(ttft(64) > ttft(256));
+            assert!(ttft(64) > ttft(0));
+        }
+        assert_eq!(prefill_chunks(4096, 0), 1);
+        assert_eq!(prefill_chunks(4096, 100), 41);
+        assert_eq!(prefill_chunks(0, 64), 1);
+    }
+
+    #[test]
+    fn chunked_prefill_table_renders() {
+        let m = llama3_8b();
+        let s = chunked_prefill_table(&m, 64, 4096, 8, 512);
+        assert!(s.contains("decode stall ms"));
+        assert!(s.contains("long-prompt TTFT ms"));
+        assert!(s.contains("off"), "the chunk-0 anchor row");
+        assert!(s.contains("1.0x"), "the anchor's stall cut is 1x");
+        assert!(s.contains("A100-80GB") && s.contains("Gaudi2"));
     }
 
     #[test]

@@ -295,6 +295,18 @@ pub struct EngineStats {
     /// Prompt tokens of every seated request (resume replays
     /// included) — the denominator of the prefix-cache hit rate.
     pub prefill_tokens: u64,
+    /// Chunked prefill (`--prefill-chunk-tokens`): prefill chunk
+    /// steps computed, prompts that actually split into more than one
+    /// chunk, and mid-prompt preemptions (a slot evicted before its
+    /// final chunk, replayed from token zero).
+    pub prefill_chunks: u64,
+    pub chunked_prefills: u64,
+    pub preempt_prefill: u64,
+    /// Speculative prefix prefetch (`--prefetch`): prompt tokens
+    /// warmed into the radix cache during idle clock gaps, and the
+    /// blocks those warms donated.
+    pub prefetch_tokens: u64,
+    pub prefetch_donated_blocks: u64,
 }
 
 pub struct ServeEngine {
@@ -338,6 +350,14 @@ pub struct ServeEngine {
     /// false = drain-only (admission is still capacity-gated, but a
     /// live batch is never evicted).
     pub preempt: bool,
+    /// Chunked prefill: max prompt tokens any one slot computes per
+    /// step (`--prefill-chunk-tokens`; 0 = unchunked — whole prompt
+    /// in one step, the PR-6 reduction anchor).
+    prefill_chunk: usize,
+    /// Speculative prefix prefetch: spend idle clock gaps warming the
+    /// next cold tenant's shared system prompt into the radix cache
+    /// (`--prefetch`; off by default — the reduction anchor).
+    prefetch: bool,
     /// Recompute-on-resume state of preempted requests, by request id:
     /// original first-token time and decode length (the requeued
     /// request's own fields were rewritten to cover the replay).
@@ -356,8 +376,10 @@ pub struct ServeEngine {
 /// What survives a preemption, keyed off the engine's resume map.
 struct ResumeInfo {
     /// Virtual time the request's FIRST token was emitted (TTFT was
-    /// settled then; replays emit nothing).
-    first_token_s: f64,
+    /// settled then; replays emit nothing). `None` when the slot was
+    /// evicted MID-PROMPT (chunked prefill) — no token ever left, so
+    /// the resumed residency emits the first token itself.
+    first_token_s: Option<f64>,
     /// The request's original decode length — the TPOT denominator
     /// (its live `decode_tokens` now counts only the owed remainder).
     orig_decode: usize,
@@ -382,7 +404,8 @@ impl ServeEngine {
                       timeline: ThroughputTimeline::new(
                           TIMELINE_BUCKET_S),
                       kv, prefix: PrefixCache::new(true),
-                      preempt: true, resume: HashMap::new(),
+                      preempt: true, prefill_chunk: 0,
+                      prefetch: false, resume: HashMap::new(),
                       events: Events::off(),
                       stats: EngineStats::default(), checksum: 0.0 }
     }
@@ -416,6 +439,24 @@ impl ServeEngine {
     pub fn configure_prefix(&mut self, enabled: bool) {
         self.prefix = PrefixCache::new(enabled);
         self.prefix.set_events(self.events.clone());
+    }
+
+    /// Set the chunked-prefill step quota
+    /// (`--prefill-chunk-tokens`): at most `chunk` prompt tokens of
+    /// any one slot are computed per iteration step, interleaved with
+    /// decode, so a long prompt trickles in instead of stalling the
+    /// batch. 0 = unchunked (whole prompt in one step) — bit-for-bit
+    /// the PR-6 engine.
+    pub fn configure_chunking(&mut self, chunk: usize) {
+        self.prefill_chunk = chunk;
+    }
+
+    /// Arm speculative prefix prefetch (`--prefetch`): when the
+    /// engine is idle until the next arrival, warm a known-but-cold
+    /// tenant's shared system prompt into the radix cache as donated
+    /// blocks. Off is the reduction anchor.
+    pub fn configure_prefetch(&mut self, on: bool) {
+        self.prefetch = on;
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -729,28 +770,66 @@ impl ServeEngine {
     /// decode-adjusted deadline slack at `now` (no-deadline slots rank
     /// +inf — prime victims). Ties break on request id for
     /// determinism. Returns (index, slack).
+    ///
+    /// With chunked prefill on (`mid_prompt`), slots still mid-prompt
+    /// become eligible too — but only as a FALLBACK when no decoding
+    /// victim exists (evicting a part-paid prefill throws its chunks
+    /// away), with their remaining chunk work counted into the slack.
     fn pick_victim(slots: &[Slot], exclude: Option<u64>, now: f64,
-                   decode_slack_s: f64) -> Option<(usize, f64)> {
-        let mut best: Option<(f64, u64, usize)> = None;
-        for (i, s) in slots.iter().enumerate() {
-            if !s.prefilled || exclude == Some(s.req.id) {
-                continue;
+                   decode_slack_s: f64,
+                   mid_prompt: bool) -> Option<(usize, f64)> {
+        let scan = |want_prefilled: bool| -> Option<(usize, f64)> {
+            let mut best: Option<(f64, u64, usize)> = None;
+            for (i, s) in slots.iter().enumerate() {
+                if s.prefilled != want_prefilled
+                    || exclude == Some(s.req.id)
+                {
+                    continue;
+                }
+                let owed = if s.prefilled {
+                    0
+                } else {
+                    s.prefill_tokens - s.prefill_done
+                };
+                let slack = s.req.absolute_deadline() - now
+                    - (s.remaining + owed) as f64 * decode_slack_s;
+                let better = match &best {
+                    None => true,
+                    Some((bs, bid, _)) => match slack.total_cmp(bs) {
+                        std::cmp::Ordering::Greater => true,
+                        std::cmp::Ordering::Less => false,
+                        std::cmp::Ordering::Equal => s.req.id > *bid,
+                    },
+                };
+                if better {
+                    best = Some((slack, s.req.id, i));
+                }
             }
-            let slack = s.req.absolute_deadline() - now
-                - s.remaining as f64 * decode_slack_s;
-            let better = match &best {
-                None => true,
-                Some((bs, bid, _)) => match slack.total_cmp(bs) {
-                    std::cmp::Ordering::Greater => true,
-                    std::cmp::Ordering::Less => false,
-                    std::cmp::Ordering::Equal => s.req.id > *bid,
-                },
-            };
-            if better {
-                best = Some((slack, s.req.id, i));
+            best.map(|(slack, _, i)| (i, slack))
+        };
+        scan(true).or_else(|| {
+            if mid_prompt {
+                scan(false)
+            } else {
+                None
+            }
+        })
+    }
+
+    /// Step-token charge of one in-flight slot: one decode token, or
+    /// this step's prefill chunk (the whole remaining prompt when
+    /// unchunked).
+    fn slot_step_tokens(chunk: usize, s: &Slot) -> usize {
+        if s.prefilled {
+            1
+        } else {
+            let owed = s.prefill_tokens - s.prefill_done;
+            if chunk > 0 {
+                owed.min(chunk)
+            } else {
+                owed
             }
         }
-        best.map(|(slack, _, i)| (i, slack))
     }
 
     /// Evict the decoding slot at `idx`: free its blocks and re-queue
@@ -770,17 +849,35 @@ impl ServeEngine {
         // this tenant) then hits it instead of recomputing.
         let seq = std::mem::take(&mut s.kv);
         self.retire_seq(&s.req, seq);
-        // Tokens emitted in THIS residency: the first token if this
-        // was the original prefill, plus finished decode iterations.
-        let decode_done = s.req.decode_tokens - s.remaining;
-        let emitted = decode_done + if s.resumed { 0 } else { 1 };
-        self.resume.entry(s.req.id).or_insert(ResumeInfo {
-            first_token_s: s.first_token_s,
-            orig_decode: s.req.decode_tokens,
-        });
         let mut r = s.req;
-        r.tokens += emitted;
-        r.decode_tokens = s.remaining;
+        if s.prefilled {
+            // Tokens emitted in THIS residency: the first token if
+            // this residency emitted it, plus finished decode
+            // iterations.
+            let decode_done = r.decode_tokens - s.remaining;
+            let emitted = decode_done + usize::from(s.emit_first);
+            let info = self.resume.entry(r.id)
+                .or_insert(ResumeInfo {
+                    first_token_s: None,
+                    orig_decode: r.decode_tokens,
+                });
+            // First eviction after the first token left (including a
+            // mid-prompt-evicted request whose REPLAY emitted it):
+            // pin the emission time so later replays never re-emit.
+            info.first_token_s.get_or_insert(s.first_token_s);
+            r.tokens += emitted;
+            r.decode_tokens = s.remaining;
+        } else {
+            // Mid-prompt eviction (chunked prefill only): nothing was
+            // emitted yet, so the request replays with its original
+            // fields; `first_token_s: None` tells the re-seat that
+            // the first token (and TTFT) is still owed.
+            self.resume.entry(r.id).or_insert(ResumeInfo {
+                first_token_s: None,
+                orig_decode: r.decode_tokens,
+            });
+            self.stats.preempt_prefill += 1;
+        }
         self.stats.kv_recompute_tokens += r.tokens as u64;
         self.stats.preemptions += 1;
         if memory {
@@ -835,6 +932,14 @@ impl ServeEngine {
     fn slot_in(&mut self, slots: &mut Vec<Slot>, r: Request, now: f64,
                hold: Option<(KvSeq, usize)>) {
         let resumed = self.resume.contains_key(&r.id);
+        // This residency owes the first output token unless an
+        // EARLIER residency already emitted it (decode-evict replay).
+        // A mid-prompt-evicted request resumes with the token still
+        // owed.
+        let emit_first = match self.resume.get(&r.id) {
+            Some(info) => info.first_token_s.is_none(),
+            None => true,
+        };
         if !resumed {
             let queue_s = (now - r.arrival_s).max(0.0);
             let name = self.pool.name(r.tenant);
@@ -848,33 +953,53 @@ impl ServeEngine {
                              Some(r.id), r.tokens as u64, 0);
         }
         self.stats.prefill_tokens += r.tokens as u64;
+        // Chunked prefill allocates only the FIRST chunk's KV at
+        // seating; later chunks extend it step by step through the
+        // grow path. Unchunked (chunk 0) allocates the whole prompt —
+        // the PR-6 arithmetic, bit for bit.
+        let chunk = self.prefill_chunk;
         let (kv, prefill_tokens) = match hold {
             Some((mut seq, hit)) => {
                 // hit ≤ tokens − 1, so the computed suffix is ≥ 1
                 // (the first output token always needs a forward).
                 let suffix = r.tokens - hit;
+                let first = if chunk > 0 {
+                    suffix.min(chunk)
+                } else {
+                    suffix
+                };
                 // CoW fork slack only when the match ended on a
                 // partially-filled shared tail — a full-block cover
                 // can never fork, and over-reclaiming here would
                 // evict a cached block (and a future hit) for free.
                 let fork = usize::from(
                     hit % self.kv.block_tokens() != 0);
-                let need = self.kv.blocks_for(r.tokens)
+                let need = self.kv.blocks_for(hit + first)
                     .saturating_sub(seq.n_blocks())
                     + fork;
                 self.reclaim_shortfall(need);
-                self.kv.grow_clamped(&mut seq, suffix);
+                self.kv.grow_clamped(&mut seq, first);
                 (seq, suffix)
             }
-            None => (self.kv_alloc_clamped(r.tokens), r.tokens),
+            None => {
+                let first = if chunk > 0 {
+                    r.tokens.min(chunk)
+                } else {
+                    r.tokens
+                };
+                (self.kv_alloc_clamped(first), r.tokens)
+            }
         };
+        if chunk > 0 && prefill_tokens > chunk {
+            self.stats.chunked_prefills += 1;
+        }
         self.events.emit(EventKind::PrefillStart, Some(r.tenant.0),
                          Some(r.id), prefill_tokens as u64,
                          (r.tokens - prefill_tokens) as u64);
         slots.push(Slot { remaining: r.decode_tokens,
-                          prefilled: false, resumed,
+                          prefilled: false, emit_first,
                           dispatched_s: now, first_token_s: now, kv,
-                          prefill_tokens, req: r });
+                          prefill_tokens, prefill_done: 0, req: r });
     }
 
     /// Return a finished (or evicted) sequence's blocks to the pool —
@@ -889,6 +1014,129 @@ impl ServeEngine {
                                r.shared_prefix_tokens, &mut self.kv);
         }
         self.kv.release(seq);
+    }
+
+    /// Speculative prefix prefetch: the engine is idle until `until`,
+    /// so spend the gap warming a known-but-cold tenant's shared
+    /// system prompt into the radix cache as donated blocks. The
+    /// target is the EARLIEST future request whose tenant's cached
+    /// cover does not already span its usable shared prefix. Warm KV
+    /// is built through the normal forward/alloc paths (same clock
+    /// arithmetic, same checksum accounting, chunk-sized steps when
+    /// chunking is on) but NEVER steals capacity: an allocation
+    /// failure abandons the warm instead of reclaiming cache or
+    /// preempting — speculation must not cost anyone anything. The
+    /// donation is generation-checked: if the tenant's adapter
+    /// reloaded mid-warm, the stale KV is released, never donated.
+    /// Returns the advanced clock (never past work that matters —
+    /// each warm step is projected against the gap before it runs).
+    fn prefetch_gap(&mut self, sched: &OnlineScheduler,
+                    clock: ClockModel, mut now: f64,
+                    until: f64) -> Result<f64> {
+        if !self.prefix.enabled() {
+            return Ok(now);
+        }
+        let bt = self.kv.block_tokens();
+        let target = sched.peek_future().find_map(|r| {
+            if r.shared_prefix_tokens == 0 {
+                return None;
+            }
+            let want = crate::serve::prefix::usable_prefix(
+                r.shared_prefix_tokens, r.tokens);
+            let (full, tail) = self.prefix.cover(r.tenant, bt);
+            (full * bt + tail < want).then_some((r.tenant, want))
+        });
+        let Some((tenant, want)) = target else {
+            return Ok(now);
+        };
+        let gen = self.registry.generation(self.pool.name(tenant));
+        let cap = if self.prefill_chunk > 0 {
+            self.prefill_chunk
+        } else if sched.max_batch_tokens > 0 {
+            sched.max_batch_tokens
+        } else {
+            want
+        };
+        let mut seq: Option<KvSeq> = None;
+        let mut warmed = 0usize;
+        while warmed < want {
+            let toks = (want - warmed).min(cap).max(1);
+            // A warm step that would overrun the gap (delaying the
+            // real arrival it speculates for) is not taken.
+            let projected = match clock {
+                ClockModel::Analytic { swap_s, batch_s, token_s } => {
+                    let swaps = self.current_tenant_id()
+                        != Some(tenant);
+                    batch_s + token_s * toks as f64
+                        + if swaps { swap_s } else { 0.0 }
+                }
+                // No projection exists before a measured forward
+                // runs; bound by the gap after the fact instead.
+                ClockModel::Measured => 0.0,
+            };
+            if now + projected > until {
+                break;
+            }
+            // Capacity: take only what the free list offers.
+            let got = match seq.as_mut() {
+                None => match self.kv.try_alloc(toks) {
+                    Some(s) => {
+                        seq = Some(s);
+                        true
+                    }
+                    None => false,
+                },
+                Some(s) => self.kv.grow(s, toks),
+            };
+            if !got {
+                break;
+            }
+            let (wall_step_s, swapped) =
+                self.forward_step(tenant, toks)?;
+            self.stats.steps += 1;
+            self.events.set_step(self.stats.steps);
+            let step_s = match clock {
+                ClockModel::Measured => wall_step_s,
+                ClockModel::Analytic { swap_s, batch_s, token_s } => {
+                    batch_s + token_s * toks as f64
+                        + if swapped { swap_s } else { 0.0 }
+                }
+            };
+            now += step_s;
+            self.events.set_now(now);
+            warmed += toks;
+            self.stats.prefetch_tokens += toks as u64;
+            self.events.emit(EventKind::Prefetch, Some(tenant.0),
+                             None, toks as u64,
+                             (want - warmed) as u64);
+            self.kv_timeline.record(
+                self.kv.used_blocks() as u64,
+                self.kv.resident_tokens() as u64,
+                self.kv.reclaimable_blocks() as u64);
+            if now >= until {
+                break;
+            }
+        }
+        if let Some(s) = seq {
+            let fresh = self.registry
+                .generation(self.pool.name(tenant));
+            if warmed > 0 && fresh == gen {
+                // A partial warm donates its partial chain — later
+                // prefills attach the covered part and compute the
+                // rest.
+                let before = self.prefix.stats.donated_blocks;
+                self.prefix.donate(tenant, gen, &s, warmed,
+                                   &mut self.kv);
+                let blocks =
+                    self.prefix.stats.donated_blocks - before;
+                self.stats.prefetch_donated_blocks += blocks;
+                self.events.emit(EventKind::PrefetchDonate,
+                                 Some(tenant.0), None, blocks,
+                                 warmed as u64);
+            }
+            self.kv.release(s);
+        }
+        Ok(now)
     }
 
     /// Decode-style iteration-level batching: the unit of service is
@@ -931,8 +1179,14 @@ impl ServeEngine {
             if slots.is_empty() {
                 if sched.pending_len() == 0 {
                     match sched.next_arrival() {
-                        // Idle: event-jump to the next arrival.
+                        // Idle: event-jump to the next arrival —
+                        // after spending the gap on speculative
+                        // prefix prefetch when armed.
                         Some(t) => {
+                            if self.prefetch {
+                                now = self.prefetch_gap(sched, clock,
+                                                        now, t)?;
+                            }
                             now = now.max(t);
                             self.events.set_now(now);
                             sched.admit(now);
@@ -968,8 +1222,18 @@ impl ServeEngine {
                 // validated by simulation, it thrashes. Once the
                 // batch drains, the urgent tenant dispatches into the
                 // freed blocks.
-                let drain_s = slots.iter().map(|s| s.remaining)
-                    .max().unwrap_or(0) as f64 * last_step_s;
+                let drain_s = slots.iter().map(|s| {
+                    // Mid-prompt slots owe their remaining chunk
+                    // steps before any decode (chunked only; equals
+                    // s.remaining in the PR-6 regime).
+                    let chunks = if self.prefill_chunk > 0 {
+                        (s.prefill_tokens - s.prefill_done)
+                            .div_ceil(self.prefill_chunk)
+                    } else {
+                        0
+                    };
+                    s.remaining + chunks
+                }).max().unwrap_or(0) as f64 * last_step_s;
                 let urgent_slack = if self.preempting()
                     && sched.policy() == Policy::SloAware
                 {
@@ -980,7 +1244,8 @@ impl ServeEngine {
                 };
                 if urgent_slack.is_some() {
                     let victim = Self::pick_victim(
-                        &slots, None, now, sched.decode_slack_s)
+                        &slots, None, now, sched.decode_slack_s,
+                        self.prefill_chunk > 0)
                         .filter(|(_, slack)| slack.is_infinite());
                     if let Some((idx, _)) = victim {
                         self.evict_slot(&mut slots, idx, sched,
@@ -1000,7 +1265,15 @@ impl ServeEngine {
                     let spare = if budget == 0 {
                         usize::MAX
                     } else {
-                        budget.saturating_sub(slots.len())
+                        // Charge every in-flight slot what THIS step
+                        // will cost it (1 decode token, or its next
+                        // prefill chunk) — in the PR-6 regime every
+                        // slot charges exactly 1.
+                        let held: usize = slots.iter()
+                            .map(|s| Self::slot_step_tokens(
+                                self.prefill_chunk, s))
+                            .sum();
+                        budget.saturating_sub(held)
                     };
                     let free = slot_cap - slots.len();
                     let joiners = sched.join_live(live, free, spare);
@@ -1009,43 +1282,60 @@ impl ServeEngine {
             }
 
             // ---- KV growth: each decoding slot appends one token's
-            // cache this step. On pool exhaustion, evict the
-            // least-urgent OTHER decoding slot and retry (memory-
-            // pressure preemption); with no victim left — or with
-            // preemption off (drain-only) — the grower continues
+            // cache this step; with chunked prefill on, each
+            // mid-prompt slot appends its NEXT chunk's cache (the
+            // first chunk was allocated at seating). On pool
+            // exhaustion, evict the least-urgent OTHER slot and retry
+            // (memory-pressure preemption); with no victim left — or
+            // with preemption off (drain-only) — the grower continues
             // CAPPED (ledgered overflow, never an over-commit).
-            let grow_ids: Vec<u64> = slots.iter()
-                .filter(|s| s.prefilled).map(|s| s.req.id).collect();
-            for id in grow_ids {
-                'grow: loop {
-                    let Some(i) = slots.iter()
-                        .position(|s| s.req.id == id)
-                    else {
-                        break 'grow; // evicted as another's victim
-                    };
-                    if self.kv.grow(&mut slots[i].kv, 1) {
-                        break 'grow;
-                    }
-                    // Under pressure the cache yields unreferenced
-                    // blocks BEFORE any slot is preempted — reclaim
-                    // and retry the grow.
-                    if self.prefix.reclaim(1, &mut self.kv) > 0 {
-                        continue 'grow;
-                    }
-                    let victim = if self.preempting() {
-                        Self::pick_victim(&slots, Some(id), now,
-                                          sched.decode_slack_s)
+            let chunk = self.prefill_chunk;
+            let grow_work: Vec<(u64, usize)> = slots.iter()
+                .filter_map(|s| {
+                    if s.prefilled {
+                        Some((s.req.id, 1))
+                    } else if chunk > 0 && s.prefill_done > 0 {
+                        Some((s.req.id,
+                              Self::slot_step_tokens(chunk, s)))
                     } else {
-                        None
-                    };
-                    match victim {
-                        Some((v, _)) => {
-                            self.evict_slot(&mut slots, v, sched,
-                                            true);
+                        None // first chunk: allocated at seating
+                    }
+                })
+                .collect();
+            for (id, extra) in grow_work {
+                'tokens: for _ in 0..extra {
+                    loop {
+                        let Some(i) = slots.iter()
+                            .position(|s| s.req.id == id)
+                        else {
+                            // evicted as another's victim
+                            break 'tokens;
+                        };
+                        if self.kv.grow(&mut slots[i].kv, 1) {
+                            break;
                         }
-                        None => {
-                            self.kv.overflow(1);
-                            break 'grow;
+                        // Under pressure the cache yields
+                        // unreferenced blocks BEFORE any slot is
+                        // preempted — reclaim and retry the grow.
+                        if self.prefix.reclaim(1, &mut self.kv) > 0 {
+                            continue;
+                        }
+                        let victim = if self.preempting() {
+                            Self::pick_victim(&slots, Some(id), now,
+                                              sched.decode_slack_s,
+                                              chunk > 0)
+                        } else {
+                            None
+                        };
+                        match victim {
+                            Some((v, _)) => {
+                                self.evict_slot(&mut slots, v, sched,
+                                                true);
+                            }
+                            None => {
+                                self.kv.overflow(1);
+                                break;
+                            }
                         }
                     }
                 }
@@ -1056,9 +1346,10 @@ impl ServeEngine {
             // Freshly seated slots charge only their UNCACHED prompt
             // suffix — matched prefix KV is attached, not recomputed
             // (with no cache hit, prefill_tokens == the full prompt,
-            // the PR-4 charge).
+            // the PR-4 charge) — capped at one chunk when chunked
+            // prefill is on.
             let step_tokens: usize = slots.iter()
-                .map(|s| if s.prefilled { 1 } else { s.prefill_tokens })
+                .map(|s| Self::slot_step_tokens(chunk, s))
                 .sum();
             let (wall_step_s, swapped) =
                 self.forward_step(tenant, step_tokens)?;
@@ -1088,8 +1379,31 @@ impl ServeEngine {
             let mut i = 0;
             while i < slots.len() {
                 if !slots[i].prefilled {
+                    if chunk > 0 {
+                        // Chunked: this step computed one chunk of
+                        // the prompt. A non-final chunk just records
+                        // progress; the final chunk falls through to
+                        // the PrefillEnd emission below.
+                        let owed = slots[i].prefill_tokens
+                            - slots[i].prefill_done;
+                        let this = owed.min(chunk);
+                        slots[i].prefill_done += this;
+                        self.stats.prefill_chunks += 1;
+                        self.events.emit(
+                            EventKind::PrefillChunk,
+                            Some(slots[i].req.tenant.0),
+                            Some(slots[i].req.id), this as u64,
+                            (owed - this) as u64);
+                        if owed > this {
+                            i += 1;
+                            continue; // more chunks owed
+                        }
+                    } else {
+                        slots[i].prefill_done =
+                            slots[i].prefill_tokens;
+                    }
                     slots[i].prefilled = true;
-                    if slots[i].resumed {
+                    if !slots[i].emit_first {
                         // Recompute replay: every token of this
                         // prefill was emitted in an earlier residency
                         // — nothing new leaves the engine, so TTFT
@@ -1131,7 +1445,12 @@ impl ServeEngine {
                 // pinned in the resume map.
                 let (first_token_s, decode_total) =
                     match self.resume.remove(&s.req.id) {
-                        Some(r) => (r.first_token_s, r.orig_decode),
+                        // A mid-prompt-evicted request's first token
+                        // left during THIS residency (None in the
+                        // map) — settle against the slot's own stamp.
+                        Some(r) => (r.first_token_s
+                                        .unwrap_or(s.first_token_s),
+                                    r.orig_decode),
                         None => (s.first_token_s,
                                  s.req.decode_tokens),
                     };
@@ -1299,6 +1618,14 @@ impl ServeEngine {
                 self.occupancy.peak_slots(),
                 self.occupancy.mean_tokens(),
                 self.occupancy.peak_tokens()));
+            if self.prefill_chunk > 0 {
+                out.push_str(&format!(
+                    "prefill chunks: {} steps ({} tokens/chunk cap) \
+                     | {} prompts split | {} mid-prompt \
+                     preemptions\n",
+                    s.prefill_chunks, self.prefill_chunk,
+                    s.chunked_prefills, s.preempt_prefill));
+            }
             out.push('\n');
         }
         if self.kv.is_bounded() {
@@ -1349,6 +1676,12 @@ impl ServeEngine {
                 ps.hits, ps.lookups, ps.hit_tokens, pct,
                 ps.donated_blocks, ps.reclaimed_blocks,
                 self.kv.stats.cow_forks, ps.invalidations));
+        }
+        if self.prefetch && self.stats.steps > 0 {
+            out.push_str(&format!(
+                "speculative prefetch: {} tokens warmed in idle gaps \
+                 | {} blocks donated\n\n",
+                s.prefetch_tokens, s.prefetch_donated_blocks));
         }
         // Event-trace lines exist only when tracing is on: the
         // null-sink report stays byte-identical to the untraced one.
@@ -1462,6 +1795,27 @@ impl ServeEngine {
                    num(s.kv_recompute_tokens as f64));
         root.insert("preemptions".to_string(), Json::Obj(pre));
 
+        if self.prefill_chunk > 0 {
+            let mut c = BTreeMap::new();
+            c.insert("chunk_tokens".to_string(),
+                     num(self.prefill_chunk as f64));
+            c.insert("chunks".to_string(),
+                     num(s.prefill_chunks as f64));
+            c.insert("chunked_prompts".to_string(),
+                     num(s.chunked_prefills as f64));
+            c.insert("preempt_prefill".to_string(),
+                     num(s.preempt_prefill as f64));
+            root.insert("chunked_prefill".to_string(), Json::Obj(c));
+        }
+        if self.prefetch {
+            let mut p = BTreeMap::new();
+            p.insert("tokens".to_string(),
+                     num(s.prefetch_tokens as f64));
+            p.insert("donated_blocks".to_string(),
+                     num(s.prefetch_donated_blocks as f64));
+            root.insert("prefetch".to_string(), Json::Obj(p));
+        }
+
         if self.prefix.enabled() && s.steps > 0 {
             let ps = &self.prefix.stats;
             let mut p = BTreeMap::new();
@@ -1516,9 +1870,11 @@ struct Slot {
     remaining: usize,
     /// False until the prompt has been prefilled (first token out).
     prefilled: bool,
-    /// True when this residency replays a preempted sequence: the
-    /// prefill is pure recompute and emits nothing.
-    resumed: bool,
+    /// Whether this residency owes the request's FIRST output token:
+    /// true for fresh seats and for mid-prompt-evicted replays (the
+    /// evicted residency never emitted); false only for decode-evict
+    /// replays, whose prefill is pure recompute and emits nothing.
+    emit_first: bool,
     /// Virtual time the request entered its slot (queueing ends).
     dispatched_s: f64,
     /// Virtual time the first token came out (TTFT ends, TPOT
@@ -1527,6 +1883,10 @@ struct Slot {
     /// Prompt tokens the prefill step actually computes — the full
     /// prompt, minus any prefix-cache hit (always ≥ 1).
     prefill_tokens: usize,
+    /// Of those, tokens already computed by earlier chunks of THIS
+    /// residency (chunked prefill; equals `prefill_tokens` once the
+    /// slot is prefilled).
+    prefill_done: usize,
     /// The sequence's paged KV blocks (grown one token per decode
     /// step, released at completion or eviction — shared-prefix
     /// blocks are donated to the tenant's radix cache).
@@ -2290,6 +2650,223 @@ mod tests {
         assert!(eng.swap_to(ghost).is_err());
         // Base must still be intact afterwards.
         eng.finish().unwrap();
+    }
+
+    #[test]
+    fn chunk_zero_and_oversized_chunk_reduce_to_unchunked() {
+        // The PR-7 reduction anchor at unit scale (the 25-seed × 3-
+        // policy property lives in tests/properties.rs): chunk 0 is
+        // bit-for-bit the PR-6 engine, and a chunk at least as large
+        // as every prompt issues the SAME forwards (one chunk per
+        // prefill) — same checksum, tokens, steps, makespan.
+        let trace = trace::synthesize(&TraceSpec {
+            n_requests: 60, n_tenants: 4, deadline_ms: 40.0,
+            burstiness: 3.0, decode_tokens: 12,
+            ..Default::default()
+        });
+        let clock = ClockModel::Analytic {
+            swap_s: 2e-3, batch_s: 5e-4, token_s: 2e-5,
+        };
+        let run = |chunk: Option<usize>| {
+            let mut eng = engine_for(trace.pool.clone());
+            if let Some(c) = chunk {
+                eng.configure_chunking(c);
+            }
+            let mut sched = OnlineScheduler::new(
+                trace.requests.clone(), trace.pool.len(), 8,
+                Policy::SloAware);
+            sched.prefill_chunk_tokens = chunk.unwrap_or(0);
+            eng.serve_iterative(&mut sched, clock).unwrap();
+            eng.finish().unwrap();
+            eng
+        };
+        let base = run(None);
+        let zero = run(Some(0));
+        assert_eq!(zero.checksum, base.checksum);
+        assert_eq!(scrub_wall(zero.stats), scrub_wall(base.stats));
+        assert_eq!(zero.report(), base.report(),
+                   "chunk 0 must not even change the report");
+        // Chunk ≥ every prompt: every prefill is a single chunk.
+        let huge = run(Some(1 << 20));
+        assert_eq!(huge.checksum, base.checksum);
+        assert_eq!(huge.stats.tokens, base.stats.tokens);
+        assert_eq!(huge.stats.steps, base.stats.steps);
+        assert_eq!(huge.stats.virtual_s, base.stats.virtual_s);
+        assert_eq!(huge.stats.chunked_prefills, 0,
+                   "no prompt outgrew the chunk");
+        assert!(huge.stats.prefill_chunks >= 60,
+                "chunked mode ledgers every prefill step");
+    }
+
+    #[test]
+    fn chunked_prefill_keeps_decode_flowing_past_a_long_prompt() {
+        // Tenant 0's slot is decoding when a 96-token same-tenant
+        // prompt joins. Unchunked, the joiner's whole prompt lands in
+        // one step and every decode token in that step costs
+        // token_s·97; chunked at 8, no step carries more than 9
+        // tokens, so the decoder's TPOT stays flat — the tentpole win
+        // at unit scale — while total computed tokens are unchanged.
+        let mut pool = TenantPool::new();
+        let t0 = pool.intern(&trace::tenant_name(0));
+        let reqs = || vec![
+            Request { id: 0, tenant: t0, tokens: 4,
+                      decode_tokens: 30, shared_prefix_tokens: 0,
+                      arrival_s: 0.0, deadline_s: f64::INFINITY },
+            Request { id: 1, tenant: t0, tokens: 96,
+                      decode_tokens: 0, shared_prefix_tokens: 0,
+                      arrival_s: 4e-3, deadline_s: f64::INFINITY },
+        ];
+        let clock = ClockModel::Analytic {
+            swap_s: 0.0, batch_s: 1e-4, token_s: 1e-3,
+        };
+        let run = |chunk: usize| {
+            let mut eng = engine_for(pool.clone());
+            eng.configure_events(Events::recording());
+            eng.configure_chunking(chunk);
+            let mut sched = OnlineScheduler::new(
+                reqs(), 1, 4, Policy::SwapAware);
+            sched.prefill_chunk_tokens = chunk;
+            eng.serve_iterative(&mut sched, clock).unwrap();
+            eng.finish().unwrap();
+            assert_eq!(eng.events.violation_count(), 0,
+                       "violations: {:?}", eng.events.violations());
+            eng
+        };
+        let whole = run(0);
+        let chunked = run(8);
+        assert_eq!(chunked.stats.tokens, whole.stats.tokens,
+                   "chunking moves tokens between steps, never \
+                    drops or adds any");
+        assert_eq!(chunked.stats.requests, 2);
+        assert_eq!(chunked.stats.chunked_prefills, 1);
+        assert_eq!(chunked.stats.prefill_chunks, 12 + 1,
+                   "96/8 chunks for the long prompt + 1 for the \
+                    short one");
+        assert!(chunked.occupancy.peak_tokens() <= 9,
+                "chunked steps stay small: peak {}",
+                chunked.occupancy.peak_tokens());
+        assert_eq!(whole.occupancy.peak_tokens(), 97);
+        let tpot = |e: &ServeEngine| {
+            e.tpot.percentile("(all)", 0.99).unwrap()
+        };
+        assert!(tpot(&chunked) < tpot(&whole),
+                "decode TPOT must stay flat while the prompt \
+                 trickles in: {} !< {}",
+                tpot(&chunked), tpot(&whole));
+        let counts: HashMap<&str, u64> =
+            chunked.events.counts().into_iter().collect();
+        assert_eq!(counts["prefill_chunk"], 13);
+        assert!(chunked.report().contains("prefill chunks:"));
+        assert!(!whole.report().contains("prefill chunks:"));
+    }
+
+    #[test]
+    fn mid_prompt_preemption_replays_and_emits_exactly_once() {
+        // Slo-aware urgency eviction of a slot that is still
+        // CHUNKING its prompt: tenant 0's deadline-free 64-token
+        // prompt is trickling in when tenant 1 arrives with a
+        // deadline far tighter than the remaining chunks. The
+        // mid-prompt slot is shed (nothing was emitted, so nothing
+        // can double-emit), the urgent tenant is served in time, and
+        // the replay prefills from token zero — emitting the first
+        // token and TTFT exactly once, at replay time.
+        let mut pool = TenantPool::new();
+        let t0 = pool.intern(&trace::tenant_name(0));
+        let t1 = pool.intern(&trace::tenant_name(1));
+        let reqs = vec![
+            Request { id: 0, tenant: t0, tokens: 64,
+                      decode_tokens: 4, shared_prefix_tokens: 0,
+                      arrival_s: 0.0, deadline_s: f64::INFINITY },
+            Request { id: 1, tenant: t1, tokens: 4,
+                      decode_tokens: 0, shared_prefix_tokens: 0,
+                      arrival_s: 6e-3, deadline_s: 25e-3 },
+        ];
+        let mut eng = engine_for(pool);
+        eng.configure_events(Events::recording());
+        eng.configure_kv(1024, 16, true);
+        eng.configure_chunking(4);
+        let mut sched = OnlineScheduler::new(reqs, 2, 4,
+                                             Policy::SloAware);
+        sched.prefill_chunk_tokens = 4;
+        eng.serve_iterative(&mut sched, ClockModel::Analytic {
+            swap_s: 1e-4, batch_s: 1e-3, token_s: 1e-3,
+        }).unwrap();
+        assert_eq!(eng.stats.requests, 2);
+        assert_eq!(eng.stats.preempt_prefill, 1,
+                   "the chunking slot must be shed for the urgent \
+                    deadline");
+        assert_eq!(eng.stats.preempt_deadline, 1);
+        assert_eq!(eng.stats.deadline_misses, 0,
+                   "shedding the prefill must rescue the deadline");
+        assert_eq!(eng.stats.kv_recompute_tokens, 64,
+                   "the replay recomputes the whole prompt");
+        // Exactly-once: both requests emit one first token, one
+        // completion, one queueing sample.
+        assert_eq!(eng.ttft.count("(all)"), 2);
+        assert_eq!(eng.queueing.count("(all)"), 2);
+        assert_eq!(eng.e2e.count("(all)"), 2);
+        assert_eq!(eng.tpot.count("(all)"), 1, "only t0 decodes");
+        assert_eq!(eng.events.violation_count(), 0,
+                   "violations: {:?}", eng.events.violations());
+        let report = eng.report();
+        assert!(report.contains("mid-prompt preemptions"));
+        eng.finish().unwrap();
+    }
+
+    #[test]
+    fn prefetch_warms_the_cache_before_the_arrival() {
+        // One future request with a cold 16-token shared prefix and a
+        // 1-second idle gap in front of it: with prefetch armed the
+        // engine spends the gap warming the prefix into the radix
+        // cache, so the real prefill attaches it and computes only
+        // the 8-token suffix — and TTFT drops by the difference.
+        let mut pool = TenantPool::new();
+        let t0 = pool.intern(&trace::tenant_name(0));
+        let reqs = || vec![Request {
+            id: 0, tenant: t0, tokens: 24, decode_tokens: 0,
+            shared_prefix_tokens: 16, arrival_s: 1.0,
+            deadline_s: f64::INFINITY,
+        }];
+        let clock = ClockModel::Analytic {
+            swap_s: 1e-3, batch_s: 1e-3, token_s: 1e-3,
+        };
+        let run = |prefetch: bool| {
+            let mut eng = engine_for(pool.clone());
+            eng.configure_events(Events::recording());
+            eng.configure_prefetch(prefetch);
+            let mut sched = OnlineScheduler::new(reqs(), 1, 4,
+                                                 Policy::SwapAware);
+            eng.serve_iterative(&mut sched, clock).unwrap();
+            eng.finish().unwrap();
+            assert_eq!(eng.events.violation_count(), 0,
+                       "violations: {:?}", eng.events.violations());
+            eng
+        };
+        let cold = run(false);
+        assert_eq!(cold.stats.prefetch_tokens, 0);
+        assert_eq!(cold.stats.tokens, 24);
+        let warm = run(true);
+        assert_eq!(warm.stats.prefetch_tokens, 16,
+                   "the usable prefix is warmed in the idle gap");
+        assert_eq!(warm.stats.prefetch_donated_blocks, 1);
+        assert_eq!(warm.prefix.stats.hits, 1,
+                   "the real prefill hits the donated chain");
+        assert_eq!(warm.prefix.stats.hit_tokens, 16);
+        assert_eq!(warm.stats.tokens, 16 + 8,
+                   "warm tokens + the uncached suffix");
+        let ttft = |e: &ServeEngine| {
+            e.ttft.percentile("(all)", 0.5).unwrap()
+        };
+        assert!(ttft(&warm) < ttft(&cold),
+                "prefetched prefix must land the first token \
+                 sooner: {} !< {}", ttft(&warm), ttft(&cold));
+        let counts: HashMap<&str, u64> =
+            warm.events.counts().into_iter().collect();
+        assert_eq!(counts["prefetch"], 1);
+        assert_eq!(counts["prefetch_donate"], 1);
+        assert!(warm.report().contains("speculative prefetch:"));
+        assert!(warm.report_json().get("prefetch").is_some());
+        assert!(cold.report_json().get("prefetch").is_none());
     }
 
     /// Wall-clock fields are the only non-deterministic EngineStats

@@ -101,10 +101,24 @@ pub enum EventKind {
     /// Registry evicted a resident adapter. a = tenant generation
     /// after the bump, b = resident adapters after.
     AdapterEvict,
+    /// One chunk of a chunked prefill was computed this step (the
+    /// final chunk is the one whose `b` reaches 0; `PrefillEnd`
+    /// follows it in the same instant). a = chunk tokens computed,
+    /// b = prefill tokens still owed after this chunk.
+    PrefillChunk,
+    /// One speculative prefix-prefetch step: idle step budget warmed a
+    /// cold tenant's shared system prompt. Carries NO request — a
+    /// prefetch never emits output tokens. a = prefix tokens computed
+    /// this step, b = prefix tokens still to warm.
+    Prefetch,
+    /// A completed speculative prefetch donated its blocks to the
+    /// radix cache. Carries NO request. a = blocks donated,
+    /// b = prefix tokens warmed.
+    PrefetchDonate,
 }
 
 impl EventKind {
-    pub const ALL: [EventKind; 22] = [
+    pub const ALL: [EventKind; 25] = [
         EventKind::Arrival, EventKind::Admit, EventKind::Reject,
         EventKind::Dispatch, EventKind::SpliceIn, EventKind::SpliceOut,
         EventKind::PrefillStart, EventKind::PrefillEnd,
@@ -113,6 +127,8 @@ impl EventKind {
         EventKind::KvAlloc, EventKind::KvFree, EventKind::Overflow,
         EventKind::Preempt, EventKind::Resume, EventKind::Complete,
         EventKind::AdapterLoad, EventKind::AdapterEvict,
+        EventKind::PrefillChunk, EventKind::Prefetch,
+        EventKind::PrefetchDonate,
     ];
     pub const COUNT: usize = Self::ALL.len();
 
@@ -140,6 +156,9 @@ impl EventKind {
             EventKind::Complete => "complete",
             EventKind::AdapterLoad => "adapter_load",
             EventKind::AdapterEvict => "adapter_evict",
+            EventKind::PrefillChunk => "prefill_chunk",
+            EventKind::Prefetch => "prefetch",
+            EventKind::PrefetchDonate => "prefetch_donate",
         }
     }
 
@@ -223,6 +242,12 @@ struct ReqAudit {
     /// a == 1).
     first_token: bool,
     dispatches: u64,
+    /// Chunked-prefill ledger: prefill tokens still owed, opened at
+    /// `PrefillStart` (a) and drained by in-order `PrefillChunk`s.
+    prefill_left: u64,
+    /// This seat's prefill is chunked (a `PrefillChunk` was seen), so
+    /// `PrefillEnd` must find the ledger drained to exactly 0.
+    chunked: bool,
 }
 
 /// The online invariant auditor: consumes the stream DURING the run
@@ -338,12 +363,42 @@ impl EventAuditor {
                 r.awaiting_resume = false;
                 None
             }),
-            PrefillStart => self.req_check(ev, |r| {
-                if !r.seated {
-                    return Some("prefill outside a seat".into());
-                }
-                None
-            }),
+            PrefillStart => {
+                let owed = ev.a;
+                self.req_check(ev, |r| {
+                    if !r.seated {
+                        return Some("prefill outside a seat".into());
+                    }
+                    r.prefill_left = owed;
+                    r.chunked = false;
+                    None
+                });
+            }
+            PrefillChunk => {
+                let (chunk, left) = (ev.a, ev.b);
+                self.req_check(ev, |r| {
+                    if !r.seated {
+                        return Some("chunk outside a seat".into());
+                    }
+                    if chunk == 0 {
+                        return Some("empty prefill chunk".into());
+                    }
+                    if chunk > r.prefill_left {
+                        return Some(format!(
+                            "chunk of {chunk} exceeds {} owed",
+                            r.prefill_left));
+                    }
+                    if left != r.prefill_left - chunk {
+                        return Some(format!(
+                            "chunk ledger drift: reported {left} \
+                             left vs running {}",
+                            r.prefill_left - chunk));
+                    }
+                    r.prefill_left = left;
+                    r.chunked = true;
+                    None
+                });
+            }
             PrefillEnd => {
                 let first = ev.a == 1;
                 self.req_check(ev, |r| {
@@ -351,6 +406,12 @@ impl EventAuditor {
                         return Some("prefill-end outside a seat"
                                     .into());
                     }
+                    if r.chunked && r.prefill_left != 0 {
+                        return Some(format!(
+                            "prefill-end with {} chunk tokens \
+                             still owed", r.prefill_left));
+                    }
+                    r.chunked = false;
                     if first {
                         if r.first_token {
                             return Some("second first-token".into());
@@ -372,6 +433,10 @@ impl EventAuditor {
                 }
                 r.seated = false;
                 r.awaiting_resume = true;
+                // A mid-prompt eviction abandons its chunk ledger;
+                // the re-seat's PrefillStart opens a fresh one.
+                r.chunked = false;
+                r.prefill_left = 0;
                 None
             }),
             Complete => self.req_check(ev, |r| {
@@ -419,6 +484,16 @@ impl EventAuditor {
                                  .into());
                 }
                 self.kv_ledger_check(ev);
+            }
+            // Speculation is engine-scoped: a prefetch that claims a
+            // request would mean speculative work emitted tokens.
+            Prefetch | PrefetchDonate => {
+                if ev.request.is_some() {
+                    self.violate(format!(
+                        "{} tied to request {:?} — prefetch never \
+                         emits request tokens",
+                        ev.kind.name(), ev.request));
+                }
             }
             // Pure counters: no causal state to check.
             PrefixHit | Donate | Reclaim | Invalidate | CowFork
@@ -1114,6 +1189,98 @@ mod tests {
         e.emit(Dispatch, Some(0), Some(1), 1, 0);
         e.emit(Resume, Some(0), Some(1), 1, 0);
         assert!(e.violation_count() > 0);
+    }
+
+    #[test]
+    fn auditor_enforces_chunk_and_prefetch_rules() {
+        use EventKind::*;
+        let catches = |emit: &dyn Fn(&Events)| -> u64 {
+            let events = Events::recording();
+            emit(&events);
+            events.violation_count()
+        };
+        // A clean chunked prefill: 10 tokens in 4 + 4 + 2, then the
+        // exactly-once final PrefillEnd.
+        let e = Events::recording();
+        e.emit_at(0.0, Arrival, Some(0), Some(1), 10, 1);
+        e.emit(Admit, Some(0), Some(1), 10, 1);
+        e.emit(Dispatch, Some(0), Some(1), 10, 1);
+        e.emit(PrefillStart, Some(0), Some(1), 10, 0);
+        e.set_now(0.1);
+        e.emit(PrefillChunk, Some(0), Some(1), 4, 6);
+        e.set_now(0.2);
+        e.emit(PrefillChunk, Some(0), Some(1), 4, 2);
+        e.set_now(0.3);
+        e.emit(PrefillChunk, Some(0), Some(1), 2, 0);
+        e.emit(PrefillEnd, Some(0), Some(1), 1, 10);
+        e.set_now(0.4);
+        e.emit(DecodeStep, Some(0), Some(1), 1, 0);
+        e.emit(Complete, Some(0), Some(1), 2, 0);
+        e.finalize();
+        assert_eq!(e.violation_count(), 0, "{:?}", e.violations());
+        // PrefillEnd before the last chunk (2 tokens still owed).
+        assert!(catches(&|e| {
+            e.emit_at(0.0, Arrival, Some(0), Some(1), 10, 0);
+            e.emit(Admit, Some(0), Some(1), 10, 0);
+            e.emit(Dispatch, Some(0), Some(1), 10, 0);
+            e.emit(PrefillStart, Some(0), Some(1), 10, 0);
+            e.emit(PrefillChunk, Some(0), Some(1), 8, 2);
+            e.emit(PrefillEnd, Some(0), Some(1), 1, 10);
+        }) > 0);
+        // Out-of-order / over-sized chunk: 8 owed, chunk of 12.
+        assert!(catches(&|e| {
+            e.emit_at(0.0, Arrival, Some(0), Some(1), 8, 0);
+            e.emit(Admit, Some(0), Some(1), 8, 0);
+            e.emit(Dispatch, Some(0), Some(1), 8, 0);
+            e.emit(PrefillStart, Some(0), Some(1), 8, 0);
+            e.emit(PrefillChunk, Some(0), Some(1), 12, 0);
+        }) > 0);
+        // Chunk ledger drift: reported remainder disagrees.
+        assert!(catches(&|e| {
+            e.emit_at(0.0, Arrival, Some(0), Some(1), 8, 0);
+            e.emit(Admit, Some(0), Some(1), 8, 0);
+            e.emit(Dispatch, Some(0), Some(1), 8, 0);
+            e.emit(PrefillStart, Some(0), Some(1), 8, 0);
+            e.emit(PrefillChunk, Some(0), Some(1), 4, 3);
+        }) > 0);
+        // Chunk outside a seat.
+        assert!(catches(&|e| {
+            e.emit_at(0.0, Arrival, Some(0), Some(1), 8, 0);
+            e.emit(Admit, Some(0), Some(1), 8, 0);
+            e.emit(PrefillChunk, Some(0), Some(1), 4, 4);
+        }) > 0);
+        // A mid-prompt preempt abandons the ledger; the re-seat opens
+        // a fresh one and must still drain it.
+        let e = Events::recording();
+        e.emit_at(0.0, Arrival, Some(0), Some(1), 10, 0);
+        e.emit(Admit, Some(0), Some(1), 10, 0);
+        e.emit(Dispatch, Some(0), Some(1), 10, 0);
+        e.emit(PrefillStart, Some(0), Some(1), 10, 0);
+        e.set_now(0.1);
+        e.emit(PrefillChunk, Some(0), Some(1), 4, 6);
+        e.emit(Preempt, Some(0), Some(1), 1, 0);
+        e.set_now(0.5);
+        e.emit(Dispatch, Some(0), Some(1), 10, 0);
+        e.emit(Resume, Some(0), Some(1), 10, 0);
+        e.emit(PrefillStart, Some(0), Some(1), 10, 0);
+        e.set_now(0.6);
+        e.emit(PrefillChunk, Some(0), Some(1), 10, 0);
+        e.emit(PrefillEnd, Some(0), Some(1), 1, 10);
+        e.emit(Complete, Some(0), Some(1), 1, 0);
+        e.finalize();
+        assert_eq!(e.violation_count(), 0, "{:?}", e.violations());
+        // Prefetch is engine-scoped: tying it to a request is the
+        // "speculation emitted tokens" violation.
+        let e = Events::recording();
+        e.emit(Prefetch, Some(2), None, 16, 32);
+        e.emit(PrefetchDonate, Some(2), None, 3, 48);
+        assert_eq!(e.violation_count(), 0, "{:?}", e.violations());
+        assert!(catches(&|e| {
+            e.emit(Prefetch, Some(2), Some(7), 16, 32);
+        }) > 0);
+        assert!(catches(&|e| {
+            e.emit(PrefetchDonate, Some(2), Some(7), 3, 48);
+        }) > 0);
     }
 
     #[test]

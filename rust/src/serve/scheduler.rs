@@ -365,6 +365,22 @@ pub struct OnlineScheduler {
     /// so an oversized prompt degrades to a batch of one instead of
     /// wedging the queue.
     pub max_batch_tokens: usize,
+    /// Chunked prefill (Sarathi-style stall-free batching): when > 0,
+    /// admission charges a prompt at most this many prefill tokens per
+    /// step — the engine computes the prompt chunk-by-chunk,
+    /// interleaved with decode — so a long prompt no longer consumes
+    /// the whole step budget at once. 0 = unchunked (the whole
+    /// uncached prompt is one charge, the pre-chunking behavior,
+    /// matching the `--kv-blocks 0` off convention). KV-block
+    /// projection is unchanged: it is a LIFETIME watermark either way.
+    pub prefill_chunk_tokens: usize,
+    /// Cache-aware dispatch ordering: among equally-attractive pending
+    /// tenants, prefer the one with the most cached-prefix cover
+    /// (`kv_prefix_cover`) so dispatches ride warm radix chains, and
+    /// cold same-prefix requests group behind one tenant pick (the
+    /// first seat's donation then serves the rest). Off by default —
+    /// ordering is bit-identical to the pre-chunking scheduler.
+    pub cache_aware: bool,
     /// KV-cache block granularity (tokens per block) of the engine's
     /// paged pool; 0 disables capacity gating. When set, dispatch and
     /// joins admit a request only if its PROJECTED cache footprint —
@@ -430,6 +446,8 @@ impl OnlineScheduler {
             swap_penalty_s: 0.0,
             decode_slack_s: 0.0,
             max_batch_tokens: 0,
+            prefill_chunk_tokens: 0,
+            cache_aware: false,
             kv_block_tokens: 0,
             kv_free_blocks: usize::MAX,
             prefix_block_tokens: 0,
@@ -526,7 +544,15 @@ impl OnlineScheduler {
         let hit = full * bt + tail;
         // hit ≤ tokens − 1 by the `want` cap, so both subtractions
         // stay in range and the charge is always ≥ 1.
-        let charge = r.tokens - hit;
+        let mut charge = r.tokens - hit;
+        if self.prefill_chunk_tokens > 0 {
+            // Chunked prefill: the seating step computes only the
+            // FIRST chunk of the uncached suffix; later chunks ride
+            // the engine's per-step budget. The KV projection below
+            // stays the full-lifetime watermark — chunking spreads
+            // compute over steps, not the sequence's cache footprint.
+            charge = charge.min(self.prefill_chunk_tokens);
+        }
         let need = self.kv_blocks_of(r.total_tokens() - full * bt);
         (charge, need)
     }
@@ -602,6 +628,44 @@ impl OnlineScheduler {
         self.pending[t.index()].front_seq()
     }
 
+    /// Cached-prefix warmth of a tenant, in tokens of advertised radix
+    /// cover — what cache-aware ordering prefers among otherwise-equal
+    /// candidates.
+    fn warm_tokens(&self, t: TenantId) -> usize {
+        let bt = self.prefix_block_tokens;
+        match self.kv_prefix_cover.get(t.index()) {
+            Some(&(full, tail)) if bt > 0 => full * bt + tail,
+            _ => 0,
+        }
+    }
+
+    /// Cache-aware tenant choice for the non-deadline policies: the
+    /// pending tenant with the warmest radix chain, ties broken by
+    /// earliest admission (which is exactly `head_of_line` when every
+    /// chain is cold — so enabling the flag with no cache is inert).
+    /// Grouping falls out for free: picking one tenant drains its
+    /// same-prefix queue as one batch, and once its first seat donates,
+    /// that tenant IS the warm chain for the follow-ups.
+    fn warmest_tenant(&self) -> Option<TenantId> {
+        self.pending.iter().enumerate()
+            .filter_map(|(i, q)| {
+                let t = TenantId(i as u32);
+                q.front_seq().map(|seq| {
+                    (std::cmp::Reverse(self.warm_tokens(t)), seq, t)
+                })
+            })
+            .min()
+            .map(|(_, _, t)| t)
+    }
+
+    /// Not-yet-arrived requests in arrival order (soonest first). The
+    /// engine's speculative prefetch peeks here during idle steps for
+    /// a known-but-cold tenant's shared prefix worth warming before
+    /// its requests land.
+    pub fn peek_future(&self) -> impl Iterator<Item = &Request> {
+        self.future.iter().rev()
+    }
+
     /// Slo-aware tenant choice: earliest-deadline-first on each
     /// tenant's tightest slack (decode-adjusted: remaining decode work
     /// tightens a request's effective deadline — see [`PendingQueue`]),
@@ -611,7 +675,7 @@ impl OnlineScheduler {
     /// tenant, then earliest admission.
     fn pick_slo(&self, live: Option<TenantId>,
                 clock: f64) -> Option<TenantId> {
-        let mut best: Option<(f64, bool, u64, TenantId)> = None;
+        let mut best: Option<(f64, bool, usize, u64, TenantId)> = None;
         for (i, q) in self.pending.iter().enumerate() {
             let front = match q.front_seq() {
                 Some(seq) => seq,
@@ -627,17 +691,26 @@ impl OnlineScheduler {
             } else {
                 slack
             };
+            // Cache-aware ordering only breaks ties BETWEEN equally
+            // urgent candidates — deadline pressure always wins.
+            let warm = if self.cache_aware {
+                self.warm_tokens(t)
+            } else {
+                0
+            };
             // Serve the tenant whose penalized slack is SMALLEST,
-            // preferring the live tenant, then FIFO.
-            let key = (score, is_switch, front, t);
+            // preferring the live tenant, then (cache-aware) the
+            // warmest radix chain, then FIFO.
+            let key = (score, is_switch, warm, front, t);
             let better = match &best {
                 None => true,
-                Some((bs, bsw, bf, _)) => {
+                Some((bs, bsw, bw, bf, _)) => {
                     match score.total_cmp(bs) {
                         std::cmp::Ordering::Less => true,
                         std::cmp::Ordering::Greater => false,
                         std::cmp::Ordering::Equal => {
-                            (is_switch, front) < (*bsw, *bf)
+                            (is_switch, std::cmp::Reverse(warm), front)
+                                < (*bsw, std::cmp::Reverse(*bw), *bf)
                         }
                     }
                 }
@@ -646,7 +719,7 @@ impl OnlineScheduler {
                 best = Some(key);
             }
         }
-        best.map(|(_, _, _, t)| t)
+        best.map(|(_, _, _, _, t)| t)
     }
 
     /// Pop up to `cap` requests from `t`'s queue, in admission order,
@@ -685,9 +758,11 @@ impl OnlineScheduler {
             Policy::SwapAware => {
                 // Continuous batching: stay on the live tenant while
                 // it has pending work (new same-tenant arrivals join
-                // here), else move to the earliest-admitted tenant.
+                // here), else move to the earliest-admitted tenant —
+                // or, cache-aware, to the warmest pending chain.
                 let t = match live {
                     Some(t) if self.front_seq(t).is_some() => t,
+                    _ if self.cache_aware => self.warmest_tenant()?,
                     _ => self.head_of_line()?,
                 };
                 Some(self.take(t))
@@ -1245,6 +1320,121 @@ mod tests {
         s.admit(0.0);
         assert_eq!(s.dispatch(Some(TenantId(0)), 0.0).unwrap().tenant,
                    TenantId(0), "no slack adjustment: live tie wins");
+    }
+
+    #[test]
+    fn chunked_admission_charges_one_chunk_per_prompt() {
+        // Four 64-token prompts under a 64-token step budget: the
+        // unchunked scheduler fits exactly one per dispatch; with
+        // 16-token chunks the same budget seats all four (each charged
+        // one first chunk), so long prompts stop monopolizing steps.
+        let reqs = || -> Vec<Request> {
+            (0..4).map(|i| {
+                let mut r = req(i, 0);
+                r.tokens = 64;
+                r
+            }).collect()
+        };
+        let mut s = OnlineScheduler::new(reqs(), 1, 8,
+                                         Policy::SwapAware);
+        s.max_batch_tokens = 64;
+        s.admit(10.0);
+        assert_eq!(s.dispatch(None, 10.0).unwrap().requests.len(), 1);
+        let mut s = OnlineScheduler::new(reqs(), 1, 8,
+                                         Policy::SwapAware);
+        s.max_batch_tokens = 64;
+        s.prefill_chunk_tokens = 16;
+        s.admit(10.0);
+        assert_eq!(s.dispatch(None, 10.0).unwrap().requests.len(), 4,
+                   "4 × 16-token first chunks fit a 64-token budget");
+        // Chunking composes with the prefix cover: charge is the
+        // MIN(chunk, uncached suffix), never padded back up.
+        let mut s = OnlineScheduler::new(reqs(), 1, 8,
+                                         Policy::SwapAware);
+        s.prefill_chunk_tokens = 16;
+        s.prefix_block_tokens = 16;
+        s.kv_prefix_cover = vec![(3, 8)]; // 56 tokens warm
+        let mut r = req(9, 0);
+        r.tokens = 64;
+        r.shared_prefix_tokens = 60;
+        let (charge, _) = s.projection(&r);
+        assert_eq!(charge, 8, "8-token suffix < 16-token chunk");
+        // Chunk 0 is the unchunked projection, bit for bit.
+        let mut s0 = OnlineScheduler::new(reqs(), 1, 8,
+                                          Policy::SwapAware);
+        let held = reqs();
+        let big = &held[0];
+        assert_eq!(s0.projection(big), (64, 0));
+        s0.prefill_chunk_tokens = 16;
+        assert_eq!(s0.projection(big), (16, 0));
+        // KV-block projection is the lifetime watermark either way.
+        s0.kv_block_tokens = 16;
+        assert_eq!(s0.projection(big).1, 4);
+        s0.prefill_chunk_tokens = 0;
+        assert_eq!(s0.projection(big), (64, 4));
+    }
+
+    #[test]
+    fn cache_aware_prefers_warm_chains_on_ties() {
+        // Three tenants, no deadlines, no live adapter. Tenant 2's
+        // radix chain is warm; cache-aware swap-aware dispatch starts
+        // there instead of at the head of line, and slo-aware breaks
+        // its (infinite-slack) tie the same way.
+        let reqs = || vec![req(0, 0), req(1, 1), req(2, 2)];
+        for policy in [Policy::SwapAware, Policy::SloAware] {
+            let mut s = OnlineScheduler::new(reqs(), 3, 4, policy);
+            s.cache_aware = true;
+            s.prefix_block_tokens = 16;
+            s.kv_prefix_cover = vec![(0, 0), (0, 0), (2, 4)];
+            s.admit(10.0);
+            assert_eq!(s.dispatch(None, 10.0).unwrap().tenant,
+                       TenantId(2), "{policy:?}: warm chain first");
+        }
+        // Flag off (or every chain cold): head-of-line order exactly.
+        for cover in [Vec::new(), vec![(0, 0), (0, 0), (0, 0)]] {
+            let mut s = OnlineScheduler::new(reqs(), 3, 4,
+                                             Policy::SwapAware);
+            s.cache_aware = true;
+            s.prefix_block_tokens = 16;
+            s.kv_prefix_cover = cover;
+            s.admit(10.0);
+            assert_eq!(s.dispatch(None, 10.0).unwrap().tenant,
+                       TenantId(0), "cold chains → FIFO");
+        }
+        let mut s = OnlineScheduler::new(reqs(), 3, 4,
+                                         Policy::SwapAware);
+        s.prefix_block_tokens = 16;
+        s.kv_prefix_cover = vec![(0, 0), (0, 0), (2, 4)];
+        s.admit(10.0);
+        assert_eq!(s.dispatch(None, 10.0).unwrap().tenant, TenantId(0),
+                   "flag off: warmth is ignored");
+        // Deadline pressure still beats warmth under slo-aware.
+        let mk = |id, tenant, deadline_s| Request {
+            id, tenant: TenantId(tenant), tokens: 8, decode_tokens: 0,
+            shared_prefix_tokens: 0, arrival_s: 0.0, deadline_s,
+        };
+        let mut s = OnlineScheduler::new(
+            vec![mk(0, 0, 0.05), mk(1, 1, 10.0)], 2, 4,
+            Policy::SloAware);
+        s.cache_aware = true;
+        s.prefix_block_tokens = 16;
+        s.kv_prefix_cover = vec![(0, 0), (4, 0)]; // tenant 1 warm
+        s.admit(0.0);
+        assert_eq!(s.dispatch(None, 0.0).unwrap().tenant, TenantId(0),
+                   "urgency dominates warmth");
+    }
+
+    #[test]
+    fn peek_future_yields_arrival_order_without_admitting() {
+        let reqs = vec![req(0, 0), req(1, 1), req(2, 0)];
+        let mut s = OnlineScheduler::new(reqs, 2, 4,
+                                         Policy::SwapAware);
+        let ids: Vec<u64> = s.peek_future().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2], "soonest first");
+        assert_eq!(s.pending_len(), 0, "peeking admits nothing");
+        s.admit(0.005); // id 0 arrives
+        let ids: Vec<u64> = s.peek_future().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 2]);
     }
 
     #[test]

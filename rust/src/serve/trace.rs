@@ -23,6 +23,19 @@ use crate::util::rng::{Rng, Zipf};
 /// Mean burst length (requests) when `burstiness > 1`.
 const BURST_LEN: f64 = 8.0;
 
+/// Mean lognormal stretch, in multiples of `mean_tokens`, applied to a
+/// prompt selected by `prompt_tail`.
+const TAIL_STRETCH: f64 = 4.0;
+
+/// Hard cap on a tail-stretched prompt, in multiples of `mean_tokens`
+/// — keeps the lognormal's far tail from synthesizing prompts no pool
+/// configuration could ever seat.
+const TAIL_CAP: usize = 64;
+
+/// Mean think time (seconds) between consecutive turns of a chat
+/// session when `chat_turns ≥ 2`.
+const CHAT_THINK_S: f64 = 0.25;
+
 #[derive(Debug, Clone)]
 pub struct TraceSpec {
     pub n_requests: usize,
@@ -54,6 +67,21 @@ pub struct TraceSpec {
     /// reuse the prefix KV across same-tenant requests. 0 = fully
     /// unique prompts, the shape every pre-prefix trace has.
     pub shared_prefix_tokens: usize,
+    /// Probability in [0, 1) that a request's prompt is stretched by a
+    /// lognormal multiplier (median ~`TAIL_STRETCH`·mean extra tokens,
+    /// capped at `TAIL_CAP`·mean) — the RAG-sized heavy tail that
+    /// exposes prefill stalls. 0 = the historical uniform lengths.
+    /// Drawn from its own tagged stream, so tail on/off yields the
+    /// SAME arrivals, tenants, deadlines and decode lengths.
+    pub prompt_tail: f64,
+    /// Turns per chat session. At ≥ 2 every synthesized request
+    /// becomes the opening turn of a session: each follow-up turn
+    /// re-sends the WHOLE previous context (previous prompt + its
+    /// decoded reply) as `shared_prefix_tokens` plus a fresh user
+    /// message, arriving an exponential think time later — a
+    /// conversation re-hitting its own growing prefix. 0 or 1 = the
+    /// historical single-turn shape, bit-for-bit.
+    pub chat_turns: usize,
     pub seed: u64,
 }
 
@@ -62,7 +90,8 @@ impl Default for TraceSpec {
         TraceSpec { n_requests: 256, n_tenants: 8, mean_tokens: 64,
                     zipf_s: 1.1, req_per_s: 200.0, burstiness: 1.0,
                     deadline_ms: 0.0, decode_tokens: 0,
-                    shared_prefix_tokens: 0, seed: 42 }
+                    shared_prefix_tokens: 0, prompt_tail: 0.0,
+                    chat_turns: 0, seed: 42 }
     }
 }
 
@@ -109,6 +138,10 @@ pub fn synthesize(spec: &TraceSpec) -> Trace {
     // the same seed with decode on/off yields IDENTICAL arrivals,
     // tenants and prompts, differing only in decode lengths.
     let mut dec_rng = Rng::for_tag(spec.seed, "serve/trace/decode");
+    // Heavy-tail stretches likewise get their own stream: tail on/off
+    // differs ONLY in the stretched lengths, and tail-0 specs draw
+    // nothing from it, reproducing old traces bit-for-bit.
+    let mut tail_rng = Rng::for_tag(spec.seed, "serve/trace/tail");
     let zipf = Zipf::new(spec.n_tenants, spec.zipf_s);
     let mut pool = TenantPool::new();
     let rate = spec.req_per_s.max(1e-9);
@@ -131,8 +164,18 @@ pub fn synthesize(spec: &TraceSpec) -> Trace {
         let u = rng.next_f64().max(1e-12);
         t += -u.ln() / lambda;
         let tenant = pool.intern(&tenant_name(zipf.sample(&mut rng)));
-        let tokens = spec.mean_tokens / 2
+        let mut tokens = spec.mean_tokens / 2
             + rng.below(spec.mean_tokens.max(2));
+        // Lognormal heavy tail: a `prompt_tail` fraction of prompts
+        // gain exp(N(0,1)) · TAIL_STRETCH · mean extra tokens — most
+        // stretched prompts are a few× the mean, a few are huge.
+        if spec.prompt_tail > 0.0
+            && tail_rng.next_f64() < spec.prompt_tail
+        {
+            let extra = (spec.mean_tokens as f64 * TAIL_STRETCH
+                         * tail_rng.normal().exp()) as usize;
+            tokens += extra.min(spec.mean_tokens * TAIL_CAP);
+        }
         let deadline_s = if spec.deadline_ms > 0.0 {
             spec.deadline_ms * 1e-3 * (0.75 + 0.5 * rng.next_f64())
         } else {
@@ -156,7 +199,71 @@ pub fn synthesize(spec: &TraceSpec) -> Trace {
                   shared_prefix_tokens: shared, arrival_s: t,
                   deadline_s }
     }).collect();
+    let requests = expand_chat_sessions(spec, requests);
     Trace { pool, requests }
+}
+
+/// Expand every request into a `chat_turns`-turn session (no-op below
+/// 2 turns — single-turn specs reproduce their old traces bit-for-bit,
+/// drawing nothing from the chat stream). Turn k + 1 carries turn k's
+/// whole context (prompt + decoded reply) as its shared prefix plus a
+/// fresh user message, and arrives an exponential think time after
+/// turn k. The merged trace is re-sorted by arrival and re-numbered so
+/// downstream invariants (strictly increasing arrivals, dense ids)
+/// hold regardless of how sessions interleave.
+fn expand_chat_sessions(spec: &TraceSpec, base: Vec<Request>)
+                        -> Vec<Request> {
+    if spec.chat_turns < 2 {
+        return base;
+    }
+    let mut chat_rng = Rng::for_tag(spec.seed, "serve/trace/chat");
+    let mut all = Vec::with_capacity(base.len() * spec.chat_turns);
+    for first in base {
+        let mut prev = first.clone();
+        all.push(first);
+        for _ in 1..spec.chat_turns {
+            // The whole conversation so far becomes the next turn's
+            // shared prefix: a cache that retained the previous turn
+            // serves everything but the fresh user message.
+            let context = prev.tokens + prev.decode_tokens;
+            let fresh = spec.mean_tokens / 2
+                + chat_rng.below(spec.mean_tokens.max(2));
+            let u = chat_rng.next_f64().max(1e-12);
+            let arrival_s = prev.arrival_s - u.ln() * CHAT_THINK_S;
+            let decode_tokens = if spec.decode_tokens > 0 {
+                (spec.decode_tokens / 2).max(1)
+                    + chat_rng.below(spec.decode_tokens)
+            } else {
+                0
+            };
+            let deadline_s = if spec.deadline_ms > 0.0 {
+                spec.deadline_ms * 1e-3
+                    * (0.75 + 0.5 * chat_rng.next_f64())
+            } else {
+                f64::INFINITY
+            };
+            let turn = Request { id: 0, tenant: prev.tenant,
+                                 tokens: context + fresh,
+                                 decode_tokens,
+                                 shared_prefix_tokens: context,
+                                 arrival_s, deadline_s };
+            prev = turn.clone();
+            all.push(turn);
+        }
+    }
+    // Stable sort keeps each session's turns in order; the epsilon
+    // bump restores the strictly-increasing-arrivals invariant when
+    // interleaved sessions collide.
+    all.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+    let mut last = f64::NEG_INFINITY;
+    for (id, r) in all.iter_mut().enumerate() {
+        if r.arrival_s <= last {
+            r.arrival_s = last + 1e-9;
+        }
+        last = r.arrival_s;
+        r.id = id as u64;
+    }
+    all
 }
 
 pub fn write_jsonl(path: &Path, trace: &Trace) -> Result<()> {
@@ -330,6 +437,107 @@ mod tests {
         write_jsonl(&path, &with).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.contains("shared_prefix_tokens"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn prompt_tail_stretches_only_the_selected_prompts() {
+        let spec = TraceSpec { n_requests: 400, decode_tokens: 8,
+                               deadline_ms: 50.0, prompt_tail: 0.2,
+                               ..Default::default() };
+        let tailed = synthesize(&spec);
+        let plain = synthesize(&TraceSpec { prompt_tail: 0.0,
+                                            ..spec.clone() });
+        let mut stretched = 0;
+        for (a, b) in tailed.requests.iter().zip(&plain.requests) {
+            // The tail stream is independent: arrivals, tenants,
+            // deadlines and decode lengths are untouched, and a
+            // non-selected prompt keeps its exact uniform draw.
+            assert_eq!(a.tenant, b.tenant);
+            assert_eq!(a.decode_tokens, b.decode_tokens);
+            assert!((a.arrival_s - b.arrival_s).abs() < 1e-12);
+            assert!((a.deadline_s - b.deadline_s).abs() < 1e-12);
+            assert!(a.tokens >= b.tokens);
+            if a.tokens > b.tokens {
+                stretched += 1;
+                assert!(a.tokens <= b.tokens
+                        + spec.mean_tokens * TAIL_CAP);
+            }
+        }
+        // ~20% of 400 prompts selected, far outside the binomial
+        // noise band; and the tail must actually exceed the uniform
+        // generator's hard 2×mean ceiling.
+        assert!((40..160).contains(&stretched),
+                "{stretched} stretched prompts");
+        let max = tailed.requests.iter().map(|r| r.tokens)
+            .max().unwrap();
+        assert!(max >= 2 * spec.mean_tokens,
+                "heavy tail must break the uniform cap (max {max})");
+        // tail-0 ≡ the historical generator, bit-for-bit.
+        assert_eq!(plain.requests, synthesize(&TraceSpec {
+            decode_tokens: 8, deadline_ms: 50.0, n_requests: 400,
+            ..Default::default() }).requests);
+    }
+
+    #[test]
+    fn chat_sessions_regrow_their_own_prefix() {
+        let spec = TraceSpec { n_requests: 12, n_tenants: 3,
+                               decode_tokens: 8, chat_turns: 3,
+                               req_per_s: 50.0,
+                               ..Default::default() };
+        let trace = synthesize(&spec);
+        assert_eq!(trace.len(), 12 * 3,
+                   "every request opens a 3-turn session");
+        let mut follow_ups = 0;
+        for (i, r) in trace.requests.iter().enumerate() {
+            assert_eq!(r.id, i as u64, "ids re-numbered densely");
+            if r.shared_prefix_tokens > 0 {
+                follow_ups += 1;
+                // A follow-up turn = the whole previous context plus
+                // a fresh uniform user message.
+                let fresh = r.tokens - r.shared_prefix_tokens;
+                assert!(fresh >= spec.mean_tokens / 2
+                        && fresh < 2 * spec.mean_tokens);
+                // Context grew past one opening turn's worth, so the
+                // prefix a cache can reuse GROWS turn over turn.
+                assert!(r.shared_prefix_tokens
+                        >= spec.mean_tokens / 2 + 1);
+            }
+        }
+        assert_eq!(follow_ups, 12 * 2,
+                   "two follow-up turns per session");
+        for w in trace.requests.windows(2) {
+            assert!(w[1].arrival_s > w[0].arrival_s,
+                    "arrivals stay strictly increasing");
+        }
+        // chat off (0 or 1) ≡ the historical generator, bit-for-bit.
+        let base = synthesize(&TraceSpec { chat_turns: 0,
+                                           ..spec.clone() });
+        let one = synthesize(&TraceSpec { chat_turns: 1,
+                                          ..spec.clone() });
+        assert_eq!(base.requests.len(), 12);
+        assert_eq!(base.requests, one.requests);
+    }
+
+    #[test]
+    fn chat_and_tail_traces_roundtrip_through_jsonl() {
+        // The new shapes introduce NO new JSONL fields: a chat/tail
+        // trace round-trips through the existing schema untouched.
+        let spec = TraceSpec { n_requests: 16, n_tenants: 2,
+                               decode_tokens: 6, chat_turns: 2,
+                               prompt_tail: 0.3,
+                               ..Default::default() };
+        let trace = synthesize(&spec);
+        let path = std::env::temp_dir().join(format!(
+            "paca-trace-chat-{}.jsonl", std::process::id()));
+        write_jsonl(&path, &trace).unwrap();
+        let back = read_jsonl(&path).unwrap();
+        assert_eq!(back.requests.len(), trace.requests.len());
+        for (a, b) in trace.requests.iter().zip(&back.requests) {
+            assert_eq!(a.tokens, b.tokens);
+            assert_eq!(a.shared_prefix_tokens, b.shared_prefix_tokens);
+            assert!((a.arrival_s - b.arrival_s).abs() < 1e-9);
+        }
         std::fs::remove_file(&path).ok();
     }
 

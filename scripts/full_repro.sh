@@ -1,0 +1,72 @@
+#!/usr/bin/env bash
+# Full repro: the 40-seed robustness sweep behind the operating points
+# the bench and smokes pin, then the kick-tires flow (bench +
+# BENCH_serve.json + BENCH_summary.md).
+#
+# Per seed 1..40, through the real CLI on the analytic-deterministic
+# paths:
+#   * a heavy-tailed multi-turn chat trace served with 16-token
+#     prefill chunks under a step budget, auditor recording — the run
+#     exits nonzero on any invariant violation, and the chunk ledger
+#     must appear in the report;
+#   * the same trace unchunked (reduction anchor: must serve clean
+#     with no chunk ledger line);
+#   * a sparse shared-prefix trace with speculative prefetch +
+#     cache-aware dispatch — donations must be nonzero every seed.
+#
+# Takes a few minutes. Artifacts are meant to be committed.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release
+cargo test -q
+
+BIN=target/release/paca
+WORK=$(mktemp -d)
+trap 'rm -rf "$WORK"' EXIT
+
+for seed in $(seq 1 40); do
+    tail_trace="$WORK/tail_$seed.jsonl"
+    warm_trace="$WORK/warm_$seed.jsonl"
+
+    "$BIN" serve --backend host --batch 8 --count 48 --tenants 4 \
+        --mean-tokens 8 --decode-tokens 8 --seed "$seed" \
+        --prompt-tail 0.4 --chat-turns 3 \
+        --policy slo-aware --deadline-ms 50 --req-per-s 1e9 \
+        --prefill-chunk-tokens 16 --max-batch-tokens 96 \
+        --trace-events "$WORK/events_$seed.jsonl" \
+        --adapters "$WORK/adapters" \
+        --requests "$tail_trace" > "$WORK/chunk_$seed.out"
+    grep -q "auditor: clean" "$WORK/chunk_$seed.out"
+    grep -q "prefill chunks:" "$WORK/chunk_$seed.out"
+    grep -q "restored bit-exactly" "$WORK/chunk_$seed.out"
+
+    "$BIN" serve --backend host --batch 8 --count 48 --tenants 4 \
+        --mean-tokens 8 --decode-tokens 8 --seed "$seed" \
+        --req-per-s 1e9 --adapters "$WORK/adapters" \
+        --requests "$tail_trace" > "$WORK/unchunk_$seed.out"
+    if grep -q "prefill chunks" "$WORK/unchunk_$seed.out"; then
+        echo "seed $seed: unchunked run grew a chunk ledger" >&2
+        exit 1
+    fi
+    grep -q "restored bit-exactly" "$WORK/unchunk_$seed.out"
+
+    "$BIN" serve --backend host --batch 8 --count 24 --tenants 4 \
+        --mean-tokens 8 --decode-tokens 8 --seed "$seed" \
+        --shared-prefix-tokens 48 --req-per-s 5 \
+        --prefetch on --cache-aware on --adapters "$WORK/adapters" \
+        --requests "$warm_trace" > "$WORK/warm_$seed.out"
+    grep -Eq "speculative prefetch: [1-9][0-9]* tokens" \
+        "$WORK/warm_$seed.out"
+    if grep -q " 0 blocks donated" "$WORK/warm_$seed.out"; then
+        echo "seed $seed: prefetch donated nothing" >&2
+        exit 1
+    fi
+    grep -q "restored bit-exactly" "$WORK/warm_$seed.out"
+
+    echo "seed $seed: chunked clean, anchor clean, prefetch donated"
+done
+
+echo "40-seed sweep OK"
+scripts/kick_tires.sh --skip-build

@@ -1,0 +1,72 @@
+#!/usr/bin/env bash
+# Kick-the-tires repro: CI-sized. Builds, runs tier-1 tests, runs the
+# serving bench on the deterministic analytic clock (every section's
+# head-to-head asserts internally), and regenerates BENCH_serve.json
+# plus a human-readable BENCH_summary.md from it. Run from anywhere;
+# artifacts land in the repo root and are meant to be committed.
+#
+#   scripts/kick_tires.sh [--skip-build]
+#
+# --skip-build: reuse the existing release build + skip tier-1 tests
+# (CI calls it this way right after its own build/test steps).
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [[ "${1:-}" != "--skip-build" ]]; then
+    cargo build --release
+    cargo test -q
+fi
+
+cargo bench --bench serve_throughput
+
+python3 - <<'EOF'
+import json
+
+d = json.load(open("BENCH_serve.json"))
+rows = d["results"]
+
+# Each results row carries exactly one discriminator key; group by it.
+SECTIONS = [
+    ("policy",       "Online scheduling (per policy)"),
+    ("unit",         "Unit of service: iteration-level vs whole-batch"),
+    ("mode",         "KV pressure: preemption vs drain-only"),
+    ("prefix_cache", "Prefix cache: on vs off"),
+    ("chunking",     "Chunked prefill: long-prompt heavy tail"),
+    ("prefetch",     "Speculative prefix prefetch: sparse arrivals"),
+]
+
+def fmt(v):
+    if isinstance(v, float) and not v.is_integer():
+        return f"{v:.3f}"
+    if isinstance(v, float):
+        return str(int(v))
+    return str(v)
+
+out = ["# Serving bench summary", ""]
+out.append(f"Source: `BENCH_serve.json` (bench `{d['bench']}`, "
+           f"model `{d['model']}`, rank {int(d['rank'])}, "
+           f"{int(d['requests'])} requests, batch {int(d['batch'])}). "
+           "All analytic-clock numbers are deterministic; the bench "
+           "asserts every head-to-head before writing them.")
+out.append("")
+for key, title in SECTIONS:
+    sect = [r for r in rows if key in r]
+    if not sect:
+        continue
+    cols = [key] + sorted({c for r in sect for c in r} - {key})
+    out.append(f"## {title}")
+    out.append("")
+    out.append("| " + " | ".join(cols) + " |")
+    out.append("|" + "---|" * len(cols))
+    for r in sect:
+        out.append("| " + " | ".join(
+            fmt(r[c]) if c in r else "—" for c in cols) + " |")
+    out.append("")
+
+open("BENCH_summary.md", "w").write("\n".join(out))
+print("wrote BENCH_summary.md "
+      f"({len(rows)} result rows, {len(SECTIONS)} sections)")
+EOF
+
+echo "kick-tires OK: BENCH_serve.json + BENCH_summary.md regenerated"

@@ -287,6 +287,141 @@ fn serve_cli_prefix_cache_and_report_json() {
 }
 
 #[test]
+fn serve_cli_chunked_prefill_prefetch_and_heavy_tail_traces() {
+    // PR-7 smoke, end to end through the binary:
+    //   * a heavy-tailed multi-turn chat trace (--prompt-tail +
+    //     --chat-turns) synthesizes, persists and RELOADS with the
+    //     expanded request count (24 base prompts × 3 turns = 72);
+    //   * chunked prefill under a step budget serves it with the
+    //     auditor recording and comes back clean, with the chunk cap
+    //     in the banner and the chunk ledger in the report;
+    //   * the same persisted trace unchunked (the default) grows no
+    //     chunk report line — the off-mode stays PR-6-shaped;
+    //   * speculative prefetch + cache-aware dispatch over a sparse
+    //     shared-prefix trace warms ahead of arrivals: the report's
+    //     donation count must be NONZERO (the first idle gap always
+    //     precedes the first arrival, so the warm structurally
+    //     completes regardless of the measured host clock);
+    //   * every degenerate flag combination is rejected up front.
+    let dir = tmp("serve-chunk");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("tail_trace.jsonl");
+    let adapters = dir.join("adapters");
+    let events_path = dir.join("chunk_events.jsonl");
+    let run = |extra: &[&str]| {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_paca"));
+        cmd.arg("serve")
+            .arg("--backend").arg("host")
+            .arg("--requests").arg(&trace)
+            .arg("--adapters").arg(&adapters)
+            .arg("--count").arg("24")
+            .arg("--tenants").arg("3")
+            .arg("--batch").arg("4")
+            .arg("--mean-tokens").arg("8")
+            .arg("--decode-tokens").arg("8")
+            .args(extra);
+        cmd.output().expect("spawning paca serve")
+    };
+
+    // Chunked run over a freshly synthesized heavy-tail chat trace.
+    let out = run(&["--prompt-tail", "0.4", "--chat-turns", "3",
+                    "--prefill-chunk-tokens", "16",
+                    "--max-batch-tokens", "96",
+                    "--policy", "slo-aware", "--deadline-ms", "50",
+                    "--req-per-s", "1e9",
+                    "--trace-events", events_path.to_str().unwrap()]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(),
+            "chunked serve failed:\nstdout:\n{stdout}\nstderr:\n\
+             {stderr}");
+    assert!(stdout.contains("prefill chunks of 16 tokens"),
+            "chunk cap missing from banner:\n{stdout}");
+    assert!(stdout.contains("prefill chunks:"),
+            "chunk ledger missing from report:\n{stdout}");
+    assert!(stdout.contains("auditor: clean"),
+            "chunked stream must audit clean:\n{stdout}");
+    assert!(stdout.contains("restored bit-exactly"), "{stdout}");
+    // The persisted trace carries the chat expansion: 24 base
+    // prompts × 3 turns, follow-ups re-hitting their own context.
+    let text = std::fs::read_to_string(&trace).unwrap();
+    assert_eq!(text.lines().count(), 72,
+               "24 base x 3 turns must persist 72 requests");
+    assert!(text.contains("shared_prefix_tokens"),
+            "chat turns must carry their context prefix:\n{text}");
+
+    // Reload unchunked: PR-6-shaped report, no chunk line, no
+    // chunk events.
+    let out = run(&["--policy", "fifo"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "unchunked reload failed:\n{stdout}");
+    assert!(stdout.contains("loaded 72 requests"),
+            "must reuse the expanded trace:\n{stdout}");
+    assert!(!stdout.contains("prefill chunks"),
+            "off-mode must not mention chunking:\n{stdout}");
+    assert!(stdout.contains("ttft p99"), "{stdout}");
+
+    // Prefetch + cache-aware over a sparse shared-prefix trace (its
+    // own trace file: different synthesis knobs).
+    let warm_trace = dir.join("warm_trace.jsonl");
+    let warm = |extra: &[&str]| {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_paca"));
+        cmd.arg("serve")
+            .arg("--backend").arg("host")
+            .arg("--requests").arg(&warm_trace)
+            .arg("--adapters").arg(&adapters)
+            .arg("--count").arg("24")
+            .arg("--tenants").arg("4")
+            .arg("--batch").arg("4")
+            .arg("--mean-tokens").arg("8")
+            .arg("--decode-tokens").arg("8")
+            .arg("--shared-prefix-tokens").arg("48")
+            .arg("--req-per-s").arg("5")
+            .args(extra);
+        cmd.output().expect("spawning paca serve")
+    };
+    let out = warm(&["--prefetch", "on", "--cache-aware", "on"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(),
+            "prefetch serve failed:\nstdout:\n{stdout}\nstderr:\n\
+             {stderr}");
+    assert!(stdout.contains("speculative prefix prefetch"),
+            "prefetch missing from banner:\n{stdout}");
+    assert!(stdout.contains("cache-aware dispatch"),
+            "cache-aware missing from banner:\n{stdout}");
+    let warm_line = stdout.lines()
+        .find(|l| l.starts_with("speculative prefetch:"))
+        .unwrap_or_else(|| panic!("no prefetch report:\n{stdout}"));
+    assert!(!warm_line.contains(" 0 blocks donated"),
+            "idle gaps before arrivals must donate: {warm_line}");
+    assert!(!warm_line.starts_with("speculative prefetch: 0 tokens"),
+            "{warm_line}");
+    assert!(stdout.contains("restored bit-exactly"), "{stdout}");
+
+    // Degenerate combinations are rejected before serving.
+    for (bad, why) in [
+        (&["--prefill-chunk-tokens", "128",
+           "--max-batch-tokens", "64"][..],
+         "chunk larger than the step budget"),
+        (&["--prefill-chunk-tokens", "16",
+           "--service-unit", "batch"][..],
+         "chunking needs iteration-level service"),
+        (&["--prefetch", "on", "--prefix-cache", "off"][..],
+         "prefetch needs the prefix cache"),
+        (&["--prompt-tail", "1.5"][..],
+         "tail probability out of range"),
+        (&["--prefetch", "maybe"][..], "bad prefetch value"),
+        (&["--chat-turns", "-2"][..], "negative chat turns"),
+    ] {
+        let out = warm(bad);
+        assert!(!out.status.success(), "{why}: must error");
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn serve_cli_event_trace_exports_and_audits() {
     // Event-tracing smoke under real pressure: a tiny paged pool with
     // preemption AND a shared-prefix cache, so the exported stream

@@ -993,6 +993,367 @@ fn prop_prefix_cache_off_is_bit_identical_to_pr4() {
 }
 
 #[test]
+fn prop_chunk_zero_is_bit_identical_to_pr6() {
+    // THE PR-7 reduction anchor: `--prefill-chunk-tokens 0` with
+    // prefetch and cache-aware dispatch off must be bit-for-bit the
+    // PR-6 engine — checksum, every deterministic counter, the whole
+    // text report — for ANY decode trace, every policy, 25 seeded
+    // cases. And a chunk at least as large as every prompt issues the
+    // SAME forwards on an unbounded pool (each prefill is one chunk),
+    // so only the chunk LEDGER differs, never the service schedule.
+    use paca::manifest::ModelInfo;
+    use paca::serve::engine::{tiny_model, BaseModel, ClockModel,
+                              HostBackend, ServeEngine};
+    use paca::serve::registry::{AdapterRegistry, PacaAdapter};
+    use paca::serve::scheduler::{OnlineScheduler, Policy, Request,
+                                 TenantId, TenantPool};
+    use paca::serve::trace;
+
+    fn small() -> ModelInfo {
+        ModelInfo { d_model: 16, d_ff: 24, ..tiny_model() }
+    }
+
+    fn engine_for(pool: TenantPool) -> ServeEngine {
+        let m = small();
+        let base = BaseModel::synthetic(&m, 7);
+        let mut reg = AdapterRegistry::new(64);
+        for name in pool.names() {
+            reg.insert(PacaAdapter::synthetic(name, &m, 4, 11));
+        }
+        ServeEngine::new(base, reg, Box::<HostBackend>::default(),
+                         pool)
+    }
+
+    let clock = ClockModel::Analytic {
+        swap_s: 2e-3, batch_s: 5e-4, token_s: 2e-5,
+    };
+    prop(25, |rng| {
+        let n_tenants = 1 + rng.below(4);
+        let mut pool = TenantPool::new();
+        for i in 0..n_tenants {
+            pool.intern(&trace::tenant_name(i));
+        }
+        let prefixes: Vec<usize> = (0..n_tenants)
+            .map(|_| rng.below(3) * rng.below(16)).collect();
+        let n = 1 + rng.below(40);
+        let cap = 1 + rng.below(6);
+        let requests: Vec<Request> = (0..n as u64).map(|id| {
+            let tenant = TenantId(rng.below(n_tenants) as u32);
+            let shared = prefixes[tenant.index()];
+            Request {
+                id,
+                tenant,
+                tokens: shared + 1 + rng.below(24),
+                decode_tokens: rng.below(12),
+                shared_prefix_tokens: shared,
+                arrival_s: rng.next_f64() * 0.5,
+                deadline_s: if rng.below(2) == 0 {
+                    f64::INFINITY
+                } else {
+                    0.02 + rng.next_f64() * 0.1
+                },
+            }
+        }).collect();
+        // Random pool geometry, bounded or not, preempt or drain.
+        let kv = if rng.below(2) == 0 {
+            Some((4 + rng.below(40), 1 + rng.below(12),
+                  rng.below(2) == 0))
+        } else {
+            None
+        };
+        let budget = if rng.below(2) == 0 { 0 } else {
+            32 + rng.below(64)
+        };
+        for policy in Policy::ALL {
+            // explicit: None = the untouched PR-6 engine (no chunk /
+            // prefetch / cache-aware calls at all); Some(c) = every
+            // PR-7 knob wired the way the CLI wires it, chunk c.
+            let run = |explicit: Option<usize>| {
+                let mut eng = engine_for(pool.clone());
+                if let Some((blocks, bt, preempt)) = kv {
+                    eng.configure_kv(blocks, bt, preempt);
+                }
+                if let Some(chunk) = explicit {
+                    eng.configure_chunking(chunk);
+                    eng.configure_prefetch(false);
+                }
+                let mut sched = OnlineScheduler::new(
+                    requests.clone(), n_tenants, cap, policy);
+                sched.max_batch_tokens = budget;
+                if let Some(chunk) = explicit {
+                    sched.prefill_chunk_tokens = chunk;
+                    sched.cache_aware = false;
+                }
+                eng.serve_iterative(&mut sched, clock).unwrap();
+                eng.finish().unwrap();
+                eng
+            };
+            let base = run(None);
+            let zero = run(Some(0));
+            assert_eq!(zero.checksum, base.checksum,
+                       "{policy:?}: chunk 0 must not touch forwards");
+            assert_eq!(
+                (zero.stats.tokens, zero.stats.swaps,
+                 zero.stats.steps, zero.stats.virtual_s,
+                 zero.stats.deadline_misses, zero.stats.preemptions,
+                 zero.stats.prefill_chunks),
+                (base.stats.tokens, base.stats.swaps,
+                 base.stats.steps, base.stats.virtual_s,
+                 base.stats.deadline_misses, base.stats.preemptions,
+                 0u64),
+                "{policy:?}: chunk 0 must be counter-identical");
+            assert_eq!(zero.report(), base.report(),
+                       "{policy:?}: chunk 0 must not even change the \
+                        report");
+            // Oversized chunk on an unbounded pool: one chunk per
+            // prefill, same schedule, only the ledger counts.
+            if kv.is_none() {
+                let huge = run(Some(1 << 20));
+                assert_eq!(huge.checksum, base.checksum,
+                           "{policy:?}: oversized chunk");
+                assert_eq!(
+                    (huge.stats.tokens, huge.stats.steps,
+                     huge.stats.virtual_s,
+                     huge.stats.chunked_prefills),
+                    (base.stats.tokens, base.stats.steps,
+                     base.stats.virtual_s, 0u64),
+                    "{policy:?}: oversized chunk must only ledger");
+                assert!(huge.stats.prefill_chunks >= n as u64,
+                        "{policy:?}: every prefill step is ledgered");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_chunked_prefill_under_kv_pressure_stays_exactly_once() {
+    // The chunked extension of the KV-pressure fuzz: random SMALL
+    // chunk sizes over random tight pools with preemption FORCED ON
+    // and the auditor recording — so mid-prompt slots are routinely
+    // evicted between chunks and replayed from token zero. Invariants
+    // per seed: the pool never over-commits, every request completes
+    // exactly once (one first token, one queueing/e2e sample each),
+    // the chunk ledger drains in order (auditor-clean with the new
+    // PrefillChunk/PrefillEnd rules), and the engine drains with no
+    // leaked blocks or stranded requests. Across the sweep, the
+    // paths this PR added must actually fire: prompts split into
+    // multiple chunks AND at least one mid-prompt preemption.
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    use paca::manifest::ModelInfo;
+    use paca::serve::engine::{tiny_model, BaseModel, ClockModel,
+                              HostBackend, ServeEngine};
+    use paca::serve::events::Events;
+    use paca::serve::registry::{AdapterRegistry, PacaAdapter};
+    use paca::serve::scheduler::{OnlineScheduler, Policy, Request,
+                                 TenantId, TenantPool};
+    use paca::serve::trace;
+
+    fn small() -> ModelInfo {
+        ModelInfo { d_model: 16, d_ff: 24, ..tiny_model() }
+    }
+
+    fn engine_for(pool: TenantPool) -> ServeEngine {
+        let m = small();
+        let base = BaseModel::synthetic(&m, 7);
+        let mut reg = AdapterRegistry::new(64);
+        for name in pool.names() {
+            reg.insert(PacaAdapter::synthetic(name, &m, 4, 11));
+        }
+        ServeEngine::new(base, reg, Box::<HostBackend>::default(),
+                         pool)
+    }
+
+    static SPLIT_PROMPTS: AtomicU64 = AtomicU64::new(0);
+    static MID_PROMPT_PREEMPTS: AtomicU64 = AtomicU64::new(0);
+
+    let clock = ClockModel::Analytic {
+        swap_s: 2e-3, batch_s: 5e-4, token_s: 2e-5,
+    };
+    prop(120, |rng| {
+        let n_tenants = 1 + rng.below(4);
+        let mut pool = TenantPool::new();
+        for i in 0..n_tenants {
+            pool.intern(&trace::tenant_name(i));
+        }
+        let prefixes: Vec<usize> = (0..n_tenants)
+            .map(|_| rng.below(3) * rng.below(12)).collect();
+        let n = 1 + rng.below(40);
+        let cap = 1 + rng.below(5);
+        let chunk = 1 + rng.below(8);
+        let requests: Vec<Request> = (0..n as u64).map(|id| {
+            let tenant = TenantId(rng.below(n_tenants) as u32);
+            let shared = prefixes[tenant.index()];
+            // Every few requests a LONG prompt, so chunked prefills
+            // span many steps while the tight pool squeezes them.
+            let long = if id % 4 == 0 { 24 + rng.below(48) } else { 0 };
+            Request {
+                id,
+                tenant,
+                tokens: shared + 1 + rng.below(16) + long,
+                decode_tokens: rng.below(12),
+                shared_prefix_tokens: shared,
+                arrival_s: rng.next_f64() * 0.5,
+                deadline_s: if rng.below(2) == 0 {
+                    f64::INFINITY
+                } else {
+                    0.02 + rng.next_f64() * 0.1
+                },
+            }
+        }).collect();
+        let decode_reqs = requests.iter()
+            .filter(|r| r.decode_tokens > 0).count();
+        let kv_blocks = 2 + rng.below(12);
+        let block_tokens = 1 + rng.below(8);
+        let prefix_cache = rng.below(2) == 0;
+        let policy = Policy::ALL[rng.below(3)];
+        let mut eng = engine_for(pool);
+        eng.configure_kv(kv_blocks, block_tokens, true);
+        eng.configure_prefix(prefix_cache);
+        eng.configure_chunking(chunk);
+        eng.configure_events(Events::recording());
+        let mut sched = OnlineScheduler::new(
+            requests, n_tenants, cap, policy);
+        sched.prefill_chunk_tokens = chunk;
+        if rng.below(2) == 1 {
+            sched.max_batch_tokens = chunk.max(8) + rng.below(64);
+        }
+        eng.serve_iterative(&mut sched, clock).unwrap();
+        assert!(sched.is_done(), "{policy:?}: not drained");
+        assert!(eng.kv.stats.peak_blocks <= kv_blocks,
+                "{policy:?}: over-commit {} > {kv_blocks} blocks",
+                eng.kv.stats.peak_blocks);
+        assert_eq!(eng.stats.requests as usize, n,
+                   "{policy:?}: exactly-once completion");
+        assert_eq!(eng.ttft.count("(all)"), n,
+                   "{policy:?}: one first token per request, \
+                    however many chunk/preempt cycles it took");
+        assert_eq!(eng.queueing.count("(all)"), n, "{policy:?}");
+        assert_eq!(eng.e2e.count("(all)"), n, "{policy:?}");
+        assert_eq!(eng.tpot.count("(all)"), decode_reqs,
+                   "{policy:?}: one TPOT sample per decode request");
+        assert!(eng.stats.prefill_chunks > 0,
+                "{policy:?}: chunked mode must ledger every prefill");
+        assert_eq!(eng.events.violation_count(), 0,
+                   "{policy:?} auditor violations: {:?}",
+                   eng.events.violations());
+        SPLIT_PROMPTS.fetch_add(eng.stats.chunked_prefills,
+                                Ordering::Relaxed);
+        MID_PROMPT_PREEMPTS.fetch_add(eng.stats.preempt_prefill,
+                                      Ordering::Relaxed);
+        eng.finish().unwrap();
+    });
+    assert!(SPLIT_PROMPTS.load(Ordering::Relaxed) > 0,
+            "the sweep never split a prompt into multiple chunks — \
+             the fuzz is not exercising chunked prefill");
+    assert!(MID_PROMPT_PREEMPTS.load(Ordering::Relaxed) > 0,
+            "the sweep never preempted a mid-prompt slot — the \
+             resume-from-chunk path went untested");
+}
+
+#[test]
+fn prop_prefetch_is_inert_without_prefixes_and_conservative_with() {
+    // The prefetch satellite's anchor, 25 seeded cases × 3 policies:
+    //   * over a trace with NO shared prefixes, prefetch ON is
+    //     bit-for-bit OFF (there is nothing to warm, so the idle-gap
+    //     scan must never fire a forward or touch the clock);
+    //   * over a shared-prefix trace on an unbounded pool, prefetch
+    //     still serves exactly-once, and its real (non-speculative)
+    //     compute never exceeds the off-mode run — speculative work
+    //     only ever REPLACES demand prefill, never adds to it.
+    use paca::manifest::ModelInfo;
+    use paca::serve::engine::{tiny_model, BaseModel, ClockModel,
+                              HostBackend, ServeEngine};
+    use paca::serve::registry::{AdapterRegistry, PacaAdapter};
+    use paca::serve::scheduler::{OnlineScheduler, Policy, Request,
+                                 TenantId, TenantPool};
+    use paca::serve::trace;
+
+    fn small() -> ModelInfo {
+        ModelInfo { d_model: 16, d_ff: 24, ..tiny_model() }
+    }
+
+    fn engine_for(pool: TenantPool) -> ServeEngine {
+        let m = small();
+        let base = BaseModel::synthetic(&m, 7);
+        let mut reg = AdapterRegistry::new(64);
+        for name in pool.names() {
+            reg.insert(PacaAdapter::synthetic(name, &m, 4, 11));
+        }
+        ServeEngine::new(base, reg, Box::<HostBackend>::default(),
+                         pool)
+    }
+
+    let clock = ClockModel::Analytic {
+        swap_s: 2e-3, batch_s: 5e-4, token_s: 2e-5,
+    };
+    prop(25, |rng| {
+        let n_tenants = 1 + rng.below(4);
+        let mut pool = TenantPool::new();
+        for i in 0..n_tenants {
+            pool.intern(&trace::tenant_name(i));
+        }
+        let prefixes: Vec<usize> = (0..n_tenants)
+            .map(|_| 4 + rng.below(24)).collect();
+        let n = 1 + rng.below(30);
+        let cap = 1 + rng.below(5);
+        // Sparse arrivals leave genuine idle gaps for the prefetcher.
+        let bare: Vec<Request> = (0..n as u64).map(|id| Request {
+            id,
+            tenant: TenantId(rng.below(n_tenants) as u32),
+            tokens: 1 + rng.below(24),
+            decode_tokens: rng.below(8),
+            shared_prefix_tokens: 0,
+            arrival_s: id as f64 * (0.01 + rng.next_f64() * 0.05),
+            deadline_s: f64::INFINITY,
+        }).collect();
+        let shared: Vec<Request> = bare.iter().cloned().map(|mut r| {
+            r.shared_prefix_tokens = prefixes[r.tenant.index()];
+            r.tokens += r.shared_prefix_tokens;
+            r
+        }).collect();
+        for policy in Policy::ALL {
+            let run = |reqs: Vec<Request>, prefetch: bool| {
+                let mut eng = engine_for(pool.clone());
+                // Prefix cache ON in every run (prefetch requires it
+                // and config validation enforces that) so the on/off
+                // comparison isolates the prefetcher itself.
+                eng.configure_prefix(true);
+                eng.configure_prefetch(prefetch);
+                let mut sched = OnlineScheduler::new(
+                    reqs, n_tenants, cap, policy);
+                eng.serve_iterative(&mut sched, clock).unwrap();
+                eng.finish().unwrap();
+                eng
+            };
+            let off = run(bare.clone(), false);
+            let on = run(bare.clone(), true);
+            assert_eq!(on.checksum, off.checksum,
+                       "{policy:?}: prefetch over a prefix-free trace \
+                        must be bit-inert");
+            assert_eq!(
+                (on.stats.tokens, on.stats.steps, on.stats.virtual_s,
+                 on.stats.prefetch_tokens),
+                (off.stats.tokens, off.stats.steps,
+                 off.stats.virtual_s, 0u64),
+                "{policy:?}: nothing to warm, nothing happens");
+            let cold = run(shared.clone(), false);
+            let warm = run(shared.clone(), true);
+            assert_eq!(warm.stats.requests, cold.stats.requests,
+                       "{policy:?}: prefetch still serves \
+                        exactly-once");
+            assert_eq!(warm.ttft.count("(all)"), n, "{policy:?}");
+            assert!(warm.stats.tokens - warm.stats.prefetch_tokens
+                    <= cold.stats.tokens,
+                    "{policy:?}: speculative work must replace demand \
+                     prefill, never add real compute ({} - {} vs {})",
+                    warm.stats.tokens, warm.stats.prefetch_tokens,
+                    cold.stats.tokens);
+        }
+    });
+}
+
+#[test]
 fn prop_rng_choice_uniformity() {
     // Every index should be selected with roughly equal frequency.
     let mut counts = vec![0usize; 32];
