@@ -46,11 +46,26 @@
 //!      real (non-speculative) compute (asserted).
 //!   7. Measured wall-clock host-GEMM throughput per policy under a
 //!      capacity-bounded registry (cold tenants reload from disk).
+//!   8. Multi-replica cluster under a flash crowd: 4 replicas on the
+//!      merged virtual clock, the whole Zipf-skewed trace compressed
+//!      into a 1/8-span arrival window, per router policy. FNV-1a
+//!      sharding sends 47% of the load to one home replica (~2x its
+//!      saturation rate) while the balanced quarter-share stays near
+//!      capacity, so `least-loaded` and `warmth` (whose cold-path
+//!      overflow spill kicks in the moment the home congests) must
+//!      BOTH cut merged p99 queueing vs `shard` without adding
+//!      deadline misses (asserted), with every request served exactly
+//!      once and clean per-replica + merged-stream audits. Then a
+//!      `--kill-replica`-style failover run: replica 1 dies at the
+//!      median flash arrival with a full backlog, and the run must
+//!      still complete every request exactly once with nonzero
+//!      failover re-routes and clean audits (asserted).
 //!
 //! Emits BENCH_serve.json (per-policy queueing p50/p99, misses,
 //! throughput, per-unit decode head-to-head, KV-pressure preemption
 //! head-to-head, prefix-cache on/off head-to-head, chunked-prefill
-//! and prefetch head-to-heads) to seed the perf trajectory. Runs on a fresh
+//! and prefetch head-to-heads, per-router-policy flash-crowd cluster
+//! head-to-head) to seed the perf trajectory. Runs on a fresh
 //! checkout: host backend, synthetic base + adapters, no artifacts
 //! required.
 
@@ -58,12 +73,16 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use paca::manifest::ModelInfo;
+use paca::metrics::LatencyRecorder;
+use paca::serve::cluster::Cluster;
 use paca::serve::engine::{BaseModel, ClockModel, HostBackend,
                           ServeEngine};
+use paca::serve::events::Events;
 use paca::serve::registry::{AdapterRegistry, PacaAdapter};
+use paca::serve::router::RouterPolicy;
 use paca::serve::scheduler::{plan, swap_count, OnlineScheduler,
                              Policy};
-use paca::serve::trace::{self, Trace, TraceSpec};
+use paca::serve::trace::{self, ArrivalPattern, Trace, TraceSpec};
 use paca::util::json::Json;
 
 /// Serving geometry: big enough that an adapter swap (rank-64 row
@@ -181,6 +200,33 @@ fn two_class_trace() -> Trace {
         }
     }
     tr
+}
+
+/// Replica count for the cluster section — matched by the shard-home
+/// arithmetic below.
+const N_REPLICAS: usize = 4;
+
+/// Flash-crowd trace for the cluster section: the full Zipf-skewed
+/// 8-tenant trace retimed into a window 1/8 of the nominal span, so
+/// the in-window offered rate is 8 x 150 = 1200 req/s against an
+/// aggregate 4-replica capacity of ~1100 req/s on the decode clock
+/// (16 prefill + 16 decode tokens at ~3.5ms/request each). The
+/// routing skew is deterministic: FNV-1a homes tenants {000, 004}
+/// (Zipf shares 0.398 + 0.068 = 47% of the load) on replica 0, so
+/// pure sharding drives one replica to ~2x its saturation rate while
+/// the fair quarter share stays near capacity — the regime where
+/// load-aware routing pays and load-blind affinity drowns.
+fn flash_trace() -> Trace {
+    trace::synthesize(&TraceSpec {
+        n_requests: N_REQUESTS,
+        n_tenants: N_TENANTS,
+        mean_tokens: MEAN_TOKENS,
+        decode_tokens: 16,
+        deadline_ms: 60.0,
+        req_per_s: 150.0,
+        arrival_pattern: ArrivalPattern::Flash,
+        ..Default::default()
+    })
 }
 
 fn engine_for(tr: &Trace, adapters_dir: Option<&Path>) -> ServeEngine {
@@ -946,6 +992,184 @@ fn main() {
         }
         println!("WARNING: {msg} (timing noise on this host?)");
     }
+
+    // ---- 8. Cluster flash crowd: router policies head-to-head. ----
+    println!("\n== cluster flash crowd: {N_REPLICAS} replicas, \
+              {N_REQUESTS} reqs in a 1/8-span window (Zipf tenants, \
+              60ms deadlines, analytic clock, slo-aware) ==");
+    struct ClusterResult {
+        queue_p50_ms: f64,
+        queue_p99_ms: f64,
+        ttft_p99_ms: f64,
+        misses: u64,
+        requests: u64,
+        alive: Vec<bool>,
+        home: u64,
+        warm: u64,
+        steal: u64,
+        spill: u64,
+        failover: u64,
+    }
+    // Prefix cache OFF on every replica: `warm_tokens` advertises a
+    // tenant's resident chain wherever its LAST request landed, which
+    // under a flash makes warmth's warm-path sticky to arrival
+    // history. With the cache off all three policies see identical
+    // cold signals, so the head-to-head isolates the ROUTING rule —
+    // and warmth exercises exactly its documented cold path: shard
+    // affinity until the home congests, then overflow spill.
+    let run_cluster = |rpolicy: RouterPolicy,
+                       kill: Option<(usize, f64)>| -> ClusterResult {
+        let tr = flash_trace();
+        let parts = (0..N_REPLICAS).map(|_| {
+            let mut eng = engine_for(&tr, None);
+            eng.configure_events(Events::recording());
+            let sched = OnlineScheduler::new(
+                Vec::new(), tr.pool.len(), BATCH, Policy::SloAware);
+            (eng, sched)
+        }).collect();
+        let mut cl = Cluster::new(parts, tr.requests.clone(), rpolicy,
+                                  BATCH, kill);
+        cl.run(DECODE_CLOCK).expect("cluster serve");
+        let audit = cl.audit();
+        assert_eq!(audit.violation_count(), 0,
+                   "{}: merged-stream audit must be clean: {:?}",
+                   rpolicy.name(), audit.violations());
+        let mut queueing = LatencyRecorder::default();
+        let mut ttft = LatencyRecorder::default();
+        let (mut misses, mut requests) = (0u64, 0u64);
+        for rep in &cl.replicas {
+            assert_eq!(rep.engine.events.violation_count(), 0,
+                       "{}: per-replica audit must be clean",
+                       rpolicy.name());
+            queueing.absorb(&rep.engine.queueing);
+            ttft.absorb(&rep.engine.ttft);
+            misses += rep.engine.stats.deadline_misses;
+            requests += rep.engine.stats.requests;
+        }
+        let pq = |rec: &LatencyRecorder, q: f64| {
+            rec.percentile("(all)", q).unwrap_or(0.0) * 1e3
+        };
+        let rs = cl.router.stats;
+        ClusterResult {
+            queue_p50_ms: pq(&queueing, 0.50),
+            queue_p99_ms: pq(&queueing, 0.99),
+            ttft_p99_ms: pq(&ttft, 0.99),
+            misses,
+            requests,
+            alive: cl.replicas.iter().map(|r| r.alive).collect(),
+            home: rs.home,
+            warm: rs.warm,
+            steal: rs.steal,
+            spill: rs.spill,
+            failover: rs.failover,
+        }
+    };
+    println!("{:>13} {:>10} {:>10} {:>10} {:>8} {:>6} {:>6} {:>6} \
+              {:>6}",
+             "router", "q p50 ms", "q p99 ms", "ttft p99", "misses",
+             "home", "steal", "spill", "fail");
+    let mut by_router: BTreeMap<&str, ClusterResult> = BTreeMap::new();
+    for rpolicy in RouterPolicy::ALL {
+        let r = run_cluster(rpolicy, None);
+        assert_eq!(r.requests as usize, N_REQUESTS,
+                   "{}: every request served exactly once",
+                   rpolicy.name());
+        println!("{:>13} {:>10.3} {:>10.3} {:>10.3} {:>5}/{:<3} \
+                  {:>6} {:>6} {:>6} {:>6}",
+                 rpolicy.name(), r.queue_p50_ms, r.queue_p99_ms,
+                 r.ttft_p99_ms, r.misses, N_REQUESTS, r.home,
+                 r.steal, r.spill, r.failover);
+        let mut obj = BTreeMap::new();
+        obj.insert("router".into(),
+                   Json::Str(rpolicy.name().into()));
+        obj.insert("clock".into(), Json::Str("analytic".into()));
+        obj.insert("trace".into(), Json::Str("flash-crowd".into()));
+        obj.insert("replicas".into(), Json::Num(N_REPLICAS as f64));
+        obj.insert("queue_p50_ms".into(), Json::Num(r.queue_p50_ms));
+        obj.insert("queue_p99_ms".into(), Json::Num(r.queue_p99_ms));
+        obj.insert("ttft_p99_ms".into(), Json::Num(r.ttft_p99_ms));
+        obj.insert("deadline_misses".into(),
+                   Json::Num(r.misses as f64));
+        obj.insert("home_routes".into(), Json::Num(r.home as f64));
+        obj.insert("warm_routes".into(), Json::Num(r.warm as f64));
+        obj.insert("steals".into(), Json::Num(r.steal as f64));
+        obj.insert("spills".into(), Json::Num(r.spill as f64));
+        obj.insert("failover".into(), Json::Num(r.failover as f64));
+        results.push(Json::Obj(obj));
+        by_router.insert(rpolicy.name(), r);
+    }
+    // The tentpole's payoff, on the deterministic merged clock:
+    // load-blind sharding drowns its 47%-share home replica in the
+    // flash while the other three idle down; both load-aware
+    // policies must cut merged tail queueing without giving back a
+    // single deadline — and the router counters must show HOW (pure
+    // sharding never leaves home, least-loaded steals, warmth spills
+    // its congested home).
+    let shard = &by_router["shard"];
+    let ll = &by_router["least-loaded"];
+    let warmr = &by_router["warmth"];
+    assert_eq!((shard.steal, shard.spill, shard.failover), (0, 0, 0),
+               "shard must route every request home");
+    assert!(ll.steal > 0, "the flash must force least-loaded away \
+                           from home shards");
+    assert!(warmr.spill > 0, "the flash must congest warmth's home \
+                              shard past the spill threshold");
+    assert!(ll.queue_p99_ms < shard.queue_p99_ms,
+            "least-loaded must cut merged p99 queueing vs shard \
+             under the flash crowd: {} !< {}",
+            ll.queue_p99_ms, shard.queue_p99_ms);
+    assert!(warmr.queue_p99_ms < shard.queue_p99_ms,
+            "warmth's overflow spill must cut merged p99 queueing vs \
+             shard under the flash crowd: {} !< {}",
+            warmr.queue_p99_ms, shard.queue_p99_ms);
+    assert!(ll.misses <= shard.misses,
+            "least-loaded must not add deadline misses: {} > {}",
+            ll.misses, shard.misses);
+    assert!(warmr.misses <= shard.misses,
+            "warmth must not add deadline misses: {} > {}",
+            warmr.misses, shard.misses);
+    println!("\nleast-loaded vs shard: queue p99 {:.1}ms -> {:.1}ms \
+              ({:.0}% lower), misses {} -> {}; warmth (spill x{}) \
+              p99 {:.1}ms, misses {}",
+             shard.queue_p99_ms, ll.queue_p99_ms,
+             100.0 * (1.0 - ll.queue_p99_ms
+                      / shard.queue_p99_ms.max(1e-12)),
+             shard.misses, ll.misses, warmr.spill,
+             warmr.queue_p99_ms, warmr.misses);
+
+    // ---- 8b. Failover: kill a replica at the median flash arrival.
+    let kill_t = {
+        let tr = flash_trace();
+        let mut at: Vec<f64> = tr.requests.iter()
+            .map(|r| r.arrival_s).collect();
+        at.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        at[at.len() / 2]
+    };
+    let killed = run_cluster(RouterPolicy::LeastLoaded,
+                             Some((1, kill_t)));
+    assert_eq!(killed.requests as usize, N_REQUESTS,
+               "failover must not lose or duplicate a request");
+    assert!(!killed.alive[1], "the kill must have fired");
+    assert!(killed.failover > 0,
+            "a replica killed mid-flash must hold work to migrate");
+    println!("\nkill replica 1 @ {:.3}s (median flash arrival, \
+              least-loaded): {} requests re-routed, {}/{} served \
+              exactly once, audits clean, misses {}",
+             kill_t, killed.failover, killed.requests, N_REQUESTS,
+             killed.misses);
+    let mut obj = BTreeMap::new();
+    obj.insert("router".into(), Json::Str("least-loaded".into()));
+    obj.insert("clock".into(), Json::Str("analytic".into()));
+    obj.insert("trace".into(), Json::Str("flash-crowd".into()));
+    obj.insert("replicas".into(), Json::Num(N_REPLICAS as f64));
+    obj.insert("kill_replica".into(), Json::Num(1.0));
+    obj.insert("kill_t_s".into(), Json::Num(kill_t));
+    obj.insert("failover".into(), Json::Num(killed.failover as f64));
+    obj.insert("queue_p99_ms".into(),
+               Json::Num(killed.queue_p99_ms));
+    obj.insert("deadline_misses".into(),
+               Json::Num(killed.misses as f64));
+    results.push(Json::Obj(obj));
 
     let mut root = BTreeMap::new();
     root.insert("bench".into(), Json::Str("serve_throughput".into()));

@@ -230,6 +230,24 @@ pub struct ServeConfig {
     /// turn re-sends the growing conversation as its shared prefix);
     /// 0 or 1 = single-turn requests.
     pub chat_turns: usize,
+    /// Long-horizon arrival-rate shape for synthesized traces:
+    /// "steady" (bit-for-bit the historical generator) | "diurnal"
+    /// (one sinusoidal period) | "flash" (an 8× rate spike in one
+    /// window — the shape that separates load-aware routing from
+    /// shard hashing).
+    pub arrival_pattern: String,
+    /// Serving replicas in the in-process cluster. 1 = the single
+    /// engine, bit-for-bit; N > 1 = N independent engines (own
+    /// registry, KV pool, prefix cache, event stream) behind the
+    /// ingress router, stepped on one merged virtual clock.
+    pub replicas: usize,
+    /// Ingress routing policy for `replicas > 1`:
+    /// "shard" | "least-loaded" | "warmth".
+    pub router: String,
+    /// Failover drill: "R@T" kills replica R when the merged virtual
+    /// clock reaches T seconds (its work replays exactly-once on the
+    /// least-loaded survivor); empty = no kill.
+    pub kill_replica: String,
 }
 
 impl Default for ServeConfig {
@@ -266,6 +284,10 @@ impl Default for ServeConfig {
             cache_aware: false,
             prompt_tail: 0.0,
             chat_turns: 0,
+            arrival_pattern: "steady".into(),
+            replicas: 1,
+            router: "shard".into(),
+            kill_replica: String::new(),
         }
     }
 }
@@ -386,7 +408,37 @@ impl ServeConfig {
                 v
             },
             chat_turns: u("serve.chat_turns", d.chat_turns)?,
+            arrival_pattern: doc.str_or("serve.arrival_pattern",
+                                        &d.arrival_pattern)
+                .to_string(),
+            replicas: u("serve.replicas", d.replicas)?,
+            router: doc.str_or("serve.router", &d.router).to_string(),
+            kill_replica: doc.str_or("serve.kill_replica",
+                                     &d.kill_replica).to_string(),
         })
+    }
+
+    /// Parse `--kill-replica R@T` into (replica id, virtual kill
+    /// time). Empty = no kill. Range checks against `replicas` live
+    /// in [`ServeConfig::validate`].
+    pub fn parse_kill_replica(&self)
+                              -> Result<Option<(usize, f64)>> {
+        if self.kill_replica.is_empty() {
+            return Ok(None);
+        }
+        let (r, t) = self.kill_replica.split_once('@')
+            .ok_or_else(|| anyhow!(
+                "kill-replica must be R@T (replica id @ virtual \
+                 seconds), got {:?}", self.kill_replica))?;
+        let r: usize = r.parse().map_err(|_| anyhow!(
+            "kill-replica replica id must be an integer, got {r:?}"))?;
+        let t: f64 = t.parse().map_err(|_| anyhow!(
+            "kill-replica time must be seconds, got {t:?}"))?;
+        if !t.is_finite() || t < 0.0 {
+            return Err(anyhow!(
+                "kill-replica time must be >= 0, got {t}"));
+        }
+        Ok(Some((r, t)))
     }
 
     /// Cross-field checks that no single `apply_override` can see —
@@ -417,6 +469,37 @@ impl ServeConfig {
             return Err(anyhow!(
                 "prefetch requires service-unit=step (idle step \
                  budget is what it spends)"));
+        }
+        if self.replicas == 0 {
+            return Err(anyhow!(
+                "replicas must be >= 1 (0 replicas cannot serve \
+                 anything)"));
+        }
+        if self.replicas > 1 && self.service_unit != "step" {
+            return Err(anyhow!(
+                "replicas > 1 requires service-unit=step (the \
+                 cluster drives engines one iteration step at a \
+                 time on the merged virtual clock)"));
+        }
+        if self.router == "warmth" && !self.prefix_cache {
+            return Err(anyhow!(
+                "router=warmth requires prefix-cache=on: warmth IS \
+                 advertised radix-cache coverage, which is off"));
+        }
+        match self.parse_kill_replica()? {
+            None => {}
+            Some((r, _)) => {
+                if self.replicas < 2 {
+                    return Err(anyhow!(
+                        "kill-replica requires replicas >= 2 (a \
+                         1-replica cluster cannot survive a kill)"));
+                }
+                if r >= self.replicas {
+                    return Err(anyhow!(
+                        "kill-replica {} out of range for {} \
+                         replicas", r, self.replicas));
+                }
+            }
         }
         Ok(())
     }
@@ -573,6 +656,30 @@ impl ServeConfig {
             }
             "serve.chat_turns" | "chat-turns" | "chat_turns" => {
                 self.chat_turns = v.parse()?
+            }
+            "serve.arrival_pattern" | "arrival-pattern"
+                | "arrival_pattern" => {
+                if v != "steady" && v != "diurnal" && v != "flash" {
+                    return Err(anyhow!(
+                        "arrival-pattern must be \
+                         steady|diurnal|flash, got {v:?}"));
+                }
+                self.arrival_pattern = v.into();
+            }
+            "serve.replicas" | "replicas" => {
+                self.replicas = v.parse()?
+            }
+            "serve.router" | "router" => {
+                if v != "shard" && v != "least-loaded" && v != "warmth"
+                {
+                    return Err(anyhow!(
+                        "router must be shard|least-loaded|warmth, \
+                         got {v:?}"));
+                }
+                self.router = v.into();
+            }
+            "serve.kill_replica" | "kill-replica" | "kill_replica" => {
+                self.kill_replica = v.into()
             }
             other => {
                 return Err(anyhow!("unknown serve config key {other:?}"))
@@ -816,6 +923,72 @@ mod tests {
         let bad = TomlDoc::parse(
             "[serve]\ntrace_format = \"csv\"\n").unwrap();
         assert!(ServeConfig::from_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn serve_cluster_keys_and_cross_field_rules() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.replicas, 1, "single engine by default");
+        assert_eq!(c.router, "shard");
+        assert_eq!(c.kill_replica, "");
+        assert_eq!(c.arrival_pattern, "steady");
+        c.apply_override("replicas=4").unwrap();
+        c.apply_override("router=warmth").unwrap();
+        c.apply_override("kill-replica=2@0.5").unwrap();
+        c.apply_override("arrival-pattern=flash").unwrap();
+        assert_eq!(c.replicas, 4);
+        assert_eq!(c.router, "warmth");
+        assert_eq!(c.parse_kill_replica().unwrap(), Some((2, 0.5)));
+        assert_eq!(c.arrival_pattern, "flash");
+        assert!(c.validate().is_ok());
+        assert!(c.apply_override("router=random").is_err());
+        assert!(c.apply_override("arrival-pattern=tidal").is_err());
+
+        // replicas = 0 can serve nothing.
+        let mut c = ServeConfig::default();
+        c.apply_override("replicas=0").unwrap();
+        assert!(c.validate().is_err());
+
+        // The cluster steps engines: whole-batch unit is out.
+        let mut c = ServeConfig::default();
+        c.apply_override("replicas=2").unwrap();
+        c.apply_override("service-unit=batch").unwrap();
+        assert!(c.validate().is_err());
+
+        // Warmth routing IS radix-cache coverage.
+        let mut c = ServeConfig::default();
+        c.apply_override("replicas=2").unwrap();
+        c.apply_override("router=warmth").unwrap();
+        c.apply_override("prefix-cache=off").unwrap();
+        assert!(c.validate().is_err());
+
+        // kill-replica: needs replicas >= 2, in-range id, valid R@T.
+        let mut c = ServeConfig::default();
+        c.apply_override("kill-replica=0@0.5").unwrap();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("replicas >= 2"), "{err}");
+        c.apply_override("replicas=2").unwrap();
+        assert!(c.validate().is_ok());
+        c.apply_override("kill-replica=2@0.5").unwrap();
+        assert!(c.validate().is_err(), "id out of range");
+        c.apply_override("kill-replica=1@-1").unwrap();
+        assert!(c.validate().is_err(), "negative kill time");
+        c.apply_override("kill-replica=oops").unwrap();
+        assert!(c.validate().is_err(), "missing @");
+        c.apply_override("kill-replica=").unwrap();
+        assert!(c.validate().is_ok(), "empty = no kill");
+
+        // TOML spellings round-trip too.
+        let doc = TomlDoc::parse(
+            "[serve]\nreplicas = 4\nrouter = \"least-loaded\"\n\
+             kill_replica = \"1@0.25\"\n\
+             arrival_pattern = \"diurnal\"\n").unwrap();
+        let c = ServeConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.replicas, 4);
+        assert_eq!(c.router, "least-loaded");
+        assert_eq!(c.parse_kill_replica().unwrap(), Some((1, 0.25)));
+        assert_eq!(c.arrival_pattern, "diurnal");
+        assert!(c.validate().is_ok());
     }
 
     #[test]

@@ -22,7 +22,8 @@ use paca::memory;
 use paca::metrics::fmt_gb;
 use paca::nf4;
 use paca::runtime::Runtime;
-use paca::serve::{cost, engine, events, registry, scheduler, trace};
+use paca::serve::{cluster, cost, engine, events, registry, router,
+                  scheduler, trace};
 use paca::simulator::A100_80G;
 use paca::tensor::HostTensor;
 use paca::util::rng::Rng;
@@ -116,7 +117,10 @@ fn usage() -> &'static str {
      \x20          [--trace-format jsonl|chrome] \\\n\
      \x20          [--prefill-chunk-tokens 0] [--prefetch on|off] \\\n\
      \x20          [--cache-aware on|off] [--prompt-tail 0] \\\n\
-     \x20          [--chat-turns 0]\n\
+     \x20          [--chat-turns 0] \\\n\
+     \x20          [--arrival-pattern steady|diurnal|flash] \\\n\
+     \x20          [--replicas 1] [--router shard|least-loaded|warmth] \\\n\
+     \x20          [--kill-replica R@T]\n\
      \x20          # online continuous batching over the trace's\n\
      \x20          # arrival times; missing trace/adapters are\n\
      \x20          # synthesized and saved.\n\
@@ -158,7 +162,20 @@ fn usage() -> &'static str {
      \x20          # requests. --prompt-tail P / --chat-turns K shape\n\
      \x20          # synthesized traces: a lognormal heavy-tail prompt\n\
      \x20          # mix, and K-turn chat sessions that re-hit their\n\
-     \x20          # own growing prefix.\n\
+     \x20          # own growing prefix. --arrival-pattern shapes the\n\
+     \x20          # long-horizon rate (steady = historical, diurnal =\n\
+     \x20          # one sinusoidal period, flash = an 8x crowd spike).\n\
+     \x20          # --replicas N serves through an in-process cluster\n\
+     \x20          # of N independent engines (own registry, KV pool,\n\
+     \x20          # prefix cache, event stream) on ONE merged virtual\n\
+     \x20          # clock, with global ingress routed by --router:\n\
+     \x20          # shard = tenant-name hash affinity, least-loaded =\n\
+     \x20          # min queue depth, warmth = follow the warm radix\n\
+     \x20          # chain with overflow spill. --kill-replica R@T\n\
+     \x20          # kills replica R at virtual time T; its work\n\
+     \x20          # replays exactly-once on the least-loaded survivor\n\
+     \x20          # (merged-stream audited). --replicas 1 is\n\
+     \x20          # bit-for-bit the single engine.\n\
      paca selftest"
 }
 
@@ -414,6 +431,10 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
             shared_prefix_tokens: cfg.shared_prefix_tokens,
             prompt_tail: cfg.prompt_tail,
             chat_turns: cfg.chat_turns,
+            arrival_pattern: trace::ArrivalPattern::parse(
+                &cfg.arrival_pattern).ok_or_else(|| anyhow!(
+                    "unknown arrival pattern {:?}",
+                    cfg.arrival_pattern))?,
             seed: cfg.seed,
             ..Default::default()
         };
@@ -432,21 +453,33 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
     // reference path (always available). "auto" falls back to host on
     // ANY pjrt failure (missing artifacts, stub xla build, …).
     let artifacts_dir = paca::default_artifacts_dir();
-    let (model, backend) = match cfg.backend.as_str() {
-        "host" => host_backend(cfg.host_max_tokens),
-        "pjrt" => pjrt_backend(cfg.seed)?,
+    // `resolved_backend` records what "auto" actually picked, so the
+    // cluster path can build one backend PER replica without
+    // re-running (and re-printing) the fallback probe.
+    let (model, backend, resolved_backend) = match cfg.backend.as_str()
+    {
+        "host" => {
+            let (m, b) = host_backend(cfg.host_max_tokens);
+            (m, b, "host")
+        }
+        "pjrt" => {
+            let (m, b) = pjrt_backend(cfg.seed)?;
+            (m, b, "pjrt")
+        }
         "auto" => {
             if Runtime::artifacts_present(&artifacts_dir) {
                 match pjrt_backend(cfg.seed) {
-                    Ok(mb) => mb,
+                    Ok((m, b)) => (m, b, "pjrt"),
                     Err(e) => {
                         println!("note: pjrt backend unavailable \
                                   ({e:#}); falling back to host");
-                        host_backend(cfg.host_max_tokens)
+                        let (m, b) = host_backend(cfg.host_max_tokens);
+                        (m, b, "host")
                     }
                 }
             } else {
-                host_backend(cfg.host_max_tokens)
+                let (m, b) = host_backend(cfg.host_max_tokens);
+                (m, b, "host")
             }
         }
         other => bail!("unknown backend {other:?} (auto|host|pjrt)"),
@@ -481,7 +514,8 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
         .map(|r| r.decode_tokens).sum();
     println!("serving {}: {} tenants over one {:.1}MB shared base \
               ({} target weights) | backend {} | batch {} | policy {} \
-              | unit {} | trace span {:.2}s | {} decode tokens{}{}{}{}{}{}",
+              | unit {} | trace span {:.2}s | {} decode \
+              tokens{}{}{}{}{}{}{}{}",
              model.name, tenants.len(), base.bytes() as f64 / 1e6,
              base.weights.len(), backend.name(), cfg.batch,
              policy.name(), cfg.service_unit, tr.span_s(),
@@ -520,6 +554,22 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
                  " | cache-aware dispatch"
              } else {
                  ""
+             },
+             if cfg.arrival_pattern != "steady" {
+                 format!(" | {} arrivals", cfg.arrival_pattern)
+             } else {
+                 String::new()
+             },
+             if cfg.replicas > 1 {
+                 format!(" | {} replicas (router {}{})", cfg.replicas,
+                         cfg.router,
+                         if cfg.kill_replica.is_empty() {
+                             String::new()
+                         } else {
+                             format!(", kill {}", cfg.kill_replica)
+                         })
+             } else {
+                 String::new()
              });
 
     // Offline baseline: what the one-shot planner would do with the
@@ -535,6 +585,10 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
     // iteration-level token steps by default, the v2 whole-batch loop
     // under --service-unit batch.
     let n_tenant_ids = tr.pool.len();
+    if cfg.replicas > 1 {
+        return serve_cluster(&cfg, tr, &model, (base, reg, backend),
+                             policy, resolved_backend);
+    }
     let mut eng = engine::ServeEngine::new(base, reg, backend,
                                            tr.pool);
     eng.configure_kv(cfg.kv_blocks, cfg.kv_block_tokens, cfg.preempt);
@@ -614,6 +668,120 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
         println!("{}", cost::chunked_prefill_table(
             &cost::llama3_8b(), 64, 4096, cfg.batch.max(1), 512));
     }
+    Ok(())
+}
+
+/// The multi-replica path of `paca serve` (`--replicas N`, N > 1):
+/// builds N independent engines — each with its OWN registry, KV
+/// pool, prefix cache and event stream, but the same synthesized
+/// base — and drives them through [`cluster::Cluster`] on one merged
+/// virtual clock with router-owned ingress. Replica 0 reuses the
+/// base/registry/backend the shared prologue already built; the rest
+/// are constructed identically.
+fn serve_cluster(cfg: &ServeConfig, tr: trace::Trace,
+                 model: &paca::manifest::ModelInfo,
+                 first: (engine::BaseModel, registry::AdapterRegistry,
+                         Box<dyn engine::ForwardBackend>),
+                 policy: scheduler::Policy,
+                 backend_kind: &str) -> Result<()> {
+    let kill = cfg.parse_kill_replica()?;
+    let rpolicy = router::RouterPolicy::parse(&cfg.router)
+        .ok_or_else(|| anyhow!("unknown router {:?}", cfg.router))?;
+    let adapters_dir = Path::new(&cfg.adapters_dir);
+    let n_tenant_ids = tr.pool.len();
+    let mut first = Some(first);
+    let mut parts = Vec::with_capacity(cfg.replicas);
+    for _ in 0..cfg.replicas {
+        let (base, reg, backend) = match first.take() {
+            Some(t) => t,
+            None => (
+                engine::BaseModel::synthetic(model, cfg.seed),
+                registry::AdapterRegistry::with_dir(adapters_dir,
+                                                    cfg.capacity),
+                match backend_kind {
+                    "host" => host_backend(cfg.host_max_tokens).1,
+                    _ => pjrt_backend(cfg.seed)?.1,
+                },
+            ),
+        };
+        let mut eng = engine::ServeEngine::new(base, reg, backend,
+                                               tr.pool.clone());
+        eng.configure_kv(cfg.kv_blocks, cfg.kv_block_tokens,
+                         cfg.preempt);
+        eng.configure_prefix(cfg.prefix_cache);
+        eng.configure_chunking(cfg.prefill_chunk_tokens);
+        eng.configure_prefetch(cfg.prefetch);
+        if !cfg.trace_events.is_empty() {
+            eng.configure_events(events::Events::recording());
+        }
+        let mut sched = scheduler::OnlineScheduler::new(
+            Vec::new(), n_tenant_ids, cfg.batch, policy);
+        sched.max_batch_tokens = cfg.max_batch_tokens;
+        sched.prefill_chunk_tokens = cfg.prefill_chunk_tokens;
+        sched.cache_aware = cfg.cache_aware;
+        parts.push((eng, sched));
+    }
+    let mut cl = cluster::Cluster::new(parts, tr.requests, rpolicy,
+                                       cfg.batch, kill);
+    cl.run(engine::ClockModel::Measured).map_err(|e| {
+        e.context(format!(
+            "cluster serving failed — if the adapters in {} were \
+             created for a different model geometry, delete that \
+             directory and re-run", adapters_dir.display()))
+    })?;
+    println!("\n{}", cl.report());
+    println!("shared frozen base restored bit-exactly after un-merge \
+              on every replica (fingerprints verified)");
+    if !cfg.report_json.is_empty() {
+        let path = Path::new(&cfg.report_json);
+        std::fs::write(path, cl.report_json().to_string())
+            .map_err(|e| anyhow!("writing {}: {e}", path.display()))?;
+        println!("wrote cluster report json -> {}", path.display());
+    }
+    if !cfg.trace_events.is_empty() {
+        let streams = cl.event_streams();
+        let merged = events::merge_replica_streams(&streams);
+        let path = Path::new(&cfg.trace_events);
+        let body = if cfg.trace_format == "chrome" {
+            events::to_chrome_trace_cluster(
+                &streams, cl.replicas[0].engine.pool.names())
+                .to_string()
+        } else {
+            events::to_jsonl_cluster(&merged)
+        };
+        std::fs::write(path, body)
+            .map_err(|e| anyhow!("writing {}: {e}", path.display()))?;
+        let audit = cl.audit();
+        let per_replica: u64 = cl.replicas.iter()
+            .map(|r| r.engine.events.violation_count()).sum();
+        let violations = audit.violation_count() + per_replica;
+        println!("wrote {} engine events across {} replicas ({}) -> \
+                  {} | auditor: {}",
+                 merged.len(), cfg.replicas, cfg.trace_format,
+                 path.display(),
+                 if violations == 0 {
+                     "clean".to_string()
+                 } else {
+                     format!("{violations} violations")
+                 });
+        if violations > 0 {
+            for v in audit.violations() {
+                eprintln!("cluster auditor violation: {v}");
+            }
+            for rep in &cl.replicas {
+                for v in rep.engine.events.violations() {
+                    eprintln!("replica auditor violation: {v}");
+                }
+            }
+            bail!("event auditors found {violations} invariant \
+                   violations in the cluster run");
+        }
+    }
+
+    println!("\nProjected at paper scale (serving cost model):");
+    println!("{}", cost::comparison_table(&cost::llama3_8b(), 64, 512));
+    println!("{}", cost::cluster_queueing_table(
+        &cost::llama3_8b(), 64, cfg.batch.max(1), 512, cfg.replicas));
     Ok(())
 }
 

@@ -128,6 +128,17 @@ impl LatencyRecorder {
         Some(f(entry))
     }
 
+    /// Merge another recorder's samples into this one (the cluster
+    /// report pools per-replica recorders into merged percentiles).
+    /// Appends per key, so the sorted caches invalidate themselves
+    /// through the length check on the next query.
+    pub fn absorb(&mut self, other: &LatencyRecorder) {
+        for (key, s) in &other.samples {
+            self.samples.entry(key.clone()).or_default()
+                .extend_from_slice(s);
+        }
+    }
+
     pub fn keys(&self) -> Vec<&str> {
         self.samples.keys().map(String::as_str).collect()
     }

@@ -1,0 +1,593 @@
+//! Multi-replica serving cluster: N independent virtual-clock
+//! [`ServeEngine`]s in one process, fronted by a [`Router`] that owns
+//! global ingress.
+//!
+//! PaCA's economics make replication unusually clean: every replica
+//! holds the SAME shared frozen base, adapters hot-splice in
+//! O(r·d_out) and pin zero resident bytes, so any replica can serve
+//! any tenant at any time. Replicas differ only in what their history
+//! gave them — queue depth, free KV blocks, and radix-prefix warmth —
+//! and the router picks among them from exactly those advertised
+//! signals (a [`LoadSnapshot`] per replica at the request's arrival
+//! instant).
+//!
+//! Determinism model: the cluster steps all replicas on ONE merged
+//! virtual-clock event loop. At each turn it takes the earliest
+//! event in the system — the next global arrival, or the
+//! earliest-clocked replica's next engine step — with ties broken
+//! (arrival first, then lowest replica id) so identical traces
+//! replay identically. Each replica still runs the unmodified
+//! `begin_iterative / step_iterative / end_iterative` engine loop;
+//! the cluster merely decides WHO steps next. With `--replicas 1`
+//! the whole trace is injected up front and the loop degenerates to
+//! `begin → while step → end` — exactly `serve_iterative`, bit for
+//! bit (the property-test anchor).
+//!
+//! Failover: `--kill-replica R@T` marks replica R dead the moment
+//! the merged clock reaches T. Its in-flight slots are evicted with
+//! [`EvictCause::Failover`] (KV freed, resume ledger recording any
+//! already-emitted first token), its admitted queue drains in
+//! admission order, and everything replays on the least-loaded
+//! survivor through the same `requeue()` + resume-ledger discipline
+//! mid-prompt preemption already uses — so first tokens and
+//! completions are emitted exactly once across the migration, which
+//! the merged-stream [`ClusterAuditor`] checks event by event.
+//! Not-yet-admitted future arrivals simply return to the global
+//! ingress queue and get routed fresh.
+//!
+//! [`EvictCause::Failover`]: crate::serve::engine::EvictCause
+//! [`ClusterAuditor`]: crate::serve::events::ClusterAuditor
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::metrics::{latency_breakdown_table, LatencyRecorder};
+use crate::serve::engine::{ClockModel, IterState, LoadSnapshot,
+                           ServeEngine};
+use crate::serve::events::{merge_replica_streams, ClusterAuditor,
+                           EngineEvent};
+use crate::serve::router::{Router, RouterPolicy};
+use crate::serve::scheduler::{OnlineScheduler, Request};
+use crate::util::json::Json;
+
+/// One engine + its scheduler + the iteration state the cluster
+/// drives it through. `st` is `Some` between `run`'s begin and end;
+/// `alive` flips false when `--kill-replica` fires.
+pub struct Replica {
+    pub engine: ServeEngine,
+    pub sched: OnlineScheduler,
+    st: Option<IterState>,
+    pub alive: bool,
+}
+
+impl Replica {
+    /// Virtual-clock time of this replica's next engine event on the
+    /// merged loop. A replica with work (seated slots or an admitted
+    /// queue) is ready to step NOW at its own clock; an idle replica
+    /// with delivered-but-future arrivals becomes ready at the
+    /// earliest of those (never before its own clock — the step
+    /// performs the idle jump itself); a drained or dead replica
+    /// never steps.
+    fn next_time(&self) -> f64 {
+        if !self.alive {
+            return f64::INFINITY;
+        }
+        let Some(st) = &self.st else { return f64::INFINITY };
+        if st.in_flight() > 0 || self.sched.pending_len() > 0 {
+            return st.now();
+        }
+        match self.sched.next_arrival() {
+            Some(t) => t.max(st.now()),
+            None => f64::INFINITY,
+        }
+    }
+}
+
+/// The cluster: replicas, router, and the global ingress queue.
+pub struct Cluster {
+    pub replicas: Vec<Replica>,
+    pub router: Router,
+    /// Undelivered arrivals, descending by arrival time (pop from
+    /// the back = earliest; same layout the scheduler uses). Empty
+    /// in single-replica mode — see [`Cluster::new`].
+    global: Vec<Request>,
+    kill: Option<(usize, f64)>,
+    killed: bool,
+}
+
+impl Cluster {
+    /// Build a cluster over pre-constructed (engine, scheduler)
+    /// pairs. Schedulers must be EMPTY (built over `Vec::new()`) —
+    /// the cluster owns ingress.
+    ///
+    /// Single-replica reduction: with N == 1 the entire trace is
+    /// injected into replica 0's scheduler up front, in input order
+    /// (which `inject` guarantees reproduces `OnlineScheduler::new`'s
+    /// future vector bit for bit). Eager injection matters because
+    /// the prefetch planner scans the WHOLE future via
+    /// `peek_future` — lazy delivery would hide arrivals from it and
+    /// diverge from `serve_iterative` under `--prefetch`. With
+    /// N > 1 arrivals stay in the global queue and are routed at
+    /// their arrival instant, when load snapshots mean something.
+    pub fn new(parts: Vec<(ServeEngine, OnlineScheduler)>,
+               requests: Vec<Request>, policy: RouterPolicy,
+               margin: usize, kill: Option<(usize, f64)>) -> Cluster {
+        assert!(!parts.is_empty(), "cluster needs at least 1 replica");
+        if let Some((r, _)) = kill {
+            assert!(parts.len() > 1 && r < parts.len(),
+                    "kill-replica {r} out of range for {} replicas \
+                     (and a 1-replica cluster cannot survive a kill)",
+                    parts.len());
+        }
+        let n = parts.len();
+        let mut replicas: Vec<Replica> = parts.into_iter()
+            .map(|(engine, sched)| Replica {
+                engine, sched, st: None, alive: true,
+            })
+            .collect();
+        let global = if n == 1 {
+            for r in requests {
+                replicas[0].sched.inject(r);
+            }
+            Vec::new()
+        } else {
+            let mut g = requests;
+            // Stable-sort ascending then reverse: equal arrivals pop
+            // in input order, matching the scheduler's own layout.
+            g.sort_by(|a, b| {
+                a.arrival_s.partial_cmp(&b.arrival_s).unwrap()
+            });
+            g.reverse();
+            g
+        };
+        Cluster {
+            replicas,
+            router: Router::new(policy, margin),
+            global,
+            kill,
+            killed: false,
+        }
+    }
+
+    /// Earliest event anywhere in the system — the kill trigger
+    /// compares against this so a kill at T fires after every event
+    /// strictly before T has been processed.
+    fn next_event_time(&self) -> f64 {
+        let t_arr = self.global.last().map(|r| r.arrival_s)
+            .unwrap_or(f64::INFINITY);
+        let t_step = self.replicas.iter()
+            .map(Replica::next_time)
+            .fold(f64::INFINITY, f64::min);
+        t_arr.min(t_step)
+    }
+
+    /// Replica to step next: argmin next_time, ties to lowest id.
+    fn next_step(&self) -> (usize, f64) {
+        let mut best = (0, f64::INFINITY);
+        for (i, rep) in self.replicas.iter().enumerate() {
+            let t = rep.next_time();
+            if t < best.1 {
+                best = (i, t);
+            }
+        }
+        best
+    }
+
+    /// Drive every replica to completion on the merged virtual
+    /// clock, then settle and audit each engine (`finish` restores
+    /// the shared base bit-exactly and runs the per-replica leak and
+    /// event checks).
+    pub fn run(&mut self, clock: ClockModel) -> Result<()> {
+        for rep in &mut self.replicas {
+            rep.st = Some(rep.engine.begin_iterative(&mut rep.sched,
+                                                     clock));
+        }
+        loop {
+            if let Some((kr, kill_t)) = self.kill {
+                if !self.killed && self.next_event_time() >= kill_t {
+                    self.failover(kr);
+                    self.killed = true;
+                    continue;
+                }
+            }
+            let t_arr = self.global.last().map(|r| r.arrival_s)
+                .unwrap_or(f64::INFINITY);
+            let (idx, t_step) = self.next_step();
+            if t_arr <= t_step {
+                if t_arr.is_infinite() {
+                    break;
+                }
+                let r = self.global.pop().expect("finite arrival");
+                self.deliver(r);
+            } else {
+                let rep = &mut self.replicas[idx];
+                let st = rep.st.as_mut().expect("begun above");
+                rep.engine.step_iterative(&mut rep.sched, st)?;
+            }
+        }
+        for rep in &mut self.replicas {
+            if let Some(st) = rep.st.take() {
+                rep.engine.end_iterative(st);
+            }
+            rep.engine.finish()?;
+        }
+        Ok(())
+    }
+
+    /// Route one arrival: snapshot every alive replica's advertised
+    /// load, ask the router, inject into the pick's scheduler. The
+    /// request is then that replica's to admit at its own clock.
+    fn deliver(&mut self, r: Request) {
+        let loads = self.snapshots(None);
+        let name = self.replicas[0].engine.pool.name(r.tenant)
+            .to_string();
+        let pick = self.router.route(&name, r.tenant.0, &loads);
+        self.replicas[pick].sched.inject(r);
+    }
+
+    /// Advertised loads, `None` for dead replicas (and for
+    /// `exclude`, which the failover path uses to hide the
+    /// about-to-die replica from survivor selection).
+    fn snapshots(&self, exclude: Option<usize>)
+                 -> Vec<Option<LoadSnapshot>> {
+        self.replicas.iter().enumerate()
+            .map(|(i, rep)| {
+                if Some(i) == exclude || !rep.alive {
+                    return None;
+                }
+                rep.st.as_ref().map(|st| {
+                    rep.engine.load_snapshot(&rep.sched, st)
+                })
+            })
+            .collect()
+    }
+
+    /// Kill replica `kr` and migrate its work, exactly once:
+    ///   * seated slots → evicted (`Failover` cause: KV freed, resume
+    ///     ledger keeps any already-emitted first token) and requeued
+    ///     on the least-loaded survivor, in seat order;
+    ///   * admitted-but-unseated requests → requeued after them, in
+    ///     admission order;
+    ///   * the resume ledger moves with them, so replays skip
+    ///     duplicate first-token emission;
+    ///   * event-auditor custody transfers per request
+    ///     (`migrate_out` / `adopt`), so BOTH per-replica auditors
+    ///     stay clean across the migration;
+    ///   * never-admitted future arrivals → back into the global
+    ///     ingress queue for fresh routing (no events exist for them
+    ///     yet, so nothing to transfer).
+    fn failover(&mut self, kr: usize) {
+        let loads = self.snapshots(Some(kr));
+        let survivor = Router::least_loaded(&loads);
+        let (evacuated, pending, future, resume) = {
+            let rep = &mut self.replicas[kr];
+            rep.alive = false;
+            let st = rep.st.as_mut().expect("kill fires inside run");
+            let evacuated = rep.engine.evacuate(st);
+            let pending = rep.sched.drain_pending();
+            let future = rep.sched.drain_future();
+            let resume = rep.engine.export_resume();
+            (evacuated, pending, future, resume)
+        };
+        self.router.stats.failover +=
+            (evacuated.len() + pending.len() + future.len()) as u64;
+        let flags: HashMap<u64, bool> = resume.iter()
+            .map(|(id, info)| (*id, info.first_token_s.is_some()))
+            .collect();
+        let killed_events = self.replicas[kr].engine.events.clone();
+        let surv_events =
+            self.replicas[survivor].engine.events.clone();
+        for r in evacuated.iter().chain(pending.iter()) {
+            killed_events.migrate_out(r.id);
+            let awaiting = flags.contains_key(&r.id);
+            let first = flags.get(&r.id).copied().unwrap_or(false);
+            surv_events.adopt(r.id, r.arrival_s, awaiting, first);
+        }
+        self.replicas[survivor].engine.import_resume(resume);
+        for r in evacuated.into_iter().chain(pending) {
+            self.replicas[survivor].sched.requeue(r);
+        }
+        for r in future {
+            let at = self.global
+                .partition_point(|x| x.arrival_s > r.arrival_s);
+            self.global.insert(at, r);
+        }
+    }
+
+    /// Per-replica event streams in replica-id order (empty vecs
+    /// when tracing is off).
+    pub fn event_streams(&self) -> Vec<Vec<EngineEvent>> {
+        self.replicas.iter()
+            .map(|rep| rep.engine.events.snapshot())
+            .collect()
+    }
+
+    /// Audit the merged cross-replica interleaving: single
+    /// residency, exactly-once first token and completion across
+    /// failover, merged-clock monotonicity.
+    pub fn audit(&self) -> ClusterAuditor {
+        ClusterAuditor::audit(&merge_replica_streams(
+            &self.event_streams()))
+    }
+
+    /// Human report. Single replica: exactly the engine's own report
+    /// (the CLI reduction anchor). Multi-replica: a `cluster:` block
+    /// (per-replica load + router counters), then merged-across-
+    /// replicas latency percentiles.
+    pub fn report(&self) -> String {
+        if self.replicas.len() == 1 {
+            return self.replicas[0].engine.report();
+        }
+        let mut out = format!("cluster: {} replicas | router {}\n",
+                              self.replicas.len(),
+                              self.router.policy().name());
+        for (i, rep) in self.replicas.iter().enumerate() {
+            let s = &rep.engine.stats;
+            out.push_str(&format!(
+                "  replica {}{}: {} requests | {} steps | {} \
+                 preemptions (failover {}) | virtual {:.3}s | \
+                 checksum {:.6}\n",
+                i, if rep.alive { "" } else { " [killed]" },
+                s.requests, s.steps, s.preemptions,
+                s.preempt_failover, s.virtual_s,
+                rep.engine.checksum));
+        }
+        let rs = self.router.stats;
+        out.push_str(&format!(
+            "router: home {} | warm {} | steal {} | spill {} | \
+             failover: {}\n",
+            rs.home, rs.warm, rs.steal, rs.spill, rs.failover));
+        let mut queueing = LatencyRecorder::default();
+        let mut service = LatencyRecorder::default();
+        let mut e2e = LatencyRecorder::default();
+        let mut ttft = LatencyRecorder::default();
+        let (mut misses, mut total) = (0u64, 0u64);
+        let mut makespan = 0.0f64;
+        for rep in &self.replicas {
+            queueing.absorb(&rep.engine.queueing);
+            service.absorb(&rep.engine.service);
+            e2e.absorb(&rep.engine.e2e);
+            ttft.absorb(&rep.engine.ttft);
+            misses += rep.engine.stats.deadline_misses;
+            total += rep.engine.stats.deadline_total;
+            makespan = makespan.max(rep.engine.stats.virtual_s);
+        }
+        if e2e.count("(all)") > 0 {
+            out.push_str("\nmerged online pipeline (all replicas, \
+                          shared virtual clock):\n");
+            out.push_str(&latency_breakdown_table(
+                &queueing, &service, &e2e, "tenant").render());
+        }
+        if ttft.count("(all)") > 0 {
+            let ms = |v: Option<f64>| match v {
+                Some(v) => format!("{:.3}ms", v * 1e3),
+                None => "-".to_string(),
+            };
+            out.push_str(&format!(
+                "merged ttft: p50 {} p99 {} ({} first tokens)\n",
+                ms(ttft.percentile("(all)", 0.50)),
+                ms(ttft.percentile("(all)", 0.99)),
+                ttft.count("(all)")));
+        }
+        if total > 0 {
+            out.push_str(&format!(
+                "deadline misses: {}/{} ({:.1}%)\n", misses, total,
+                100.0 * misses as f64 / total as f64));
+        }
+        out.push_str(&format!("cluster makespan {:.3}s\n", makespan));
+        out
+    }
+
+    /// Machine report. Single replica: exactly the engine's own
+    /// JSON. Multi-replica: per-replica engine reports plus router
+    /// counters.
+    pub fn report_json(&self) -> Json {
+        if self.replicas.len() == 1 {
+            return self.replicas[0].engine.report_json();
+        }
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("replicas".to_string(), Json::Arr(
+            self.replicas.iter()
+                .map(|rep| rep.engine.report_json())
+                .collect()));
+        root.insert("alive".to_string(), Json::Arr(
+            self.replicas.iter()
+                .map(|rep| Json::Bool(rep.alive))
+                .collect()));
+        let rs = self.router.stats;
+        let mut router = std::collections::BTreeMap::new();
+        let num = |v: u64| Json::Num(v as f64);
+        router.insert("policy".to_string(),
+                      Json::Str(self.router.policy().name()
+                                .to_string()));
+        router.insert("home".to_string(), num(rs.home));
+        router.insert("warm".to_string(), num(rs.warm));
+        router.insert("steal".to_string(), num(rs.steal));
+        router.insert("spill".to_string(), num(rs.spill));
+        router.insert("failover".to_string(), num(rs.failover));
+        root.insert("router".to_string(), Json::Obj(router));
+        Json::Obj(root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::ModelInfo;
+    use crate::serve::engine::{tiny_model, BaseModel, EngineStats,
+                               HostBackend};
+    use crate::serve::events::Events;
+    use crate::serve::registry::{AdapterRegistry, PacaAdapter};
+    use crate::serve::scheduler::{Policy, TenantPool};
+    use crate::serve::trace::{self, Trace, TraceSpec};
+
+    fn small() -> ModelInfo {
+        ModelInfo { d_model: 16, d_ff: 24, ..tiny_model() }
+    }
+
+    fn engine_for(pool: TenantPool) -> ServeEngine {
+        let m = small();
+        let mut reg = AdapterRegistry::new(64);
+        for name in pool.names() {
+            reg.insert(PacaAdapter::synthetic(name, &m, 4, 11));
+        }
+        ServeEngine::new(BaseModel::synthetic(&m, 7), reg,
+                         Box::<HostBackend>::default(), pool)
+    }
+
+    fn trace(n: usize, seed: u64) -> Trace {
+        trace::synthesize(&TraceSpec {
+            n_requests: n,
+            n_tenants: 3,
+            mean_tokens: 12,
+            decode_tokens: 4,
+            req_per_s: 40.0,
+            seed,
+            ..TraceSpec::default()
+        })
+    }
+
+    const CLOCK: ClockModel = ClockModel::Analytic {
+        swap_s: 2e-3, batch_s: 5e-4, token_s: 2e-5,
+    };
+
+    fn cluster_for(n: usize, tr: &Trace, policy: RouterPolicy,
+                   kill: Option<(usize, f64)>) -> Cluster {
+        let parts = (0..n).map(|_| {
+            let mut eng = engine_for(tr.pool.clone());
+            eng.configure_events(Events::recording());
+            let mut sched = OnlineScheduler::new(
+                Vec::new(), tr.pool.len(), 4, Policy::SwapAware);
+            sched.decode_slack_s = 0.0;
+            (eng, sched)
+        }).collect();
+        Cluster::new(parts, tr.requests.clone(), policy, 4, kill)
+    }
+
+    fn scrub_wall(mut s: EngineStats) -> EngineStats {
+        s.wall_s = 0.0;
+        s.forward_s = 0.0;
+        s.swap_s = 0.0;
+        s
+    }
+
+    #[test]
+    fn single_replica_cluster_is_serve_iterative_bit_for_bit() {
+        let tr = trace(24, 3);
+        let mut base = engine_for(tr.pool.clone());
+        let mut sched = OnlineScheduler::new(
+            tr.requests.clone(), tr.pool.len(), 4, Policy::SwapAware);
+        sched.decode_slack_s = 0.0;
+        base.serve_iterative(&mut sched, CLOCK).unwrap();
+        base.finish().unwrap();
+
+        let mut cl = cluster_for(1, &tr, RouterPolicy::Shard, None);
+        cl.run(CLOCK).unwrap();
+        let eng = &cl.replicas[0].engine;
+        assert_eq!(scrub_wall(eng.stats), scrub_wall(base.stats));
+        assert_eq!(eng.checksum, base.checksum);
+        // Virtual-clock latency samples are deterministic (wall
+        // times are not — the scrub above); every percentile must
+        // agree with the monolithic loop's.
+        for q in [0.0, 0.25, 0.50, 0.75, 0.99, 1.0] {
+            assert_eq!(eng.e2e.percentile("(all)", q),
+                       base.e2e.percentile("(all)", q));
+            assert_eq!(eng.queueing.percentile("(all)", q),
+                       base.queueing.percentile("(all)", q));
+            assert_eq!(eng.ttft.percentile("(all)", q),
+                       base.ttft.percentile("(all)", q));
+        }
+    }
+
+    #[test]
+    fn two_replicas_complete_every_request_with_clean_audit() {
+        for policy in RouterPolicy::ALL {
+            let tr = trace(30, 9);
+            let mut cl = cluster_for(2, &tr, policy, None);
+            cl.run(CLOCK).unwrap();
+            let done: u64 = cl.replicas.iter()
+                .map(|r| r.engine.stats.requests).sum();
+            assert_eq!(done, 30, "{}", policy.name());
+            let audit = cl.audit();
+            assert_eq!(audit.violation_count(), 0, "{}: {:?}",
+                       policy.name(), audit.violations());
+        }
+    }
+
+    #[test]
+    fn shard_policy_pins_each_tenant_to_one_replica() {
+        let tr = trace(30, 5);
+        let mut cl = cluster_for(4, &tr, RouterPolicy::Shard, None);
+        cl.run(CLOCK).unwrap();
+        // Every request routed home; nothing stolen or spilled.
+        assert_eq!(cl.router.stats.home, 30);
+        assert_eq!(cl.router.stats.steal + cl.router.stats.spill
+                   + cl.router.stats.failover, 0);
+        // Each tenant's completions live on exactly its home shard.
+        let streams = cl.event_streams();
+        for (rid, evs) in streams.iter().enumerate() {
+            for ev in evs {
+                if let Some(t) = ev.tenant {
+                    let name = tr.pool.name(
+                        crate::serve::scheduler::TenantId(t));
+                    assert_eq!(cl.router.home_shard(name, 4), rid,
+                               "tenant {t} event on replica {rid}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kill_replica_fails_over_exactly_once() {
+        let tr = trace(40, 13);
+        // Kill mid-trace: shard policy guarantees the victim holds
+        // work for its tenants when it dies.
+        let mut cl = cluster_for(2, &tr, RouterPolicy::Shard,
+                                 Some((0, 0.2)));
+        cl.run(CLOCK).unwrap();
+        assert!(!cl.replicas[0].alive);
+        assert!(cl.router.stats.failover > 0, "kill moved nothing");
+        let done: u64 = cl.replicas.iter()
+            .map(|r| r.engine.stats.requests).sum();
+        assert_eq!(done, 40);
+        let audit = cl.audit();
+        assert_eq!(audit.violation_count(), 0, "{:?}",
+                   audit.violations());
+        // The survivor replays evictions through the resume ledger.
+        assert!(cl.replicas[0].engine.stats.preempt_failover > 0
+                || cl.replicas[0].engine.stats.requests < 40);
+        let rep = cl.report();
+        assert!(rep.contains("[killed]"), "{rep}");
+        assert!(rep.contains("failover:"), "{rep}");
+    }
+
+    #[test]
+    fn kill_after_drain_is_a_harmless_noop() {
+        let tr = trace(10, 2);
+        let mut cl = cluster_for(2, &tr, RouterPolicy::LeastLoaded,
+                                 Some((1, 1e9)));
+        cl.run(CLOCK).unwrap();
+        assert!(!cl.replicas[1].alive);
+        let done: u64 = cl.replicas.iter()
+            .map(|r| r.engine.stats.requests).sum();
+        assert_eq!(done, 10);
+        assert_eq!(cl.audit().violation_count(), 0);
+    }
+
+    #[test]
+    fn report_json_carries_replicas_and_router_counters() {
+        let tr = trace(16, 4);
+        let mut cl = cluster_for(2, &tr, RouterPolicy::Warmth, None);
+        cl.run(CLOCK).unwrap();
+        let j = cl.report_json();
+        let reps = match j.get("replicas") {
+            Some(Json::Arr(a)) => a.len(),
+            _ => 0,
+        };
+        assert_eq!(reps, 2);
+        assert_eq!(j.get("router").and_then(|r| r.get("policy"))
+                       .and_then(Json::as_str),
+                   Some("warmth"));
+    }
+}

@@ -394,6 +394,73 @@ pub fn latency_table(m: &ModelInfo, rank: usize, batch: usize,
     out
 }
 
+/// Mean queueing delay of one replica in an N-replica cluster at
+/// cluster-wide offered load `req_per_s`, when the router hands this
+/// replica `share` of the traffic (share 1/N = perfectly balanced;
+/// share 2/N = a hash-sharded hot tenant doubling up on its home).
+/// Each replica is an independent M/D/1 server — the cluster's merged
+/// virtual-clock loop preserves exactly this independence, which is
+/// why the analytic term stays per-replica.
+pub fn replica_queueing_delay_s(dev: &DeviceProfile, m: &ModelInfo,
+                                path: ServePath, rank: usize,
+                                batch: usize, seq: usize,
+                                req_per_s: f64, share: f64) -> f64 {
+    queueing_delay_s(dev, m, path, rank, batch, seq,
+                     req_per_s * share.max(0.0))
+}
+
+/// Cluster queueing projection for `paca serve --replicas N`: at each
+/// offered load (fractions of ONE replica's capacity, so >100% rows
+/// exist only because the cluster has N servers), the M/D/1 queueing
+/// delay of (a) a single replica eating the whole stream, (b) one
+/// replica of a perfectly balanced N-way split — what least-loaded /
+/// warmth routing approaches, and what `--router shard` achieves when
+/// tenant popularity is uniform — and (c) the hot home shard under a
+/// Zipf-skewed tenant mix that receives twice its fair share — the
+/// pathology the router's overflow spill exists to cut. Merged path
+/// throughout: every replica serves every tenant from one spliced
+/// base, so the split is pure load balancing with no placement
+/// constraint.
+pub fn cluster_queueing_table(m: &ModelInfo, rank: usize, batch: usize,
+                              seq: usize, replicas: usize) -> String {
+    use crate::metrics::Table;
+    let n = replicas.max(2);
+    let fmt_ms = |v: f64| if v.is_finite() {
+        format!("{:.1}ms", v * 1e3)
+    } else {
+        "saturated".to_string()
+    };
+    let mut out = String::new();
+    for dev in [&A100_80G, &GAUDI2] {
+        let cap = 1.0 / service_time_per_req_s(
+            dev, m, ServePath::Merged, rank, batch, seq);
+        let mut t = Table::new(&["load req/s", "of 1-replica cap",
+                                 "1 replica",
+                                 &format!("{n} balanced"),
+                                 &format!("{n} hot shard 2x")]);
+        for frac in [0.5, 0.8, 1.2, 0.8 * n as f64] {
+            let load = frac * cap;
+            let q = |share| replica_queueing_delay_s(
+                dev, m, ServePath::Merged, rank, batch, seq, load,
+                share);
+            t.row(&[format!("{load:.1}"),
+                    format!("{:.0}%", frac * 100.0),
+                    fmt_ms(q(1.0)),
+                    fmt_ms(q(1.0 / n as f64)),
+                    fmt_ms(q(2.0 / n as f64))]);
+        }
+        out.push_str(&format!(
+            "\n{} — {} cluster queueing, {n} replicas, rank {rank}, \
+             batch {batch}, seq {seq} (per-replica M/D/1; 'balanced' \
+             = the fair 1/{n} split least-loaded routing approaches, \
+             'hot shard' = a hash home receiving twice its share — \
+             the skew overflow spill cuts):\n\n",
+            dev.name, m.name));
+        out.push_str(&t.render());
+    }
+    out
+}
+
 /// Iteration-level serving projection: TTFT (prefill) and TPOT
 /// (decode-step period) for merged PaCA vs unmerged LoRA across batch
 /// sizes. Decode is where unmerged adapters hurt most: the serialized
@@ -926,5 +993,51 @@ mod tests {
         assert!(s.contains("saturated"),
                 "the lora column must hit saturation at 95% of \
                  merged capacity");
+    }
+
+    #[test]
+    fn replica_share_splits_the_queue() {
+        // The router's whole value proposition in one inequality
+        // chain: at the same cluster-wide offered load, a balanced
+        // 1/N share queues less than a 2/N hot shard, which queues
+        // less than one replica eating the entire stream.
+        let m = llama3_8b();
+        let cap = 1.0 / service_time_per_req_s(
+            &A100_80G, &m, ServePath::Merged, 64, 8, 512);
+        let load = 0.8 * cap;
+        let q = |share| replica_queueing_delay_s(
+            &A100_80G, &m, ServePath::Merged, 64, 8, 512, load,
+            share);
+        assert!(q(0.25) > 0.0);
+        assert!(q(0.25) < q(0.5), "balanced {} !< hot {}",
+                q(0.25), q(0.5));
+        assert!(q(0.5) < q(1.0), "hot {} !< single {}",
+                q(0.5), q(1.0));
+        // share 1.0 IS the single-queue term — the reduction anchor.
+        assert_eq!(q(1.0), queueing_delay_s(
+            &A100_80G, &m, ServePath::Merged, 64, 8, 512, load));
+        // Past one replica's capacity, only the split survives: the
+        // single server saturates, the balanced 4-way split does not.
+        let over = 1.2 * cap;
+        assert!(replica_queueing_delay_s(
+            &A100_80G, &m, ServePath::Merged, 64, 8, 512, over, 1.0)
+            .is_infinite());
+        assert!(replica_queueing_delay_s(
+            &A100_80G, &m, ServePath::Merged, 64, 8, 512, over, 0.25)
+            .is_finite());
+    }
+
+    #[test]
+    fn cluster_queueing_table_renders() {
+        let m = llama3_8b();
+        let s = cluster_queueing_table(&m, 64, 8, 512, 4);
+        assert!(s.contains("4 balanced"));
+        assert!(s.contains("4 hot shard 2x"));
+        assert!(s.contains("1 replica"));
+        // The 320% row: one replica is saturated, the balanced
+        // split is not — the table must show both regimes.
+        assert!(s.contains("saturated"));
+        assert!(s.contains("320%"));
+        assert!(s.contains("A100-80GB") && s.contains("Gaudi2"));
     }
 }

@@ -286,6 +286,10 @@ pub struct EngineStats {
     pub preemptions: u64,
     pub preempt_memory: u64,
     pub preempt_deadline: u64,
+    /// Slots evacuated off a killed replica by the cluster's failover
+    /// path (a strict subset of `preemptions`; always 0 outside
+    /// multi-replica runs).
+    pub preempt_failover: u64,
     /// Prompt tokens the resume replays will recompute — the price
     /// paid for freeing preempted KV instead of swapping it out.
     /// (With the prefix cache on, a resume that hits its own donated
@@ -373,16 +377,32 @@ pub struct ServeEngine {
     pub checksum: f64,
 }
 
+/// Why a slot is being evicted — the Preempt event's `a` payload and
+/// the stats counter it lands in. Discriminants are the wire codes
+/// (deadline rescue was 0 and memory pressure 1 before failover
+/// existed, so single-engine traces are unchanged).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum EvictCause {
+    Deadline = 0,
+    Memory = 1,
+    Failover = 2,
+}
+
 /// What survives a preemption, keyed off the engine's resume map.
-struct ResumeInfo {
+/// Public (with [`ServeEngine::export_resume`] /
+/// [`ServeEngine::import_resume`]) because replica failover migrates
+/// these entries to the surviving engine — the exactly-once emission
+/// discipline travels with the request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResumeInfo {
     /// Virtual time the request's FIRST token was emitted (TTFT was
     /// settled then; replays emit nothing). `None` when the slot was
     /// evicted MID-PROMPT (chunked prefill) — no token ever left, so
     /// the resumed residency emits the first token itself.
-    first_token_s: Option<f64>,
+    pub first_token_s: Option<f64>,
     /// The request's original decode length — the TPOT denominator
     /// (its live `decode_tokens` now counts only the owed remainder).
-    orig_decode: usize,
+    pub orig_decode: usize,
 }
 
 impl ServeEngine {
@@ -843,6 +863,23 @@ impl ServeEngine {
     /// evict/resume cycles.
     fn evict_slot(&mut self, slots: &mut Vec<Slot>, idx: usize,
                   sched: &mut OnlineScheduler, memory: bool) {
+        let cause = if memory {
+            EvictCause::Memory
+        } else {
+            EvictCause::Deadline
+        };
+        let r = self.evict_core(slots, idx, cause);
+        sched.requeue(r);
+    }
+
+    /// The eviction itself, minus the re-queue: frees the slot's
+    /// blocks, settles the resume-map bookkeeping, emits the Preempt
+    /// event, and hands the rewritten request back. `evict_slot`
+    /// re-queues it locally; the cluster's failover evacuation routes
+    /// it to a SURVIVING replica instead — same replay discipline,
+    /// different destination queue.
+    fn evict_core(&mut self, slots: &mut Vec<Slot>, idx: usize,
+                  cause: EvictCause) -> Request {
         let mut s = slots.swap_remove(idx);
         // An evicted sequence donates its shared prefix like a
         // completing one — the resume replay (and everyone else on
@@ -880,15 +917,17 @@ impl ServeEngine {
         }
         self.stats.kv_recompute_tokens += r.tokens as u64;
         self.stats.preemptions += 1;
-        if memory {
-            self.stats.preempt_memory += 1;
-        } else {
-            self.stats.preempt_deadline += 1;
+        match cause {
+            EvictCause::Memory => self.stats.preempt_memory += 1,
+            EvictCause::Deadline => self.stats.preempt_deadline += 1,
+            EvictCause::Failover => self.stats.preempt_failover += 1,
         }
+        // Preempt payload a is the cause code: 0 deadline rescue,
+        // 1 memory pressure, 2 failover evacuation (docs/events.md).
         self.events.emit(EventKind::Preempt, Some(r.tenant.0),
-                         Some(r.id), u64::from(memory),
+                         Some(r.id), cause as u64,
                          r.decode_tokens as u64);
-        sched.requeue(r);
+        r
     }
 
     /// Phase 1 of seating a dispatch/join group: the prefix-cache
@@ -1160,23 +1199,58 @@ impl ServeEngine {
     /// checksum, same swaps, same token counts (property-tested).
     pub fn serve_iterative(&mut self, sched: &mut OnlineScheduler,
                            clock: ClockModel) -> Result<()> {
-        let wall0 = Instant::now();
-        let slot_cap = sched.batch_size();
-        let budget = sched.max_batch_tokens;
-        let mut now = 0.0f64;
-        let mut slots: Vec<Slot> = Vec::new();
-        // Service time of the most recent step — the engine's live
-        // estimate of what one more iteration costs, used to project
-        // how long the current batch would take to drain naturally.
-        let mut last_step_s = 0.0f64;
+        let mut st = self.begin_iterative(sched, clock);
+        while self.step_iterative(sched, &mut st)? {}
+        self.end_iterative(st);
+        Ok(())
+    }
+
+    /// Open an externally-driven iteration-level run: the carved-out
+    /// prologue of [`ServeEngine::serve_iterative`]. The caller owns
+    /// the returned [`IterState`] and drives the engine one
+    /// [`ServeEngine::step_iterative`] at a time — this is how the
+    /// multi-replica cluster steps N engines on one merged virtual
+    /// clock. `serve_iterative` is exactly
+    /// `begin → while step → end`, so the single-engine path and the
+    /// `--replicas 1` cluster are the same code, bit for bit.
+    pub fn begin_iterative(&mut self, sched: &mut OnlineScheduler,
+                           clock: ClockModel) -> IterState {
         // Calibrate BEFORE the first admission — see `serve_online`.
         sched.events = self.events.clone();
         self.calibrate(sched, clock);
-        loop {
-            self.events.set_now(now);
-            sched.admit(now);
+        IterState {
+            wall0: Instant::now(),
+            slot_cap: sched.batch_size(),
+            budget: sched.max_batch_tokens,
+            now: 0.0,
+            slots: Vec::new(),
+            last_step_s: 0.0,
+            clock,
+        }
+    }
+
+    /// Close an externally-driven run: settle the wall/virtual clocks
+    /// into the engine stats (the carved-out epilogue of
+    /// `serve_iterative`).
+    pub fn end_iterative(&mut self, st: IterState) {
+        self.stats.virtual_s += st.now;
+        self.stats.wall_s += st.wall0.elapsed().as_secs_f64();
+    }
+
+    /// One full iteration of the `serve_iterative` loop body:
+    /// admission, dispatch-or-join (or the idle clock jump), KV
+    /// growth, ONE forward step, and slot advancement/completion.
+    /// Returns `Ok(false)` when the run is complete (the monolithic
+    /// loop's `break`), `Ok(true)` when there is more to do —
+    /// including iterations that only shed or seat slots without
+    /// forwarding (the monolithic loop's `continue`).
+    pub fn step_iterative(&mut self, sched: &mut OnlineScheduler,
+                          st: &mut IterState) -> Result<bool> {
+        {
+            self.events.set_now(st.now);
+            sched.admit(st.now);
             self.sync_kv_gate(sched);
-            if slots.is_empty() {
+            if st.slots.is_empty() {
                 if sched.pending_len() == 0 {
                     match sched.next_arrival() {
                         // Idle: event-jump to the next arrival —
@@ -1184,28 +1258,28 @@ impl ServeEngine {
                         // prefix prefetch when armed.
                         Some(t) => {
                             if self.prefetch {
-                                now = self.prefetch_gap(sched, clock,
-                                                        now, t)?;
+                                st.now = self.prefetch_gap(
+                                    sched, st.clock, st.now, t)?;
                             }
-                            now = now.max(t);
-                            self.events.set_now(now);
-                            sched.admit(now);
+                            st.now = st.now.max(t);
+                            self.events.set_now(st.now);
+                            sched.admit(st.now);
                         }
-                        None => break,
+                        None => return Ok(false),
                     }
                 }
-                self.calibrate(sched, clock);
+                self.calibrate(sched, st.clock);
                 self.sync_kv_gate(sched);
                 let live = self.current_tenant_id();
-                let Some(batch) = sched.dispatch(live, now) else {
-                    break;
+                let Some(batch) = sched.dispatch(live, st.now) else {
+                    return Ok(false);
                 };
-                self.seat(&mut slots, batch.requests, now);
-                if slots.is_empty() {
-                    continue;
+                self.seat(&mut st.slots, batch.requests, st.now);
+                if st.slots.is_empty() {
+                    return Ok(true);
                 }
             } else {
-                let live = slots[0].req.tenant;
+                let live = st.slots[0].req.tenant;
                 // Slo-aware preemption: when an OTHER tenant's
                 // deadline is still rescuable (non-negative penalized
                 // slack — evicting for an already-doomed request buys
@@ -1222,7 +1296,7 @@ impl ServeEngine {
                 // validated by simulation, it thrashes. Once the
                 // batch drains, the urgent tenant dispatches into the
                 // freed blocks.
-                let drain_s = slots.iter().map(|s| {
+                let drain_s = st.slots.iter().map(|s| {
                     // Mid-prompt slots owe their remaining chunk
                     // steps before any decode (chunked only; equals
                     // s.remaining in the PR-6 regime).
@@ -1233,28 +1307,29 @@ impl ServeEngine {
                         0
                     };
                     s.remaining + chunks
-                }).max().unwrap_or(0) as f64 * last_step_s;
+                }).max().unwrap_or(0) as f64 * st.last_step_s;
                 let urgent_slack = if self.preempting()
                     && sched.policy() == Policy::SloAware
                 {
-                    sched.urgent_other_slack(Some(live), now)
+                    sched.urgent_other_slack(Some(live), st.now)
                         .filter(|s| (0.0..drain_s).contains(s))
                 } else {
                     None
                 };
                 if urgent_slack.is_some() {
                     let victim = Self::pick_victim(
-                        &slots, None, now, sched.decode_slack_s,
+                        &st.slots, None, st.now, sched.decode_slack_s,
                         self.prefill_chunk > 0)
                         .filter(|(_, slack)| slack.is_infinite());
                     if let Some((idx, _)) = victim {
-                        self.evict_slot(&mut slots, idx, sched,
+                        self.evict_slot(&mut st.slots, idx, sched,
                                         false);
                     }
-                    if slots.is_empty() {
-                        continue; // batch fully shed: dispatch next.
+                    if st.slots.is_empty() {
+                        // Batch fully shed: dispatch next.
+                        return Ok(true);
                     }
-                } else if slots.len() < slot_cap
+                } else if st.slots.len() < st.slot_cap
                     && sched.pending_len() > 0
                 {
                     // Continuous batching mid-generation: every
@@ -1262,22 +1337,22 @@ impl ServeEngine {
                     // the budget is open for same-tenant prefills to
                     // join (capacity-gated through the scheduler's
                     // kv_free_blocks — a join never over-commits).
-                    let spare = if budget == 0 {
+                    let spare = if st.budget == 0 {
                         usize::MAX
                     } else {
                         // Charge every in-flight slot what THIS step
                         // will cost it (1 decode token, or its next
                         // prefill chunk) — in the PR-6 regime every
                         // slot charges exactly 1.
-                        let held: usize = slots.iter()
+                        let held: usize = st.slots.iter()
                             .map(|s| Self::slot_step_tokens(
                                 self.prefill_chunk, s))
                             .sum();
-                        budget.saturating_sub(held)
+                        st.budget.saturating_sub(held)
                     };
-                    let free = slot_cap - slots.len();
+                    let free = st.slot_cap - st.slots.len();
                     let joiners = sched.join_live(live, free, spare);
-                    self.seat(&mut slots, joiners, now);
+                    self.seat(&mut st.slots, joiners, st.now);
                 }
             }
 
@@ -1290,7 +1365,7 @@ impl ServeEngine {
             // with preemption off (drain-only) — the grower continues
             // CAPPED (ledgered overflow, never an over-commit).
             let chunk = self.prefill_chunk;
-            let grow_work: Vec<(u64, usize)> = slots.iter()
+            let grow_work: Vec<(u64, usize)> = st.slots.iter()
                 .filter_map(|s| {
                     if s.prefilled {
                         Some((s.req.id, 1))
@@ -1305,13 +1380,13 @@ impl ServeEngine {
             for (id, extra) in grow_work {
                 'tokens: for _ in 0..extra {
                     loop {
-                        let Some(i) = slots.iter()
+                        let Some(i) = st.slots.iter()
                             .position(|s| s.req.id == id)
                         else {
                             // evicted as another's victim
                             break 'tokens;
                         };
-                        if self.kv.grow(&mut slots[i].kv, 1) {
+                        if self.kv.grow(&mut st.slots[i].kv, 1) {
                             break;
                         }
                         // Under pressure the cache yields
@@ -1321,7 +1396,8 @@ impl ServeEngine {
                             continue;
                         }
                         let victim = if self.preempting() {
-                            Self::pick_victim(&slots, Some(id), now,
+                            Self::pick_victim(&st.slots, Some(id),
+                                              st.now,
                                               sched.decode_slack_s,
                                               chunk > 0)
                         } else {
@@ -1329,8 +1405,8 @@ impl ServeEngine {
                         };
                         match victim {
                             Some((v, _)) => {
-                                self.evict_slot(&mut slots, v, sched,
-                                                true);
+                                self.evict_slot(&mut st.slots, v,
+                                                sched, true);
                             }
                             None => {
                                 self.kv.overflow(1);
@@ -1342,20 +1418,20 @@ impl ServeEngine {
             }
 
             // ---- one iteration step over the in-flight batch ----
-            let tenant = slots[0].req.tenant;
+            let tenant = st.slots[0].req.tenant;
             // Freshly seated slots charge only their UNCACHED prompt
             // suffix — matched prefix KV is attached, not recomputed
             // (with no cache hit, prefill_tokens == the full prompt,
             // the PR-4 charge) — capped at one chunk when chunked
             // prefill is on.
-            let step_tokens: usize = slots.iter()
+            let step_tokens: usize = st.slots.iter()
                 .map(|s| Self::slot_step_tokens(chunk, s))
                 .sum();
             let (wall_step_s, swapped) =
                 self.forward_step(tenant, step_tokens)?;
             self.stats.steps += 1;
             self.events.set_step(self.stats.steps);
-            let step_s = match clock {
+            let step_s = match st.clock {
                 ClockModel::Measured => wall_step_s,
                 ClockModel::Analytic { swap_s, batch_s, token_s } => {
                     batch_s
@@ -1363,10 +1439,10 @@ impl ServeEngine {
                         + if swapped { swap_s } else { 0.0 }
                 }
             };
-            now += step_s;
-            last_step_s = step_s;
-            self.events.set_now(now);
-            self.occupancy.record(slots.len() as u64,
+            st.now += step_s;
+            st.last_step_s = step_s;
+            self.events.set_now(st.now);
+            self.occupancy.record(st.slots.len() as u64,
                                   step_tokens as u64);
             self.kv_timeline.record(
                 self.kv.used_blocks() as u64,
@@ -1377,67 +1453,67 @@ impl ServeEngine {
             // Advance every slot by one token; completed slots leave
             // the batch and settle their metrics.
             let mut i = 0;
-            while i < slots.len() {
-                if !slots[i].prefilled {
+            while i < st.slots.len() {
+                if !st.slots[i].prefilled {
                     if chunk > 0 {
                         // Chunked: this step computed one chunk of
                         // the prompt. A non-final chunk just records
                         // progress; the final chunk falls through to
                         // the PrefillEnd emission below.
-                        let owed = slots[i].prefill_tokens
-                            - slots[i].prefill_done;
+                        let owed = st.slots[i].prefill_tokens
+                            - st.slots[i].prefill_done;
                         let this = owed.min(chunk);
-                        slots[i].prefill_done += this;
+                        st.slots[i].prefill_done += this;
                         self.stats.prefill_chunks += 1;
                         self.events.emit(
                             EventKind::PrefillChunk,
-                            Some(slots[i].req.tenant.0),
-                            Some(slots[i].req.id), this as u64,
+                            Some(st.slots[i].req.tenant.0),
+                            Some(st.slots[i].req.id), this as u64,
                             (owed - this) as u64);
                         if owed > this {
                             i += 1;
                             continue; // more chunks owed
                         }
                     } else {
-                        slots[i].prefill_done =
-                            slots[i].prefill_tokens;
+                        st.slots[i].prefill_done =
+                            st.slots[i].prefill_tokens;
                     }
-                    slots[i].prefilled = true;
-                    if !slots[i].emit_first {
+                    st.slots[i].prefilled = true;
+                    if !st.slots[i].emit_first {
                         // Recompute replay: every token of this
                         // prefill was emitted in an earlier residency
                         // — nothing new leaves the engine, so TTFT
                         // stays settled and emission exactly-once.
                         self.events.emit(
                             EventKind::PrefillEnd,
-                            Some(slots[i].req.tenant.0),
-                            Some(slots[i].req.id), 0,
-                            slots[i].prefill_tokens as u64);
+                            Some(st.slots[i].req.tenant.0),
+                            Some(st.slots[i].req.id), 0,
+                            st.slots[i].prefill_tokens as u64);
                     } else {
-                        slots[i].first_token_s = now;
-                        let first_s =
-                            (now - slots[i].req.arrival_s).max(0.0);
+                        st.slots[i].first_token_s = st.now;
+                        let first_s = (st.now
+                            - st.slots[i].req.arrival_s).max(0.0);
                         self.ttft.record(name, first_s);
                         self.ttft.record("(all)", first_s);
                         self.events.emit(
                             EventKind::PrefillEnd,
-                            Some(slots[i].req.tenant.0),
-                            Some(slots[i].req.id), 1,
-                            slots[i].prefill_tokens as u64);
+                            Some(st.slots[i].req.tenant.0),
+                            Some(st.slots[i].req.id), 1,
+                            st.slots[i].prefill_tokens as u64);
                     }
                 } else {
-                    slots[i].remaining -= 1;
+                    st.slots[i].remaining -= 1;
                     self.events.emit(
                         EventKind::DecodeStep,
-                        Some(slots[i].req.tenant.0),
-                        Some(slots[i].req.id), 1,
-                        slots[i].remaining as u64);
+                        Some(st.slots[i].req.tenant.0),
+                        Some(st.slots[i].req.id), 1,
+                        st.slots[i].remaining as u64);
                 }
-                if slots[i].remaining > 0 {
+                if st.slots[i].remaining > 0 {
                     i += 1;
                     continue;
                 }
-                let mut s = slots.swap_remove(i);
+                let mut s = st.slots.swap_remove(i);
                 let seq = std::mem::take(&mut s.kv);
                 self.retire_seq(&s.req, seq);
                 // A preempted request's own fields were rewritten for
@@ -1454,25 +1530,25 @@ impl ServeEngine {
                         None => (s.first_token_s,
                                  s.req.decode_tokens),
                     };
-                let service_s = (now - s.dispatched_s).max(0.0);
-                let e2e_s = (now - s.req.arrival_s).max(0.0);
+                let service_s = (st.now - s.dispatched_s).max(0.0);
+                let e2e_s = (st.now - s.req.arrival_s).max(0.0);
                 self.service.record(name, service_s);
                 self.service.record("(all)", service_s);
                 self.e2e.record(name, e2e_s);
                 self.e2e.record("(all)", e2e_s);
                 if decode_total > 0 {
-                    let per_tok = (now - first_token_s).max(0.0)
+                    let per_tok = (st.now - first_token_s).max(0.0)
                         / decode_total as f64;
                     self.tpot.record(name, per_tok);
                     self.tpot.record("(all)", per_tok);
                 }
                 if s.req.deadline_s.is_finite() {
                     self.stats.deadline_total += 1;
-                    if now > s.req.absolute_deadline() {
+                    if st.now > s.req.absolute_deadline() {
                         self.stats.deadline_misses += 1;
                     }
                 }
-                self.timeline.record(now, 1,
+                self.timeline.record(st.now, 1,
                                      s.req.total_tokens() as u64);
                 self.stats.requests += 1;
                 self.events.emit(EventKind::Complete,
@@ -1480,9 +1556,70 @@ impl ServeEngine {
                                  (1 + decode_total) as u64, 0);
             }
         }
-        self.stats.virtual_s += now;
-        self.stats.wall_s += wall0.elapsed().as_secs_f64();
-        Ok(())
+        Ok(true)
+    }
+
+    /// Advertised-load snapshot for the cluster router: queue depth,
+    /// free KV blocks, and per-tenant warm radix-prefix tokens. Pure
+    /// observation — reading a replica's load never perturbs it.
+    pub fn load_snapshot(&self, sched: &OnlineScheduler,
+                         st: &IterState) -> LoadSnapshot {
+        let bt = self.kv.block_tokens();
+        let warm_tokens = (0..self.pool.len())
+            .map(|i| {
+                if self.prefix.enabled() {
+                    let (full, tail) =
+                        self.prefix.cover(TenantId(i as u32), bt);
+                    full * bt + tail
+                } else {
+                    0
+                }
+            })
+            .collect();
+        LoadSnapshot {
+            pending: sched.pending_len(),
+            in_flight: st.slots.len(),
+            free_blocks: if self.kv.is_bounded() {
+                self.kv.available_blocks()
+            } else {
+                usize::MAX
+            },
+            warm_tokens,
+        }
+    }
+
+    /// Failover evacuation: evict EVERY seated slot with the
+    /// `Failover` cause and return the requeue-ready requests in seat
+    /// order. Each eviction runs the full PR-5/PR-7 discipline — KV
+    /// released (shared-prefix tail donated to the radix cache),
+    /// resume entry pinned, Preempt event (a = 2) emitted on THIS
+    /// engine's stream — so a survivor replays them through the
+    /// ordinary `requeue` path with exactly-once emission.
+    pub fn evacuate(&mut self, st: &mut IterState) -> Vec<Request> {
+        let mut out = Vec::with_capacity(st.slots.len());
+        while !st.slots.is_empty() {
+            let idx = st.slots.len() - 1;
+            out.push(self.evict_core(&mut st.slots, idx,
+                                     EvictCause::Failover));
+        }
+        out.reverse(); // evicted back-to-front; restore seat order
+        out
+    }
+
+    /// Drain this engine's recompute-on-resume state for migration,
+    /// sorted by request id so the transfer is deterministic.
+    pub fn export_resume(&mut self) -> Vec<(u64, ResumeInfo)> {
+        let mut v: Vec<_> =
+            std::mem::take(&mut self.resume).into_iter().collect();
+        v.sort_by_key(|(id, _)| *id);
+        v
+    }
+
+    /// Adopt migrated resume state: the survivor settles TTFT/TPOT of
+    /// failed-over requests against their ORIGINAL stamps, exactly as
+    /// if the preemption had happened locally.
+    pub fn import_resume(&mut self, entries: Vec<(u64, ResumeInfo)>) {
+        self.resume.extend(entries);
     }
 
     pub fn throughput_req_per_s(&self) -> f64 {
@@ -1861,6 +1998,48 @@ impl ServeEngine {
         }
         Json::Obj(root)
     }
+}
+
+/// Loop-carried state of an iteration-level run, carved out of
+/// `serve_iterative` so an external driver (the multi-replica
+/// cluster) can interleave steps of several engines on one merged
+/// virtual clock. Fields are private — same-module engine code is
+/// the only writer; drivers observe through the accessors.
+pub struct IterState {
+    wall0: Instant,
+    slot_cap: usize,
+    budget: usize,
+    now: f64,
+    slots: Vec<Slot>,
+    last_step_s: f64,
+    clock: ClockModel,
+}
+
+impl IterState {
+    /// Current virtual time of this run.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Sequences currently seated in the batch.
+    pub fn in_flight(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+/// What a replica advertises to the cluster router. Snapshot-in-time:
+/// taken at the routed request's arrival instant on the merged clock.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadSnapshot {
+    /// Admitted-but-unseated requests queued on the replica.
+    pub pending: usize,
+    /// Sequences currently seated in the replica's batch.
+    pub in_flight: usize,
+    /// Free KV blocks (`usize::MAX` for an unbounded pool).
+    pub free_blocks: usize,
+    /// Per-tenant warm radix-prefix tokens (indexed by tenant id);
+    /// all zeros with the prefix cache off.
+    pub warm_tokens: Vec<usize>,
 }
 
 /// One in-flight sequence of the iteration-level loop.

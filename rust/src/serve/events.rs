@@ -695,6 +695,44 @@ impl Events {
             b.borrow().recorder.events.clone()
         })
     }
+
+    /// Cluster failover, killed-replica side: forget the request's
+    /// audit state on THIS bus. The id migrated to a survivor, so
+    /// this stream legitimately ends mid-lifecycle for it — and any
+    /// LATER event for the id here trips the auditor's
+    /// "event before arrival" check, which is exactly the
+    /// nothing-after-migration rule.
+    pub fn migrate_out(&self, id: u64) {
+        if let Some(bus) = &self.0 {
+            bus.borrow_mut().auditor.req.remove(&id);
+        }
+    }
+
+    /// Cluster failover, survivor side: adopt a migrated request's
+    /// audit state as if its arrival and admission had happened here.
+    /// `awaiting_resume` marks ids with a live recompute-on-resume
+    /// entry (evacuated seats, and earlier preemptions still
+    /// pending); `first_token` marks ids whose unique first-token
+    /// emission already happened on the dead replica — a duplicate
+    /// `PrefillEnd` (a = 1) on the survivor then trips
+    /// "second first-token" ONLINE, the exactly-once half of the
+    /// failover contract.
+    pub fn adopt(&self, id: u64, arrival_s: f64,
+                 awaiting_resume: bool, first_token: bool) {
+        if let Some(bus) = &self.0 {
+            bus.borrow_mut().auditor.req.insert(id, ReqAudit {
+                arrival_s,
+                admitted: true,
+                seated: false,
+                completed: false,
+                awaiting_resume,
+                first_token,
+                dispatches: 0,
+                prefill_left: 0,
+                chunked: false,
+            });
+        }
+    }
 }
 
 // ---------------------------------------------------------------- spans
@@ -1010,6 +1048,277 @@ pub fn to_chrome_trace(events: &[EngineEvent],
 
     let mut root = BTreeMap::new();
     root.insert("traceEvents".into(), Json::Arr(trace));
+    root.insert("displayTimeUnit".into(), Json::Str("ms".into()));
+    Json::Obj(root)
+}
+
+// ------------------------------------------------------------- cluster
+
+/// Merge per-replica event streams into one globally-ordered stream
+/// of `(replica, event)` pairs. Each stream is keyed by its RUNNING
+/// MAX of `t_s` (Arrival is the one kind allowed to point backwards,
+/// and it never advances a stream's clock), so per-replica emission
+/// order is preserved exactly and the merged non-Arrival clock is
+/// non-decreasing. Ties break by replica id, then per-replica index —
+/// fully deterministic.
+pub fn merge_replica_streams(streams: &[Vec<EngineEvent>])
+                             -> Vec<(u32, EngineEvent)> {
+    let mut keyed: Vec<(f64, u32, usize, EngineEvent)> = Vec::new();
+    for (rid, evs) in streams.iter().enumerate() {
+        let mut key = 0.0f64;
+        for (i, ev) in evs.iter().enumerate() {
+            key = key.max(ev.t_s);
+            keyed.push((key, rid as u32, i, *ev));
+        }
+    }
+    keyed.sort_by(|x, y| {
+        x.0.total_cmp(&y.0)
+            .then(x.1.cmp(&y.1))
+            .then(x.2.cmp(&y.2))
+    });
+    keyed.into_iter().map(|(_, r, _, ev)| (r, ev)).collect()
+}
+
+/// Cross-replica invariant auditor for the merged cluster stream.
+/// Each replica's own [`EventAuditor`] already enforces the
+/// single-engine causal rules online; this pass re-audits the MERGED
+/// interleaving for the properties that only exist across replicas:
+///
+///   * every request arrives once and is admitted once, cluster-wide
+///     (failover re-dispatch rides `requeue`, which re-emits
+///     neither);
+///   * a request is resident on at most ONE replica at a time —
+///     `Dispatch` claims residency, `Preempt`/`Complete` release it,
+///     and every mid-flight event must come from the owner;
+///   * first-token emission (`PrefillEnd` with a == 1) and
+///     `Complete` each happen exactly once globally — the
+///     exactly-once failover contract;
+///   * the merged non-Arrival clock is non-decreasing (the merge is
+///     a real single-timeline interleaving, not N clocks glued
+///     together);
+///   * at finalize, every arrived request completed and no residency
+///     is left behind.
+#[derive(Debug, Default)]
+pub struct ClusterAuditor {
+    /// Per-request cluster-wide ledger: (admits, first-tokens,
+    /// completions) seen so far.
+    req: BTreeMap<u64, (u64, u64, u64)>,
+    /// Owner replica of each currently-seated request.
+    resident: BTreeMap<u64, u32>,
+    last_t: f64,
+    violations: Vec<String>,
+    violation_count: u64,
+}
+
+impl ClusterAuditor {
+    /// Audit a full merged stream (convenience for tests/reports).
+    pub fn audit(merged: &[(u32, EngineEvent)]) -> ClusterAuditor {
+        let mut a = ClusterAuditor::default();
+        for (replica, ev) in merged {
+            a.check(*replica, ev);
+        }
+        a.finalize();
+        a
+    }
+
+    pub fn violation_count(&self) -> u64 {
+        self.violation_count
+    }
+
+    pub fn violations(&self) -> &[String] {
+        &self.violations
+    }
+
+    fn violate(&mut self, msg: String) {
+        self.violation_count += 1;
+        if self.violations.len() < MAX_RECORDED_VIOLATIONS {
+            self.violations.push(msg);
+        }
+    }
+
+    /// Residency gate: the event must come from the request's owner.
+    fn owner_check(&mut self, replica: u32, ev: &EngineEvent)
+                   -> bool {
+        let id = ev.request.unwrap_or(u64::MAX);
+        match self.resident.get(&id) {
+            Some(&r) if r == replica => true,
+            Some(&r) => {
+                self.violate(format!(
+                    "request {id}: {} on replica {replica} while \
+                     resident on replica {r}", ev.kind.name()));
+                false
+            }
+            None => {
+                self.violate(format!(
+                    "request {id}: {} on replica {replica} while \
+                     resident nowhere", ev.kind.name()));
+                false
+            }
+        }
+    }
+
+    pub fn check(&mut self, replica: u32, ev: &EngineEvent) {
+        use EventKind::*;
+        if ev.kind != Arrival {
+            if ev.t_s < self.last_t {
+                self.violate(format!(
+                    "merged clock: {} on replica {replica} at \
+                     t={:.6} before prior event t={:.6}",
+                    ev.kind.name(), ev.t_s, self.last_t));
+            }
+            self.last_t = self.last_t.max(ev.t_s);
+        }
+        let id = ev.request.unwrap_or(u64::MAX);
+        match ev.kind {
+            Arrival => {
+                if self.req.contains_key(&id) {
+                    self.violate(format!(
+                        "request {id}: second cluster-wide arrival \
+                         (replica {replica})"));
+                } else {
+                    self.req.insert(id, (0, 0, 0));
+                }
+            }
+            Admit => match self.req.get_mut(&id) {
+                Some(r) => {
+                    r.0 += 1;
+                    if r.0 > 1 {
+                        self.violate(format!(
+                            "request {id}: admitted on two replicas"));
+                    }
+                }
+                None => self.violate(format!(
+                    "request {id}: admit before arrival \
+                     (replica {replica})")),
+            },
+            Dispatch => {
+                if let Some(&r) = self.resident.get(&id) {
+                    self.violate(format!(
+                        "request {id}: dispatched on replica \
+                         {replica} while resident on replica {r}"));
+                } else if self.req.get(&id).is_some_and(|r| r.2 > 0) {
+                    self.violate(format!(
+                        "request {id}: dispatched after completion \
+                         (replica {replica})"));
+                } else {
+                    self.resident.insert(id, replica);
+                }
+            }
+            Preempt => {
+                if self.owner_check(replica, ev) {
+                    self.resident.remove(&id);
+                }
+            }
+            Complete => {
+                if self.owner_check(replica, ev) {
+                    self.resident.remove(&id);
+                }
+                if let Some(r) = self.req.get_mut(&id) {
+                    r.2 += 1;
+                    if r.2 > 1 {
+                        self.violate(format!(
+                            "request {id}: second cluster-wide \
+                             completion (replica {replica})"));
+                    }
+                }
+            }
+            PrefillEnd => {
+                self.owner_check(replica, ev);
+                if ev.a == 1 {
+                    if let Some(r) = self.req.get_mut(&id) {
+                        r.1 += 1;
+                        if r.1 > 1 {
+                            self.violate(format!(
+                                "request {id}: second cluster-wide \
+                                 first token (replica {replica})"));
+                        }
+                    }
+                }
+            }
+            PrefillStart | PrefillChunk | DecodeStep | Resume => {
+                self.owner_check(replica, ev);
+            }
+            // Reject concerns a pending (non-resident) request;
+            // everything else is replica-local state with no
+            // cross-replica claim to check.
+            _ => {}
+        }
+    }
+
+    pub fn finalize(&mut self) {
+        let incomplete = self.req.values()
+            .filter(|r| r.2 == 0).count();
+        if incomplete > 0 {
+            self.violate(format!(
+                "{incomplete} arrived requests never completed \
+                 cluster-wide"));
+        }
+        if !self.resident.is_empty() {
+            self.violate(format!(
+                "{} requests still resident at finish",
+                self.resident.len()));
+        }
+    }
+}
+
+/// One JSON object per line WITH a `replica` field — the
+/// `--replicas > 1` flavour of [`to_jsonl`]. Single-engine runs keep
+/// using [`to_jsonl`], so their trace files stay byte-identical to
+/// pre-cluster builds.
+pub fn to_jsonl_cluster(merged: &[(u32, EngineEvent)]) -> String {
+    let mut out = String::new();
+    for (replica, ev) in merged {
+        let mut j = ev.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("replica".into(), Json::Num(*replica as f64));
+        }
+        out.push_str(&j.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Cluster flavour of [`to_chrome_trace`]: each replica's stream is
+/// laid out by the single-engine exporter, then shifted into the
+/// replica's own process-id block — pids 3R, 3R+1, 3R+2 carry
+/// replica R's engine/tenants/slots groups, with process names
+/// prefixed `rR` — so N replicas render side-by-side in one
+/// Perfetto view.
+pub fn to_chrome_trace_cluster(streams: &[Vec<EngineEvent>],
+                               tenant_names: &[String]) -> Json {
+    let mut all: Vec<Json> = Vec::new();
+    for (rid, evs) in streams.iter().enumerate() {
+        let base = (rid * 3) as f64;
+        let Json::Obj(mut root) = to_chrome_trace(evs, tenant_names)
+        else {
+            unreachable!("to_chrome_trace returns an object");
+        };
+        let Some(Json::Arr(trace)) = root.remove("traceEvents")
+        else {
+            unreachable!("trace root carries traceEvents");
+        };
+        for mut e in trace {
+            if let Json::Obj(m) = &mut e {
+                if let Some(Json::Num(p)) = m.get_mut("pid") {
+                    *p += base;
+                }
+                let is_pname = m.get("name").and_then(Json::as_str)
+                    == Some("process_name");
+                if is_pname {
+                    if let Some(Json::Obj(args)) = m.get_mut("args") {
+                        if let Some(Json::Str(n)) =
+                            args.get_mut("name")
+                        {
+                            *n = format!("r{rid} {n}");
+                        }
+                    }
+                }
+            }
+            all.push(e);
+        }
+    }
+    let mut root = BTreeMap::new();
+    root.insert("traceEvents".into(), Json::Arr(all));
     root.insert("displayTimeUnit".into(), Json::Str("ms".into()));
     Json::Obj(root)
 }

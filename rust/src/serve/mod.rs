@@ -73,6 +73,24 @@
 //!     least-urgent decoding slot is evicted, its blocks freed, and
 //!     the request re-queued with recompute-on-resume, emitted-token
 //!     accounting staying exactly-once).
+//!   * [`router`]    — cluster ingress routing. PaCA replicas pin
+//!     zero adapter bytes, so any replica can serve any tenant; the
+//!     [`router::Router`] picks one purely from advertised load
+//!     signals (queue depth, free KV blocks, radix-prefix warmth)
+//!     under `--router shard|least-loaded|warmth`, with overflow
+//!     spill and dead-shard failover.
+//!   * [`cluster`]   — the multi-replica serving cluster
+//!     (`--replicas N`): N independent engines (own registry, KV
+//!     pool, prefix cache, event stream) stepped on ONE merged
+//!     virtual-clock event loop — deterministic and
+//!     property-testable — with router-owned global ingress,
+//!     `--kill-replica R@T` failover that replays a dead replica's
+//!     work on the least-loaded survivor through the existing
+//!     requeue + resume-ledger discipline (first tokens and
+//!     completions stay exactly-once), and the merged-stream
+//!     [`events::ClusterAuditor`] checking the cross-replica
+//!     invariants. `--replicas 1` reduces bit-for-bit to
+//!     `serve_iterative`.
 //!   * [`cost`]      — analytic serving-cost extension of `simulator`
 //!     (A100/Gaudi2): merged-PaCA vs unmerged-LoRA throughput,
 //!     adapter-swap amortization, the M/D/1 queueing-delay term, the
@@ -86,11 +104,13 @@
 //! (main.rs), which synthesizes the trace/adapters on first run and
 //! serves it through the online pipeline.
 
+pub mod cluster;
 pub mod cost;
 pub mod engine;
 pub mod events;
 pub mod kv;
 pub mod prefix;
 pub mod registry;
+pub mod router;
 pub mod scheduler;
 pub mod trace;

@@ -1,0 +1,296 @@
+//! Cluster ingress routing: which replica serves a request.
+//!
+//! PaCA makes every replica equally CAPABLE of serving every tenant —
+//! adapters hot-splice into the shared frozen base in O(r·d_out) and
+//! pin zero resident bytes, so there is no adapter-placement
+//! constraint to solve. What replicas DO differ in is observable
+//! load state: queue depth, free KV blocks, and radix-prefix warmth.
+//! The [`Router`] picks replicas from exactly those three advertised
+//! signals (a [`LoadSnapshot`] per replica, taken at the request's
+//! arrival instant on the merged virtual clock), under one of three
+//! policies:
+//!
+//!   * `shard` — pure tenant-shard hash affinity: FNV-1a of the
+//!     tenant name modulo N. Deterministic, perfectly cache-warm per
+//!     tenant, and blind to load — the round-robin-by-tenant
+//!     baseline the bench's flash-crowd section beats.
+//!   * `least-loaded` — global minimum queue depth (pending +
+//!     in-flight), ties to the most free KV blocks, then lowest
+//!     replica id. Maximal load spreading, warmth-blind.
+//!   * `warmth` — follow the tenant's warm radix chain when any
+//!     replica has one (argmax warm tokens); otherwise shard
+//!     affinity, with an overflow spill to the least-loaded replica
+//!     when the home shard is congested (depth at least twice the
+//!     batch margin AND strictly above the cluster minimum — a
+//!     loaded-but-balanced cluster does not spill).
+//!
+//! A dead home shard always re-routes to the least-loaded survivor
+//! (the `failover` counter), under every policy.
+
+use crate::serve::engine::LoadSnapshot;
+use crate::util::rng::fnv1a;
+
+/// Replica-selection policy for cluster ingress.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Tenant-shard hash affinity (FNV-1a(name) mod N).
+    Shard,
+    /// Minimum queue depth, ties to free KV blocks.
+    LeastLoaded,
+    /// Warm-chain affinity with shard fallback and overflow spill.
+    Warmth,
+}
+
+impl RouterPolicy {
+    pub const ALL: [RouterPolicy; 3] = [
+        RouterPolicy::Shard,
+        RouterPolicy::LeastLoaded,
+        RouterPolicy::Warmth,
+    ];
+
+    pub fn parse(s: &str) -> Option<RouterPolicy> {
+        match s {
+            "shard" => Some(RouterPolicy::Shard),
+            "least-loaded" => Some(RouterPolicy::LeastLoaded),
+            "warmth" => Some(RouterPolicy::Warmth),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RouterPolicy::Shard => "shard",
+            RouterPolicy::LeastLoaded => "least-loaded",
+            RouterPolicy::Warmth => "warmth",
+        }
+    }
+}
+
+/// Where routed requests went, by decision kind. One increment per
+/// routed request; `failover` additionally counts each killed
+/// replica's evacuated/re-routed requests at the cluster layer.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct RouterStats {
+    /// Routed to the tenant's home shard.
+    pub home: u64,
+    /// Warmth policy followed a warm chain away from home.
+    pub warm: u64,
+    /// Least-loaded policy picked a non-home replica.
+    pub steal: u64,
+    /// Warmth policy spilled a congested home to least-loaded.
+    pub spill: u64,
+    /// Home shard dead at routing time — re-routed to a survivor.
+    pub failover: u64,
+}
+
+/// The cluster's ingress router. Pure over its inputs: a decision is
+/// a function of (tenant name, advertised loads) only, so identical
+/// traces route identically — the property tests replay on this.
+#[derive(Debug)]
+pub struct Router {
+    policy: RouterPolicy,
+    /// Congestion margin for the warmth policy's spill rule — the
+    /// cluster passes the per-replica batch size, so "congested"
+    /// means two-plus full batches deep.
+    margin: usize,
+    pub stats: RouterStats,
+}
+
+/// Queue depth a replica advertises: everything admitted or seated.
+fn depth(l: &LoadSnapshot) -> usize {
+    l.pending + l.in_flight
+}
+
+impl Router {
+    pub fn new(policy: RouterPolicy, margin: usize) -> Router {
+        Router { policy, margin: margin.max(1),
+                 stats: RouterStats::default() }
+    }
+
+    pub fn policy(&self) -> RouterPolicy {
+        self.policy
+    }
+
+    /// The tenant's home shard by name hash — stable across runs,
+    /// replica counts permitting, and independent of tenant-id
+    /// assignment order.
+    pub fn home_shard(&self, tenant_name: &str, n: usize) -> usize {
+        (fnv1a(tenant_name.as_bytes()) % n as u64) as usize
+    }
+
+    /// Least-loaded ALIVE replica: minimum queue depth, ties to the
+    /// most free KV blocks, then lowest id. Panics if no replica is
+    /// alive (the cluster never routes after the last kill — kills
+    /// are rejected by validation when they would empty the
+    /// cluster).
+    pub fn least_loaded(loads: &[Option<LoadSnapshot>]) -> usize {
+        loads.iter().enumerate()
+            .filter_map(|(i, l)| l.as_ref().map(|l| (i, l)))
+            .min_by_key(|(i, l)| {
+                (depth(l), std::cmp::Reverse(l.free_blocks), *i)
+            })
+            .map(|(i, _)| i)
+            .expect("route with no alive replica")
+    }
+
+    /// Pick a replica for a request of tenant `tenant_id` named
+    /// `tenant_name`, given each replica's advertised load (`None` =
+    /// dead). Increments exactly one stats counter per call.
+    pub fn route(&mut self, tenant_name: &str, tenant_id: u32,
+                 loads: &[Option<LoadSnapshot>]) -> usize {
+        let home = self.home_shard(tenant_name, loads.len());
+        let Some(home_load) = &loads[home] else {
+            self.stats.failover += 1;
+            return Self::least_loaded(loads);
+        };
+        match self.policy {
+            RouterPolicy::Shard => {
+                self.stats.home += 1;
+                home
+            }
+            RouterPolicy::LeastLoaded => {
+                let pick = Self::least_loaded(loads);
+                if pick == home {
+                    self.stats.home += 1;
+                } else {
+                    self.stats.steal += 1;
+                }
+                pick
+            }
+            RouterPolicy::Warmth => {
+                // Follow the warmest radix chain for this tenant —
+                // highest advertised warm tokens, ties to lowest id.
+                let (best_w, best_i) = loads.iter().enumerate()
+                    .filter_map(|(i, l)| l.as_ref().map(|l| (i, l)))
+                    .map(|(i, l)| {
+                        let w = l.warm_tokens
+                            .get(tenant_id as usize)
+                            .copied().unwrap_or(0);
+                        (w, i)
+                    })
+                    .max_by_key(|&(w, i)| (w, std::cmp::Reverse(i)))
+                    .expect("route with no alive replica");
+                if best_w > 0 {
+                    if best_i == home {
+                        self.stats.home += 1;
+                    } else {
+                        self.stats.warm += 1;
+                    }
+                    return best_i;
+                }
+                // No warm chain anywhere: shard affinity, unless the
+                // home is congested — then overflow-spill to the
+                // least-loaded replica (this is what the flash-crowd
+                // bench measures).
+                let home_depth = depth(home_load);
+                let min_depth = loads.iter().flatten()
+                    .map(depth).min().unwrap_or(0);
+                if home_depth >= 2 * self.margin
+                    && home_depth > min_depth
+                {
+                    self.stats.spill += 1;
+                    Self::least_loaded(loads)
+                } else {
+                    self.stats.home += 1;
+                    home
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(pending: usize, in_flight: usize, free: usize,
+            warm: &[usize]) -> Option<LoadSnapshot> {
+        Some(LoadSnapshot { pending, in_flight, free_blocks: free,
+                            warm_tokens: warm.to_vec() })
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in RouterPolicy::ALL {
+            assert_eq!(RouterPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(RouterPolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn shard_is_pure_name_hash() {
+        let mut r = Router::new(RouterPolicy::Shard, 8);
+        let loads = vec![load(9, 9, 0, &[]), load(0, 0, 64, &[])];
+        let home = r.home_shard("tenant-a", 2);
+        // Load-blind: the congested home still wins.
+        assert_eq!(r.route("tenant-a", 0, &loads), home);
+        assert_eq!(r.route("tenant-a", 0, &loads), home);
+        assert_eq!(r.stats.home, 2);
+        assert_eq!(r.stats.steal + r.stats.spill + r.stats.warm, 0);
+    }
+
+    #[test]
+    fn least_loaded_breaks_ties_on_free_blocks_then_id() {
+        let mut r = Router::new(RouterPolicy::LeastLoaded, 8);
+        // Equal depth: more free KV blocks wins.
+        let loads = vec![load(1, 1, 4, &[]), load(2, 0, 16, &[]),
+                         load(2, 1, 64, &[])];
+        assert_eq!(r.route("t", 0, &loads), 1);
+        // Fully equal: lowest id wins.
+        let loads = vec![load(1, 0, 8, &[]), load(1, 0, 8, &[])];
+        assert_eq!(r.route("t", 0, &loads), 0);
+    }
+
+    #[test]
+    fn warmth_follows_the_warm_chain() {
+        let mut r = Router::new(RouterPolicy::Warmth, 8);
+        let home = r.home_shard("t0", 3);
+        // Replica 2 holds t0's warm prefix: it wins regardless of
+        // shard affinity or load.
+        let loads = vec![load(5, 5, 0, &[0, 64]),
+                         load(0, 0, 64, &[0, 0]),
+                         load(3, 3, 8, &[48, 0])];
+        assert_eq!(r.route("t0", 0, &loads), 2);
+        if home == 2 {
+            assert_eq!(r.stats.home, 1);
+        } else {
+            assert_eq!(r.stats.warm, 1);
+        }
+        // Tenant 1's warmth lives on replica 0.
+        assert_eq!(r.route("t1", 1, &loads), 0);
+    }
+
+    #[test]
+    fn warmth_cold_spills_only_congested_unbalanced_home() {
+        let mut r = Router::new(RouterPolicy::Warmth, 2);
+        let n = 2;
+        let home = r.home_shard("t0", n);
+        let other = 1 - home;
+        // Cold everywhere, home shallow: stays home.
+        let mut loads = vec![load(0, 0, 64, &[0]), load(0, 0, 64, &[0])];
+        assert_eq!(r.route("t0", 0, &loads), home);
+        assert_eq!(r.stats.spill, 0);
+        // Home at 2×margin with an emptier peer: spills least-loaded.
+        loads[home] = load(3, 1, 64, &[0]);
+        assert_eq!(r.route("t0", 0, &loads), other);
+        assert_eq!(r.stats.spill, 1);
+        // Equally deep everywhere: congested but balanced, no spill.
+        loads[other] = load(2, 2, 64, &[0]);
+        assert_eq!(r.route("t0", 0, &loads), home);
+        assert_eq!(r.stats.spill, 1);
+    }
+
+    #[test]
+    fn dead_home_fails_over_to_least_loaded_survivor() {
+        for policy in RouterPolicy::ALL {
+            let mut r = Router::new(policy, 8);
+            let home = r.home_shard("t0", 2);
+            let mut loads = vec![load(0, 0, 64, &[0]),
+                                 load(0, 0, 64, &[0])];
+            loads[home] = None;
+            assert_eq!(r.route("t0", 0, &loads), 1 - home,
+                       "{}", policy.name());
+            assert_eq!(r.stats.failover, 1, "{}", policy.name());
+        }
+    }
+}

@@ -666,6 +666,52 @@ impl OnlineScheduler {
         self.future.iter().rev()
     }
 
+    /// Cluster ingress: hand this scheduler a request the ROUTER
+    /// assigned to it. Inserts into the not-yet-admitted tail at the
+    /// request's arrival time; among equal arrivals, earlier-injected
+    /// pops first, so the router's delivery order is the tiebreak —
+    /// exactly the stable-sort rule `new` applies to a whole trace
+    /// (injecting a full trace one request at a time reproduces
+    /// `new`'s future vector bit-for-bit).
+    pub fn inject(&mut self, r: Request) {
+        assert!(r.tenant.index() < self.pending.len(),
+                "tenant id {} outside pool of {}", r.tenant.0,
+                self.pending.len());
+        // `future` is descending by arrival; find the first index
+        // whose arrival is ≤ ours and insert before it, leaving
+        // already-present equal arrivals at higher pop priority.
+        let at = self.future
+            .partition_point(|x| x.arrival_s > r.arrival_s);
+        self.future.insert(at, r);
+    }
+
+    /// Failover: drain every admitted-but-unseated request, in
+    /// admission order, for re-injection on a survivor. The queues
+    /// and the pending count are left empty; admission seq state is
+    /// untouched (seqs are per-scheduler and never compared across
+    /// replicas).
+    pub fn drain_pending(&mut self) -> Vec<Request> {
+        let mut out: Vec<(u64, Request)> = Vec::new();
+        for q in &mut self.pending {
+            while let Some((seq, r)) = q.pop() {
+                out.push((seq, r));
+            }
+        }
+        out.sort_by_key(|(seq, _)| *seq);
+        self.pending_count = 0;
+        out.into_iter().map(|(_, r)| r).collect()
+    }
+
+    /// Failover: drain every not-yet-admitted request in arrival
+    /// order. These were routed to a now-dead replica but never
+    /// arrived (no events emitted), so the cluster returns them to
+    /// global ingress for fresh routing.
+    pub fn drain_future(&mut self) -> Vec<Request> {
+        let mut v = std::mem::take(&mut self.future);
+        v.reverse();
+        v
+    }
+
     /// Slo-aware tenant choice: earliest-deadline-first on each
     /// tenant's tightest slack (decode-adjusted: remaining decode work
     /// tightens a request's effective deadline — see [`PendingQueue`]),

@@ -36,6 +36,53 @@ const TAIL_CAP: usize = 64;
 /// session when `chat_turns ≥ 2`.
 const CHAT_THINK_S: f64 = 0.25;
 
+/// Instantaneous-rate multiplier inside a flash-crowd window.
+const FLASH_FACTOR: f64 = 8.0;
+
+/// A flash window spans this fraction of the trace's nominal length.
+const FLASH_WINDOW_FRAC: f64 = 1.0 / 8.0;
+
+/// Peak-to-mean swing of the diurnal sinusoid (rate varies in
+/// [1 − swing, 1 + swing] · λ across one nominal-span period).
+const DIURNAL_SWING: f64 = 0.75;
+
+/// Long-horizon shape of the arrival rate (`--arrival-pattern`).
+/// Orthogonal to `burstiness`, which models short-range clumping;
+/// these modulate the MEAN rate over the whole trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ArrivalPattern {
+    /// Constant mean rate — the historical generator, bit for bit.
+    #[default]
+    Steady,
+    /// One sinusoidal period over the trace's nominal span: a slow
+    /// peak-and-trough load curve.
+    Diurnal,
+    /// An 8× rate spike in one window ~1/8 of the nominal span wide,
+    /// centered at a point drawn (from the pattern's own rng stream)
+    /// uniformly in the middle half of the trace — the load shape
+    /// that separates load-aware routing from pure shard hashing.
+    Flash,
+}
+
+impl ArrivalPattern {
+    pub fn parse(s: &str) -> Option<ArrivalPattern> {
+        match s {
+            "steady" => Some(ArrivalPattern::Steady),
+            "diurnal" => Some(ArrivalPattern::Diurnal),
+            "flash" => Some(ArrivalPattern::Flash),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ArrivalPattern::Steady => "steady",
+            ArrivalPattern::Diurnal => "diurnal",
+            ArrivalPattern::Flash => "flash",
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct TraceSpec {
     pub n_requests: usize,
@@ -82,6 +129,12 @@ pub struct TraceSpec {
     /// conversation re-hitting its own growing prefix. 0 or 1 = the
     /// historical single-turn shape, bit-for-bit.
     pub chat_turns: usize,
+    /// Long-horizon arrival-rate shape. `Steady` draws nothing from
+    /// the pattern stream and reproduces old seeds bit-for-bit;
+    /// `Diurnal`/`Flash` retime the SAME requests (tenants, prompts,
+    /// deadlines and decode lengths are untouched — only arrival
+    /// instants move).
+    pub arrival_pattern: ArrivalPattern,
     pub seed: u64,
 }
 
@@ -91,7 +144,9 @@ impl Default for TraceSpec {
                     zipf_s: 1.1, req_per_s: 200.0, burstiness: 1.0,
                     deadline_ms: 0.0, decode_tokens: 0,
                     shared_prefix_tokens: 0, prompt_tail: 0.0,
-                    chat_turns: 0, seed: 42 }
+                    chat_turns: 0,
+                    arrival_pattern: ArrivalPattern::Steady,
+                    seed: 42 }
     }
 }
 
@@ -142,10 +197,44 @@ pub fn synthesize(spec: &TraceSpec) -> Trace {
     // differs ONLY in the stretched lengths, and tail-0 specs draw
     // nothing from it, reproducing old traces bit-for-bit.
     let mut tail_rng = Rng::for_tag(spec.seed, "serve/trace/tail");
+    // Pattern parameters (the flash window's center) draw from their
+    // own stream: `Steady` consumes nothing from it and modulates
+    // nothing, so existing seeds reproduce their old traces
+    // bit-for-bit, and flash/diurnal leave every non-time draw of
+    // the main/decode/tail streams untouched.
+    let mut pat_rng = Rng::for_tag(spec.seed, "serve/trace/pattern");
     let zipf = Zipf::new(spec.n_tenants, spec.zipf_s);
     let mut pool = TenantPool::new();
     let rate = spec.req_per_s.max(1e-9);
     let b = spec.burstiness.max(1.0);
+    // The shape is laid out over the trace's NOMINAL span (expected
+    // length at the unmodulated mean rate) — the real span is only
+    // known after generation.
+    let nominal_span = spec.n_requests as f64 / rate;
+    let flash_center = match spec.arrival_pattern {
+        ArrivalPattern::Flash => {
+            nominal_span * (0.25 + 0.5 * pat_rng.next_f64())
+        }
+        _ => 0.0,
+    };
+    let shape = |t: f64| -> f64 {
+        match spec.arrival_pattern {
+            ArrivalPattern::Steady => 1.0,
+            ArrivalPattern::Diurnal => {
+                let phase = 2.0 * std::f64::consts::PI * t
+                    / nominal_span.max(1e-9);
+                1.0 + DIURNAL_SWING * phase.sin()
+            }
+            ArrivalPattern::Flash => {
+                let half = nominal_span * FLASH_WINDOW_FRAC / 2.0;
+                if (t - flash_center).abs() <= half {
+                    FLASH_FACTOR
+                } else {
+                    1.0
+                }
+            }
+        }
+    };
     let mut t = 0.0f64;
     let requests = (0..spec.n_requests as u64).map(|id| {
         // Exponential inter-arrival at the (possibly burst-modulated)
@@ -160,7 +249,7 @@ pub fn synthesize(spec: &TraceSpec) -> Trace {
             }
         } else {
             rate
-        };
+        } * shape(t);
         let u = rng.next_f64().max(1e-12);
         t += -u.ln() / lambda;
         let tenant = pool.intern(&tenant_name(zipf.sample(&mut rng)));
@@ -539,6 +628,86 @@ mod tests {
             assert!((a.arrival_s - b.arrival_s).abs() < 1e-9);
         }
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn arrival_patterns_retime_without_perturbing_the_draws() {
+        let spec = TraceSpec { n_requests: 400, decode_tokens: 8,
+                               deadline_ms: 50.0,
+                               ..Default::default() };
+        let steady = synthesize(&spec);
+        for pattern in [ArrivalPattern::Diurnal,
+                        ArrivalPattern::Flash] {
+            let shaped = synthesize(&TraceSpec {
+                arrival_pattern: pattern, ..spec.clone() });
+            let mut moved = 0;
+            for (a, b) in shaped.requests.iter()
+                .zip(&steady.requests)
+            {
+                // Only the clock moves: same tenants, prompts,
+                // deadline widths and decode lengths in the same
+                // order.
+                assert_eq!(a.tenant, b.tenant, "{}", pattern.name());
+                assert_eq!(a.tokens, b.tokens);
+                assert_eq!(a.decode_tokens, b.decode_tokens);
+                assert!((a.deadline_s - b.deadline_s).abs() < 1e-12);
+                if (a.arrival_s - b.arrival_s).abs() > 1e-9 {
+                    moved += 1;
+                }
+            }
+            assert!(moved > 100,
+                    "{}: only {moved} arrivals moved", pattern.name());
+        }
+        // steady ≡ the historical generator, bit-for-bit (it draws
+        // nothing from the pattern stream).
+        assert_eq!(steady.requests, synthesize(&spec).requests);
+        assert_eq!(ArrivalPattern::default(), ArrivalPattern::Steady);
+    }
+
+    #[test]
+    fn flash_crowd_concentrates_arrivals_into_one_window() {
+        let spec = TraceSpec { n_requests: 800,
+                               ..Default::default() };
+        let steady = synthesize(&spec);
+        let flash = synthesize(&TraceSpec {
+            arrival_pattern: ArrivalPattern::Flash,
+            ..spec.clone() });
+        // Peak occupancy of a sliding nominal-span/8 window: the
+        // flash trace must pack several× more arrivals into its
+        // hottest window than the steady one ever does.
+        let window = (spec.n_requests as f64 / spec.req_per_s)
+            * FLASH_WINDOW_FRAC;
+        let peak = |t: &Trace| {
+            let a: Vec<f64> = t.requests.iter().map(|r| r.arrival_s)
+                .collect();
+            let mut best = 0;
+            let mut lo = 0;
+            for hi in 0..a.len() {
+                while a[hi] - a[lo] > window {
+                    lo += 1;
+                }
+                best = best.max(hi - lo + 1);
+            }
+            best
+        };
+        let (ps, pf) = (peak(&steady), peak(&flash));
+        assert!(pf as f64 >= 2.5 * ps as f64,
+                "flash peak {pf} vs steady peak {ps}");
+        // And it is a retiming, not a rewrite: same request count,
+        // arrivals still strictly increasing.
+        assert_eq!(flash.len(), steady.len());
+        for w in flash.requests.windows(2) {
+            assert!(w[1].arrival_s > w[0].arrival_s);
+        }
+    }
+
+    #[test]
+    fn arrival_pattern_parse_roundtrip() {
+        for p in [ArrivalPattern::Steady, ArrivalPattern::Diurnal,
+                  ArrivalPattern::Flash] {
+            assert_eq!(ArrivalPattern::parse(p.name()), Some(p));
+        }
+        assert_eq!(ArrivalPattern::parse("tidal"), None);
     }
 
     #[test]

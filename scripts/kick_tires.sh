@@ -34,6 +34,7 @@ SECTIONS = [
     ("prefix_cache", "Prefix cache: on vs off"),
     ("chunking",     "Chunked prefill: long-prompt heavy tail"),
     ("prefetch",     "Speculative prefix prefetch: sparse arrivals"),
+    ("router",       "Multi-replica cluster: router policies under flash crowd"),
 ]
 
 def fmt(v):

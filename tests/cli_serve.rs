@@ -529,3 +529,160 @@ fn serve_cli_event_trace_exports_and_audits() {
 
     std::fs::remove_dir_all(&dir).ok();
 }
+
+#[test]
+fn serve_cli_cluster_replicas_router_and_failover() {
+    // Cluster smoke, end to end through the binary:
+    //   * --replicas 4 under a flash-crowd arrival pattern serves the
+    //     whole trace and reports the cluster block (per-replica
+    //     lines, router counters, merged latency percentiles) plus a
+    //     clean merged auditor and a JSONL stream whose every line
+    //     carries its replica;
+    //   * --kill-replica mid-run still completes every request
+    //     exactly once (the merged auditor enforces it), reports a
+    //     NONZERO failover count and marks the dead replica — with
+    //     --req-per-s 1e9 the whole trace is backlogged across the
+    //     replicas when the 0.1ms kill point arrives, so work to
+    //     evacuate structurally exists regardless of the measured
+    //     host clock;
+    //   * the cluster report json carries replicas/alive/router;
+    //   * every degenerate cluster flag combination is rejected up
+    //     front.
+    use paca::util::json::Json;
+
+    let dir = tmp("serve-cluster");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("cluster_trace.jsonl");
+    let adapters = dir.join("adapters");
+    let events_path = dir.join("cluster_events.jsonl");
+    let report = dir.join("cluster_report.json");
+    let run = |extra: &[&str]| {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_paca"));
+        cmd.arg("serve")
+            .arg("--backend").arg("host")
+            .arg("--requests").arg(&trace)
+            .arg("--adapters").arg(&adapters)
+            .arg("--count").arg("64")
+            .arg("--tenants").arg("4")
+            .arg("--batch").arg("4")
+            .arg("--mean-tokens").arg("16")
+            .arg("--decode-tokens").arg("16")
+            .arg("--req-per-s").arg("1e9")
+            .args(extra);
+        cmd.output().expect("spawning paca serve")
+    };
+
+    // Four replicas, least-loaded routing, flash-crowd synthesis.
+    let out = run(&["--replicas", "4", "--router", "least-loaded",
+                    "--arrival-pattern", "flash",
+                    "--trace-events", events_path.to_str().unwrap(),
+                    "--report-json", report.to_str().unwrap()]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(),
+            "cluster serve failed:\nstdout:\n{stdout}\nstderr:\n\
+             {stderr}");
+    assert!(stdout.contains("4 replicas (router least-loaded"),
+            "cluster banner missing:\n{stdout}");
+    assert!(stdout.contains("flash arrivals"),
+            "arrival pattern missing from banner:\n{stdout}");
+    assert!(stdout.contains("cluster: 4 replicas"),
+            "cluster report block missing:\n{stdout}");
+    assert!(stdout.contains("replica 0:")
+            && stdout.contains("replica 3:"),
+            "per-replica lines missing:\n{stdout}");
+    assert!(stdout.contains("merged ttft"),
+            "merged latency summary missing:\n{stdout}");
+    assert!(stdout.contains("cluster makespan"), "{stdout}");
+    assert!(stdout.contains("auditor: clean"),
+            "merged stream must audit clean:\n{stdout}");
+    assert!(stdout.contains("restored bit-exactly"), "{stdout}");
+    assert!(stdout.contains("cluster queueing"),
+            "cluster cost projection missing:\n{stdout}");
+    // Every exported line parses and names its replica — the field
+    // only the cluster (replicas > 1) export carries.
+    let text = std::fs::read_to_string(&events_path).unwrap();
+    assert!(text.lines().count() > 100, "expected a dense stream");
+    for line in text.lines() {
+        let j = Json::parse(line).unwrap_or_else(
+            |e| panic!("bad cluster event line {line:?}: {e}"));
+        assert!(j.get("replica").is_some(),
+                "replica field missing in {line}");
+    }
+    // The cluster report json: per-replica reports, liveness and the
+    // router's counters.
+    let rj = Json::parse(&std::fs::read_to_string(&report).unwrap())
+        .unwrap();
+    match rj.get("replicas") {
+        Some(Json::Arr(reps)) => assert_eq!(reps.len(), 4),
+        other => panic!("replicas must be an array, got {other:?}"),
+    }
+    assert!(rj.get("alive").is_some(), "alive section missing");
+    let router = rj.get("router").expect("router section");
+    assert!(router.get("failover").is_some());
+
+    // Kill replica 1 at 0.1ms of virtual time: with every request
+    // already backlogged, its queue must move to the survivors and
+    // every request still completes exactly once (the auditor would
+    // fail the run otherwise).
+    let out = run(&["--replicas", "4", "--router", "least-loaded",
+                    "--kill-replica", "1@0.0001",
+                    "--trace-events", events_path.to_str().unwrap()]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(),
+            "kill-replica serve failed:\nstdout:\n{stdout}\nstderr:\n\
+             {stderr}");
+    assert!(stdout.contains("loaded 64 requests"),
+            "must reuse the persisted trace:\n{stdout}");
+    assert!(stdout.contains("replica 1 [killed]:"),
+            "dead replica must be marked:\n{stdout}");
+    let failover_line = stdout.lines()
+        .find(|l| l.starts_with("router:"))
+        .unwrap_or_else(|| panic!("no router counters:\n{stdout}"));
+    assert!(!failover_line.contains("failover: 0"),
+            "the kill must actually move work: {failover_line}");
+    assert!(stdout.contains("auditor: clean"),
+            "failover must stay exactly-once:\n{stdout}");
+
+    // Chrome cluster export: one well-formed document.
+    let chrome_path = dir.join("cluster_events.chrome.json");
+    let out = run(&["--replicas", "2",
+                    "--trace-events", chrome_path.to_str().unwrap(),
+                    "--trace-format", "chrome"]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "chrome cluster run failed:\n\
+                                   {stdout}");
+    let cj = Json::parse(&std::fs::read_to_string(&chrome_path)
+                         .unwrap()).unwrap();
+    match cj.get("traceEvents") {
+        Some(Json::Arr(evs)) => assert!(
+            !evs.is_empty(), "empty chrome traceEvents"),
+        other => panic!("traceEvents must be an array, got {other:?}"),
+    }
+
+    // Degenerate cluster flags are rejected before serving.
+    for (bad, why) in [
+        (&["--replicas", "0"][..], "zero replicas"),
+        (&["--replicas", "2", "--service-unit", "batch"][..],
+         "clusters need iteration-level service"),
+        (&["--router", "warmth", "--replicas", "2",
+           "--prefix-cache", "off"][..],
+         "warmth routing needs the prefix cache"),
+        (&["--kill-replica", "1@0.1"][..],
+         "kill-replica needs --replicas > 1"),
+        (&["--replicas", "2", "--kill-replica", "5@0.1"][..],
+         "kill target out of range"),
+        (&["--replicas", "2", "--kill-replica", "1-0.1"][..],
+         "malformed kill spec"),
+        (&["--router", "round-robin", "--replicas", "2"][..],
+         "unknown router"),
+        (&["--arrival-pattern", "sawtooth"][..],
+         "unknown arrival pattern"),
+    ] {
+        let out = run(bad);
+        assert!(!out.status.success(), "{why}: must error");
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1509,3 +1509,269 @@ fn prop_event_tracing_is_inert_and_spans_match_recorders() {
         }
     });
 }
+
+#[test]
+fn prop_cluster_of_one_reduces_to_serve_iterative() {
+    // THE cluster reduction anchor, 25 seeded traces × 3 scheduler
+    // policies × 3 router policies: a one-replica Cluster IS the
+    // single iterative engine — same forward checksum (identical
+    // forwards in identical order), same deterministic EngineStats,
+    // and the same virtual-clock latency distribution at every
+    // quantile. Report STRINGS are deliberately not compared: the
+    // engine's aggregate line embeds measured wall time, which no two
+    // runs share.
+    use paca::manifest::ModelInfo;
+    use paca::serve::cluster::Cluster;
+    use paca::serve::engine::{tiny_model, BaseModel, ClockModel,
+                              EngineStats, HostBackend, ServeEngine};
+    use paca::serve::registry::{AdapterRegistry, PacaAdapter};
+    use paca::serve::router::RouterPolicy;
+    use paca::serve::scheduler::{OnlineScheduler, Policy, Request,
+                                 TenantId, TenantPool};
+    use paca::serve::trace;
+
+    fn small() -> ModelInfo {
+        ModelInfo { d_model: 16, d_ff: 24, ..tiny_model() }
+    }
+
+    fn engine_for(pool: TenantPool) -> ServeEngine {
+        let m = small();
+        let base = BaseModel::synthetic(&m, 7);
+        let mut reg = AdapterRegistry::new(64);
+        for name in pool.names() {
+            reg.insert(PacaAdapter::synthetic(name, &m, 4, 11));
+        }
+        ServeEngine::new(base, reg, Box::<HostBackend>::default(),
+                         pool)
+    }
+
+    /// Wall-clock members are measured, not virtual — zero them so
+    /// the rest of EngineStats compares bit-for-bit.
+    fn scrub(mut s: EngineStats) -> EngineStats {
+        s.wall_s = 0.0;
+        s.forward_s = 0.0;
+        s.swap_s = 0.0;
+        s
+    }
+
+    let clock = ClockModel::Analytic {
+        swap_s: 2e-3, batch_s: 5e-4, token_s: 2e-5,
+    };
+    prop(25, |rng| {
+        let n_tenants = 1 + rng.below(4);
+        let mut pool = TenantPool::new();
+        for i in 0..n_tenants {
+            pool.intern(&trace::tenant_name(i));
+        }
+        let prefixes: Vec<usize> = (0..n_tenants)
+            .map(|_| rng.below(16)).collect();
+        let n = 1 + rng.below(35);
+        let cap = 1 + rng.below(5);
+        let kv_blocks = 16 + rng.below(48);
+        let chunk = rng.below(6); // 0 = unchunked
+        let mut t = 0.0;
+        let requests: Vec<Request> = (0..n as u64).map(|id| {
+            let tenant = TenantId(rng.below(n_tenants) as u32);
+            let shared = prefixes[tenant.index()];
+            t += rng.next_f64() * 0.04;
+            Request {
+                id,
+                tenant,
+                tokens: shared + 1 + rng.below(20),
+                decode_tokens: rng.below(10),
+                shared_prefix_tokens: shared,
+                arrival_s: t,
+                deadline_s: if rng.below(2) == 0 {
+                    f64::INFINITY
+                } else {
+                    0.02 + rng.next_f64() * 0.1
+                },
+            }
+        }).collect();
+        for policy in Policy::ALL {
+            // Baseline: the plain single iterative engine.
+            let mut base_eng = engine_for(pool.clone());
+            base_eng.configure_kv(kv_blocks, 8, true);
+            base_eng.configure_prefix(true);
+            base_eng.configure_chunking(chunk);
+            let mut sched = OnlineScheduler::new(
+                requests.clone(), n_tenants, cap, policy);
+            sched.prefill_chunk_tokens = chunk;
+            base_eng.serve_iterative(&mut sched, clock).unwrap();
+            base_eng.finish().unwrap();
+            // With one replica the router is never consulted, so
+            // EVERY router policy must yield the identical run.
+            for rpolicy in RouterPolicy::ALL {
+                let mut eng = engine_for(pool.clone());
+                eng.configure_kv(kv_blocks, 8, true);
+                eng.configure_prefix(true);
+                eng.configure_chunking(chunk);
+                let mut csched = OnlineScheduler::new(
+                    Vec::new(), n_tenants, cap, policy);
+                csched.prefill_chunk_tokens = chunk;
+                let mut cl = Cluster::new(
+                    vec![(eng, csched)], requests.clone(), rpolicy,
+                    cap, None);
+                cl.run(clock).unwrap();
+                let one = &cl.replicas[0].engine;
+                assert_eq!(one.checksum, base_eng.checksum,
+                           "{policy:?}/{rpolicy:?}: forwards must be \
+                            identical in identical order");
+                assert_eq!(scrub(one.stats), scrub(base_eng.stats),
+                           "{policy:?}/{rpolicy:?}: stats diverged");
+                for (name, a, b) in [
+                    ("e2e", &one.e2e, &base_eng.e2e),
+                    ("queueing", &one.queueing, &base_eng.queueing),
+                    ("ttft", &one.ttft, &base_eng.ttft),
+                ] {
+                    assert_eq!(a.count("(all)"), b.count("(all)"),
+                               "{policy:?}/{rpolicy:?} {name} count");
+                    for q in [0.0, 0.25, 0.5, 0.75, 0.99, 1.0] {
+                        assert_eq!(a.percentile("(all)", q),
+                                   b.percentile("(all)", q),
+                                   "{policy:?}/{rpolicy:?} {name} \
+                                    p{q}");
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_cluster_serves_exactly_once_under_pressure_and_kill() {
+    // The cluster fuzz, 120 seeded traces × N ∈ {2, 4} replicas with
+    // random router policy, bounded per-replica KV pools tight enough
+    // to preempt, and (on half the seeds) a mid-trace replica kill:
+    //   * no replica ever over-commits its OWN pool;
+    //   * every request completes exactly once cluster-wide — kills,
+    //     evacuations and re-dispatches included;
+    //   * the merged interleaving passes the ClusterAuditor and every
+    //     per-replica online auditor with zero violations;
+    //   * every scheduler drains (the dead replica's backlog really
+    //     did move);
+    // and across the sweep at least one kill actually evacuated work
+    // (else the failover path went untested).
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    use paca::manifest::ModelInfo;
+    use paca::serve::cluster::Cluster;
+    use paca::serve::engine::{tiny_model, BaseModel, ClockModel,
+                              HostBackend, ServeEngine};
+    use paca::serve::events::Events;
+    use paca::serve::registry::{AdapterRegistry, PacaAdapter};
+    use paca::serve::router::RouterPolicy;
+    use paca::serve::scheduler::{OnlineScheduler, Policy, Request,
+                                 TenantId, TenantPool};
+    use paca::serve::trace;
+
+    fn small() -> ModelInfo {
+        ModelInfo { d_model: 16, d_ff: 24, ..tiny_model() }
+    }
+
+    fn engine_for(pool: TenantPool) -> ServeEngine {
+        let m = small();
+        let base = BaseModel::synthetic(&m, 7);
+        let mut reg = AdapterRegistry::new(64);
+        for name in pool.names() {
+            reg.insert(PacaAdapter::synthetic(name, &m, 4, 11));
+        }
+        ServeEngine::new(base, reg, Box::<HostBackend>::default(),
+                         pool)
+    }
+
+    static FAILED_OVER: AtomicU64 = AtomicU64::new(0);
+
+    let clock = ClockModel::Analytic {
+        swap_s: 2e-3, batch_s: 5e-4, token_s: 2e-5,
+    };
+    prop(120, |rng| {
+        let n_tenants = 1 + rng.below(4);
+        let mut pool = TenantPool::new();
+        for i in 0..n_tenants {
+            pool.intern(&trace::tenant_name(i));
+        }
+        let prefixes: Vec<usize> = (0..n_tenants)
+            .map(|_| rng.below(3) * rng.below(10)).collect();
+        let n = 1 + rng.below(40);
+        let cap = 1 + rng.below(4);
+        let n_replicas = [2, 4][rng.below(2)];
+        let rpolicy = RouterPolicy::ALL[rng.below(3)];
+        let policy = Policy::ALL[rng.below(3)];
+        // Tight enough to preempt on many seeds — failover then has
+        // to move requests that already lost blocks once.
+        let kv_blocks = 2 + rng.below(12);
+        let block_tokens = 1 + rng.below(8);
+        let kill = if rng.below(2) == 0 {
+            Some((rng.below(n_replicas),
+                  rng.next_f64() * 0.4))
+        } else {
+            None
+        };
+        let mut t = 0.0;
+        let requests: Vec<Request> = (0..n as u64).map(|id| {
+            let tenant = TenantId(rng.below(n_tenants) as u32);
+            let shared = prefixes[tenant.index()];
+            t += rng.next_f64() * 0.03;
+            Request {
+                id,
+                tenant,
+                tokens: shared + 1 + rng.below(16),
+                decode_tokens: rng.below(10),
+                shared_prefix_tokens: shared,
+                arrival_s: t,
+                deadline_s: if rng.below(2) == 0 {
+                    f64::INFINITY
+                } else {
+                    0.02 + rng.next_f64() * 0.1
+                },
+            }
+        }).collect();
+        let parts = (0..n_replicas).map(|_| {
+            let mut eng = engine_for(pool.clone());
+            eng.configure_kv(kv_blocks, block_tokens, true);
+            eng.configure_prefix(rng.below(2) == 0);
+            eng.configure_events(Events::recording());
+            let sched = OnlineScheduler::new(
+                Vec::new(), n_tenants, cap, policy);
+            (eng, sched)
+        }).collect();
+        let mut cl = Cluster::new(parts, requests, rpolicy, cap,
+                                  kill);
+        cl.run(clock).unwrap();
+        let label = format!("{rpolicy:?}/{policy:?} x{n_replicas} \
+                             kill {kill:?}");
+        let served: u64 = cl.replicas.iter()
+            .map(|r| r.engine.stats.requests).sum();
+        assert_eq!(served, n as u64,
+                   "{label}: exactly-once cluster-wide completion");
+        let first_tokens: u64 = cl.replicas.iter()
+            .map(|r| r.engine.ttft.count("(all)") as u64).sum();
+        assert_eq!(first_tokens, n as u64,
+                   "{label}: one first token per request, however \
+                    many replicas it crossed");
+        for (i, rep) in cl.replicas.iter().enumerate() {
+            assert!(rep.engine.kv.stats.peak_blocks <= kv_blocks,
+                    "{label}: replica {i} over-commit {} > \
+                     {kv_blocks}", rep.engine.kv.stats.peak_blocks);
+            assert!(rep.sched.is_done(),
+                    "{label}: replica {i} not drained");
+            assert_eq!(rep.engine.events.violation_count(), 0,
+                       "{label}: replica {i} auditor: {:?}",
+                       rep.engine.events.violations());
+        }
+        let audit = cl.audit();
+        assert_eq!(audit.violation_count(), 0,
+                   "{label}: merged auditor: {:?}",
+                   audit.violations());
+        if let Some((kr, _)) = kill {
+            assert!(!cl.replicas[kr].alive,
+                    "{label}: killed replica still alive");
+        }
+        FAILED_OVER.fetch_add(cl.router.stats.failover,
+                              Ordering::Relaxed);
+    });
+    assert!(FAILED_OVER.load(Ordering::Relaxed) > 0,
+            "the sweep never moved a request off a killed replica — \
+             the failover path went untested");
+}
