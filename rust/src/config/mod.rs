@@ -248,6 +248,22 @@ pub struct ServeConfig {
     /// clock reaches T seconds (its work replays exactly-once on the
     /// least-loaded survivor); empty = no kill.
     pub kill_replica: String,
+    /// Streaming-sink ring size for `--trace-events` jsonl export:
+    /// events flush to disk every N events DURING the run instead of
+    /// one end-of-run rewrite, and the in-memory recorder keeps the
+    /// FIRST N (the overflow is counted in `events_dropped`, never
+    /// silent). Must be >= 1.
+    pub trace_buffer_events: usize,
+    /// Write Prometheus-text metric scrapes to this path
+    /// (`--metrics PATH`); empty = off. Requires `--trace-events`
+    /// (the registry is fed from the event bus).
+    pub metrics: String,
+    /// Virtual seconds between metric scrapes
+    /// (`--metrics-interval S`). Must be > 0.
+    pub metrics_interval_s: f64,
+    /// Write per-phase folded stacks (flamegraph input) to this path
+    /// (`--profile PATH`); empty = off. Requires `--trace-events`.
+    pub profile: String,
 }
 
 impl Default for ServeConfig {
@@ -288,6 +304,10 @@ impl Default for ServeConfig {
             replicas: 1,
             router: "shard".into(),
             kill_replica: String::new(),
+            trace_buffer_events: 65536,
+            metrics: String::new(),
+            metrics_interval_s: 1.0,
+            profile: String::new(),
         }
     }
 }
@@ -415,6 +435,30 @@ impl ServeConfig {
             router: doc.str_or("serve.router", &d.router).to_string(),
             kill_replica: doc.str_or("serve.kill_replica",
                                      &d.kill_replica).to_string(),
+            trace_buffer_events: {
+                let v = u("serve.trace_buffer_events",
+                          d.trace_buffer_events)?;
+                if v == 0 {
+                    return Err(anyhow!(
+                        "serve.trace_buffer_events must be >= 1 (a \
+                         0-event ring can never flush)"));
+                }
+                v
+            },
+            metrics: doc.str_or("serve.metrics", &d.metrics)
+                .to_string(),
+            metrics_interval_s: {
+                let v = doc.f64_or("serve.metrics_interval_s",
+                                   d.metrics_interval_s);
+                if !(v > 0.0) || !v.is_finite() {
+                    return Err(anyhow!(
+                        "serve.metrics_interval_s must be > 0, \
+                         got {v}"));
+                }
+                v
+            },
+            profile: doc.str_or("serve.profile", &d.profile)
+                .to_string(),
         })
     }
 
@@ -485,6 +529,28 @@ impl ServeConfig {
             return Err(anyhow!(
                 "router=warmth requires prefix-cache=on: warmth IS \
                  advertised radix-cache coverage, which is off"));
+        }
+        if self.metrics_interval_s <= 0.0
+            || !self.metrics_interval_s.is_finite()
+        {
+            return Err(anyhow!(
+                "metrics-interval must be > 0 virtual seconds, got \
+                 {}", self.metrics_interval_s));
+        }
+        if self.trace_buffer_events == 0 {
+            return Err(anyhow!(
+                "trace-buffer-events must be >= 1 (a 0-event ring \
+                 can never flush)"));
+        }
+        if !self.metrics.is_empty() && self.trace_events.is_empty() {
+            return Err(anyhow!(
+                "metrics requires trace-events: the registry is fed \
+                 from the event bus, which is off"));
+        }
+        if !self.profile.is_empty() && self.trace_events.is_empty() {
+            return Err(anyhow!(
+                "profile requires trace-events: the step profiler \
+                 rides the event-enabled engine path, which is off"));
         }
         match self.parse_kill_replica()? {
             None => {}
@@ -681,6 +747,28 @@ impl ServeConfig {
             "serve.kill_replica" | "kill-replica" | "kill_replica" => {
                 self.kill_replica = v.into()
             }
+            "serve.trace_buffer_events" | "trace-buffer-events"
+                | "trace_buffer_events" => {
+                let n: usize = v.parse()?;
+                if n == 0 {
+                    return Err(anyhow!(
+                        "trace-buffer-events must be >= 1 (a 0-event \
+                         ring can never flush)"));
+                }
+                self.trace_buffer_events = n;
+            }
+            "serve.metrics" | "metrics" => self.metrics = v.into(),
+            "serve.metrics_interval_s" | "metrics-interval"
+                | "metrics_interval_s" => {
+                let s: f64 = v.parse()?;
+                if !(s > 0.0) || !s.is_finite() {
+                    return Err(anyhow!(
+                        "metrics-interval must be > 0 virtual \
+                         seconds, got {s}"));
+                }
+                self.metrics_interval_s = s;
+            }
+            "serve.profile" | "profile" => self.profile = v.into(),
             other => {
                 return Err(anyhow!("unknown serve config key {other:?}"))
             }
@@ -922,6 +1010,61 @@ mod tests {
         assert_eq!(c.trace_format, "jsonl");
         let bad = TomlDoc::parse(
             "[serve]\ntrace_format = \"csv\"\n").unwrap();
+        assert!(ServeConfig::from_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn serve_telemetry_keys_and_cross_field_rules() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.trace_buffer_events, 65536);
+        assert_eq!(c.metrics, "", "metrics off by default");
+        assert_eq!(c.metrics_interval_s, 1.0);
+        assert_eq!(c.profile, "", "profiler off by default");
+        assert!(c.validate().is_ok(), "defaults must validate");
+        c.apply_override("trace-events=out/ev.jsonl").unwrap();
+        c.apply_override("trace-buffer-events=128").unwrap();
+        c.apply_override("metrics=out/metrics.prom").unwrap();
+        c.apply_override("metrics-interval=0.25").unwrap();
+        c.apply_override("profile=out/profile.folded").unwrap();
+        assert_eq!(c.trace_buffer_events, 128);
+        assert_eq!(c.metrics, "out/metrics.prom");
+        assert_eq!(c.metrics_interval_s, 0.25);
+        assert_eq!(c.profile, "out/profile.folded");
+        assert!(c.validate().is_ok());
+
+        // Degenerate values die at the override.
+        assert!(c.apply_override("trace-buffer-events=0").is_err(),
+                "a 0-event ring can never flush");
+        assert!(c.apply_override("metrics-interval=0").is_err());
+        assert!(c.apply_override("metrics-interval=-1").is_err());
+        assert!(c.apply_override("metrics-interval=inf").is_err());
+
+        // Metrics / profile without the event bus would be inert:
+        // validate() refuses instead of silently writing nothing.
+        let mut c = ServeConfig::default();
+        c.apply_override("metrics=m.prom").unwrap();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("requires trace-events"), "{err}");
+        let mut c = ServeConfig::default();
+        c.apply_override("profile=p.folded").unwrap();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("requires trace-events"), "{err}");
+
+        // TOML table path, including its own degenerate rejections.
+        let doc = TomlDoc::parse(
+            "[serve]\ntrace_events = \"ev.jsonl\"\n\
+             trace_buffer_events = 512\nmetrics = \"m.prom\"\n\
+             metrics_interval_s = 0.5\nprofile = \"p.folded\"\n")
+            .unwrap();
+        let c = ServeConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.trace_buffer_events, 512);
+        assert_eq!(c.metrics_interval_s, 0.5);
+        assert!(c.validate().is_ok());
+        let bad = TomlDoc::parse(
+            "[serve]\ntrace_buffer_events = 0\n").unwrap();
+        assert!(ServeConfig::from_doc(&bad).is_err());
+        let bad = TomlDoc::parse(
+            "[serve]\nmetrics_interval_s = 0.0\n").unwrap();
         assert!(ServeConfig::from_doc(&bad).is_err());
     }
 

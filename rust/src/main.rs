@@ -23,7 +23,7 @@ use paca::metrics::fmt_gb;
 use paca::nf4;
 use paca::runtime::Runtime;
 use paca::serve::{cluster, cost, engine, events, registry, router,
-                  scheduler, trace};
+                  scheduler, telemetry, trace};
 use paca::simulator::A100_80G;
 use paca::tensor::HostTensor;
 use paca::util::rng::Rng;
@@ -115,6 +115,9 @@ fn usage() -> &'static str {
      \x20          [--report-json report.json] \\\n\
      \x20          [--trace-events events.jsonl] \\\n\
      \x20          [--trace-format jsonl|chrome] \\\n\
+     \x20          [--trace-buffer-events 65536] \\\n\
+     \x20          [--metrics metrics.prom] [--metrics-interval 1] \\\n\
+     \x20          [--profile profile.folded] \\\n\
      \x20          [--prefill-chunk-tokens 0] [--prefetch on|off] \\\n\
      \x20          [--cache-aware on|off] [--prompt-tail 0] \\\n\
      \x20          [--chat-turns 0] \\\n\
@@ -152,6 +155,17 @@ fn usage() -> &'static str {
      \x20          # exports it as JSONL or, with --trace-format\n\
      \x20          # chrome, as a Chrome/Perfetto trace. Off = the\n\
      \x20          # null sink: zero cost, bit-identical output.\n\
+     \x20          # jsonl export streams to disk DURING the run in\n\
+     \x20          # --trace-buffer-events chunks (the in-memory\n\
+     \x20          # recorder keeps the first N; overflow is counted\n\
+     \x20          # as events_dropped, never silent). --metrics PATH\n\
+     \x20          # scrapes a Prometheus-text metrics registry (fed\n\
+     \x20          # from the event bus) every --metrics-interval\n\
+     \x20          # virtual seconds; --profile PATH writes per-phase\n\
+     \x20          # folded stacks (flamegraph input) from the step\n\
+     \x20          # profiler. Both require --trace-events. Under\n\
+     \x20          # --replicas N the registries merge under replica\n\
+     \x20          # labels and the profile merges across engines.\n\
      \x20          # --prefill-chunk-tokens N splits each prompt into\n\
      \x20          # N-token chunks interleaved with decode steps so\n\
      \x20          # long prompts never stall the decoding slots (0 =\n\
@@ -597,6 +611,34 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
     eng.configure_prefetch(cfg.prefetch);
     if !cfg.trace_events.is_empty() {
         eng.configure_events(events::Events::recording());
+        if cfg.trace_format == "jsonl" {
+            // Stream events to disk DURING the run: the ring flushes
+            // every trace_buffer_events, and the in-memory recorder
+            // is bounded to the same size (overflow counted, never
+            // silent). Chrome export still needs the full buffered
+            // stream for its end-of-run layout pass.
+            let sink = telemetry::JsonlStreamSink::create(
+                Path::new(&cfg.trace_events),
+                cfg.trace_buffer_events)
+                .map_err(|e| anyhow!("creating {}: {e}",
+                                     cfg.trace_events))?;
+            eng.events.stream_to(sink);
+            eng.events.bound_recorder(cfg.trace_buffer_events);
+        }
+        if !cfg.metrics.is_empty() {
+            let out = telemetry::TelemetryOut::create(
+                Path::new(&cfg.metrics))
+                .map_err(|e| anyhow!("creating {}: {e}",
+                                     cfg.metrics))?;
+            eng.events.configure_metrics(telemetry::MetricsFeeder::new(
+                &[("policy", policy.name())], &tenants,
+                cfg.metrics_interval_s, Some(out)));
+        }
+        if !cfg.profile.is_empty() {
+            // The CLI serves on the measured clock, so wall dual
+            // stamps are armed alongside the virtual attribution.
+            eng.configure_profiler(true);
+        }
     }
     let mut sched = scheduler::OnlineScheduler::new(
         tr.requests, n_tenant_ids, cfg.batch, policy);
@@ -625,19 +667,36 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
         println!("wrote engine report json -> {}", path.display());
     }
     if !cfg.trace_events.is_empty() {
-        let stream = eng.events.snapshot();
         let path = Path::new(&cfg.trace_events);
-        let body = if cfg.trace_format == "chrome" {
-            events::to_chrome_trace(&stream, eng.pool.names())
-                .to_string()
+        let written = if cfg.trace_format == "chrome" {
+            let stream = eng.events.snapshot();
+            let body = events::to_chrome_trace(&stream,
+                                               eng.pool.names())
+                .to_string();
+            std::fs::write(path, body)
+                .map_err(|e| anyhow!("writing {}: {e}",
+                                     path.display()))?;
+            stream.len() as u64
         } else {
-            events::to_jsonl(&stream)
+            // Already streamed incrementally; finish() finalized the
+            // sink (the ring remainder is on disk).
+            if let Some(e) = eng.events.stream_error() {
+                bail!("event stream sink failed writing {}: {e}",
+                      path.display());
+            }
+            eng.events.stream_written()
         };
-        std::fs::write(path, body)
-            .map_err(|e| anyhow!("writing {}: {e}", path.display()))?;
         let violations = eng.events.violation_count();
-        println!("wrote {} engine events ({}) -> {} | auditor: {}",
-                 stream.len(), cfg.trace_format, path.display(),
+        let dropped = eng.events.events_dropped();
+        println!("wrote {} engine events ({}) -> {}{} | auditor: {}",
+                 written, cfg.trace_format, path.display(),
+                 if dropped > 0 {
+                     format!(" | {dropped} past the {}-event \
+                              recorder bound (streamed to disk, \
+                              not lost)", cfg.trace_buffer_events)
+                 } else {
+                     String::new()
+                 },
                  if violations == 0 {
                      "clean".to_string()
                  } else {
@@ -649,6 +708,26 @@ fn serve_cmd(flags: &Flags) -> Result<()> {
             }
             bail!("event auditor found {violations} invariant \
                    violations in the serve run");
+        }
+        if !cfg.metrics.is_empty() {
+            if let Some(e) = eng.events.metrics_error() {
+                bail!("metrics scrape failed writing {}: {e}",
+                      cfg.metrics);
+            }
+            println!("wrote {} metric scrapes (every {}s virtual) \
+                      -> {}", eng.events.metrics_scrapes(),
+                     cfg.metrics_interval_s, cfg.metrics);
+        }
+        if !cfg.profile.is_empty() {
+            let p = eng.profiler.as_ref()
+                .expect("profiler armed when --profile is set");
+            let path = Path::new(&cfg.profile);
+            std::fs::write(path, p.folded())
+                .map_err(|e| anyhow!("writing {}: {e}",
+                                     path.display()))?;
+            println!("wrote folded step profile ({} steps, {} \
+                      phases) -> {}", p.steps,
+                     telemetry::Phase::COUNT, path.display());
         }
     }
 
@@ -691,7 +770,7 @@ fn serve_cluster(cfg: &ServeConfig, tr: trace::Trace,
     let n_tenant_ids = tr.pool.len();
     let mut first = Some(first);
     let mut parts = Vec::with_capacity(cfg.replicas);
-    for _ in 0..cfg.replicas {
+    for i in 0..cfg.replicas {
         let (base, reg, backend) = match first.take() {
             Some(t) => t,
             None => (
@@ -713,6 +792,22 @@ fn serve_cluster(cfg: &ServeConfig, tr: trace::Trace,
         eng.configure_prefetch(cfg.prefetch);
         if !cfg.trace_events.is_empty() {
             eng.configure_events(events::Events::recording());
+            if !cfg.metrics.is_empty() {
+                // Registry-only feeder (no per-replica output file):
+                // the cluster scrapes the MERGED registry on the
+                // merged clock, with each replica's series kept
+                // apart by its base label.
+                let replica = i.to_string();
+                eng.events.configure_metrics(
+                    telemetry::MetricsFeeder::new(
+                        &[("policy", policy.name()),
+                          ("replica", replica.as_str())],
+                        tr.pool.names(), cfg.metrics_interval_s,
+                        None));
+            }
+            if !cfg.profile.is_empty() {
+                eng.configure_profiler(true);
+            }
         }
         let mut sched = scheduler::OnlineScheduler::new(
             Vec::new(), n_tenant_ids, cfg.batch, policy);
@@ -723,6 +818,12 @@ fn serve_cluster(cfg: &ServeConfig, tr: trace::Trace,
     }
     let mut cl = cluster::Cluster::new(parts, tr.requests, rpolicy,
                                        cfg.batch, kill);
+    if !cfg.metrics.is_empty() && !cfg.trace_events.is_empty() {
+        let out = telemetry::TelemetryOut::create(
+            Path::new(&cfg.metrics))
+            .map_err(|e| anyhow!("creating {}: {e}", cfg.metrics))?;
+        cl.configure_metrics(out, cfg.metrics_interval_s);
+    }
     cl.run(engine::ClockModel::Measured).map_err(|e| {
         e.context(format!(
             "cluster serving failed — if the adapters in {} were \
@@ -775,6 +876,27 @@ fn serve_cluster(cfg: &ServeConfig, tr: trace::Trace,
             }
             bail!("event auditors found {violations} invariant \
                    violations in the cluster run");
+        }
+        if !cfg.metrics.is_empty() {
+            if let Some(e) = cl.metrics_error() {
+                bail!("merged metrics scrape failed writing {}: {e}",
+                      cfg.metrics);
+            }
+            println!("wrote {} merged metric scrapes across {} \
+                      replicas (every {}s virtual) -> {}",
+                     cl.metrics_scrapes(), cfg.replicas,
+                     cfg.metrics_interval_s, cfg.metrics);
+        }
+        if !cfg.profile.is_empty() {
+            let p = cl.merged_profiler()
+                .expect("profilers armed when --profile is set");
+            let path = Path::new(&cfg.profile);
+            std::fs::write(path, p.folded())
+                .map_err(|e| anyhow!("writing {}: {e}",
+                                     path.display()))?;
+            println!("wrote merged folded step profile ({} steps \
+                      across {} replicas) -> {}", p.steps,
+                     cfg.replicas, path.display());
         }
     }
 

@@ -77,17 +77,26 @@ impl Stopwatch {
     }
 }
 
-/// THE percentile rule every consumer shares: nearest-rank order
-/// statistic of an ascending-sorted slice — the ceil(q·n)th sample,
-/// with q clamped into [0, 1] and 0.0 for an empty slice (callers
-/// gate on emptiness for their `Option` APIs; the helper stays
-/// total so no path can index out of bounds).
+/// THE percentile rule every consumer shares, reduced to its index
+/// arithmetic: the 0-based position of the nearest-rank order
+/// statistic (the ceil(q·n)th sample) among `n` ascending samples,
+/// with q clamped into [0, 1]. Shared with the telemetry histogram
+/// so its bucket-walk percentiles agree with [`LatencyRecorder`]
+/// bitwise whenever every bucket holds one distinct sample.
+pub(crate) fn nearest_rank_index(n: usize, q: f64) -> usize {
+    let rank = (q.clamp(0.0, 1.0) * n as f64).ceil() as usize;
+    rank.saturating_sub(1).min(n.saturating_sub(1))
+}
+
+/// Nearest-rank order statistic of an ascending-sorted slice, with
+/// 0.0 for an empty slice (callers gate on emptiness for their
+/// `Option` APIs; the helper stays total so no path can index out
+/// of bounds).
 fn nearest_rank(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
     }
-    let rank = (q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize;
-    sorted[rank.saturating_sub(1).min(sorted.len() - 1)]
+    sorted[nearest_rank_index(sorted.len(), q)]
 }
 
 /// Keyed latency samples (seconds) with percentile queries — the

@@ -39,6 +39,7 @@
 //! [`ClusterAuditor`]: crate::serve::events::ClusterAuditor
 
 use std::collections::HashMap;
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -49,6 +50,8 @@ use crate::serve::events::{merge_replica_streams, ClusterAuditor,
                            EngineEvent};
 use crate::serve::router::{Router, RouterPolicy};
 use crate::serve::scheduler::{OnlineScheduler, Request};
+use crate::serve::telemetry::{MetricsRegistry, Phase, SloTenant,
+                              StepProfiler, TelemetryOut};
 use crate::util::json::Json;
 
 /// One engine + its scheduler + the iteration state the cluster
@@ -94,6 +97,16 @@ pub struct Cluster {
     global: Vec<Request>,
     kill: Option<(usize, f64)>,
     killed: bool,
+    /// Merged-clock Prometheus scrapes (`--metrics` under
+    /// `--replicas N`): per-replica feeders accumulate registries
+    /// only; the cluster renders the MERGED registry at every
+    /// interval boundary of the shared virtual clock, so one scrape
+    /// sequence covers the whole fleet.
+    metrics_out: Option<TelemetryOut>,
+    metrics_interval_s: f64,
+    next_scrape_s: f64,
+    scrapes: u64,
+    metrics_error: Option<String>,
 }
 
 impl Cluster {
@@ -147,7 +160,117 @@ impl Cluster {
             global,
             kill,
             killed: false,
+            metrics_out: None,
+            metrics_interval_s: 0.0,
+            next_scrape_s: f64::INFINITY,
+            scrapes: 0,
+            metrics_error: None,
         }
+    }
+
+    /// Arm merged-clock metrics scrapes: render the union of every
+    /// replica's registry (each carries its own `replica` base
+    /// label) to `out` every `interval_s` virtual seconds.
+    pub fn configure_metrics(&mut self, out: TelemetryOut,
+                             interval_s: f64) {
+        assert!(interval_s > 0.0,
+                "metrics interval must be positive");
+        self.metrics_out = Some(out);
+        self.metrics_interval_s = interval_s;
+        self.next_scrape_s = interval_s;
+    }
+
+    /// Union of every replica's event-fed registry (None when no
+    /// feeder is installed anywhere). Per-replica `replica` base
+    /// labels keep merged series collision-free.
+    pub fn merged_registry(&self) -> Option<MetricsRegistry> {
+        let mut acc: Option<MetricsRegistry> = None;
+        for rep in &self.replicas {
+            let Some(r) = rep.engine.events.metrics_registry() else {
+                continue;
+            };
+            match &mut acc {
+                None => acc = Some(r),
+                Some(a) => a.merge(&r),
+            }
+        }
+        acc
+    }
+
+    /// Fold of every replica's step profiler, router phase included
+    /// (the cluster stamps routing onto the picked replica's
+    /// profiler). None when profiling is off everywhere.
+    pub fn merged_profiler(&self) -> Option<StepProfiler> {
+        let mut acc: Option<StepProfiler> = None;
+        for rep in &self.replicas {
+            if let Some(p) = &rep.engine.profiler {
+                match &mut acc {
+                    None => acc = Some(p.clone()),
+                    Some(a) => a.merge(p),
+                }
+            }
+        }
+        acc
+    }
+
+    /// Per-tenant SLO burn rows summed across replicas (totals and
+    /// window counters add; worst lateness wins).
+    pub fn merged_slo(&self) -> Vec<SloTenant> {
+        let mut by_tenant: std::collections::BTreeMap<u32, SloTenant> =
+            std::collections::BTreeMap::new();
+        for rep in &self.replicas {
+            for b in rep.engine.events.slo_summary() {
+                by_tenant.entry(b.tenant)
+                    .and_modify(|a| {
+                        a.total += b.total;
+                        a.missed += b.missed;
+                        a.window_len += b.window_len;
+                        a.window_missed += b.window_missed;
+                        a.max_lateness_us =
+                            a.max_lateness_us.max(b.max_lateness_us);
+                    })
+                    .or_insert(b);
+            }
+        }
+        by_tenant.into_values().collect()
+    }
+
+    pub fn metrics_scrapes(&self) -> u64 {
+        self.scrapes
+    }
+
+    pub fn metrics_error(&self) -> Option<String> {
+        self.metrics_error.clone()
+    }
+
+    /// Append one merged-registry scrape block stamped at `t_s`.
+    fn scrape(&mut self, t_s: f64) {
+        let Some(reg) = self.merged_registry() else { return };
+        let Some(out) = &mut self.metrics_out else { return };
+        self.scrapes += 1;
+        let body = format!("# scrape {} t_s {t_s:.6}\n{}\n",
+                           self.scrapes, reg.render());
+        if let Err(e) = out.put(body.as_bytes()) {
+            if self.metrics_error.is_none() {
+                self.metrics_error = Some(e.to_string());
+            }
+        }
+    }
+
+    /// Scrape-boundary check against the merged clock: the next
+    /// event in the system is about to happen at `t` — every
+    /// boundary at or before the registries' current state gets one
+    /// scrape (multi-interval jumps collapse).
+    fn scrape_boundary(&mut self, t: f64) {
+        if self.metrics_out.is_none() || t < self.next_scrape_s
+            || t.is_infinite()
+        {
+            return;
+        }
+        let at = self.next_scrape_s;
+        self.scrape(at);
+        let k = (t / self.metrics_interval_s).floor() + 1.0;
+        self.next_scrape_s = k * self.metrics_interval_s;
     }
 
     /// Earliest event anywhere in the system — the kill trigger
@@ -194,6 +317,10 @@ impl Cluster {
             let t_arr = self.global.last().map(|r| r.arrival_s)
                 .unwrap_or(f64::INFINITY);
             let (idx, t_step) = self.next_step();
+            // Scrape BEFORE the next event applies: a block stamped
+            // at boundary T covers exactly the events before T, so
+            // counters are monotone across the scrape sequence.
+            self.scrape_boundary(t_arr.min(t_step));
             if t_arr <= t_step {
                 if t_arr.is_infinite() {
                     break;
@@ -206,11 +333,19 @@ impl Cluster {
                 rep.engine.step_iterative(&mut rep.sched, st)?;
             }
         }
+        let makespan = self.replicas.iter()
+            .filter_map(|rep| rep.st.as_ref().map(|st| st.now()))
+            .fold(0.0f64, f64::max);
         for rep in &mut self.replicas {
             if let Some(st) = rep.st.take() {
                 rep.engine.end_iterative(st);
             }
             rep.engine.finish()?;
+        }
+        // Closing scrape: the final registry state at the cluster
+        // makespan (after finalize settled every sink).
+        if self.metrics_out.is_some() {
+            self.scrape(makespan);
         }
         Ok(())
     }
@@ -219,11 +354,23 @@ impl Cluster {
     /// load, ask the router, inject into the pick's scheduler. The
     /// request is then that replica's to admit at its own clock.
     fn deliver(&mut self, r: Request) {
+        // Routing is bookkeeping on the merged clock (0 virtual
+        // seconds); the wall stamp pair lands on the PICKED
+        // replica's profiler so the merged profile carries a Router
+        // row.
+        let wall_armed = self.replicas.iter().any(
+            |rep| rep.engine.profiler.as_ref()
+                .is_some_and(|p| p.wall));
+        let t0 = if wall_armed { Some(Instant::now()) } else { None };
         let loads = self.snapshots(None);
         let name = self.replicas[0].engine.pool.name(r.tenant)
             .to_string();
         let pick = self.router.route(&name, r.tenant.0, &loads);
-        self.replicas[pick].sched.inject(r);
+        let rep = &mut self.replicas[pick];
+        if let Some(p) = rep.engine.profiler.as_mut() {
+            p.end(Phase::Router, t0, 0.0);
+        }
+        rep.sched.inject(r);
     }
 
     /// Advertised loads, `None` for dead replicas (and for
@@ -376,6 +523,32 @@ impl Cluster {
                 100.0 * misses as f64 / total as f64));
         }
         out.push_str(&format!("cluster makespan {:.3}s\n", makespan));
+        if let Some(p) = self.merged_profiler() {
+            if p.steps > 0 {
+                out.push_str(&format!(
+                    "\nmerged step profile ({} replicas): {} steps, \
+                     {:.3}s virtual service time\n",
+                    self.replicas.len(), p.steps, p.step_virtual_s));
+                out.push_str(&p.table().render());
+            }
+        }
+        let burns = self.merged_slo();
+        if !burns.is_empty() {
+            out.push_str("\nmerged slo burn:\n");
+            for b in &burns {
+                let name = self.replicas[0].engine.pool.name(
+                    crate::serve::scheduler::TenantId(b.tenant));
+                out.push_str(&format!(
+                    "  {name}: {}/{} missed ({:.1}% of window) | \
+                     max late {:.3}ms\n",
+                    b.missed, b.total, 100.0 * b.burn_rate(),
+                    b.max_lateness_us as f64 / 1e3));
+            }
+        }
+        if self.scrapes > 0 {
+            out.push_str(&format!(
+                "metrics: {} merged scrapes\n", self.scrapes));
+        }
         out
     }
 
@@ -407,6 +580,19 @@ impl Cluster {
         router.insert("spill".to_string(), num(rs.spill));
         router.insert("failover".to_string(), num(rs.failover));
         root.insert("router".to_string(), Json::Obj(router));
+        let mut metrics = std::collections::BTreeMap::new();
+        if let Some(reg) = self.merged_registry() {
+            metrics.insert("registry".to_string(),
+                           reg.snapshot_json());
+            metrics.insert("scrapes".to_string(),
+                           num(self.scrapes));
+        }
+        if let Some(p) = self.merged_profiler() {
+            metrics.insert("profiler".to_string(), p.to_json());
+        }
+        if !metrics.is_empty() {
+            root.insert("metrics".to_string(), Json::Obj(metrics));
+        }
         Json::Obj(root)
     }
 }
@@ -573,6 +759,76 @@ mod tests {
             .map(|r| r.engine.stats.requests).sum();
         assert_eq!(done, 10);
         assert_eq!(cl.audit().violation_count(), 0);
+    }
+
+    #[test]
+    fn cluster_telemetry_merges_scrapes_and_profiles() {
+        use crate::serve::telemetry::MetricsFeeder;
+        let tr = trace(30, 9);
+        let plain = {
+            let mut cl = cluster_for(2, &tr,
+                                     RouterPolicy::LeastLoaded, None);
+            cl.run(CLOCK).unwrap();
+            cl
+        };
+        let mut cl = cluster_for(2, &tr, RouterPolicy::LeastLoaded,
+                                 None);
+        for (i, rep) in cl.replicas.iter_mut().enumerate() {
+            let replica = i.to_string();
+            // Registry-only feeders (no per-replica output): the
+            // cluster scrapes the merged registry itself.
+            let feeder = MetricsFeeder::new(
+                &[("replica", replica.as_str())], tr.pool.names(),
+                0.05, None);
+            rep.engine.events.configure_metrics(feeder);
+            rep.engine.configure_profiler(false);
+        }
+        cl.configure_metrics(TelemetryOut::memory(), 0.05);
+        cl.run(CLOCK).unwrap();
+        // Observation never perturbs scheduling: engine stats are
+        // bit-identical to the un-telemetered cluster.
+        for (a, b) in cl.replicas.iter().zip(&plain.replicas) {
+            assert_eq!(scrub_wall(a.engine.stats),
+                       scrub_wall(b.engine.stats));
+            assert_eq!(a.engine.checksum, b.engine.checksum);
+        }
+        assert_eq!(cl.audit().violation_count(), 0, "{:?}",
+                   cl.audit().violations());
+        assert!(cl.metrics_scrapes() > 1, "interval scrapes + close");
+        assert!(cl.metrics_error().is_none());
+        let text = String::from_utf8(
+            cl.metrics_out.as_ref().unwrap().mem().unwrap()
+                .to_vec()).unwrap();
+        assert!(text.contains("# scrape 1 "), "{text}");
+        assert!(text.contains("replica=\"0\""));
+        assert!(text.contains("replica=\"1\""));
+        assert!(!text.contains("NaN"));
+        // Counters are monotone per series across scrape blocks.
+        let mut seen: HashMap<&str, u64> = HashMap::new();
+        for line in text.lines() {
+            if !line.starts_with("paca_events_total{") {
+                continue;
+            }
+            let (key, val) = line.rsplit_once(' ').unwrap();
+            let val: u64 = val.parse().unwrap();
+            let prev = seen.insert(key, val).unwrap_or(0);
+            assert!(val >= prev, "counter went down: {line}");
+        }
+        // The merged profile folds both engines plus the router
+        // stamps the cluster put on the picked replicas.
+        let p = cl.merged_profiler().expect("profilers armed");
+        assert!(p.steps > 0);
+        assert_eq!(p.phase(Phase::Router).count, 30,
+                   "every arrival routed exactly once");
+        let (got, want) = (p.total_virtual(), p.step_virtual_s);
+        assert!((got - want).abs() <= 1e-9 * want.max(1.0),
+                "unattributed cluster step time: {got} vs {want}");
+        let report = cl.report();
+        assert!(report.contains("merged step profile"), "{report}");
+        assert!(report.contains("merged scrapes"), "{report}");
+        let j = cl.report_json();
+        assert!(j.get("metrics").and_then(|m| m.get("registry"))
+                .is_some());
     }
 
     #[test]

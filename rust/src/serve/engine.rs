@@ -63,6 +63,7 @@ use crate::serve::registry::{fingerprint, AdapterRegistry, SpliceGuard,
                              WeightMap};
 use crate::serve::scheduler::{Batch, OnlineScheduler, Policy, Request,
                               TenantId, TenantPool};
+use crate::serve::telemetry::{Phase, StepProfiler};
 use crate::tensor::HostTensor;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -372,6 +373,11 @@ pub struct ServeEngine {
     /// and (at serve start) the scheduler, so all five write one
     /// totally-ordered stream.
     pub events: Events,
+    /// Per-phase step profiler (`--profile`). `None` = off, the
+    /// reduction anchor: no stamps are taken at all. With wall
+    /// stamps armed (`--clock measured`) the begin/end pairs carry
+    /// dual wall times next to the virtual attribution.
+    pub profiler: Option<StepProfiler>,
     pub stats: EngineStats,
     /// Accumulated forward outputs (keeps the host GEMMs observable).
     pub checksum: f64,
@@ -426,8 +432,15 @@ impl ServeEngine {
                       kv, prefix: PrefixCache::new(true),
                       preempt: true, prefill_chunk: 0,
                       prefetch: false, resume: HashMap::new(),
-                      events: Events::off(),
+                      events: Events::off(), profiler: None,
                       stats: EngineStats::default(), checksum: 0.0 }
+    }
+
+    /// Arm the per-phase step profiler (`--profile`); `wall` adds
+    /// wall-clock dual stamps next to the virtual attribution
+    /// (`--clock measured`). Off is the reduction anchor.
+    pub fn configure_profiler(&mut self, wall: bool) {
+        self.profiler = Some(StepProfiler::new(wall));
     }
 
     /// Install an event-stream handle (usually [`Events::recording`])
@@ -672,9 +685,16 @@ impl ServeEngine {
                 self.e2e.record("(all)", e2e_s);
                 if r.deadline_s.is_finite() {
                     self.stats.deadline_total += 1;
-                    if now > r.absolute_deadline() {
+                    let dl = r.absolute_deadline();
+                    let missed = now > dl;
+                    if missed {
                         self.stats.deadline_misses += 1;
                     }
+                    self.events.emit(
+                        EventKind::SloBurn, Some(batch.tenant.0),
+                        Some(r.id), missed as u64,
+                        if missed { ((now - dl) * 1e6) as u64 }
+                        else { 0 });
                 }
                 tokens += r.total_tokens() as u64;
                 self.stats.requests += 1;
@@ -1144,6 +1164,12 @@ impl ServeEngine {
             now += step_s;
             self.events.set_now(now);
             warmed += toks;
+            if let Some(p) = self.profiler.as_mut() {
+                // Speculative warm time is service time spent on the
+                // prefix cache — attribute the whole step there.
+                p.add(Phase::Prefix, step_s, wall_step_s);
+                p.add_step(step_s);
+            }
             self.stats.prefetch_tokens += toks as u64;
             self.events.emit(EventKind::Prefetch, Some(tenant.0),
                              None, toks as u64,
@@ -1247,9 +1273,16 @@ impl ServeEngine {
     pub fn step_iterative(&mut self, sched: &mut OnlineScheduler,
                           st: &mut IterState) -> Result<bool> {
         {
+            let t_adm = self.profiler.as_ref().and_then(|p| p.begin());
             self.events.set_now(st.now);
             sched.admit(st.now);
             self.sync_kv_gate(sched);
+            if let Some(p) = self.profiler.as_mut() {
+                // Admission is pure bookkeeping on the virtual clock
+                // (the clock only moves on forwards and idle jumps) —
+                // 0 virtual seconds, wall measured when armed.
+                p.end(Phase::Admission, t_adm, 0.0);
+            }
             if st.slots.is_empty() {
                 if sched.pending_len() == 0 {
                     match sched.next_arrival() {
@@ -1270,11 +1303,20 @@ impl ServeEngine {
                 }
                 self.calibrate(sched, st.clock);
                 self.sync_kv_gate(sched);
+                let t_disp = self.profiler.as_ref()
+                    .and_then(|p| p.begin());
                 let live = self.current_tenant_id();
                 let Some(batch) = sched.dispatch(live, st.now) else {
                     return Ok(false);
                 };
                 self.seat(&mut st.slots, batch.requests, st.now);
+                if let Some(p) = self.profiler.as_mut() {
+                    // Dispatch's VIRTUAL cost (per-step overhead +
+                    // swap) is attributed where the clock charges it,
+                    // after the forward; the stamp pair carries its
+                    // wall time.
+                    p.end(Phase::Dispatch, t_disp, 0.0);
+                }
                 if st.slots.is_empty() {
                     return Ok(true);
                 }
@@ -1317,6 +1359,8 @@ impl ServeEngine {
                     None
                 };
                 if urgent_slack.is_some() {
+                    let t_disp = self.profiler.as_ref()
+                        .and_then(|p| p.begin());
                     let victim = Self::pick_victim(
                         &st.slots, None, st.now, sched.decode_slack_s,
                         self.prefill_chunk > 0)
@@ -1325,6 +1369,9 @@ impl ServeEngine {
                         self.evict_slot(&mut st.slots, idx, sched,
                                         false);
                     }
+                    if let Some(p) = self.profiler.as_mut() {
+                        p.end(Phase::Dispatch, t_disp, 0.0);
+                    }
                     if st.slots.is_empty() {
                         // Batch fully shed: dispatch next.
                         return Ok(true);
@@ -1332,6 +1379,8 @@ impl ServeEngine {
                 } else if st.slots.len() < st.slot_cap
                     && sched.pending_len() > 0
                 {
+                    let t_disp = self.profiler.as_ref()
+                        .and_then(|p| p.begin());
                     // Continuous batching mid-generation: every
                     // in-flight slot costs one step token, the rest of
                     // the budget is open for same-tenant prefills to
@@ -1353,6 +1402,9 @@ impl ServeEngine {
                     let free = st.slot_cap - st.slots.len();
                     let joiners = sched.join_live(live, free, spare);
                     self.seat(&mut st.slots, joiners, st.now);
+                    if let Some(p) = self.profiler.as_mut() {
+                        p.end(Phase::Dispatch, t_disp, 0.0);
+                    }
                 }
             }
 
@@ -1365,6 +1417,7 @@ impl ServeEngine {
             // with preemption off (drain-only) — the grower continues
             // CAPPED (ledgered overflow, never an over-commit).
             let chunk = self.prefill_chunk;
+            let t_kv = self.profiler.as_ref().and_then(|p| p.begin());
             let grow_work: Vec<(u64, usize)> = st.slots.iter()
                 .filter_map(|s| {
                     if s.prefilled {
@@ -1416,6 +1469,11 @@ impl ServeEngine {
                     }
                 }
             }
+            if let Some(p) = self.profiler.as_mut() {
+                // KV growth (incl. reclaim + memory-pressure
+                // eviction) is bookkeeping on the virtual clock.
+                p.end(Phase::KvGrow, t_kv, 0.0);
+            }
 
             // ---- one iteration step over the in-flight batch ----
             let tenant = st.slots[0].req.tenant;
@@ -1441,6 +1499,42 @@ impl ServeEngine {
             };
             st.now += step_s;
             st.last_step_s = step_s;
+            if self.profiler.is_some() {
+                // Partition THIS step's service time across phases
+                // exactly: the analytic clock's terms map one-to-one
+                // (swap + per-step overhead → dispatch, the token
+                // term split by what each token was — prefill chunk
+                // vs decode); a measured step has no analytic
+                // decomposition, so its whole time splits by tokens.
+                // Σ phase.virtual_s == Σ step_s is the
+                // no-unattributed-time property the tests assert.
+                let prefill_tok: usize = st.slots.iter()
+                    .filter(|s| !s.prefilled)
+                    .map(|s| Self::slot_step_tokens(chunk, s))
+                    .sum();
+                let decode_tok = step_tokens - prefill_tok;
+                let (sw, oh, tok_part) = match st.clock {
+                    ClockModel::Analytic {
+                        swap_s, batch_s, token_s } =>
+                        (if swapped { swap_s } else { 0.0 }, batch_s,
+                         token_s * step_tokens as f64),
+                    ClockModel::Measured => (0.0, 0.0, step_s),
+                };
+                let p = self.profiler.as_mut().unwrap();
+                if step_tokens == 0 {
+                    p.add(Phase::Dispatch, sw + oh + tok_part, 0.0);
+                } else {
+                    let tok = step_tokens as f64;
+                    let pf = prefill_tok as f64 / tok;
+                    let df = decode_tok as f64 / tok;
+                    p.add(Phase::Dispatch, sw + oh, 0.0);
+                    p.add(Phase::Prefill, tok_part * pf,
+                          wall_step_s * pf);
+                    p.add(Phase::Decode, tok_part * df,
+                          wall_step_s * df);
+                }
+                p.add_step(step_s);
+            }
             self.events.set_now(st.now);
             self.occupancy.record(st.slots.len() as u64,
                                   step_tokens as u64);
@@ -1544,9 +1638,19 @@ impl ServeEngine {
                 }
                 if s.req.deadline_s.is_finite() {
                     self.stats.deadline_total += 1;
-                    if st.now > s.req.absolute_deadline() {
+                    let dl = s.req.absolute_deadline();
+                    let missed = st.now > dl;
+                    if missed {
                         self.stats.deadline_misses += 1;
                     }
+                    // SLO settlement: charge the tenant's rolling
+                    // burn budget while the slot is still live —
+                    // before `Complete`, per the kind's contract.
+                    self.events.emit(
+                        EventKind::SloBurn, Some(s.req.tenant.0),
+                        Some(s.req.id), missed as u64,
+                        if missed { ((st.now - dl) * 1e6) as u64 }
+                        else { 0 });
                 }
                 self.timeline.record(st.now, 1,
                                      s.req.total_tokens() as u64);
@@ -1820,6 +1924,42 @@ impl ServeEngine {
                  | {} blocks donated\n\n",
                 s.prefetch_tokens, s.prefetch_donated_blocks));
         }
+        // Profiler and SLO-burn blocks exist only when their feature
+        // is armed — off-mode reports stay byte-identical.
+        if let Some(p) = &self.profiler {
+            if p.steps > 0 {
+                out.push_str(&format!(
+                    "step profile: {} steps, {:.3}s virtual service \
+                     time ({:.3}s attributed)\n",
+                    p.steps, p.step_virtual_s, p.total_virtual()));
+                out.push_str(&p.table().render());
+                out.push('\n');
+            }
+        }
+        if self.events.enabled() {
+            let burns = self.events.slo_summary();
+            if !burns.is_empty() {
+                out.push_str(&format!(
+                    "slo burn (rolling window: last {} deadlined \
+                     completions per tenant):\n",
+                    crate::serve::telemetry::SLO_WINDOW));
+                let mut t = Table::new(&["tenant", "settled",
+                                         "missed", "window burn",
+                                         "max late ms"]);
+                for b in &burns {
+                    t.row(&[
+                        self.pool.name(TenantId(b.tenant)).to_string(),
+                        b.total.to_string(),
+                        b.missed.to_string(),
+                        format!("{:.1}%", 100.0 * b.burn_rate()),
+                        format!("{:.3}",
+                                b.max_lateness_us as f64 / 1e3),
+                    ]);
+                }
+                out.push_str(&t.render());
+                out.push('\n');
+            }
+        }
         // Event-trace lines exist only when tracing is on: the
         // null-sink report stays byte-identical to the untraced one.
         if self.events.enabled() {
@@ -1856,8 +1996,11 @@ impl ServeEngine {
         let mut root = BTreeMap::new();
         // Report-schema version: bump when a key is renamed or
         // removed; adding keys is not a bump (consumers must ignore
-        // unknown keys — round-trip-tested).
-        root.insert("schema".to_string(), num(1.0));
+        // unknown keys — round-trip-tested). 2 = the telemetry
+        // release: a gated `metrics` section (registry snapshot,
+        // dropped-event accounting, profiler totals, slo burn)
+        // joined the report; every schema-1 key is unchanged.
+        root.insert("schema".to_string(), num(2.0));
         root.insert("backend".to_string(),
                     Json::Str(self.backend_name().to_string()));
         root.insert("requests".to_string(), num(s.requests as f64));
@@ -1995,6 +2138,43 @@ impl ServeEngine {
                           "violations".to_string()
                       }));
             root.insert("events".to_string(), Json::Obj(ev));
+
+            // The telemetry section rides the same gate as the
+            // events section: with tracing off the report is
+            // byte-identical to schema 1 modulo the version number.
+            let mut metrics = BTreeMap::new();
+            metrics.insert("events_dropped".to_string(),
+                           num(self.events.events_dropped() as f64));
+            if let Some(reg) = self.events.metrics_registry() {
+                metrics.insert("registry".to_string(),
+                               reg.snapshot_json());
+                metrics.insert(
+                    "scrapes".to_string(),
+                    num(self.events.metrics_scrapes() as f64));
+            }
+            if let Some(p) = &self.profiler {
+                metrics.insert("profiler".to_string(), p.to_json());
+            }
+            let burns = self.events.slo_summary();
+            if !burns.is_empty() {
+                let mut slo = BTreeMap::new();
+                for b in &burns {
+                    let mut o = BTreeMap::new();
+                    o.insert("settled".to_string(),
+                             num(b.total as f64));
+                    o.insert("missed".to_string(),
+                             num(b.missed as f64));
+                    o.insert("burn_rate".to_string(),
+                             num(b.burn_rate()));
+                    o.insert("max_lateness_us".to_string(),
+                             num(b.max_lateness_us as f64));
+                    slo.insert(self.pool.name(TenantId(b.tenant))
+                               .to_string(), Json::Obj(o));
+                }
+                metrics.insert("slo_burn".to_string(),
+                               Json::Obj(slo));
+            }
+            root.insert("metrics".to_string(), Json::Obj(metrics));
         }
         Json::Obj(root)
     }
@@ -3113,6 +3293,63 @@ mod tests {
     }
 
     #[test]
+    fn profiler_partitions_service_time_and_stays_inert() {
+        // Deadlines + preemption + prefix sharing in the mix: the
+        // profiler must (a) attribute every virtual service second
+        // to a phase (no unattributed time), (b) leave scrubbed
+        // engine stats bit-identical, and (c) the slo tracker must
+        // settle exactly one burn row entry per deadlined
+        // completion.
+        let spec = TraceSpec {
+            n_requests: 60, n_tenants: 4, deadline_ms: 30.0,
+            burstiness: 3.0, decode_tokens: 12,
+            shared_prefix_tokens: 32, ..Default::default()
+        };
+        let clock = ClockModel::Analytic {
+            swap_s: 2e-3, batch_s: 5e-4, token_s: 2e-5,
+        };
+        let run = |profile: bool| {
+            let trace = trace::synthesize(&spec);
+            let mut eng = engine_for(trace.pool.clone());
+            eng.configure_events(Events::recording());
+            if profile {
+                eng.configure_profiler(false);
+            }
+            eng.configure_kv(48, 16, true);
+            let mut sched = OnlineScheduler::new(
+                trace.requests, trace.pool.len(), 8,
+                Policy::SloAware);
+            eng.serve_iterative(&mut sched, clock).unwrap();
+            eng.finish().unwrap();
+            eng
+        };
+        let plain = run(false);
+        let prof = run(true);
+        assert_eq!(scrub_wall(prof.stats), scrub_wall(plain.stats));
+        assert_eq!(prof.checksum, plain.checksum);
+        let p = prof.profiler.as_ref().unwrap();
+        assert!(p.steps > 0);
+        let (got, want) = (p.total_virtual(), p.step_virtual_s);
+        assert!((got - want).abs() <= 1e-9 * want.max(1.0),
+                "unattributed step time: {got} vs {want}");
+        // Idle jumps are NOT service time: attributed time is
+        // bounded by the virtual makespan.
+        assert!(want <= prof.stats.virtual_s + 1e-9);
+        // No wall stamps on the analytic clock.
+        assert_eq!(p.phase(Phase::Admission).wall_s, 0.0);
+        // The slo tracker settles the same totals the stats do.
+        let burns = prof.events.slo_summary();
+        let settled: u64 = burns.iter().map(|b| b.total).sum();
+        assert_eq!(settled, prof.stats.deadline_total);
+        let missed: u64 = burns.iter().map(|b| b.missed).sum();
+        assert_eq!(missed, prof.stats.deadline_misses);
+        assert_eq!(prof.events.violation_count(), 0,
+                   "violations: {:?}", prof.events.violations());
+        assert!(prof.report().contains("step profile:"));
+        assert!(p.folded().lines().count() >= Phase::COUNT);
+    }
+
+    #[test]
     fn spans_reconstruct_the_recorders_bit_for_bit() {
         // Every latency the engine records during an iterative run is
         // a virtual-clock difference; the span reconstructor folds
@@ -3179,9 +3416,11 @@ mod tests {
         let plain = run(Events::off());
         let j = plain.report_json();
         assert_eq!(j.get("schema").and_then(|v| v.as_f64()).unwrap(),
-                   1.0);
+                   2.0);
         assert!(j.get("events").is_none(),
                 "events section only exists when tracing is on");
+        assert!(j.get("metrics").is_none(),
+                "metrics section only exists when tracing is on");
         let traced = run(Events::recording());
         let j = traced.report_json();
         let ev = j.get("events").expect("traced run exports events");
@@ -3200,7 +3439,7 @@ mod tests {
                                &text[1..]);
         let back = Json::parse(&extended).unwrap();
         assert_eq!(back.get("schema").and_then(|v| v.as_f64())
-                   .unwrap(), 1.0);
+                   .unwrap(), 2.0);
         assert_eq!(back.get("events").and_then(|e| e.get("total")),
                    ev.get("total"));
         assert!(back.get("aaa_future_key").is_some());

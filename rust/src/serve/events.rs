@@ -115,10 +115,16 @@ pub enum EventKind {
     /// radix cache. Carries NO request. a = blocks donated,
     /// b = prefix tokens warmed.
     PrefetchDonate,
+    /// A deadlined request settled and charged its tenant's rolling
+    /// SLO error budget. Emitted at completion, before `Complete`,
+    /// only for requests that carried a finite deadline. a = 1 on a
+    /// deadline miss, 0 on an on-time completion; b = lateness in
+    /// whole microseconds (0 when on time).
+    SloBurn,
 }
 
 impl EventKind {
-    pub const ALL: [EventKind; 25] = [
+    pub const ALL: [EventKind; 26] = [
         EventKind::Arrival, EventKind::Admit, EventKind::Reject,
         EventKind::Dispatch, EventKind::SpliceIn, EventKind::SpliceOut,
         EventKind::PrefillStart, EventKind::PrefillEnd,
@@ -128,7 +134,7 @@ impl EventKind {
         EventKind::Preempt, EventKind::Resume, EventKind::Complete,
         EventKind::AdapterLoad, EventKind::AdapterEvict,
         EventKind::PrefillChunk, EventKind::Prefetch,
-        EventKind::PrefetchDonate,
+        EventKind::PrefetchDonate, EventKind::SloBurn,
     ];
     pub const COUNT: usize = Self::ALL.len();
 
@@ -159,6 +165,7 @@ impl EventKind {
             EventKind::PrefillChunk => "prefill_chunk",
             EventKind::Prefetch => "prefetch",
             EventKind::PrefetchDonate => "prefetch_donate",
+            EventKind::SloBurn => "slo_burn",
         }
     }
 
@@ -202,8 +209,9 @@ impl EngineEvent {
 
 /// An event consumer. The bus drives every registered sink through
 /// this; [`NullSink`] is the do-nothing default proving the interface
-/// costs nothing beyond the virtual call when tracing is on.
-pub trait EventSink {
+/// costs nothing beyond the virtual call when tracing is on. `Debug`
+/// is a supertrait so buses carrying boxed sinks stay debuggable.
+pub trait EventSink: std::fmt::Debug {
     fn on_event(&mut self, ev: &EngineEvent);
     /// End of run — flush/verify accumulated state.
     fn finalize(&mut self) {}
@@ -217,15 +225,27 @@ impl EventSink for NullSink {
     fn on_event(&mut self, _ev: &EngineEvent) {}
 }
 
-/// Buffers the full stream for export / span reconstruction.
+/// Buffers the stream in memory for export / span reconstruction —
+/// the in-memory [`EventSink`] impl. Unbounded by default; under a
+/// `--trace-buffer-events` bound it keeps the FIRST `cap` events and
+/// counts everything past the bound in `dropped` (never silent — the
+/// count surfaces in the report and the `metrics` JSON section). The
+/// streaming file sink is unaffected by the bound: the full stream is
+/// always on disk.
 #[derive(Debug, Default)]
 pub struct Recorder {
     pub events: Vec<EngineEvent>,
+    cap: usize,
+    dropped: u64,
 }
 
 impl EventSink for Recorder {
     fn on_event(&mut self, ev: &EngineEvent) {
-        self.events.push(*ev);
+        if self.cap > 0 && self.events.len() >= self.cap {
+            self.dropped += 1;
+        } else {
+            self.events.push(*ev);
+        }
     }
 }
 
@@ -485,6 +505,15 @@ impl EventAuditor {
                 }
                 self.kv_ledger_check(ev);
             }
+            // SLO settlement happens at completion, while the slot is
+            // still live — after `Complete` (or before a seat) it is
+            // a bookkeeping bug.
+            SloBurn => self.req_check(ev, |r| {
+                if !r.seated || r.completed {
+                    return Some("slo burn outside a live seat".into());
+                }
+                None
+            }),
             // Speculation is engine-scoped: a prefetch that claims a
             // request would mean speculative work emitted tokens.
             Prefetch | PrefetchDonate => {
@@ -563,12 +592,20 @@ impl EventSink for EventAuditor {
 }
 
 /// The shared bus behind an enabled [`Events`] handle: stamps events
-/// with the current virtual clock/step and fans them out to the
-/// recorder and auditor sinks.
+/// with the current virtual clock/step and fans them out to every
+/// registered sink — the in-memory recorder and online auditor
+/// always, plus the optional live-telemetry sinks (streaming JSONL
+/// file, metrics feeder, SLO burn tracker) and any boxed extras, all
+/// in one fixed order so a traced run is deterministic regardless of
+/// which consumers are attached.
 #[derive(Debug, Default)]
 pub struct EventBus {
     recorder: Recorder,
     auditor: EventAuditor,
+    slo: crate::serve::telemetry::SloBurnTracker,
+    stream: Option<crate::serve::telemetry::JsonlStreamSink>,
+    metrics: Option<crate::serve::telemetry::MetricsFeeder>,
+    extra: Vec<Box<dyn EventSink>>,
     counts: [u64; EventKind::COUNT],
     total: u64,
     now: f64,
@@ -582,6 +619,16 @@ impl EventBus {
         // Through the trait, like any other sink.
         EventSink::on_event(&mut self.recorder, &ev);
         EventSink::on_event(&mut self.auditor, &ev);
+        EventSink::on_event(&mut self.slo, &ev);
+        if let Some(s) = &mut self.stream {
+            EventSink::on_event(s, &ev);
+        }
+        if let Some(m) = &mut self.metrics {
+            EventSink::on_event(m, &ev);
+        }
+        for s in &mut self.extra {
+            s.on_event(&ev);
+        }
     }
 }
 
@@ -655,12 +702,125 @@ impl Events {
         }
     }
 
-    /// Run the auditor's end-of-run checks (engine `finish()` calls
-    /// this after the final un-splice and cache flush).
+    /// Run every sink's end-of-run hook: the auditor's invariant
+    /// checks, the streaming sink's final flush, the metrics feeder's
+    /// closing scrape (engine `finish()` calls this after the final
+    /// un-splice and cache flush).
     pub fn finalize(&self) {
         if let Some(bus) = &self.0 {
             let mut bus = bus.borrow_mut();
             EventSink::finalize(&mut bus.auditor);
+            if let Some(s) = &mut bus.stream {
+                EventSink::finalize(s);
+            }
+            if let Some(m) = &mut bus.metrics {
+                EventSink::finalize(m);
+            }
+            for s in &mut bus.extra {
+                s.finalize();
+            }
+        }
+    }
+
+    /// Install the incremental JSONL file sink: every event appends
+    /// to its ring and the ring flushes to disk each time it fills,
+    /// so the trace file grows DURING the run instead of at export.
+    pub fn stream_to(&self,
+                     sink: crate::serve::telemetry::JsonlStreamSink) {
+        if let Some(bus) = &self.0 {
+            bus.borrow_mut().stream = Some(sink);
+        }
+    }
+
+    /// Bound the in-memory recorder to `cap` events (keep-first;
+    /// 0 = unbounded). Emissions past the bound are counted, never
+    /// silently lost — see [`Events::events_dropped`].
+    pub fn bound_recorder(&self, cap: usize) {
+        if let Some(bus) = &self.0 {
+            bus.borrow_mut().recorder.cap = cap;
+        }
+    }
+
+    /// Events the bounded in-memory recorder did not retain.
+    pub fn events_dropped(&self) -> u64 {
+        self.0.as_ref().map_or(0, |b| b.borrow().recorder.dropped)
+    }
+
+    /// Lines the streaming sink has flushed to disk so far (0 when no
+    /// stream sink is installed).
+    pub fn stream_written(&self) -> u64 {
+        self.0.as_ref().map_or(0, |b| {
+            b.borrow().stream.as_ref().map_or(0, |s| s.written())
+        })
+    }
+
+    /// First I/O error the streaming sink hit, if any (sinks cannot
+    /// surface `Result` mid-dispatch, so errors latch here).
+    pub fn stream_error(&self) -> Option<String> {
+        self.0.as_ref().and_then(|b| {
+            b.borrow().stream.as_ref().and_then(|s| s.error())
+        })
+    }
+
+    /// Copy of the streamed bytes when the sink writes to memory
+    /// (tests compare them against the buffered exporter); None for
+    /// file-backed sinks.
+    pub fn stream_body(&self) -> Option<Vec<u8>> {
+        self.0.as_ref().and_then(|b| {
+            b.borrow().stream.as_ref()
+                .and_then(|s| s.mem().map(<[u8]>::to_vec))
+        })
+    }
+
+    /// Install the event-fed metrics feeder (counters/gauges/
+    /// histograms + periodic Prometheus-text scrapes).
+    pub fn configure_metrics(
+        &self, feeder: crate::serve::telemetry::MetricsFeeder)
+    {
+        if let Some(bus) = &self.0 {
+            bus.borrow_mut().metrics = Some(feeder);
+        }
+    }
+
+    /// Clone of the feeder's current registry (`None` when no feeder
+    /// is installed).
+    pub fn metrics_registry(&self)
+        -> Option<crate::serve::telemetry::MetricsRegistry>
+    {
+        self.0.as_ref().and_then(|b| {
+            b.borrow().metrics.as_ref().map(|m| m.registry().clone())
+        })
+    }
+
+    /// Scrape blocks the feeder has rendered so far.
+    pub fn metrics_scrapes(&self) -> u64 {
+        self.0.as_ref().map_or(0, |b| {
+            b.borrow().metrics.as_ref().map_or(0, |m| m.scrapes())
+        })
+    }
+
+    /// First I/O error the metrics feeder hit, if any.
+    pub fn metrics_error(&self) -> Option<String> {
+        self.0.as_ref().and_then(|b| {
+            b.borrow().metrics.as_ref().and_then(|m| m.error())
+        })
+    }
+
+    /// Per-tenant rolling SLO burn rows (empty until a deadlined
+    /// request settles), sorted by tenant id.
+    pub fn slo_summary(&self)
+        -> Vec<crate::serve::telemetry::SloTenant>
+    {
+        self.0.as_ref().map_or_else(Vec::new, |b| {
+            b.borrow().slo.summary()
+        })
+    }
+
+    /// Register an arbitrary extra sink (driven after the built-in
+    /// ones, in registration order).
+    pub fn add_sink(&self, sink: Box<dyn EventSink>) {
+        if let Some(bus) = &self.0 {
+            bus.borrow_mut().extra.push(sink);
         }
     }
 
@@ -945,6 +1105,25 @@ pub fn to_chrome_trace(events: &[EngineEvent],
         Json::Obj(m)
     };
 
+    // Per-tenant aggregation track: a counter series on the tenants
+    // process sampling each tenant's in-flight residency count at
+    // every dispatch/preempt/complete transition, so cross-tenant
+    // load reads as stacked area without opening individual lanes.
+    let mut inflight: BTreeMap<u32, i64> = BTreeMap::new();
+    let mut counter = |trace: &mut Vec<Json>, t: f64, tenant: u32,
+                       n: i64| {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str("inflight".into()));
+        m.insert("ph".into(), Json::Str("C".into()));
+        m.insert("pid".into(), Json::Num(1.0));
+        m.insert("ts".into(), Json::Num(us(t)));
+        let mut args = BTreeMap::new();
+        args.insert(name_of(Some(tenant)),
+                    Json::Num(n.max(0) as f64));
+        m.insert("args".into(), Json::Obj(args));
+        trace.push(Json::Obj(m));
+    };
+
     // Request residencies: Dispatch opens, Preempt/Complete closes.
     let mut open: BTreeMap<u64, (f64, Option<u32>)> = BTreeMap::new();
     let mut resid: Vec<Interval> = Vec::new();
@@ -956,10 +1135,20 @@ pub fn to_chrome_trace(events: &[EngineEvent],
             EventKind::Dispatch => {
                 if let Some(id) = ev.request {
                     open.insert(id, (ev.t_s, ev.tenant));
+                    if let Some(t) = ev.tenant {
+                        let n = inflight.entry(t).or_insert(0);
+                        *n += 1;
+                        counter(&mut trace, ev.t_s, t, *n);
+                    }
                 }
             }
             EventKind::Preempt | EventKind::Complete => {
                 if let Some(id) = ev.request {
+                    if let Some(t) = ev.tenant {
+                        let n = inflight.entry(t).or_insert(0);
+                        *n -= 1;
+                        counter(&mut trace, ev.t_s, t, *n);
+                    }
                     if let Some((start, tenant)) = open.remove(&id) {
                         let tag = if ev.kind == EventKind::Preempt {
                             format!("req {id} (preempted)")
@@ -1235,7 +1424,8 @@ impl ClusterAuditor {
                     }
                 }
             }
-            PrefillStart | PrefillChunk | DecodeStep | Resume => {
+            PrefillStart | PrefillChunk | DecodeStep | Resume
+                | SloBurn => {
                 self.owner_check(replica, ev);
             }
             // Reject concerns a pending (non-resident) request;

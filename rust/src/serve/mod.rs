@@ -73,6 +73,21 @@
 //!     least-urgent decoding slot is evicted, its blocks freed, and
 //!     the request re-queued with recompute-on-resume, emitted-token
 //!     accounting staying exactly-once).
+//!   * [`telemetry`] — live observability riding the event bus: the
+//!     streaming JSONL sink ([`telemetry::JsonlStreamSink`], a
+//!     bounded ring flushing `--trace-events` incrementally during
+//!     the run), the Prometheus-style
+//!     [`telemetry::MetricsRegistry`] (counters / gauges /
+//!     log-bucketed histograms with tenant/replica/policy labels,
+//!     scraped every `--metrics-interval` virtual seconds to
+//!     `--metrics PATH` by the event-fed
+//!     [`telemetry::MetricsFeeder`] — zero new emission sites), the
+//!     per-phase [`telemetry::StepProfiler`] (admission / dispatch /
+//!     prefill / decode / kv-grow / prefix / router, virtual
+//!     attribution partitioning step time exactly, wall dual stamps
+//!     under `--clock measured`, folded stacks via `--profile`), and
+//!     the per-tenant rolling SLO burn budget
+//!     ([`telemetry::SloBurnTracker`] fed by `SloBurn` events).
 //!   * [`router`]    — cluster ingress routing. PaCA replicas pin
 //!     zero adapter bytes, so any replica can serve any tenant; the
 //!     [`router::Router`] picks one purely from advertised load
@@ -113,4 +128,5 @@ pub mod prefix;
 pub mod registry;
 pub mod router;
 pub mod scheduler;
+pub mod telemetry;
 pub mod trace;

@@ -1,0 +1,1364 @@
+//! Live telemetry for the serving stack: the consumers that turn the
+//! event bus into something you can watch DURING a run instead of
+//! only after it drains.
+//!
+//! Four pieces, all riding the existing [`Events`] handle so they are
+//! zero-cost when off and provably inert when on (the reduction
+//! anchors compare scrubbed engine stats bit for bit):
+//!
+//!   * [`JsonlStreamSink`] — the buffered-JSONL [`EventSink`] impl: a
+//!     bounded ring that flushes to disk every time it fills, so the
+//!     `--trace-events` file grows incrementally instead of being
+//!     written at export. The in-memory impl is the recorder's
+//!     bounded ring ([`Events::bound_recorder`]); whatever the bound
+//!     drops there is counted, never silent.
+//!   * [`MetricsRegistry`] / [`MetricsFeeder`] — counters, gauges and
+//!     log-bucketed histograms with `tenant`/`replica`/`policy`
+//!     labels, fed purely from the event stream (zero new emission
+//!     sites in engine code) and scraped to Prometheus text every
+//!     `--metrics-interval` virtual seconds.
+//!   * [`StepProfiler`] — per-phase decomposition of the engine step
+//!     loop (admission / dispatch / prefill / decode / kv-grow /
+//!     prefix / router) with paired begin/end stamps: virtual-clock
+//!     attribution always, wall-clock dual stamps under
+//!     `--clock measured`. Phase times partition each step's service
+//!     time exactly — no unattributed remainder — and export as a
+//!     report table plus folded stacks for flamegraph tooling.
+//!   * [`SloBurnTracker`] — per-tenant rolling deadline-miss budget
+//!     fed by `SloBurn` events, making the slo-aware scheduler's
+//!     rescue behaviour observable rather than inferred.
+//!
+//! [`Events`]: crate::serve::events::Events
+//! [`Events::bound_recorder`]: crate::serve::events::Events::bound_recorder
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::Write;
+use std::path::Path;
+
+use crate::metrics::{nearest_rank_index, Table};
+use crate::serve::events::{EngineEvent, EventKind, EventSink};
+use crate::util::json::Json;
+
+// ------------------------------------------------------------- output
+
+/// Where a telemetry sink writes: a buffered file in production, an
+/// in-memory byte vector under test. I/O errors cannot surface as
+/// `Result` from inside event dispatch, so the first one latches on
+/// the owning sink and the CLI checks it after the run.
+#[derive(Debug)]
+pub enum TelemetryOut {
+    File(std::io::BufWriter<std::fs::File>),
+    Mem(Vec<u8>),
+}
+
+impl TelemetryOut {
+    pub fn create(path: &Path) -> std::io::Result<TelemetryOut> {
+        Ok(TelemetryOut::File(std::io::BufWriter::new(
+            std::fs::File::create(path)?)))
+    }
+
+    pub fn memory() -> TelemetryOut {
+        TelemetryOut::Mem(Vec::new())
+    }
+
+    /// Write + flush through to the OS, so readers see the bytes
+    /// while the run is still going.
+    pub(crate) fn put(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        match self {
+            TelemetryOut::File(w) => {
+                w.write_all(bytes)?;
+                w.flush()
+            }
+            TelemetryOut::Mem(v) => {
+                v.extend_from_slice(bytes);
+                Ok(())
+            }
+        }
+    }
+
+    /// In-memory bytes (None for the file flavour) — test hook.
+    pub fn mem(&self) -> Option<&[u8]> {
+        match self {
+            TelemetryOut::Mem(v) => Some(v),
+            TelemetryOut::File(_) => None,
+        }
+    }
+}
+
+// -------------------------------------------------------- stream sink
+
+/// The buffered-JSONL [`EventSink`]: events land in a bounded ring
+/// and the ring flushes to the output every time it reaches its
+/// bound (and once more at finalize), so the trace file is non-empty
+/// long before the run finishes. Nothing is ever dropped here — the
+/// ring is a flush granularity, not a loss bound; the lossy bound
+/// lives on the in-memory recorder, where drops are explicitly
+/// counted.
+#[derive(Debug)]
+pub struct JsonlStreamSink {
+    out: TelemetryOut,
+    ring: Vec<EngineEvent>,
+    cap: usize,
+    written: u64,
+    flushes: u64,
+    error: Option<String>,
+}
+
+impl JsonlStreamSink {
+    pub fn new(out: TelemetryOut, cap: usize) -> JsonlStreamSink {
+        JsonlStreamSink {
+            out,
+            ring: Vec::with_capacity(cap.max(1)),
+            cap: cap.max(1),
+            written: 0,
+            flushes: 0,
+            error: None,
+        }
+    }
+
+    pub fn create(path: &Path, cap: usize)
+                  -> std::io::Result<JsonlStreamSink> {
+        Ok(JsonlStreamSink::new(TelemetryOut::create(path)?, cap))
+    }
+
+    /// Lines flushed to the output so far.
+    pub fn written(&self) -> u64 {
+        self.written
+    }
+
+    /// Ring flushes performed so far.
+    pub fn flushes(&self) -> u64 {
+        self.flushes
+    }
+
+    pub fn error(&self) -> Option<String> {
+        self.error.clone()
+    }
+
+    /// In-memory output bytes — test hook.
+    pub fn mem(&self) -> Option<&[u8]> {
+        self.out.mem()
+    }
+
+    fn flush_ring(&mut self) {
+        if self.ring.is_empty() {
+            return;
+        }
+        let mut body = String::new();
+        for ev in &self.ring {
+            body.push_str(&ev.to_json().to_string());
+            body.push('\n');
+        }
+        let n = self.ring.len() as u64;
+        self.ring.clear();
+        self.flushes += 1;
+        if let Err(e) = self.out.put(body.as_bytes()) {
+            if self.error.is_none() {
+                self.error = Some(e.to_string());
+            }
+            return;
+        }
+        self.written += n;
+    }
+}
+
+impl EventSink for JsonlStreamSink {
+    fn on_event(&mut self, ev: &EngineEvent) {
+        self.ring.push(*ev);
+        if self.ring.len() >= self.cap {
+            self.flush_ring();
+        }
+    }
+
+    fn finalize(&mut self) {
+        self.flush_ring();
+    }
+}
+
+// ---------------------------------------------------------- histogram
+
+/// Doubling log-bucket edges: bucket 0 is everything at or below
+/// [`HIST_LOWEST`] (including 0), bucket `i` (1 ≤ i ≤ [`HIST_TOP`])
+/// covers `(LOWEST·2^(i−1), LOWEST·2^i]`, and the final bucket is the
+/// `+Inf` overflow.
+pub const HIST_LOWEST: f64 = 1e-6;
+pub const HIST_TOP: usize = 40;
+pub const HIST_BUCKETS: usize = HIST_TOP + 2;
+
+/// Upper edge of bucket `i` (`+Inf` for the overflow bucket).
+pub fn bucket_le(i: usize) -> f64 {
+    if i > HIST_TOP {
+        return f64::INFINITY;
+    }
+    HIST_LOWEST * (i as f64).exp2()
+}
+
+/// Bucket index for a sample. Non-positive samples (and anything not
+/// above the lowest edge) land in bucket 0; anything above the
+/// largest finite edge lands in the overflow bucket.
+pub fn bucket_index(v: f64) -> usize {
+    if !(v > HIST_LOWEST) {
+        return 0;
+    }
+    let mut edge = HIST_LOWEST;
+    for i in 0..=HIST_TOP {
+        if v <= edge {
+            return i;
+        }
+        edge *= 2.0;
+    }
+    HIST_BUCKETS - 1
+}
+
+/// A log-bucketed histogram that also remembers each bucket's MAX
+/// sample as its representative. The bucket walk reuses the
+/// recorders' shared [`nearest_rank_index`] rule, so whenever every
+/// occupied bucket holds one distinct sample the histogram's
+/// percentiles agree with `LatencyRecorder` **bitwise** — the unit
+/// suite pins that down.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    reps: Vec<f64>,
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            counts: vec![0; HIST_BUCKETS],
+            reps: vec![0.0; HIST_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&mut self, v: f64) {
+        if !v.is_finite() {
+            debug_assert!(false, "non-finite histogram sample {v}");
+            return;
+        }
+        let i = bucket_index(v);
+        self.counts[i] += 1;
+        if self.counts[i] == 1 || v > self.reps[i] {
+            self.reps[i] = v;
+        }
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Merge: counts add, representatives take the max, extrema
+    /// combine — associative and commutative, so replica registries
+    /// merge in any order to the same result.
+    pub fn merge(&mut self, other: &Histogram) {
+        for i in 0..HIST_BUCKETS {
+            if other.counts[i] == 0 {
+                continue;
+            }
+            if self.counts[i] == 0 || other.reps[i] > self.reps[i] {
+                self.reps[i] = other.reps[i];
+            }
+            self.counts[i] += other.counts[i];
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn bucket_count(&self, i: usize) -> u64 {
+        self.counts[i]
+    }
+
+    /// Nearest-rank percentile via the bucket walk: find the bucket
+    /// holding the target order statistic, return its representative.
+    pub fn percentile(&self, q: f64) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let target = nearest_rank_index(self.count as usize, q);
+        let mut cum = 0usize;
+        for i in 0..HIST_BUCKETS {
+            cum += self.counts[i] as usize;
+            if cum > target {
+                return Some(self.reps[i]);
+            }
+        }
+        Some(self.reps[HIST_BUCKETS - 1])
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        Some(self.sum / self.count as f64)
+    }
+}
+
+// ----------------------------------------------------------- registry
+
+/// One metric series: a name plus its series-specific labels (base
+/// labels like `policy`/`replica` are stamped by the registry at
+/// render time). Labels are kept sorted so equal label sets compare
+/// equal.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Series {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+}
+
+impl Series {
+    fn new(name: &str, labels: &[(&str, &str)]) -> Series {
+        let mut labels: Vec<(String, String)> = labels.iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        labels.sort();
+        Series { name: name.to_string(), labels }
+    }
+}
+
+/// Prometheus label-value escaping (`\`, `"`, newline).
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"")
+        .replace('\n', "\\n")
+}
+
+/// Deterministic sample-value formatting: integers render without a
+/// fraction, everything else through Rust's shortest round-trip
+/// float display. Never NaN — observe paths reject non-finite
+/// samples.
+fn fmt_value(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// The metrics registry: counters, gauges and [`Histogram`]s keyed by
+/// [`Series`], with registry-wide base labels (`policy="..."`,
+/// `replica="..."`) stamped onto every rendered line. Merging two
+/// registries is a plain union — cluster mode gives each replica's
+/// registry a distinct `replica` base label, so merged series never
+/// collide and the merge is associative.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsRegistry {
+    base: Vec<(String, String)>,
+    counters: BTreeMap<Series, f64>,
+    gauges: BTreeMap<Series, f64>,
+    hists: BTreeMap<Series, Histogram>,
+}
+
+impl MetricsRegistry {
+    pub fn with_base(labels: &[(&str, &str)]) -> MetricsRegistry {
+        let mut base: Vec<(String, String)> = labels.iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        base.sort();
+        MetricsRegistry { base, ..Default::default() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty()
+            && self.hists.is_empty()
+    }
+
+    pub fn inc(&mut self, name: &str, labels: &[(&str, &str)],
+               v: f64) {
+        debug_assert!(v >= 0.0, "counters only go up");
+        *self.counters.entry(Series::new(name, labels))
+            .or_insert(0.0) += v;
+    }
+
+    pub fn set_gauge(&mut self, name: &str, labels: &[(&str, &str)],
+                     v: f64) {
+        self.gauges.insert(Series::new(name, labels), v);
+    }
+
+    pub fn observe(&mut self, name: &str, labels: &[(&str, &str)],
+                   v: f64) {
+        self.hists.entry(Series::new(name, labels))
+            .or_default().observe(v);
+    }
+
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)])
+                   -> f64 {
+        self.counters.get(&Series::new(name, labels)).copied()
+            .unwrap_or(0.0)
+    }
+
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)])
+                 -> Option<f64> {
+        self.gauges.get(&Series::new(name, labels)).copied()
+    }
+
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)])
+                     -> Option<&Histogram> {
+        self.hists.get(&Series::new(name, labels))
+    }
+
+    /// Union-merge `other` into `self`: counters and gauges add,
+    /// histograms [`Histogram::merge`]. Series are compared on their
+    /// FULL label set including base labels, so replica-labeled
+    /// registries union without collisions.
+    pub fn merge(&mut self, other: &MetricsRegistry) {
+        let relabel = |s: &Series, base: &[(String, String)]| {
+            let mut labels = s.labels.clone();
+            for (k, v) in base {
+                if !labels.iter().any(|(lk, _)| lk == k) {
+                    labels.push((k.clone(), v.clone()));
+                }
+            }
+            labels.sort();
+            Series { name: s.name.clone(), labels }
+        };
+        // Fold the two base-label sets into the series themselves;
+        // the merged registry keeps only the base labels common to
+        // both sides.
+        let self_base = self.base.clone();
+        let common: Vec<(String, String)> = self_base.iter()
+            .filter(|kv| other.base.contains(kv)).cloned().collect();
+        if self.base != common {
+            let fold: Vec<(String, String)> = self_base.iter()
+                .filter(|kv| !common.contains(kv)).cloned().collect();
+            self.counters = std::mem::take(&mut self.counters)
+                .into_iter()
+                .map(|(s, v)| (relabel(&s, &fold), v)).collect();
+            self.gauges = std::mem::take(&mut self.gauges)
+                .into_iter()
+                .map(|(s, v)| (relabel(&s, &fold), v)).collect();
+            self.hists = std::mem::take(&mut self.hists)
+                .into_iter()
+                .map(|(s, v)| (relabel(&s, &fold), v)).collect();
+            self.base = common.clone();
+        }
+        let fold: Vec<(String, String)> = other.base.iter()
+            .filter(|kv| !common.contains(kv)).cloned().collect();
+        for (s, v) in &other.counters {
+            *self.counters.entry(relabel(s, &fold)).or_insert(0.0)
+                += v;
+        }
+        for (s, v) in &other.gauges {
+            *self.gauges.entry(relabel(s, &fold)).or_insert(0.0) += v;
+        }
+        for (s, h) in &other.hists {
+            self.hists.entry(relabel(s, &fold)).or_default().merge(h);
+        }
+    }
+
+    fn label_str(&self, extra: &[(String, String)]) -> String {
+        let mut all: Vec<(&str, &str)> = self.base.iter()
+            .chain(extra.iter())
+            .map(|(k, v)| (k.as_str(), v.as_str()))
+            .collect();
+        all.sort();
+        if all.is_empty() {
+            return String::new();
+        }
+        let body: Vec<String> = all.iter()
+            .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+            .collect();
+        format!("{{{}}}", body.join(","))
+    }
+
+    fn label_str_le(&self, extra: &[(String, String)], le: f64)
+                    -> String {
+        let le = if le.is_finite() {
+            format!("{le}")
+        } else {
+            "+Inf".to_string()
+        };
+        let mut extra = extra.to_vec();
+        extra.push(("le".to_string(), le));
+        self.label_str(&extra)
+    }
+
+    /// Render one Prometheus-text scrape: `# TYPE` headers, one
+    /// sample line per series, histograms as cumulative `_bucket`
+    /// lines (occupied buckets plus `+Inf`) with `_sum`/`_count`.
+    /// An empty registry renders to an empty string.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let mut last_name = String::new();
+        for (s, v) in &self.counters {
+            if s.name != last_name {
+                out.push_str(&format!("# TYPE {} counter\n", s.name));
+                last_name = s.name.clone();
+            }
+            out.push_str(&format!("{}{} {}\n", s.name,
+                                  self.label_str(&s.labels),
+                                  fmt_value(*v)));
+        }
+        last_name.clear();
+        for (s, v) in &self.gauges {
+            if s.name != last_name {
+                out.push_str(&format!("# TYPE {} gauge\n", s.name));
+                last_name = s.name.clone();
+            }
+            out.push_str(&format!("{}{} {}\n", s.name,
+                                  self.label_str(&s.labels),
+                                  fmt_value(*v)));
+        }
+        last_name.clear();
+        for (s, h) in &self.hists {
+            if s.name != last_name {
+                out.push_str(&format!("# TYPE {} histogram\n",
+                                      s.name));
+                last_name = s.name.clone();
+            }
+            let mut cum = 0u64;
+            for i in 0..HIST_BUCKETS - 1 {
+                if h.bucket_count(i) == 0 {
+                    continue;
+                }
+                cum += h.bucket_count(i);
+                out.push_str(&format!(
+                    "{}_bucket{} {}\n", s.name,
+                    self.label_str_le(&s.labels, bucket_le(i)), cum));
+            }
+            out.push_str(&format!(
+                "{}_bucket{} {}\n", s.name,
+                self.label_str_le(&s.labels, f64::INFINITY),
+                h.count));
+            out.push_str(&format!("{}_sum{} {}\n", s.name,
+                                  self.label_str(&s.labels),
+                                  fmt_value(h.sum)));
+            out.push_str(&format!("{}_count{} {}\n", s.name,
+                                  self.label_str(&s.labels),
+                                  h.count));
+        }
+        out
+    }
+
+    /// JSON snapshot for the report's `metrics` section: counters and
+    /// gauges keyed by their rendered series signature, histograms
+    /// summarized as count/sum/p50/p99.
+    pub fn snapshot_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        let mut counters = BTreeMap::new();
+        for (s, v) in &self.counters {
+            counters.insert(format!("{}{}", s.name,
+                                    self.label_str(&s.labels)),
+                            Json::Num(*v));
+        }
+        root.insert("counters".to_string(), Json::Obj(counters));
+        let mut gauges = BTreeMap::new();
+        for (s, v) in &self.gauges {
+            gauges.insert(format!("{}{}", s.name,
+                                  self.label_str(&s.labels)),
+                          Json::Num(*v));
+        }
+        root.insert("gauges".to_string(), Json::Obj(gauges));
+        let mut hists = BTreeMap::new();
+        for (s, h) in &self.hists {
+            let mut m = BTreeMap::new();
+            m.insert("count".to_string(), Json::Num(h.count as f64));
+            m.insert("sum".to_string(), Json::Num(h.sum));
+            if let Some(p) = h.percentile(0.50) {
+                m.insert("p50".to_string(), Json::Num(p));
+            }
+            if let Some(p) = h.percentile(0.99) {
+                m.insert("p99".to_string(), Json::Num(p));
+            }
+            hists.insert(format!("{}{}", s.name,
+                                 self.label_str(&s.labels)),
+                         Json::Obj(m));
+        }
+        root.insert("histograms".to_string(), Json::Obj(hists));
+        Json::Obj(root)
+    }
+}
+
+// ------------------------------------------------------------- feeder
+
+/// The event-fed registry driver: consumes the bus stream, maintains
+/// a [`MetricsRegistry`], and appends a Prometheus-text scrape block
+/// to its output every time the virtual clock crosses an interval
+/// boundary (collapsing multi-interval idle jumps to one scrape).
+/// Engine code gains zero new emission sites — everything derives
+/// from events that already exist.
+#[derive(Debug)]
+pub struct MetricsFeeder {
+    reg: MetricsRegistry,
+    tenants: Vec<String>,
+    interval_s: f64,
+    now: f64,
+    next_scrape_s: f64,
+    scrapes: u64,
+    out: Option<TelemetryOut>,
+    error: Option<String>,
+    /// request id → arrival time, for TTFT / e2e histograms.
+    arrivals: BTreeMap<u64, f64>,
+}
+
+impl MetricsFeeder {
+    /// `out = None` accumulates the registry without writing scrapes
+    /// (cluster mode: the cluster scrapes the MERGED registries on
+    /// the shared clock).
+    pub fn new(base: &[(&str, &str)], tenants: &[String],
+               interval_s: f64, out: Option<TelemetryOut>)
+               -> MetricsFeeder {
+        assert!(interval_s > 0.0, "metrics interval must be positive");
+        MetricsFeeder {
+            reg: MetricsRegistry::with_base(base),
+            tenants: tenants.to_vec(),
+            interval_s,
+            now: 0.0,
+            next_scrape_s: interval_s,
+            scrapes: 0,
+            out,
+            error: None,
+            arrivals: BTreeMap::new(),
+        }
+    }
+
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.reg
+    }
+
+    pub fn scrapes(&self) -> u64 {
+        self.scrapes
+    }
+
+    pub fn error(&self) -> Option<String> {
+        self.error.clone()
+    }
+
+    /// In-memory output bytes — test hook.
+    pub fn mem(&self) -> Option<&[u8]> {
+        self.out.as_ref().and_then(TelemetryOut::mem)
+    }
+
+    fn tenant_label(&self, t: Option<u32>) -> Option<String> {
+        let t = t?;
+        Some(self.tenants.get(t as usize).cloned()
+             .unwrap_or_else(|| format!("t{t}")))
+    }
+
+    fn scrape(&mut self, t_s: f64) {
+        let Some(out) = &mut self.out else { return };
+        self.scrapes += 1;
+        let body = format!("# scrape {} t_s {t_s:.6}\n{}\n",
+                           self.scrapes, self.reg.render());
+        if let Err(e) = out.put(body.as_bytes()) {
+            if self.error.is_none() {
+                self.error = Some(e.to_string());
+            }
+        }
+    }
+
+    fn advance(&mut self, t_s: f64) {
+        self.now = self.now.max(t_s);
+        if self.now >= self.next_scrape_s {
+            let at = self.next_scrape_s;
+            self.scrape(at);
+            // Collapse multi-interval jumps: one scrape per crossing.
+            let k = (self.now / self.interval_s).floor() + 1.0;
+            self.next_scrape_s = k * self.interval_s;
+        }
+    }
+}
+
+impl EventSink for MetricsFeeder {
+    fn on_event(&mut self, ev: &EngineEvent) {
+        use EventKind::*;
+        // Scrape boundaries ride the running-max clock (Arrival is
+        // allowed to point backwards and never advances it).
+        if ev.kind != Arrival {
+            self.advance(ev.t_s);
+        }
+        let tenant = self.tenant_label(ev.tenant);
+        let tl: Vec<(&str, &str)> = match &tenant {
+            Some(name) => vec![("tenant", name.as_str())],
+            None => Vec::new(),
+        };
+        self.reg.inc("paca_events_total",
+                     &[("kind", ev.kind.name())], 1.0);
+        match ev.kind {
+            Arrival => {
+                if let Some(id) = ev.request {
+                    self.arrivals.insert(id, ev.t_s);
+                }
+                self.reg.inc("paca_requests_arrived_total", &tl, 1.0);
+            }
+            Complete => {
+                self.reg.inc("paca_requests_completed_total", &tl,
+                             1.0);
+                if let Some(t0) = ev.request
+                    .and_then(|id| self.arrivals.remove(&id))
+                {
+                    self.reg.observe("paca_e2e_seconds", &tl,
+                                     (ev.t_s - t0).max(0.0));
+                }
+            }
+            PrefillEnd if ev.a == 1 => {
+                if let Some(t0) = ev.request
+                    .and_then(|id| self.arrivals.get(&id).copied())
+                {
+                    self.reg.observe("paca_ttft_seconds", &tl,
+                                     (ev.t_s - t0).max(0.0));
+                }
+            }
+            DecodeStep => {
+                self.reg.inc("paca_tokens_decoded_total", &tl, 1.0);
+            }
+            Preempt => {
+                // a = 1 under memory pressure, 0 for a deadline
+                // rescue (events.rs kind doc).
+                let cause = if ev.a == 1 { "memory" } else {
+                    "rescue"
+                };
+                self.reg.inc("paca_preemptions_total",
+                             &[("cause", cause)], 1.0);
+            }
+            PrefixHit => {
+                self.reg.inc("paca_prefix_hit_tokens_total", &tl,
+                             ev.a as f64);
+            }
+            KvAlloc | KvFree => {
+                self.reg.set_gauge("paca_kv_used_blocks", &[],
+                                   ev.b as f64);
+            }
+            Overflow => {
+                self.reg.inc("paca_kv_overflow_tokens_total", &[],
+                             ev.a as f64);
+            }
+            SpliceIn => {
+                self.reg.inc("paca_adapter_splices_total", &tl, 1.0);
+            }
+            SloBurn => {
+                self.reg.inc("paca_slo_completions_total", &tl, 1.0);
+                if ev.a == 1 {
+                    self.reg.inc("paca_slo_misses_total", &tl, 1.0);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Closing scrape: whatever the final registry says, stamped at
+    /// the last clock the feeder saw.
+    fn finalize(&mut self) {
+        let at = self.now;
+        self.scrape(at);
+    }
+}
+
+// ---------------------------------------------------------- slo burn
+
+/// Rolling deadline-miss window per tenant (last [`SLO_WINDOW`]
+/// deadlined completions).
+pub const SLO_WINDOW: usize = 32;
+
+#[derive(Debug, Default)]
+struct SloTenantState {
+    total: u64,
+    missed: u64,
+    max_lateness_us: u64,
+    window: VecDeque<bool>,
+}
+
+/// One tenant's burn row for the report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloTenant {
+    pub tenant: u32,
+    /// Deadlined completions settled, all-time.
+    pub total: u64,
+    /// Deadline misses, all-time.
+    pub missed: u64,
+    /// Size of the rolling window currently held (≤ [`SLO_WINDOW`]).
+    pub window_len: usize,
+    /// Misses inside the rolling window.
+    pub window_missed: usize,
+    /// Worst lateness seen, µs.
+    pub max_lateness_us: u64,
+}
+
+impl SloTenant {
+    /// Fraction of the rolling window burned (0 when empty).
+    pub fn burn_rate(&self) -> f64 {
+        if self.window_len == 0 {
+            return 0.0;
+        }
+        self.window_missed as f64 / self.window_len as f64
+    }
+}
+
+/// Always-on bus sink: folds `SloBurn` events into per-tenant rolling
+/// budgets. Costs one kind check per event when no deadlines exist.
+#[derive(Debug, Default)]
+pub struct SloBurnTracker {
+    tenants: BTreeMap<u32, SloTenantState>,
+}
+
+impl SloBurnTracker {
+    pub fn summary(&self) -> Vec<SloTenant> {
+        self.tenants.iter()
+            .map(|(t, s)| SloTenant {
+                tenant: *t,
+                total: s.total,
+                missed: s.missed,
+                window_len: s.window.len(),
+                window_missed: s.window.iter()
+                    .filter(|m| **m).count(),
+                max_lateness_us: s.max_lateness_us,
+            })
+            .collect()
+    }
+}
+
+impl EventSink for SloBurnTracker {
+    fn on_event(&mut self, ev: &EngineEvent) {
+        if ev.kind != EventKind::SloBurn {
+            return;
+        }
+        let s = self.tenants.entry(ev.tenant.unwrap_or(u32::MAX))
+            .or_default();
+        let missed = ev.a == 1;
+        s.total += 1;
+        if missed {
+            s.missed += 1;
+            s.max_lateness_us = s.max_lateness_us.max(ev.b);
+        }
+        s.window.push_back(missed);
+        if s.window.len() > SLO_WINDOW {
+            s.window.pop_front();
+        }
+    }
+}
+
+// ----------------------------------------------------------- profiler
+
+/// The engine step loop's phases. `Router` is cluster-scoped (the
+/// routing decision at arrival delivery); everything else is one
+/// engine step's anatomy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Admission,
+    Dispatch,
+    Prefill,
+    Decode,
+    KvGrow,
+    Prefix,
+    Router,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 7] = [
+        Phase::Admission, Phase::Dispatch, Phase::Prefill,
+        Phase::Decode, Phase::KvGrow, Phase::Prefix, Phase::Router,
+    ];
+    pub const COUNT: usize = Self::ALL.len();
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Admission => "admission",
+            Phase::Dispatch => "dispatch",
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+            Phase::KvGrow => "kv_grow",
+            Phase::Prefix => "prefix",
+            Phase::Router => "router",
+        }
+    }
+
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// Accumulated per-phase time: virtual attribution always, wall time
+/// only when dual stamps are armed.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseAgg {
+    pub virtual_s: f64,
+    pub wall_s: f64,
+    pub count: u64,
+}
+
+/// Per-phase decomposition of the step loop. Virtual attribution
+/// partitions each step's service time exactly (the analytic clock's
+/// `batch_s + token_s·tokens + swap_s·swapped` terms map one-to-one
+/// onto dispatch/prefill/decode), so `Σ phase.virtual_s` equals
+/// `step_virtual_s` to f64 tolerance — the no-unattributed-time
+/// property. Wall-clock dual stamps (`wall = true`, armed under
+/// `--clock measured`) wrap the same begin/end pairs with `Instant`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StepProfiler {
+    agg: [PhaseAgg; Phase::COUNT],
+    /// Σ of the step service times attributed so far (the
+    /// reconciliation total for the partition property).
+    pub step_virtual_s: f64,
+    pub steps: u64,
+    /// Arm wall-clock dual stamps.
+    pub wall: bool,
+}
+
+impl StepProfiler {
+    pub fn new(wall: bool) -> StepProfiler {
+        StepProfiler { wall, ..Default::default() }
+    }
+
+    /// Begin stamp of a begin/end pair: `Some(Instant)` only when
+    /// wall stamps are armed, so analytic-clock runs never touch the
+    /// OS clock.
+    pub fn begin(&self) -> Option<std::time::Instant> {
+        if self.wall {
+            Some(std::time::Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// End stamp: attribute `virtual_s` to `phase`, plus the wall
+    /// time since `begin` when armed.
+    pub fn end(&mut self, phase: Phase,
+               begin: Option<std::time::Instant>, virtual_s: f64) {
+        let wall_s = begin.map_or(0.0,
+                                  |t| t.elapsed().as_secs_f64());
+        self.add(phase, virtual_s, wall_s);
+    }
+
+    /// Direct attribution for phases whose wall time is already
+    /// measured elsewhere (the forward step measures its own wall
+    /// time regardless of profiling — no second stamp needed).
+    pub fn add(&mut self, phase: Phase, virtual_s: f64, wall_s: f64) {
+        let a = &mut self.agg[phase.index()];
+        a.virtual_s += virtual_s;
+        if self.wall {
+            a.wall_s += wall_s;
+        }
+        a.count += 1;
+    }
+
+    /// Account one completed step's total service time (what the
+    /// phase attributions of that step must sum to).
+    pub fn add_step(&mut self, step_s: f64) {
+        self.step_virtual_s += step_s;
+        self.steps += 1;
+    }
+
+    pub fn phase(&self, p: Phase) -> PhaseAgg {
+        self.agg[p.index()]
+    }
+
+    /// Σ over phases of attributed virtual time.
+    pub fn total_virtual(&self) -> f64 {
+        self.agg.iter().map(|a| a.virtual_s).sum()
+    }
+
+    /// Merge another profiler (cluster: engine profilers + the
+    /// router-phase profiler fold into one table).
+    pub fn merge(&mut self, other: &StepProfiler) {
+        for i in 0..Phase::COUNT {
+            self.agg[i].virtual_s += other.agg[i].virtual_s;
+            self.agg[i].wall_s += other.agg[i].wall_s;
+            self.agg[i].count += other.agg[i].count;
+        }
+        self.step_virtual_s += other.step_virtual_s;
+        self.steps += other.steps;
+        self.wall |= other.wall;
+    }
+
+    /// The report's profile table.
+    pub fn table(&self) -> Table {
+        let mut t = if self.wall {
+            Table::new(&["phase", "count", "virtual s", "share",
+                         "wall ms"])
+        } else {
+            Table::new(&["phase", "count", "virtual s", "share"])
+        };
+        let total = self.total_virtual().max(f64::MIN_POSITIVE);
+        for p in Phase::ALL {
+            let a = self.phase(p);
+            if a.count == 0 {
+                continue;
+            }
+            let mut row = vec![
+                p.name().to_string(),
+                format!("{}", a.count),
+                format!("{:.6}", a.virtual_s),
+                format!("{:.1}%", 100.0 * a.virtual_s / total),
+            ];
+            if self.wall {
+                row.push(format!("{:.3}", a.wall_s * 1e3));
+            }
+            t.row(&row);
+        }
+        t
+    }
+
+    /// Folded-stacks export (`stack;frames value` lines, values in
+    /// whole µs of virtual time) — `flamegraph.pl` and speedscope
+    /// ingest this directly. With wall stamps armed a parallel
+    /// `paca_serve_wall` root carries the measured times.
+    pub fn folded(&self) -> String {
+        let mut out = String::new();
+        for p in Phase::ALL {
+            out.push_str(&format!(
+                "paca_serve;step;{} {}\n", p.name(),
+                (self.phase(p).virtual_s * 1e6).round() as u64));
+        }
+        if self.wall {
+            for p in Phase::ALL {
+                out.push_str(&format!(
+                    "paca_serve_wall;step;{} {}\n", p.name(),
+                    (self.phase(p).wall_s * 1e6).round() as u64));
+            }
+        }
+        out
+    }
+
+    /// Profiler totals for the report's `metrics` JSON section.
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("steps".to_string(),
+                    Json::Num(self.steps as f64));
+        root.insert("step_virtual_s".to_string(),
+                    Json::Num(self.step_virtual_s));
+        let mut phases = BTreeMap::new();
+        for p in Phase::ALL {
+            let a = self.phase(p);
+            if a.count == 0 {
+                continue;
+            }
+            let mut m = BTreeMap::new();
+            m.insert("count".to_string(), Json::Num(a.count as f64));
+            m.insert("virtual_s".to_string(),
+                     Json::Num(a.virtual_s));
+            if self.wall {
+                m.insert("wall_s".to_string(), Json::Num(a.wall_s));
+            }
+            phases.insert(p.name().to_string(), Json::Obj(m));
+        }
+        root.insert("phases".to_string(), Json::Obj(phases));
+        Json::Obj(root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::LatencyRecorder;
+
+    fn ev(t: f64, kind: EventKind, tenant: Option<u32>,
+          req: Option<u64>, a: u64, b: u64) -> EngineEvent {
+        EngineEvent { t_s: t, step: 0, kind, tenant, request: req,
+                      a, b }
+    }
+
+    // ------------------------------------------------- histogram
+
+    #[test]
+    fn histogram_bucket_boundary_edges() {
+        // 0 and anything at or below the lowest edge → bucket 0.
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(-1.0), 0);
+        assert_eq!(bucket_index(HIST_LOWEST), 0);
+        // Just above the lowest edge → bucket 1; exactly at an edge
+        // stays in that bucket (le-inclusive).
+        assert_eq!(bucket_index(HIST_LOWEST * 1.000001), 1);
+        assert_eq!(bucket_index(bucket_le(1)), 1);
+        assert_eq!(bucket_index(bucket_le(1) * 1.000001), 2);
+        // 1.0 second: smallest i with 1e-6·2^i ≥ 1 is 20.
+        assert_eq!(bucket_index(1.0), 20);
+        assert!(bucket_le(20) >= 1.0 && bucket_le(19) < 1.0);
+        // The largest finite edge holds the top regular bucket; one
+        // ulp beyond lands in the overflow bucket.
+        let top = bucket_le(HIST_TOP);
+        assert_eq!(bucket_index(top), HIST_TOP);
+        assert_eq!(bucket_index(top * 1.000001), HIST_BUCKETS - 1);
+        assert!(bucket_le(HIST_BUCKETS - 1).is_infinite());
+        // Observations land where bucket_index says.
+        let mut h = Histogram::default();
+        h.observe(0.0);
+        h.observe(top * 2.0);
+        assert_eq!(h.bucket_count(0), 1);
+        assert_eq!(h.bucket_count(HIST_BUCKETS - 1), 1);
+        assert_eq!(h.count, 2);
+    }
+
+    #[test]
+    fn histogram_merge_is_associative() {
+        let reg = |seed: u64| {
+            let mut r = MetricsRegistry::with_base(
+                &[("replica", &format!("{seed}"))]);
+            for i in 0..8u64 {
+                let v = ((seed * 131 + i * 17) % 97) as f64 * 1e-4;
+                r.observe("paca_e2e_seconds",
+                          &[("tenant", "t0")], v);
+                r.inc("paca_events_total", &[("kind", "admit")],
+                      (i % 3) as f64);
+            }
+            r
+        };
+        let (a, b, c) = (reg(1), reg(2), reg(3));
+        // (a ⊕ b) ⊕ c
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        // a ⊕ (b ⊕ c)
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left, right);
+        // Replica base labels folded into every series.
+        assert!(left.render().contains("replica=\"2\""));
+    }
+
+    #[test]
+    fn empty_registry_renders_empty() {
+        let r = MetricsRegistry::with_base(&[("policy", "fifo")]);
+        assert!(r.is_empty());
+        assert_eq!(r.render(), "");
+        let j = r.snapshot_json();
+        assert_eq!(j.get("counters").map(|c| c.to_string()),
+                   Some("{}".to_string()));
+    }
+
+    #[test]
+    fn histogram_percentiles_match_latency_recorder_bitwise() {
+        // One distinct sample per bucket: the bucket walk must pick
+        // the same f64 the recorder's nearest-rank rule picks.
+        let samples: Vec<f64> = (0..12)
+            .map(|k| 1.5e-6 * (k as f64).exp2())
+            .collect();
+        let mut h = Histogram::default();
+        let mut rec = LatencyRecorder::default();
+        for v in &samples {
+            h.observe(*v);
+            rec.record("x", *v);
+        }
+        // Sanity: every occupied bucket holds exactly one sample.
+        assert_eq!((0..HIST_BUCKETS)
+                   .filter(|i| h.bucket_count(*i) == 1).count(),
+                   samples.len());
+        for q in [0.0, 0.25, 0.50, 0.75, 0.90, 0.99, 1.0] {
+            let want = rec.percentile("x", q).unwrap();
+            let got = h.percentile(q).unwrap();
+            assert_eq!(got.to_bits(), want.to_bits(),
+                       "q={q}: {got} vs {want}");
+        }
+        let want_sum: f64 = samples.iter().sum();
+        assert!((h.mean().unwrap()
+                 - want_sum / samples.len() as f64).abs() < 1e-18);
+    }
+
+    #[test]
+    fn registry_render_is_valid_prometheus_text() {
+        let mut r = MetricsRegistry::with_base(
+            &[("policy", "slo-aware"), ("replica", "0")]);
+        r.inc("paca_events_total", &[("kind", "admit")], 3.0);
+        r.inc("paca_events_total", &[("kind", "complete")], 2.0);
+        r.set_gauge("paca_kv_used_blocks", &[], 7.0);
+        r.observe("paca_ttft_seconds", &[("tenant", "tenant-000")],
+                  0.25);
+        let text = r.render();
+        assert!(text.contains("# TYPE paca_events_total counter"));
+        assert!(text.contains(
+            "paca_events_total{kind=\"admit\",policy=\"slo-aware\",\
+             replica=\"0\"} 3"));
+        assert!(text.contains("# TYPE paca_kv_used_blocks gauge"));
+        assert!(text.contains("# TYPE paca_ttft_seconds histogram"));
+        assert!(text.contains("paca_ttft_seconds_bucket"));
+        assert!(text.contains("le=\"+Inf\""));
+        assert!(text.contains("paca_ttft_seconds_count"));
+        assert!(!text.contains("NaN"));
+        // The TYPE header appears once per metric name.
+        assert_eq!(text.matches("# TYPE paca_events_total").count(),
+                   1);
+    }
+
+    // ----------------------------------------------- stream sink
+
+    #[test]
+    fn stream_sink_flushes_on_ring_capacity() {
+        let mut s = JsonlStreamSink::new(TelemetryOut::memory(), 4);
+        let mk = |i: u64| ev(i as f64 * 0.1, EventKind::Overflow,
+                             None, None, i, 0);
+        for i in 0..10 {
+            s.on_event(&mk(i));
+        }
+        // Two full rings flushed, two events still pending.
+        assert_eq!(s.written(), 8);
+        assert_eq!(s.flushes(), 2);
+        let mid = String::from_utf8(s.mem().unwrap().to_vec())
+            .unwrap();
+        assert_eq!(mid.lines().count(), 8, "incremental, not final");
+        s.finalize();
+        assert_eq!(s.written(), 10);
+        let body = String::from_utf8(s.mem().unwrap().to_vec())
+            .unwrap();
+        // Order identical to the buffered exporter over the same
+        // events.
+        let all: Vec<EngineEvent> = (0..10).map(mk).collect();
+        assert_eq!(body,
+                   crate::serve::events::to_jsonl(&all));
+        assert!(s.error().is_none());
+    }
+
+    // ---------------------------------------------------- feeder
+
+    #[test]
+    fn feeder_scrapes_on_interval_boundaries_and_finalize() {
+        let mut f = MetricsFeeder::new(
+            &[("policy", "fifo")], &["tenant-000".to_string()], 1.0,
+            Some(TelemetryOut::memory()));
+        f.on_event(&ev(0.0, EventKind::Arrival, Some(0), Some(1),
+                       4, 2));
+        f.on_event(&ev(0.4, EventKind::Admit, Some(0), Some(1),
+                       4, 2));
+        assert_eq!(f.scrapes(), 0, "no boundary crossed yet");
+        f.on_event(&ev(1.2, EventKind::Dispatch, Some(0), Some(1),
+                       4, 2));
+        assert_eq!(f.scrapes(), 1, "crossed t=1.0");
+        // A long idle jump across many boundaries collapses to ONE
+        // scrape.
+        f.on_event(&ev(7.5, EventKind::PrefillEnd, Some(0), Some(1),
+                       1, 4));
+        assert_eq!(f.scrapes(), 2);
+        f.on_event(&ev(8.1, EventKind::Complete, Some(0), Some(1),
+                       3, 0));
+        assert_eq!(f.scrapes(), 3);
+        f.finalize();
+        assert_eq!(f.scrapes(), 4, "closing scrape");
+        let text = String::from_utf8(f.mem().unwrap().to_vec())
+            .unwrap();
+        assert_eq!(text.matches("# scrape").count(), 4);
+        // Counters are monotone across successive scrape blocks.
+        let events_totals: Vec<u64> = text.lines()
+            .filter(|l| l.starts_with(
+                "paca_events_total{kind=\"arrival\""))
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect();
+        assert!(events_totals.windows(2).all(|w| w[0] <= w[1]),
+                "{events_totals:?}");
+        // TTFT / e2e derived from the arrival ledger.
+        let reg = f.registry();
+        let ttft = reg.histogram("paca_ttft_seconds",
+                                 &[("tenant", "tenant-000")])
+            .expect("ttft recorded");
+        assert_eq!(ttft.count, 1);
+        assert!((ttft.sum - 7.5).abs() < 1e-12);
+        let e2e = reg.histogram("paca_e2e_seconds",
+                                &[("tenant", "tenant-000")])
+            .expect("e2e recorded");
+        assert!((e2e.sum - 8.1).abs() < 1e-12);
+        assert_eq!(
+            reg.counter("paca_events_total", &[("kind", "admit")]),
+            1.0);
+    }
+
+    // ------------------------------------------------------- slo
+
+    #[test]
+    fn slo_tracker_rolls_a_bounded_window() {
+        let mut t = SloBurnTracker::default();
+        // 40 settlements for tenant 3: the first 10 miss, the rest
+        // are on time — the 32-wide window forgets 2 of the misses.
+        for i in 0..40u64 {
+            let missed = i < 10;
+            t.on_event(&ev(i as f64, EventKind::SloBurn, Some(3),
+                           Some(i), missed as u64,
+                           if missed { 1500 } else { 0 }));
+        }
+        let rows = t.summary();
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert_eq!((r.tenant, r.total, r.missed), (3, 40, 10));
+        assert_eq!(r.window_len, SLO_WINDOW);
+        assert_eq!(r.window_missed, 2);
+        assert!((r.burn_rate() - 2.0 / 32.0).abs() < 1e-12);
+        assert_eq!(r.max_lateness_us, 1500);
+        // Non-SloBurn kinds are ignored.
+        t.on_event(&ev(99.0, EventKind::Complete, Some(3), Some(99),
+                       1, 0));
+        assert_eq!(t.summary()[0].total, 40);
+    }
+
+    // -------------------------------------------------- profiler
+
+    #[test]
+    fn profiler_phases_partition_analytic_step_time() {
+        // Mirror the engine's analytic attribution for a batch of
+        // steps and check the no-unattributed-time property.
+        let (swap_s, batch_s, token_s) = (2e-3, 5e-4, 2e-5);
+        let mut p = StepProfiler::new(false);
+        let mut want_total = 0.0;
+        for step in 0..200u64 {
+            let swapped = step % 3 == 0;
+            let prefill_tok = (step % 7) * 5;
+            let decode_tok = 1 + step % 4;
+            let tok = (prefill_tok + decode_tok) as f64;
+            let step_s = batch_s + token_s * tok
+                + if swapped { swap_s } else { 0.0 };
+            let b = p.begin();
+            p.end(Phase::Admission, b, 0.0);
+            let sw = if swapped { swap_s } else { 0.0 };
+            p.end(Phase::Dispatch, None, batch_s + sw);
+            let tok_part = token_s * tok;
+            p.end(Phase::Prefill, None,
+                  tok_part * prefill_tok as f64 / tok);
+            p.end(Phase::Decode, None,
+                  tok_part * decode_tok as f64 / tok);
+            p.end(Phase::KvGrow, None, 0.0);
+            p.add_step(step_s);
+            want_total += step_s;
+        }
+        let got = p.total_virtual();
+        assert!((got - p.step_virtual_s).abs()
+                <= 1e-9 * p.step_virtual_s.max(1.0),
+                "unattributed time: {} vs {}", got,
+                p.step_virtual_s);
+        assert!((p.step_virtual_s - want_total).abs() < 1e-12);
+        // No wall stamps on the analytic path.
+        assert_eq!(p.phase(Phase::Admission).wall_s, 0.0);
+        assert!(p.begin().is_none());
+    }
+
+    #[test]
+    fn profiler_folded_stacks_and_merge() {
+        let mut a = StepProfiler::new(false);
+        a.end(Phase::Prefill, None, 0.5);
+        a.end(Phase::Decode, None, 0.25);
+        a.add_step(0.75);
+        let mut b = StepProfiler::new(false);
+        b.end(Phase::Router, None, 0.0);
+        b.end(Phase::Decode, None, 0.25);
+        b.add_step(0.25);
+        a.merge(&b);
+        assert_eq!(a.phase(Phase::Decode).virtual_s, 0.5);
+        assert_eq!(a.phase(Phase::Router).count, 1);
+        assert!((a.step_virtual_s - 1.0).abs() < 1e-12);
+        let folded = a.folded();
+        assert_eq!(folded.lines().count(), Phase::COUNT);
+        for line in folded.lines() {
+            let (stack, value) = line.rsplit_once(' ').unwrap();
+            assert_eq!(stack.split(';').count(), 3, "{line}");
+            let _: u64 = value.parse().unwrap();
+        }
+        assert!(folded.contains("paca_serve;step;prefill 500000\n"));
+        let table = a.table().render();
+        assert!(table.contains("decode"));
+        assert!(table.contains("50.0%") || table.contains("decode"),
+                "{table}");
+        // Wall-armed profilers gain the dual-stamp columns/lines.
+        let mut w = StepProfiler::new(true);
+        let t0 = w.begin();
+        assert!(t0.is_some());
+        w.end(Phase::Admission, t0, 0.0);
+        w.add_step(0.0);
+        assert!(w.folded().contains("paca_serve_wall;step;"));
+        assert!(w.table().render().contains("wall ms"));
+    }
+}

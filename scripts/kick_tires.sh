@@ -20,6 +20,65 @@ fi
 
 cargo bench --bench serve_throughput
 
+# Telemetry smoke: the live stack on a 2-replica cluster — streaming
+# event sink, merged Prometheus-text registry, merged folded step
+# profile. Mirrors the CI telemetry smoke: census, no NaN, monotone
+# counters across scrape blocks, folded stacks parse, and the
+# profiler partition invariant (Σ phase virtual time = step service
+# time) from the report JSON.
+cargo run --release --quiet -- serve --batch 8 --count 64 --tenants 4 \
+    --replicas 2 --router least-loaded --mean-tokens 16 \
+    --decode-tokens 16 --req-per-s 1e9 \
+    --policy slo-aware --deadline-ms 50 \
+    --trace-events serve_telemetry_events.jsonl \
+    --metrics serve_metrics.prom --metrics-interval 0.0005 \
+    --profile serve_profile.folded \
+    --report-json serve_telemetry_report.json \
+    --requests serve_trace_telemetry.jsonl
+
+python3 - <<'EOF'
+import json
+
+text = open('serve_metrics.prom').read()
+assert 'NaN' not in text, 'NaN sample in metrics output'
+blocks, cur = [], None
+for line in text.splitlines():
+    if line.startswith('# scrape '):
+        cur = {}
+        blocks.append(cur)
+        continue
+    if not line or line.startswith('#'):
+        continue
+    series, value = line.rsplit(' ', 1)
+    cur[series] = float(value)
+assert blocks, 'no scrape blocks'
+names = {s.split('{')[0] for b in blocks for s in b}
+need = {'paca_events_total', 'paca_requests_completed_total',
+        'paca_tokens_decoded_total', 'paca_slo_completions_total'}
+assert need <= names, need - names
+last = {}
+for b in blocks:
+    for series, value in b.items():
+        if '_total' in series or '_count' in series or '_bucket' in series:
+            assert value >= last.get(series, 0.0), (series, value)
+            last[series] = value
+folded = [l for l in open('serve_profile.folded').read().splitlines() if l]
+for l in folded:
+    stack, v = l.rsplit(' ', 1)
+    assert int(v) >= 0 and ';' in stack, l
+phases = {'admission', 'dispatch', 'prefill', 'decode',
+          'kv_grow', 'prefix', 'router'}
+got = {l.split(' ')[0].split(';')[-1]
+       for l in folded if l.startswith('paca_serve;')}
+assert phases <= got, phases - got
+p = json.load(open('serve_telemetry_report.json'))['metrics']['profiler']
+total = sum(ph['virtual_s'] for ph in p['phases'].values())
+want = p['step_virtual_s']
+assert abs(total - want) <= 1e-9 * max(want, 1.0), (total, want)
+print(f"telemetry smoke ok: {len(blocks)} scrapes, "
+      f"{len(folded)} folded lines, {int(p['steps'])} profiled steps")
+EOF
+
 python3 - <<'EOF'
 import json
 

@@ -500,7 +500,7 @@ fn serve_cli_event_trace_exports_and_audits() {
     // The report JSON grew the schema version and the events section.
     let rj = Json::parse(&std::fs::read_to_string(&report).unwrap())
         .unwrap();
-    assert_eq!(rj.get("schema").and_then(|v| v.as_f64()), Some(1.0));
+    assert_eq!(rj.get("schema").and_then(|v| v.as_f64()), Some(2.0));
     let ev = rj.get("events").expect("events section in report json");
     assert_eq!(ev.get("auditor").and_then(|v| v.as_str()),
                Some("clean"));
@@ -683,6 +683,264 @@ fn serve_cli_cluster_replicas_router_and_failover() {
         let out = run(bad);
         assert!(!out.status.success(), "{why}: must error");
     }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_cli_live_telemetry_metrics_profile_and_slo_burn() {
+    // PR-9 smoke, end to end through the binary:
+    //   * --trace-events with a small --trace-buffer-events streams
+    //     the JSONL during the run (the report line says how much of
+    //     the stream lives past the recorder bound, never silently);
+    //   * --metrics scrapes the event-fed Prometheus registry — the
+    //     file is "# scrape" blocks of counters/gauges/histograms
+    //     with tenant/policy labels;
+    //   * --profile writes folded stacks with one line per phase
+    //     (plus wall duals — the CLI serves on the measured clock);
+    //   * the text report grows the step-profile table and the slo
+    //     burn block, and the report json carries schema 2 with the
+    //     gated metrics section;
+    //   * the same serve WITHOUT telemetry flags grows none of it;
+    //   * every degenerate flag combination is rejected up front.
+    use paca::util::json::Json;
+
+    let dir = tmp("serve-telemetry");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("telemetry_trace.jsonl");
+    let adapters = dir.join("adapters");
+    let events_path = dir.join("events.jsonl");
+    let metrics_path = dir.join("metrics.prom");
+    let profile_path = dir.join("profile.folded");
+    let report = dir.join("report.json");
+    let run = |extra: &[&str]| {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_paca"));
+        cmd.arg("serve")
+            .arg("--backend").arg("host")
+            .arg("--requests").arg(&trace)
+            .arg("--adapters").arg(&adapters)
+            .arg("--count").arg("48")
+            .arg("--tenants").arg("4")
+            .arg("--batch").arg("8")
+            .arg("--mean-tokens").arg("12")
+            .arg("--decode-tokens").arg("12")
+            .arg("--shared-prefix-tokens").arg("32")
+            .arg("--deadline-ms").arg("50")
+            .arg("--burstiness").arg("3")
+            .arg("--req-per-s").arg("1e9")
+            .arg("--policy").arg("slo-aware")
+            .arg("--kv-blocks").arg("16")
+            .arg("--kv-block-tokens").arg("8")
+            .args(extra);
+        cmd.output().expect("spawning paca serve")
+    };
+
+    let out = run(&["--trace-events", events_path.to_str().unwrap(),
+                    "--trace-buffer-events", "64",
+                    "--metrics", metrics_path.to_str().unwrap(),
+                    "--metrics-interval", "0.0005",
+                    "--profile", profile_path.to_str().unwrap(),
+                    "--report-json", report.to_str().unwrap()]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(),
+            "telemetry serve failed:\nstdout:\n{stdout}\nstderr:\n\
+             {stderr}");
+    assert!(stdout.contains("auditor: clean"),
+            "streamed path must audit clean:\n{stdout}");
+    assert!(stdout.contains("recorder bound (streamed to disk"),
+            "a 64-event bound must overflow visibly:\n{stdout}");
+    assert!(stdout.contains("metric scrapes"),
+            "metrics summary line missing:\n{stdout}");
+    assert!(stdout.contains("folded step profile"),
+            "profile summary line missing:\n{stdout}");
+    assert!(stdout.contains("step profile:"),
+            "step-profile table missing from report:\n{stdout}");
+    assert!(stdout.contains("slo burn"),
+            "slo burn block missing from report:\n{stdout}");
+    assert!(stdout.contains("restored bit-exactly"), "{stdout}");
+
+    // The streamed JSONL is the full event file (every line parses —
+    // the recorder bound changes what stays in MEMORY, not on disk).
+    let text = std::fs::read_to_string(&events_path).unwrap();
+    let n_lines = text.lines().count();
+    assert!(n_lines > 100, "expected a dense stream, got {n_lines}");
+    for line in text.lines() {
+        Json::parse(line).unwrap_or_else(
+            |e| panic!("bad event line {line:?}: {e}"));
+    }
+
+    // The metrics file: scrape blocks of Prometheus text with the
+    // expected census and labels, counters parse as numbers.
+    let prom = std::fs::read_to_string(&metrics_path).unwrap();
+    assert!(prom.contains("# scrape "), "no scrape headers:\n{prom}");
+    assert!(!prom.contains("NaN"), "NaN leaked into metrics:\n{prom}");
+    for name in ["paca_events_total",
+                 "paca_requests_arrived_total",
+                 "paca_requests_completed_total",
+                 "paca_tokens_decoded_total",
+                 "paca_e2e_seconds", "paca_ttft_seconds",
+                 "paca_kv_used_blocks",
+                 "paca_slo_completions_total"] {
+        assert!(prom.contains(name), "{name} missing:\n{prom}");
+    }
+    assert!(prom.contains("policy=\"slo-aware\""),
+            "policy base label missing:\n{prom}");
+    assert!(prom.contains("tenant=\"tenant-000\""),
+            "tenant label missing:\n{prom}");
+    assert!(prom.contains("_bucket{"),
+            "histogram buckets missing:\n{prom}");
+    for line in prom.lines() {
+        if line.starts_with("paca_events_total{") {
+            let (_, v) = line.rsplit_once(' ').unwrap();
+            v.parse::<f64>().unwrap_or_else(
+                |e| panic!("bad sample {line:?}: {e}"));
+        }
+    }
+
+    // The folded stacks: every phase present, every count a whole
+    // number of microseconds, wall duals armed on the measured clock.
+    let folded = std::fs::read_to_string(&profile_path).unwrap();
+    for phase in ["admission", "dispatch", "prefill", "decode",
+                  "kv_grow", "prefix", "router"] {
+        assert!(folded.contains(&format!(";{phase} ")),
+                "{phase} missing from folded stacks:\n{folded}");
+    }
+    for line in folded.lines() {
+        let (stack, v) = line.rsplit_once(' ').unwrap_or_else(
+            || panic!("bad folded line {line:?}"));
+        assert!(stack.contains(';'), "no stack in {line:?}");
+        v.parse::<u64>().unwrap_or_else(
+            |e| panic!("bad folded value {line:?}: {e}"));
+    }
+    assert!(folded.contains("paca_serve_wall;"),
+            "measured clock must arm wall duals:\n{folded}");
+
+    // Report json: schema 2, the gated metrics section, and the
+    // registry snapshot inside it.
+    let rj = Json::parse(&std::fs::read_to_string(&report).unwrap())
+        .unwrap();
+    assert_eq!(rj.get("schema").and_then(|v| v.as_f64()), Some(2.0));
+    let m = rj.get("metrics").expect("metrics section in report json");
+    assert!(m.get("events_dropped").is_some());
+    assert!(m.get("registry").is_some(), "registry snapshot missing");
+    assert!(m.get("profiler").is_some(), "profiler totals missing");
+    assert!(m.get("slo_burn").is_some(), "slo burn missing");
+
+    // Telemetry off: none of it appears — the report stays PR-8
+    // shaped and no metrics section is emitted.
+    let out = run(&["--report-json", report.to_str().unwrap()]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "plain reload failed:\n{stdout}");
+    assert!(stdout.contains("loaded 48 requests"), "{stdout}");
+    assert!(!stdout.contains("step profile:")
+            && !stdout.contains("slo burn")
+            && !stdout.contains("metric scrapes"),
+            "telemetry off must leave no trace in the report:\n\
+             {stdout}");
+    let rj = Json::parse(&std::fs::read_to_string(&report).unwrap())
+        .unwrap();
+    assert_eq!(rj.get("schema").and_then(|v| v.as_f64()), Some(2.0));
+    assert!(rj.get("metrics").is_none(),
+            "metrics section must be gated on tracing");
+
+    // Degenerate flag combinations are rejected before serving.
+    for (bad, why) in [
+        (&["--trace-events", "e.jsonl",
+           "--trace-buffer-events", "0"][..],
+         "a 0-event ring can never flush"),
+        (&["--trace-events", "e.jsonl", "--metrics", "m.prom",
+           "--metrics-interval", "0"][..],
+         "zero scrape interval"),
+        (&["--metrics", "m.prom"][..],
+         "metrics without the event bus"),
+        (&["--profile", "p.folded"][..],
+         "profile without the event bus"),
+    ] {
+        let out = run(bad);
+        assert!(!out.status.success(), "{why}: must error");
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_cli_cluster_merged_metrics_and_profile() {
+    // Cluster telemetry smoke: --replicas 2 with --metrics/--profile
+    // merges the per-replica registries under replica labels into
+    // ONE scrape file on the merged clock, and folds both engines'
+    // profiles (plus the router's own phase) into one stacks file.
+    use paca::util::json::Json;
+
+    let dir = tmp("serve-cluster-telemetry");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("cluster_tel_trace.jsonl");
+    let adapters = dir.join("adapters");
+    let events_path = dir.join("events.jsonl");
+    let metrics_path = dir.join("metrics.prom");
+    let profile_path = dir.join("profile.folded");
+    let report = dir.join("report.json");
+    let run = |extra: &[&str]| {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_paca"));
+        cmd.arg("serve")
+            .arg("--backend").arg("host")
+            .arg("--requests").arg(&trace)
+            .arg("--adapters").arg(&adapters)
+            .arg("--count").arg("48")
+            .arg("--tenants").arg("4")
+            .arg("--batch").arg("4")
+            .arg("--mean-tokens").arg("12")
+            .arg("--decode-tokens").arg("12")
+            .arg("--deadline-ms").arg("50")
+            .arg("--req-per-s").arg("1e9")
+            .arg("--replicas").arg("2")
+            .arg("--router").arg("least-loaded")
+            .args(extra);
+        cmd.output().expect("spawning paca serve")
+    };
+
+    let out = run(&["--trace-events", events_path.to_str().unwrap(),
+                    "--metrics", metrics_path.to_str().unwrap(),
+                    "--metrics-interval", "0.0005",
+                    "--profile", profile_path.to_str().unwrap(),
+                    "--report-json", report.to_str().unwrap()]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(),
+            "cluster telemetry serve failed:\nstdout:\n{stdout}\n\
+             stderr:\n{stderr}");
+    assert!(stdout.contains("auditor: clean"), "{stdout}");
+    assert!(stdout.contains("merged metric scrapes"),
+            "merged scrape summary missing:\n{stdout}");
+    assert!(stdout.contains("merged folded step profile"),
+            "merged profile summary missing:\n{stdout}");
+    assert!(stdout.contains("merged step profile"),
+            "merged profile table missing from report:\n{stdout}");
+
+    // Replica labels keep the merged series apart.
+    let prom = std::fs::read_to_string(&metrics_path).unwrap();
+    assert!(prom.contains("# scrape "), "no scrape headers:\n{prom}");
+    assert!(prom.contains("replica=\"0\"")
+            && prom.contains("replica=\"1\""),
+            "replica labels missing from merged scrape:\n{prom}");
+    assert!(!prom.contains("NaN"), "{prom}");
+
+    // The merged folded stacks include the router phase the single
+    // engine never exercises.
+    let folded = std::fs::read_to_string(&profile_path).unwrap();
+    let router_line = folded.lines()
+        .find(|l| l.starts_with("paca_serve;step;router "))
+        .unwrap_or_else(|| panic!("no router phase:\n{folded}"));
+    let (_, v) = router_line.rsplit_once(' ').unwrap();
+    v.parse::<u64>().unwrap();
+
+    // Cluster report json: schema intact plus the merged metrics
+    // section.
+    let rj = Json::parse(&std::fs::read_to_string(&report).unwrap())
+        .unwrap();
+    let m = rj.get("metrics").expect("merged metrics in report json");
+    assert!(m.get("registry").is_some());
+    assert!(m.get("profiler").is_some());
 
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -1775,3 +1775,253 @@ fn prop_cluster_serves_exactly_once_under_pressure_and_kill() {
             "the sweep never moved a request off a killed replica — \
              the failover path went untested");
 }
+
+#[test]
+fn prop_live_telemetry_is_inert() {
+    // THE PR-9 inertness anchor, 25 seeded decode traces × 3
+    // policies: turning the FULL telemetry stack on — streaming
+    // JSONL sink, bounded recorder, event-fed metrics registry,
+    // per-phase step profiler, SLO burn tracker — leaves every
+    // deterministic EngineStats counter and the forward checksum
+    // bit-identical to the null-sink run. Observation must never
+    // steer the schedule. Each run also cross-checks the telemetry
+    // against the engine's own books: the profiler's per-phase
+    // virtual attribution sums exactly to the stepped service time,
+    // and the burn tracker's settled/missed totals equal the
+    // deadline counters.
+    use paca::manifest::ModelInfo;
+    use paca::serve::engine::{tiny_model, BaseModel, ClockModel,
+                              EngineStats, HostBackend, ServeEngine};
+    use paca::serve::events::Events;
+    use paca::serve::registry::{AdapterRegistry, PacaAdapter};
+    use paca::serve::scheduler::{OnlineScheduler, Policy, Request,
+                                 TenantId, TenantPool};
+    use paca::serve::telemetry::{JsonlStreamSink, MetricsFeeder,
+                                 TelemetryOut};
+    use paca::serve::trace;
+
+    fn small() -> ModelInfo {
+        ModelInfo { d_model: 16, d_ff: 24, ..tiny_model() }
+    }
+
+    fn engine_for(pool: TenantPool) -> ServeEngine {
+        let m = small();
+        let base = BaseModel::synthetic(&m, 7);
+        let mut reg = AdapterRegistry::new(64);
+        for name in pool.names() {
+            reg.insert(PacaAdapter::synthetic(name, &m, 4, 11));
+        }
+        ServeEngine::new(base, reg, Box::<HostBackend>::default(),
+                         pool)
+    }
+
+    fn scrub(mut s: EngineStats) -> EngineStats {
+        s.wall_s = 0.0;
+        s.forward_s = 0.0;
+        s.swap_s = 0.0;
+        s
+    }
+
+    let clock = ClockModel::Analytic {
+        swap_s: 2e-3, batch_s: 5e-4, token_s: 2e-5,
+    };
+    prop(25, |rng| {
+        let n_tenants = 1 + rng.below(4);
+        let mut pool = TenantPool::new();
+        for i in 0..n_tenants {
+            pool.intern(&trace::tenant_name(i));
+        }
+        let prefixes: Vec<usize> = (0..n_tenants)
+            .map(|_| rng.below(32)).collect();
+        let n = 1 + rng.below(40);
+        let cap = 1 + rng.below(6);
+        let kv_blocks = 24 + rng.below(64);
+        let requests: Vec<Request> = (0..n as u64).map(|id| {
+            let tenant = TenantId(rng.below(n_tenants) as u32);
+            let shared = prefixes[tenant.index()];
+            Request {
+                id,
+                tenant,
+                tokens: shared + 1 + rng.below(24),
+                decode_tokens: rng.below(12),
+                shared_prefix_tokens: shared,
+                arrival_s: rng.next_f64() * 0.5,
+                deadline_s: if rng.below(2) == 0 {
+                    f64::INFINITY
+                } else {
+                    0.02 + rng.next_f64() * 0.1
+                },
+            }
+        }).collect();
+        for policy in Policy::ALL {
+            let run = |telemetry: bool| {
+                let mut eng = engine_for(pool.clone());
+                if telemetry {
+                    eng.configure_events(Events::recording());
+                    eng.events.stream_to(JsonlStreamSink::new(
+                        TelemetryOut::memory(), 16));
+                    eng.events.bound_recorder(16);
+                    eng.events.configure_metrics(MetricsFeeder::new(
+                        &[("policy", policy.name())], pool.names(),
+                        0.05, Some(TelemetryOut::memory())));
+                    eng.configure_profiler(false);
+                } else {
+                    eng.configure_events(Events::off());
+                }
+                eng.configure_kv(kv_blocks, 16, true);
+                let mut sched = OnlineScheduler::new(
+                    requests.clone(), n_tenants, cap, policy);
+                eng.serve_iterative(&mut sched, clock).unwrap();
+                eng.finish().unwrap();
+                eng
+            };
+            let plain = run(false);
+            let on = run(true);
+            assert_eq!(scrub(on.stats), scrub(plain.stats),
+                       "{policy:?}: telemetry must be bit-inert");
+            assert_eq!(on.checksum, plain.checksum,
+                       "{policy:?}: telemetry must not touch \
+                        forwards");
+            assert_eq!(on.events.violation_count(), 0,
+                       "{policy:?} violations: {:?}",
+                       on.events.violations());
+            assert!(on.events.stream_error().is_none());
+            assert!(on.events.metrics_error().is_none());
+            assert_eq!(on.events.stream_written(),
+                       on.events.total(),
+                       "{policy:?}: finalize must flush the whole \
+                        stream");
+            assert!(on.events.metrics_scrapes() > 0,
+                    "{policy:?}: the closing scrape always lands");
+            // Profiler partition: no unattributed virtual time.
+            let p = on.profiler.as_ref().unwrap();
+            let (got, want) = (p.total_virtual(), p.step_virtual_s);
+            assert!((got - want).abs() <= 1e-9 * want.max(1.0),
+                    "{policy:?}: unattributed step time: {got} vs \
+                     {want}");
+            // Burn tracker totals ARE the deadline counters.
+            let slo = on.events.slo_summary();
+            let settled: u64 = slo.iter().map(|t| t.total).sum();
+            let missed: u64 = slo.iter().map(|t| t.missed).sum();
+            assert_eq!(settled, on.stats.deadline_total,
+                       "{policy:?}: burn tracker settle count");
+            assert_eq!(missed, on.stats.deadline_misses,
+                       "{policy:?}: burn tracker miss count");
+        }
+    });
+}
+
+#[test]
+fn prop_streaming_sink_matches_buffered_export_and_counts_drops() {
+    // The streaming-sink contract, 25 seeded traces: with a tiny
+    // ring + recorder bound, (1) the sink has flushed events to its
+    // output BEFORE the run finishes (live tail, not an end-of-run
+    // rewrite), (2) the final streamed body is byte-identical to
+    // the buffered `to_jsonl` export of an unbounded twin run (same
+    // events, same order — the ring only changes WHEN bytes land),
+    // (3) the recorder's dropped count is exactly the over-bound
+    // emission count — never silent — and (4) the online auditor
+    // stays clean on the streamed path.
+    use paca::manifest::ModelInfo;
+    use paca::serve::engine::{tiny_model, BaseModel, ClockModel,
+                              HostBackend, ServeEngine};
+    use paca::serve::events::{to_jsonl, Events};
+    use paca::serve::registry::{AdapterRegistry, PacaAdapter};
+    use paca::serve::scheduler::{OnlineScheduler, Policy, Request,
+                                 TenantId, TenantPool};
+    use paca::serve::telemetry::{JsonlStreamSink, TelemetryOut};
+    use paca::serve::trace;
+
+    fn small() -> ModelInfo {
+        ModelInfo { d_model: 16, d_ff: 24, ..tiny_model() }
+    }
+
+    fn engine_for(pool: TenantPool) -> ServeEngine {
+        let m = small();
+        let base = BaseModel::synthetic(&m, 7);
+        let mut reg = AdapterRegistry::new(64);
+        for name in pool.names() {
+            reg.insert(PacaAdapter::synthetic(name, &m, 4, 11));
+        }
+        ServeEngine::new(base, reg, Box::<HostBackend>::default(),
+                         pool)
+    }
+
+    let clock = ClockModel::Analytic {
+        swap_s: 2e-3, batch_s: 5e-4, token_s: 2e-5,
+    };
+    prop(25, |rng| {
+        let n_tenants = 1 + rng.below(3);
+        let mut pool = TenantPool::new();
+        for i in 0..n_tenants {
+            pool.intern(&trace::tenant_name(i));
+        }
+        let n = 6 + rng.below(30);
+        let requests: Vec<Request> = (0..n as u64).map(|id| {
+            Request {
+                id,
+                tenant: TenantId(rng.below(n_tenants) as u32),
+                tokens: 1 + rng.below(24),
+                decode_tokens: 1 + rng.below(10),
+                shared_prefix_tokens: 0,
+                arrival_s: rng.next_f64() * 0.4,
+                deadline_s: f64::INFINITY,
+            }
+        }).collect();
+        let cap = 1 + rng.below(12);
+        let policy = Policy::ALL[rng.below(3)];
+        let run = |bound: Option<usize>| {
+            let mut eng = engine_for(pool.clone());
+            eng.configure_events(Events::recording());
+            if let Some(b) = bound {
+                eng.events.stream_to(JsonlStreamSink::new(
+                    TelemetryOut::memory(), b));
+                eng.events.bound_recorder(b);
+            }
+            let mut sched = OnlineScheduler::new(
+                requests.clone(), n_tenants, 4, policy);
+            // Manual step loop so the mid-run flush is observable.
+            let mut st = eng.begin_iterative(&mut sched, clock);
+            let mut flushed_mid_run = false;
+            loop {
+                let more = eng.step_iterative(&mut sched, &mut st)
+                    .unwrap();
+                if more && eng.events.stream_written() > 0 {
+                    flushed_mid_run = true;
+                }
+                if !more {
+                    break;
+                }
+            }
+            eng.end_iterative(st);
+            eng.finish().unwrap();
+            (eng, flushed_mid_run)
+        };
+        let (unbounded, _) = run(None);
+        let twin = unbounded.events.snapshot();
+        let (bounded, flushed_mid_run) = run(Some(cap));
+        assert!(flushed_mid_run,
+                "cap {cap}: the sink never flushed before finish");
+        assert!(bounded.events.stream_error().is_none());
+        let body = bounded.events.stream_body().unwrap();
+        assert_eq!(String::from_utf8(body).unwrap(),
+                   to_jsonl(&twin),
+                   "cap {cap}: streamed body must equal the \
+                    buffered export, byte for byte");
+        let total = twin.len() as u64;
+        assert_eq!(bounded.events.total(), total,
+                   "bounding the recorder must not change emission");
+        assert_eq!(bounded.events.events_dropped(),
+                   total.saturating_sub(cap as u64),
+                   "cap {cap}: drops must be exactly the over-bound \
+                    emissions");
+        assert_eq!(bounded.events.snapshot().len() as u64,
+                   total.min(cap as u64),
+                   "cap {cap}: the recorder keeps the FIRST cap");
+        assert_eq!(bounded.events.violation_count(), 0,
+                   "auditor on the streamed path: {:?}",
+                   bounded.events.violations());
+        assert_eq!(bounded.checksum, unbounded.checksum,
+                   "the bound must be observation-only");
+    });
+}
